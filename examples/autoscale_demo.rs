@@ -1,0 +1,105 @@
+//! Autoscaling demo (paper §V-D2 / Fig. 10-11): replay the
+//! RPS-rescaled trace over the TP1/TP2/TP4 Llama2-13B scale set under
+//! the four policies of the comparison matrix, then print a runtime
+//! timeline of engine states, frequencies and power.
+//!
+//! Run with:
+//!   cargo run --release --example autoscale_demo [-- --duration 1200]
+
+use throttllem::cli::Args;
+use throttllem::config::models::llama2_13b;
+use throttllem::config::ServingConfig;
+use throttllem::coordinator::{serve_trace, PerfModel, Policy};
+use throttllem::workload::trace::{rps_bins, synth_trace_rps_range, TraceParams};
+use throttllem::workload::LengthPredictor;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let duration = args.get_f64("duration", 1200.0)?;
+    let seed = args.get_u64("seed", 0)?;
+
+    let set = vec![llama2_13b(1), llama2_13b(2), llama2_13b(4)];
+    let model = PerfModel::train(&set, 100, seed);
+    // §V-D2: RPS rescaled to [0.75, 7.5] to exercise every engine.
+    let mut reqs = synth_trace_rps_range(
+        &TraceParams::short(duration, 8.25, seed),
+        0.75,
+        7.5,
+    );
+    LengthPredictor::oracle().apply(&mut reqs, 1024);
+    println!("trace: {} requests over {duration:.0} s\n", reqs.len());
+
+    let combos = [
+        ("triton (TP4)", Policy::triton()),
+        ("triton+autoscale", Policy::triton_autoscale()),
+        ("throttle-only (TP4)", Policy::throttle_only()),
+        ("throttllem (full)", Policy::throttllem()),
+    ];
+    println!(
+        "{:<20} {:>9} {:>10} {:>8} {:>9} {:>9}",
+        "policy", "E2E p99", "energy", "TPJ", "switches", "shadow"
+    );
+    println!(
+        "{:<20} {:>9} {:>10} {:>8} {:>9} {:>9}",
+        "", "[s]", "[kJ]", "[tok/J]", "", "[kJ]"
+    );
+    let mut full_timeline = None;
+    for (name, policy) in combos {
+        let cfg = if policy.autoscaling {
+            ServingConfig::autoscaled(set.clone())
+        } else if policy.throttling {
+            ServingConfig::throttllem(set[2].clone())
+        } else {
+            ServingConfig::triton(set[2].clone())
+        };
+        let out = serve_trace(&cfg, policy, &model, &reqs);
+        println!(
+            "{:<20} {:>9.2} {:>10.1} {:>8.3} {:>9} {:>9.2}",
+            name,
+            out.stats.e2e.p99(),
+            out.stats.total_energy_j / 1e3,
+            out.stats.tokens_per_joule(),
+            out.engine_switches,
+            out.shadow_energy_j / 1e3,
+        );
+        if policy == Policy::throttllem() {
+            full_timeline = Some(out);
+        }
+    }
+
+    // Runtime timeline of the full system (Fig. 11, textual form).
+    let out = full_timeline.unwrap();
+    let bin = 30.0;
+    let rps = rps_bins(&reqs, duration, bin);
+    println!("\n-- runtime timeline (30 s bins) --");
+    println!(
+        "{:>6} {:>6} {:>4} {:>7} {:>8} {:>8}",
+        "t[s]", "RPS", "TP", "f[MHz]", "P[W]", "batch"
+    );
+    let n_bins = (duration / bin).ceil() as usize;
+    for b in 0..n_bins {
+        let lo = b as f64 * bin;
+        let hi = lo + bin;
+        let pts: Vec<_> = out
+            .timeline
+            .iter()
+            .filter(|p| p.t >= lo && p.t < hi)
+            .collect();
+        if pts.is_empty() {
+            continue;
+        }
+        let mean = |f: &dyn Fn(&&throttllem::coordinator::server::TimelinePoint) -> f64| {
+            pts.iter().map(|p| f(&p)).sum::<f64>() / pts.len() as f64
+        };
+        println!(
+            "{:>6.0} {:>6.2} {:>4.0} {:>7.0} {:>8.0} {:>8.1}",
+            lo,
+            rps.get(b).copied().unwrap_or(0.0),
+            mean(&|p| p.engine_tp as f64),
+            mean(&|p| p.freq_mhz as f64),
+            mean(&|p| p.power_w + p.shadow_power_w),
+            mean(&|p| p.batch as f64),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Quickstart: stand up throttLL'eM on a Llama2-13B TP2 engine, serve
+//! a short Azure-like trace, and compare against the Triton baseline.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use throttllem::config::models::llama2_13b;
+use throttllem::config::ServingConfig;
+use throttllem::coordinator::{serve_trace, PerfModel, Policy};
+use throttllem::workload::trace::{synth_trace, TraceParams};
+use throttllem::workload::LengthPredictor;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick an engine (Table II descriptor) and SLOs: TBT <= 200 ms
+    //    (human reading rate), E2E p99 <= the engine's rated profile.
+    let engine = llama2_13b(2);
+    println!(
+        "engine {}: {} KV blocks, E2E SLO {:.1} s",
+        engine.name, engine.kv_blocks, engine.e2e_slo_p99
+    );
+
+    // 2. Train the iteration-level performance model M on profiling
+    //    data (engine size, batch, KV, frequency) -> IPS.
+    println!("training performance model M ...");
+    let model = PerfModel::train(&[engine.clone()], 100, 0);
+
+    // 3. Synthesize a 5-minute Azure-like trace right-scaled to ~60%
+    //    of the engine's rated max load, with an oracle length
+    //    predictor (swap in `LengthPredictor::noisy(0.15, 0)` to see
+    //    the degraded-predictor behaviour).
+    let mut reqs = synth_trace(&TraceParams::short(300.0, 0.6 * engine.max_load_rps, 42));
+    LengthPredictor::oracle().apply(&mut reqs, 1024);
+    println!("trace: {} requests over 300 s", reqs.len());
+
+    // 4. Serve under both policies.
+    let triton = serve_trace(
+        &ServingConfig::triton(engine.clone()),
+        Policy::triton(),
+        &model,
+        &reqs,
+    );
+    let ours = serve_trace(
+        &ServingConfig::throttllem(engine.clone()),
+        Policy::throttle_only(),
+        &model,
+        &reqs,
+    );
+
+    // 5. Report.
+    println!("\n{:<22} {:>12} {:>12}", "metric", "triton", "throttLL'eM");
+    let row = |name: &str, a: f64, b: f64| {
+        println!("{name:<22} {a:>12.3} {b:>12.3}");
+    };
+    row("E2E p99 [s]", triton.stats.e2e.p99(), ours.stats.e2e.p99());
+    row(
+        "TBT avg [ms]",
+        triton.stats.tbt.mean() * 1e3,
+        ours.stats.tbt.mean() * 1e3,
+    );
+    row(
+        "mean frequency [MHz]",
+        triton.stats.freq.mean(),
+        ours.stats.freq.mean(),
+    );
+    row(
+        "mean power [W]",
+        triton.stats.power.mean(),
+        ours.stats.power.mean(),
+    );
+    row(
+        "energy [kJ]",
+        triton.stats.total_energy_j / 1e3,
+        ours.stats.total_energy_j / 1e3,
+    );
+    row(
+        "tokens per Joule",
+        triton.stats.tokens_per_joule(),
+        ours.stats.tokens_per_joule(),
+    );
+    let savings = 1.0 - ours.stats.total_energy_j / triton.stats.total_energy_j;
+    println!(
+        "\nthrottLL'eM saved {:.1}% energy while meeting the {:.1} s E2E SLO \
+         (p99 achieved: {:.1} s)",
+        savings * 100.0,
+        engine.e2e_slo_p99,
+        ours.stats.e2e.p99()
+    );
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Headline driver (paper §V-D1 / Fig. 8): replay the scaled
+//! Azure-like trace on a chosen engine under Triton and throttLL'eM at
+//! 0% / 15% / 30% predictor error, and print the E2E/TBT/power/TPJ
+//! comparison the paper reports.
+//!
+//! Run with:
+//!   cargo run --release --example serve_trace [-- --engine llama2-13b-tp2 --duration 900]
+
+use throttllem::cli::Args;
+use throttllem::config::models::{llama2_13b, llama3_8b};
+use throttllem::config::{EngineSpec, ServingConfig};
+use throttllem::coordinator::{serve_trace, PerfModel, Policy, ServeOutcome};
+use throttllem::workload::trace::{synth_trace, TraceParams};
+use throttllem::workload::LengthPredictor;
+
+fn engine_by_name(name: &str) -> EngineSpec {
+    match name {
+        "llama3-8b-tp1" => llama3_8b(1),
+        "llama2-13b-tp1" => llama2_13b(1),
+        "llama2-13b-tp2" => llama2_13b(2),
+        "llama2-13b-tp4" => llama2_13b(4),
+        other => panic!("unsupported engine {other}"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let engine = engine_by_name(args.get_or("engine", "llama2-13b-tp2"));
+    let duration = args.get_f64("duration", 900.0)?;
+    let seed = args.get_u64("seed", 0)?;
+    // Fraction of the paper's rated max load to replay at. The paper's
+    // Table II loads were measured on ITS testbed; this substrate
+    // saturates earlier (see `cargo bench --bench table2`), so the
+    // default targets ~80% of the paper's rated point. Pass --load 1.0
+    // to reproduce the at-capacity regime.
+    let load = args.get_f64("load", 0.8)?;
+
+    println!("== serve_trace: {} over {duration:.0} s ==", engine.name);
+    let model = PerfModel::train(&[engine.clone()], 120, seed);
+    // Right-scale the trace to the engine's max load (§V-A).
+    let peak = load * engine.max_load_rps;
+    let base = synth_trace(&TraceParams::short(duration, peak, seed));
+    println!("trace: {} requests (peak ~{peak:.2} RPS)", base.len());
+
+    let mut rows: Vec<(String, ServeOutcome)> = Vec::new();
+
+    let cfg_t = ServingConfig::triton(engine.clone());
+    let mut reqs = base.clone();
+    LengthPredictor::oracle().apply(&mut reqs, cfg_t.max_tokens);
+    rows.push((
+        "triton".into(),
+        serve_trace(&cfg_t, Policy::triton(), &model, &reqs),
+    ));
+
+    for err in [0.0, 0.15, 0.30] {
+        let mut cfg = ServingConfig::throttllem(engine.clone());
+        cfg.predictor_p95_error = err;
+        let mut reqs = base.clone();
+        let pred = if err == 0.0 {
+            LengthPredictor::oracle()
+        } else {
+            LengthPredictor::noisy(err, seed)
+        };
+        pred.apply(&mut reqs, cfg.max_tokens);
+        rows.push((
+            format!("throttllem@{:.0}%", err * 100.0),
+            serve_trace(&cfg, Policy::throttle_only(), &model, &reqs),
+        ));
+    }
+
+    println!(
+        "\n{:<16} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>8}",
+        "policy", "E2E p99", "TBT avg", "TTFT p50", "queue99", "freq", "energy", "TPJ"
+    );
+    println!(
+        "{:<16} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>8}",
+        "", "[s]", "[ms]", "[ms]", "[s]", "[MHz]", "[kJ]", "[tok/J]"
+    );
+    let triton_energy = rows[0].1.stats.total_energy_j;
+    for (name, out) in &rows {
+        let s = &out.stats;
+        println!(
+            "{:<16} {:>9.2} {:>9.1} {:>9.0} {:>9.2} {:>9.0} {:>9.1} {:>8.3}",
+            name,
+            s.e2e.p99(),
+            s.tbt.mean() * 1e3,
+            s.ttft.p50() * 1e3,
+            s.queue.p99(),
+            s.freq.mean(),
+            s.total_energy_j / 1e3,
+            s.tokens_per_joule(),
+        );
+    }
+    for (name, out) in rows.iter().skip(1) {
+        println!(
+            "{name}: energy -{:.1}% vs triton, SLO p99 {} (limit {:.1} s)",
+            (1.0 - out.stats.total_energy_j / triton_energy) * 100.0,
+            if out.stats.e2e.p99() <= engine.e2e_slo_p99 {
+                "MET"
+            } else {
+                "MISSED"
+            },
+            engine.e2e_slo_p99,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,188 @@
+"""AOT pipeline: lower the L2 model (with its L1 Pallas kernels) to HLO
+text artifacts for the Rust PJRT runtime.
+
+HLO *text* (not a serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Outputs (under --out, default ../artifacts):
+  decode_b{B}.hlo.txt    one decode iteration, batch bucket B
+  prefill_b{B}.hlo.txt   prompt phase, batch bucket B
+  weights.bin            flat f32 little-endian weight vector
+  manifest.json          config + artifact/arg-shape inventory
+
+Run once at build time (`make artifacts`); never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, decode_step, flatten_params, init_params, prefill
+
+DEFAULT_BATCHES = (1, 2, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe route)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_decode(cfg: ModelConfig, batch: int) -> str:
+    """HLO text for one decode iteration at batch bucket `batch`."""
+    nw = cfg.num_params()
+    cache = jax.ShapeDtypeStruct(
+        (cfg.n_layers, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim), jnp.float32
+    )
+    args = (
+        jax.ShapeDtypeStruct((nw,), jnp.float32),
+        cache,
+        cache,
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+    fn = lambda w, kc, vc, t, p: decode_step(cfg, w, kc, vc, t, p)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_prefill(cfg: ModelConfig, batch: int) -> str:
+    """HLO text for the prompt phase at batch bucket `batch`."""
+    nw = cfg.num_params()
+    args = (
+        jax.ShapeDtypeStruct((nw,), jnp.float32),
+        jax.ShapeDtypeStruct((batch, cfg.prompt_len), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+    fn = lambda w, t, l: prefill(cfg, w, t, l)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def build_artifacts(
+    cfg: ModelConfig,
+    out_dir: str,
+    batches=DEFAULT_BATCHES,
+    seed: int = 0,
+) -> dict:
+    """Write all artifacts; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    weights = np.asarray(
+        flatten_params(cfg, init_params(cfg, seed)), dtype=np.float32
+    )
+    wpath = os.path.join(out_dir, "weights.bin")
+    weights.tofile(wpath)
+
+    artifacts = {}
+    for b in batches:
+        for kind, lower in (("decode", lower_decode), ("prefill", lower_prefill)):
+            name = f"{kind}_b{b}.hlo.txt"
+            text = lower(cfg, b)
+            with open(os.path.join(out_dir, name), "w") as f:
+                f.write(text)
+            artifacts[name] = {
+                "kind": kind,
+                "batch": b,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+            print(f"wrote {name}: {len(text)} chars")
+
+    manifest = {
+        "model": "tiny-llama-sim",
+        "config": dataclasses.asdict(cfg),
+        "num_params": int(weights.size),
+        "weights": {
+            "file": "weights.bin",
+            "dtype": "f32",
+            "count": int(weights.size),
+            "sha256": hashlib.sha256(weights.tobytes()).hexdigest(),
+        },
+        "batches": list(batches),
+        "seed": seed,
+        "artifacts": artifacts,
+    }
+    # Golden outputs for cross-language parity: the Rust runtime must
+    # reproduce these greedy generations bit-exactly (argmax is robust
+    # to sub-ulp float divergence).
+    golden = golden_generations(cfg, seed)
+    manifest["golden"] = golden
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(artifacts)} artifacts, "
+          f"{weights.size} weights)")
+    return manifest
+
+
+def golden_generations(cfg: ModelConfig, seed: int, steps: int = 12) -> dict:
+    """Greedy generations from fixed prompts (jax reference)."""
+    from .model import greedy_generate
+
+    flat_w = flatten_params(cfg, init_params(cfg, seed))
+    prompts = [
+        [1, 2, 3, 4, 5],
+        [7, 11, 13],
+    ]
+    plen = cfg.prompt_len
+    toks = np.zeros((len(prompts), plen), dtype=np.int32)
+    lens = np.zeros((len(prompts),), dtype=np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, : len(p)] = p
+        lens[i] = len(p)
+    out = greedy_generate(
+        cfg, flat_w, jnp.asarray(toks), jnp.asarray(lens), steps
+    )
+    return {
+        "prompts": prompts,
+        "steps": steps,
+        "tokens": np.asarray(out).tolist(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--batches",
+        default=",".join(str(b) for b in DEFAULT_BATCHES),
+        help="comma-separated batch buckets",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--vocab", type=int, default=ModelConfig.vocab)
+    ap.add_argument("--d-model", type=int, default=ModelConfig.d_model)
+    ap.add_argument("--n-heads", type=int, default=ModelConfig.n_heads)
+    ap.add_argument("--n-layers", type=int, default=ModelConfig.n_layers)
+    ap.add_argument("--d-ff", type=int, default=ModelConfig.d_ff)
+    ap.add_argument("--max-seq", type=int, default=ModelConfig.max_seq)
+    ap.add_argument("--prompt-len", type=int, default=ModelConfig.prompt_len)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        vocab=args.vocab,
+        d_model=args.d_model,
+        n_heads=args.n_heads,
+        n_layers=args.n_layers,
+        d_ff=args.d_ff,
+        max_seq=args.max_seq,
+        prompt_len=args.prompt_len,
+    )
+    batches = tuple(int(b) for b in args.batches.split(","))
+    build_artifacts(cfg, args.out, batches, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""L1 Pallas kernel: single-token (decode-phase) flash attention.
+
+This is the throttLL'eM serving hot-spot: each decode iteration reads the
+whole KV cache of every request in the batch (memory-bound on A100 —
+paper §III-B shows TBT grows linearly with allocated KV blocks).  On TPU
+we re-think the CUDA formulation:
+
+  * the KV-cache *page* becomes a VMEM tile: the grid is
+    ``(batch, heads, kv_blocks)`` and ``BlockSpec`` streams
+    ``[block_kv, head_dim]`` K/V tiles HBM -> VMEM, taking the role the
+    CUDA threadblock's shared-memory staging played;
+  * score/value contractions are MXU-shaped matmuls
+    (``[1, d] x [d, block_kv]``) accumulated in f32;
+  * a running (m, l, acc) online-softmax accumulator in VMEM scratch is
+    carried across KV tiles, reproducing FlashAttention's streaming
+    reduction without shared-memory cross-thread reductions;
+  * per-row live lengths mask ragged batches (the inflight batcher mixes
+    requests at different generation depths in one dense batch).
+
+``interpret=True`` is mandatory on this CPU-only image (real TPU
+lowering emits a Mosaic custom call the CPU PJRT plugin cannot run); the
+kernel is structured exactly as it would be for a real TPU target.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default KV tile length.  With head_dim 64 a (K, V) pair of tiles is
+# 2 * 128 * 64 * 4 B = 64 KiB — far under the ~16 MiB VMEM budget, and a
+# multiple of the 8x128 VREG tile.
+DEFAULT_BLOCK_KV = 128
+
+_NEG_INF = -1.0e30
+
+
+def _decode_attention_kernel(
+    q_ref,  # [head_dim]            (b, h) query row
+    k_ref,  # [block_kv, head_dim]  K tile
+    v_ref,  # [block_kv, head_dim]  V tile
+    len_ref,  # [1]                 live length of row b
+    o_ref,  # [head_dim]            output row
+    m_ref,  # VMEM scratch [1]      running max
+    l_ref,  # VMEM scratch [1]      running normalizer
+    acc_ref,  # VMEM scratch [1, head_dim] running weighted V sum
+    *,
+    block_kv: int,
+    scale: float,
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)[None, :] * scale  # [1, d]
+    k = k_ref[...].astype(jnp.float32)  # [bk, d]
+    v = v_ref[...].astype(jnp.float32)  # [bk, d]
+    live = len_ref[0]
+
+    # Positions covered by this tile; mask the dead tail of the row.
+    pos = j * block_kv + jax.lax.iota(jnp.int32, block_kv)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [1, bk]
+    s = jnp.where((pos < live)[None, :], s, _NEG_INF)
+
+    # Online softmax update (FlashAttention streaming rule).
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finish():
+        # A fully-masked row (live == 0) never occurs: the engine only
+        # schedules rows with at least the prompt in cache.  Guard anyway
+        # so NaNs cannot leak into downstream layers.
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / denom[:, None])[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv",))
+def decode_attention(
+    q: jax.Array,  # [B, H, d]
+    k: jax.Array,  # [B, H, L, d]
+    v: jax.Array,  # [B, H, L, d]
+    lengths: jax.Array,  # [B] int32, live KV length per row
+    block_kv: int = DEFAULT_BLOCK_KV,
+) -> jax.Array:  # [B, H, d]
+    """Single-token attention of `q` against the first `lengths[b]` cache
+    entries of each row, computed by the Pallas flash-decode kernel."""
+    batch, heads, head_dim = q.shape
+    seq_len = k.shape[2]
+    if k.shape != (batch, heads, seq_len, head_dim):
+        raise ValueError(f"bad k shape {k.shape}")
+    if v.shape != k.shape:
+        raise ValueError(f"bad v shape {v.shape}")
+    block_kv = min(block_kv, seq_len)
+    if seq_len % block_kv != 0:
+        raise ValueError(f"seq_len {seq_len} not a multiple of block_kv {block_kv}")
+    num_blocks = seq_len // block_kv
+    scale = 1.0 / (head_dim**0.5)
+
+    kernel = functools.partial(
+        _decode_attention_kernel, block_kv=block_kv, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(batch, heads, num_blocks),
+        in_specs=[
+            pl.BlockSpec((None, None, head_dim), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec(
+                (None, None, block_kv, head_dim), lambda b, h, j: (b, h, j, 0)
+            ),
+            pl.BlockSpec(
+                (None, None, block_kv, head_dim), lambda b, h, j: (b, h, j, 0)
+            ),
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+        ],
+        out_specs=pl.BlockSpec((None, None, head_dim), lambda b, h, j: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, heads, head_dim), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, head_dim), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, lengths.astype(jnp.int32))

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package must agree with its oracle here to within
+float tolerance; ``python/tests/test_kernel.py`` sweeps shapes, dtypes
+and lengths with hypothesis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1.0e30
+
+
+def decode_attention_ref(
+    q: jax.Array,  # [B, H, d]
+    k: jax.Array,  # [B, H, L, d]
+    v: jax.Array,  # [B, H, L, d]
+    lengths: jax.Array,  # [B] int32
+) -> jax.Array:  # [B, H, d]
+    """Masked single-token attention, materializing full score rows."""
+    head_dim = q.shape[-1]
+    seq_len = k.shape[2]
+    scale = 1.0 / (head_dim**0.5)
+    s = jnp.einsum(
+        "bhd,bhld->bhl",
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+    ) * scale
+    mask = jax.lax.iota(jnp.int32, seq_len)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhl,bhld->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Row-wise RMSNorm oracle."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def causal_attention_ref(
+    q: jax.Array,  # [B, H, P, d]
+    k: jax.Array,  # [B, H, P, d]
+    v: jax.Array,  # [B, H, P, d]
+    lengths: jax.Array,  # [B] int32 — live prompt length per row
+) -> jax.Array:  # [B, H, P, d]
+    """Causal full attention used by the (compute-bound) prefill phase."""
+    head_dim = q.shape[-1]
+    prompt = q.shape[2]
+    scale = 1.0 / (head_dim**0.5)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk",
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+    ) * scale
+    pos = jax.lax.iota(jnp.int32, prompt)
+    causal = pos[None, :] <= pos[:, None]  # [q, k]
+    live = pos[None, None, None, :] < lengths[:, None, None, None]
+    s = jnp.where(causal[None, None, :, :] & live, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,43 @@
+"""L1 Pallas kernel: fused RMSNorm (normalize + elementwise scale).
+
+Small companion kernel to the decode-attention kernel: every decode
+iteration runs 2 * n_layers + 1 RMSNorms over [B, d] activations.  The
+fused kernel computes the row RMS and the scaled output in one VMEM
+pass (one HBM read + one HBM write per row) instead of the four
+HBM-roundtrip ops (square, mean, rsqrt-mul, weight-mul) of the naive
+lowering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # [d]
+    w = w_ref[...].astype(jnp.float32)  # [d]
+    ms = jnp.mean(x * x)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * w).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Row-wise RMSNorm of ``x`` ([B, d]) scaled by ``weight`` ([d])."""
+    batch, dim = x.shape
+    if weight.shape != (dim,):
+        raise ValueError(f"bad weight shape {weight.shape}, want ({dim},)")
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((None, dim), lambda b: (b, 0)),
+            pl.BlockSpec((dim,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, dim), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, dim), x.dtype),
+        interpret=True,
+    )(x, weight)

@@ -1,0 +1,282 @@
+"""L2: the served model — a small Llama-style decoder-only transformer.
+
+The paper evaluates Llama-family models on A100s; weights and the
+hardware are unavailable here, so the *runnable* serving path uses
+"tiny-llama-sim": the same architecture (RMSNorm, multi-head attention
+over a KV cache, SwiGLU MLP, tied output head) at a size the CPU PJRT
+client executes in milliseconds.  The decode step calls the L1 Pallas
+flash-decode kernel (`kernels.attention`) and fused RMSNorm kernel, so
+the AOT HLO that the Rust runtime loads contains the lowered kernels.
+
+Everything in this file is build-time Python: `aot.py` lowers
+`decode_step` / `prefill` once per batch bucket to HLO text; the Rust
+coordinator executes those artifacts via PJRT with Python out of the
+request path.
+
+Weights are passed as ONE flat f32 vector (runtime input), so the Rust
+side loads `artifacts/weights.bin` and feeds it as the first argument —
+mirroring real engines that keep weights resident on device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention
+from .kernels.ref import causal_attention_ref
+from .kernels.rmsnorm import rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the served model (defaults: tiny-llama-sim)."""
+
+    vocab: int = 256
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 128
+    max_seq: int = 256
+    prompt_len: int = 32  # static prefill bucket
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Deterministic (name, shape) list defining the flat layout."""
+        shapes: List[Tuple[str, Tuple[int, ...]]] = [
+            ("embed", (self.vocab, self.d_model)),
+        ]
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            shapes += [
+                (p + "attn_norm", (self.d_model,)),
+                (p + "wq", (self.d_model, self.d_model)),
+                (p + "wk", (self.d_model, self.d_model)),
+                (p + "wv", (self.d_model, self.d_model)),
+                (p + "wo", (self.d_model, self.d_model)),
+                (p + "mlp_norm", (self.d_model,)),
+                (p + "w_gate", (self.d_model, self.d_ff)),
+                (p + "w_up", (self.d_model, self.d_ff)),
+                (p + "w_down", (self.d_ff, self.d_model)),
+            ]
+        shapes.append(("final_norm", (self.d_model,)))
+        return shapes
+
+    def num_params(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_shapes())
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Deterministic scaled-normal initialization."""
+    params: Dict[str, jax.Array] = {}
+    key = jax.random.PRNGKey(seed)
+    for name, shape in cfg.param_shapes():
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+            )
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: Dict[str, jax.Array]) -> jax.Array:
+    """Concatenate params into the flat vector layout of `param_shapes`."""
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in cfg.param_shapes()]
+    )
+
+
+def _slices(cfg: ModelConfig) -> Dict[str, Tuple[int, Tuple[int, ...]]]:
+    out, off = {}, 0
+    for name, shape in cfg.param_shapes():
+        n = 1
+        for s in shape:
+            n *= s
+        out[name] = (off, shape)
+        off += n
+    return out
+
+
+def _param(flat: jax.Array, layout, name: str) -> jax.Array:
+    off, shape = layout[name]
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+
+
+def _rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding. x: [B, H, d], positions: [B]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [B, half]
+    cos, sin = jnp.cos(ang)[:, None, :], jnp.sin(ang)[:, None, :]  # [B,1,half]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _rope_seq(x: jax.Array, theta: float) -> jax.Array:
+    """RoPE over a full sequence. x: [B, H, P, d]."""
+    d = x.shape[-1]
+    half = d // 2
+    pos = jnp.arange(x.shape[2], dtype=jnp.float32)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[:, None] * freqs[None, :]  # [P, half]
+    cos, sin = jnp.cos(ang)[None, None], jnp.sin(ang)[None, None]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    flat_w: jax.Array,  # [num_params] f32
+    k_cache: jax.Array,  # [n_layers, B, H, max_seq, head_dim]
+    v_cache: jax.Array,  # like k_cache
+    tokens: jax.Array,  # [B] int32 — token generated last iteration
+    positions: jax.Array,  # [B] int32 — cache slot this token writes to
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One autoregressive iteration for the whole batch.
+
+    Returns (logits [B, vocab], new_k_cache, new_v_cache).  Row `b`
+    attends over cache positions [0, positions[b]] after writing its
+    current K/V at slot positions[b].
+    """
+    layout = _slices(cfg)
+    h, dh = cfg.n_heads, cfg.head_dim
+    batch = tokens.shape[0]
+
+    embed = _param(flat_w, layout, "embed")
+    x = embed[tokens]  # [B, d_model]
+
+    new_k, new_v = k_cache, v_cache
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        xn = rmsnorm(x, _param(flat_w, layout, p + "attn_norm"))
+        q = (xn @ _param(flat_w, layout, p + "wq")).reshape(batch, h, dh)
+        k = (xn @ _param(flat_w, layout, p + "wk")).reshape(batch, h, dh)
+        v = (xn @ _param(flat_w, layout, p + "wv")).reshape(batch, h, dh)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+
+        # Scatter this token's K/V into its cache slot (per row).
+        def write(cache, val):
+            # cache: [B, H, L, dh], val: [B, H, dh]
+            def one(c, x, pos):
+                return jax.lax.dynamic_update_slice(c, x[:, None, :], (0, pos, 0))
+
+            return jax.vmap(one)(cache, val, positions)
+
+        lk = write(new_k[i], k)
+        lv = write(new_v[i], v)
+        new_k = new_k.at[i].set(lk)
+        new_v = new_v.at[i].set(lv)
+
+        # L1 Pallas flash-decode kernel over the live cache prefix.
+        attn = decode_attention(q, lk, lv, positions + 1)  # [B, H, dh]
+        x = x + attn.reshape(batch, -1) @ _param(flat_w, layout, p + "wo")
+
+        xn = rmsnorm(x, _param(flat_w, layout, p + "mlp_norm"))
+        gate = jax.nn.silu(xn @ _param(flat_w, layout, p + "w_gate"))
+        up = xn @ _param(flat_w, layout, p + "w_up")
+        x = x + (gate * up) @ _param(flat_w, layout, p + "w_down")
+
+    x = rmsnorm(x, _param(flat_w, layout, "final_norm"))
+    logits = x @ embed.T  # tied output head
+    return logits, new_k, new_v
+
+
+def prefill(
+    cfg: ModelConfig,
+    flat_w: jax.Array,  # [num_params]
+    tokens: jax.Array,  # [B, P] int32, right-padded
+    lengths: jax.Array,  # [B] int32 — live prompt length per row
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prompt phase: process the (padded) prompts, build the KV cache.
+
+    Returns (logits of the last live token [B, vocab], k_cache, v_cache)
+    with caches of shape [n_layers, B, H, max_seq, head_dim], populated
+    in [0, lengths[b]).  Prefill is compute-bound (paper §II) and uses a
+    dense causal attention; the decode hot loop is what the Pallas
+    kernel accelerates.
+    """
+    layout = _slices(cfg)
+    h, dh = cfg.n_heads, cfg.head_dim
+    batch, prompt = tokens.shape
+
+    embed = _param(flat_w, layout, "embed")
+    x = embed[tokens]  # [B, P, d]
+
+    k_cache = jnp.zeros((cfg.n_layers, batch, h, cfg.max_seq, dh), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        w = _param(flat_w, layout, p + "attn_norm")
+        xn = _rmsnorm_seq(x, w)
+        q = (xn @ _param(flat_w, layout, p + "wq")).reshape(batch, prompt, h, dh)
+        k = (xn @ _param(flat_w, layout, p + "wk")).reshape(batch, prompt, h, dh)
+        v = (xn @ _param(flat_w, layout, p + "wv")).reshape(batch, prompt, h, dh)
+        q = q.transpose(0, 2, 1, 3)  # [B, H, P, dh]
+        k = k.transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
+        q = _rope_seq(q, cfg.rope_theta)
+        k = _rope_seq(k, cfg.rope_theta)
+
+        k_cache = k_cache.at[i, :, :, :prompt, :].set(k)
+        v_cache = v_cache.at[i, :, :, :prompt, :].set(v)
+
+        attn = causal_attention_ref(q, k, v, lengths)  # [B, H, P, dh]
+        attn = attn.transpose(0, 2, 1, 3).reshape(batch, prompt, -1)
+        x = x + attn @ _param(flat_w, layout, p + "wo")
+
+        xn = _rmsnorm_seq(x, _param(flat_w, layout, p + "mlp_norm"))
+        gate = jax.nn.silu(xn @ _param(flat_w, layout, p + "w_gate"))
+        up = xn @ _param(flat_w, layout, p + "w_up")
+        x = x + (gate * up) @ _param(flat_w, layout, p + "w_down")
+
+    x = _rmsnorm_seq(x, _param(flat_w, layout, "final_norm"))
+    # Logits of each row's last live token.
+    last = jnp.clip(lengths - 1, 0, prompt - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0, :]
+    logits = x_last @ embed.T
+    return logits, k_cache, v_cache
+
+
+def _rmsnorm_seq(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over [B, P, d] (prefill path; plain jnp — XLA fuses it)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "steps"))
+def greedy_generate(
+    cfg: ModelConfig,
+    flat_w: jax.Array,
+    prompt_tokens: jax.Array,  # [B, P]
+    lengths: jax.Array,  # [B]
+    steps: int,
+) -> jax.Array:
+    """Reference greedy decoding loop (tests + parity with Rust runtime)."""
+    logits, kc, vc = prefill(cfg, flat_w, prompt_tokens, lengths)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    pos = lengths.astype(jnp.int32)
+    for _ in range(steps - 1):
+        logits, kc, vc = decode_step(cfg, flat_w, kc, vc, tok, pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+        pos = pos + 1
+    return jnp.stack(out, axis=1)  # [B, steps]

@@ -1,0 +1,176 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, dtypes, lengths and block sizes; explicit
+cases pin the shipping configuration (tiny-llama-sim) and edge cases.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import decode_attention
+from compile.kernels.ref import decode_attention_ref, rmsnorm_ref
+from compile.kernels.rmsnorm import rmsnorm
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-5, rtol=2e-5
+    )
+
+
+def _mk_qkv(seed, batch, heads, seq, dim, dtype):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k0, (batch, heads, dim), dtype)
+    k = jax.random.normal(k1, (batch, heads, seq, dim), dtype)
+    v = jax.random.normal(k2, (batch, heads, seq, dim), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------- attention
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "batch,heads,seq,dim,block",
+    [
+        (1, 1, 8, 4, 8),     # minimal
+        (4, 4, 256, 16, 128),  # tiny-llama-sim shipping shape
+        (8, 4, 256, 16, 64),   # max batch bucket, smaller tile
+        (2, 8, 64, 32, 16),    # many tiles
+        (3, 2, 96, 8, 32),     # non-pow2 batch
+    ],
+)
+def test_decode_attention_matches_ref(batch, heads, seq, dim, block, dtype):
+    q, k, v = _mk_qkv(0, batch, heads, seq, dim, dtype)
+    lengths = jnp.arange(1, batch + 1, dtype=jnp.int32) * (seq // (batch + 1)) + 1
+    lengths = jnp.clip(lengths, 1, seq)
+    got = decode_attention(q, k, v, lengths, block_kv=block)
+    want = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_decode_attention_full_length_rows():
+    q, k, v = _mk_qkv(1, 4, 2, 32, 8, jnp.float32)
+    lengths = jnp.full((4,), 32, jnp.int32)
+    got = decode_attention(q, k, v, lengths, block_kv=8)
+    want = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_single_live_token():
+    # With exactly one live position, attention must return that V row.
+    q, k, v = _mk_qkv(2, 2, 3, 16, 8, jnp.float32)
+    lengths = jnp.ones((2,), jnp.int32)
+    got = decode_attention(q, k, v, lengths, block_kv=8)
+    np.testing.assert_allclose(got, v[:, :, 0, :], atol=1e-5, rtol=1e-5)
+
+
+def test_decode_attention_ignores_dead_tail():
+    # Values beyond `lengths` must not affect the output.
+    q, k, v = _mk_qkv(3, 2, 2, 64, 8, jnp.float32)
+    lengths = jnp.array([10, 40], jnp.int32)
+    base = decode_attention(q, k, v, lengths, block_kv=16)
+    k2 = k.at[:, :, 50:, :].set(1e6)
+    v2 = v.at[:, :, 50:, :].set(-1e6)
+    poisoned = decode_attention(q, k2, v2, lengths, block_kv=16)
+    np.testing.assert_allclose(base, poisoned, atol=1e-6)
+
+
+def test_decode_attention_rejects_bad_shapes():
+    q, k, v = _mk_qkv(4, 2, 2, 16, 8, jnp.float32)
+    with pytest.raises(ValueError):
+        decode_attention(q, k[:, :, :15, :], v[:, :, :15, :],
+                         jnp.ones(2, jnp.int32), block_kv=8)
+    with pytest.raises(ValueError):
+        decode_attention(q, k, v[:1], jnp.ones(2, jnp.int32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    batch=st.integers(1, 6),
+    heads=st.integers(1, 4),
+    log_seq=st.integers(3, 7),
+    dim=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**16),
+    data=st.data(),
+)
+def test_decode_attention_hypothesis(batch, heads, log_seq, dim, seed, data):
+    seq = 2**log_seq
+    block = data.draw(
+        st.sampled_from([b for b in (8, 16, 32, 64, 128) if seq % b == 0])
+    )
+    lengths = jnp.array(
+        data.draw(
+            st.lists(st.integers(1, seq), min_size=batch, max_size=batch)
+        ),
+        jnp.int32,
+    )
+    q, k, v = _mk_qkv(seed, batch, heads, seq, dim, jnp.float32)
+    got = decode_attention(q, k, v, lengths, block_kv=block)
+    want = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(got, want, atol=5e-5, rtol=5e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), data=st.data())
+def test_decode_attention_hypothesis_bf16(seed, data):
+    batch = data.draw(st.integers(1, 4))
+    lengths = jnp.array(
+        data.draw(st.lists(st.integers(1, 64), min_size=batch, max_size=batch)),
+        jnp.int32,
+    )
+    q, k, v = _mk_qkv(seed, batch, 2, 64, 16, jnp.bfloat16)
+    got = decode_attention(q, k, v, lengths, block_kv=32)
+    want = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=3e-2, rtol=3e-2,
+    )
+
+
+# ----------------------------------------------------------------- rmsnorm
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("batch,dim", [(1, 8), (4, 64), (8, 64), (3, 128)])
+def test_rmsnorm_matches_ref(batch, dim, dtype):
+    k0, k1 = jax.random.split(jax.random.PRNGKey(7))
+    x = jax.random.normal(k0, (batch, dim), dtype)
+    w = jax.random.normal(k1, (dim,), dtype)
+    got = rmsnorm(x, w)
+    want = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_rmsnorm_unit_weight_normalizes():
+    x = jnp.full((2, 16), 3.0)
+    out = rmsnorm(x, jnp.ones(16))
+    np.testing.assert_allclose(out, jnp.ones((2, 16)), atol=1e-5)
+
+
+def test_rmsnorm_rejects_bad_weight():
+    with pytest.raises(ValueError):
+        rmsnorm(jnp.ones((2, 16)), jnp.ones(8))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 8),
+    dim=st.sampled_from([4, 16, 64, 128, 256]),
+    scale=st.floats(0.01, 100.0),
+    seed=st.integers(0, 2**16),
+)
+def test_rmsnorm_hypothesis(batch, dim, scale, seed):
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k0, (batch, dim)) * scale
+    w = jax.random.normal(k1, (dim,))
+    np.testing.assert_allclose(
+        rmsnorm(x, w), rmsnorm_ref(x, w), atol=1e-4, rtol=1e-4
+    )

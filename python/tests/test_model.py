@@ -1,0 +1,128 @@
+"""L2 correctness: tiny-llama-sim model semantics.
+
+Checks shapes, prefill/decode consistency (the property the serving
+path relies on: prefill-then-decode must equal a longer prefill),
+masking of padded rows, and determinism.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelConfig,
+    decode_step,
+    flatten_params,
+    greedy_generate,
+    init_params,
+    prefill,
+)
+
+CFG = ModelConfig(vocab=64, d_model=32, n_heads=2, n_layers=2, d_ff=64,
+                  max_seq=64, prompt_len=16)
+
+
+@pytest.fixture(scope="module")
+def flat_w():
+    return flatten_params(CFG, init_params(CFG, seed=0))
+
+
+def _prompt(batch, length, seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (batch, CFG.prompt_len), 0, CFG.vocab,
+                              dtype=jnp.int32)
+    lengths = jnp.full((batch,), length, jnp.int32)
+    return toks, lengths
+
+
+def test_param_layout_count(flat_w):
+    assert flat_w.shape == (CFG.num_params(),)
+    # embed + final_norm + 9 tensors per layer
+    assert len(CFG.param_shapes()) == 2 + 9 * CFG.n_layers
+
+
+def test_prefill_shapes(flat_w):
+    toks, lens = _prompt(4, 10)
+    logits, kc, vc = prefill(CFG, flat_w, toks, lens)
+    assert logits.shape == (4, CFG.vocab)
+    assert kc.shape == (CFG.n_layers, 4, CFG.n_heads, CFG.max_seq, CFG.head_dim)
+    assert vc.shape == kc.shape
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_decode_step_shapes(flat_w):
+    toks, lens = _prompt(2, 8)
+    _, kc, vc = prefill(CFG, flat_w, toks, lens)
+    logits, kc2, vc2 = decode_step(
+        CFG, flat_w, kc, vc, jnp.array([1, 2], jnp.int32), lens
+    )
+    assert logits.shape == (2, CFG.vocab)
+    assert kc2.shape == kc.shape
+
+
+def test_decode_writes_only_its_slot(flat_w):
+    toks, lens = _prompt(2, 8)
+    _, kc, vc = prefill(CFG, flat_w, toks, lens)
+    _, kc2, _ = decode_step(CFG, flat_w, kc, vc,
+                            jnp.array([1, 2], jnp.int32), lens)
+    # Positions below `lens` and above `lens` are untouched.
+    np.testing.assert_allclose(kc2[:, :, :, :8, :], kc[:, :, :, :8, :])
+    np.testing.assert_allclose(kc2[:, :, :, 9:, :], kc[:, :, :, 9:, :])
+
+
+def test_prefill_decode_consistency(flat_w):
+    """prefill(P) + decode(token) must equal prefill(P+1) logits."""
+    batch, plen = 2, 8
+    toks, lens = _prompt(batch, plen, seed=3)
+    logits_p, kc, vc = prefill(CFG, flat_w, toks, lens)
+    nxt = jnp.argmax(logits_p, axis=-1).astype(jnp.int32)
+
+    # Path A: one decode step after prefill.
+    logits_a, _, _ = decode_step(CFG, flat_w, kc, vc, nxt, lens)
+
+    # Path B: prefill over the extended prompt.
+    toks_ext = toks.at[jnp.arange(batch), plen].set(nxt)
+    logits_b, _, _ = prefill(CFG, flat_w, toks_ext, lens + 1)
+
+    np.testing.assert_allclose(
+        np.asarray(logits_a), np.asarray(logits_b), atol=2e-4, rtol=2e-4
+    )
+
+
+def test_padded_tail_does_not_change_logits(flat_w):
+    toks, lens = _prompt(2, 6, seed=5)
+    logits_a, _, _ = prefill(CFG, flat_w, toks, lens)
+    # Poison the padding region (>= lens); logits must be unchanged.
+    poisoned = toks.at[:, 6:].set(CFG.vocab - 1)
+    logits_b, _, _ = prefill(CFG, flat_w, poisoned, lens)
+    np.testing.assert_allclose(
+        np.asarray(logits_a), np.asarray(logits_b), atol=1e-5
+    )
+
+
+def test_rows_are_independent(flat_w):
+    """Batching must not couple rows: row 0 of a b=2 batch equals b=1."""
+    toks, lens = _prompt(2, 8, seed=7)
+    logits2, _, _ = prefill(CFG, flat_w, toks, lens)
+    logits1, _, _ = prefill(CFG, flat_w, toks[:1], lens[:1])
+    np.testing.assert_allclose(
+        np.asarray(logits2[0]), np.asarray(logits1[0]), atol=2e-4, rtol=2e-4
+    )
+
+
+def test_greedy_generate_deterministic(flat_w):
+    toks, lens = _prompt(2, 8, seed=9)
+    a = greedy_generate(CFG, flat_w, toks, lens, steps=6)
+    b = greedy_generate(CFG, flat_w, toks, lens, steps=6)
+    assert a.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(jnp.max(a)) < CFG.vocab and int(jnp.min(a)) >= 0
+
+
+def test_different_weights_give_different_logits(flat_w):
+    toks, lens = _prompt(1, 8, seed=11)
+    other = flatten_params(CFG, init_params(CFG, seed=1))
+    la, _, _ = prefill(CFG, flat_w, toks, lens)
+    lb, _, _ = prefill(CFG, other, toks, lens)
+    assert not np.allclose(np.asarray(la), np.asarray(lb))

@@ -1,0 +1,124 @@
+//! Shared helpers for the per-figure bench binaries.
+
+#![allow(dead_code)]
+
+use throttllem::config::EngineSpec;
+use throttllem::engine::request::Request;
+use throttllem::engine::sim::EngineSim;
+
+/// Measure a full batch lifetime at a fixed frequency: admit `batch`
+/// identical (prompt, gen) requests at t=0 and run to completion.
+/// Returns (tps, e2e_s, mean_tbt_s, mean_power_w, tokens_per_joule).
+pub fn batch_lifetime(
+    spec: &EngineSpec,
+    batch: u32,
+    prompt: u32,
+    gen: u32,
+    freq_mhz: u32,
+) -> (f64, f64, f64, f64, f64) {
+    let mut e = EngineSim::new(spec.clone(), freq_mhz);
+    for i in 0..batch {
+        e.admit(
+            Request {
+                id: i as u64,
+                prompt_tokens: prompt,
+                gen_tokens: gen,
+                predicted_gen: gen,
+                arrival_s: 0.0,
+            },
+            0.0,
+            false,
+        )
+        .expect("batch must fit");
+    }
+    let mut t = 0.0;
+    let mut tokens = 0u64;
+    let mut tbt_sum = 0.0;
+    let mut decode_iters = 0u64;
+    while !e.is_idle() {
+        let r = e.run_iteration(t);
+        t = r.start_s + r.duration_s;
+        tokens += r.tokens as u64;
+        if r.prefills == 0 {
+            tbt_sum += r.duration_s;
+            decode_iters += 1;
+        }
+    }
+    let energy = e.total_energy_j();
+    let tps = tokens as f64 / t;
+    let tbt = tbt_sum / decode_iters.max(1) as f64;
+    let power = energy / t;
+    (tps, t, tbt, power, tokens as f64 / energy)
+}
+
+/// Render a float cell.
+pub fn c(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+/// Saturation profiling (paper §V-A / Table II methodology): ramp the
+/// request rate on the Triton baseline at max frequency until long tail
+/// latencies appear; returns (max sustainable RPS, p99 E2E at that
+/// load) **on this substrate**. The paper right-scales its trace to the
+/// evaluated engine's measured max load and defines the E2E SLO as the
+/// p99 at that load — benches do the same with these derived values.
+pub fn saturation_profile(
+    spec: &EngineSpec,
+    model: &throttllem::coordinator::PerfModel,
+    secs: f64,
+    seed: u64,
+) -> (f64, f64) {
+    use throttllem::config::ServingConfig;
+    use throttllem::coordinator::{serve_trace, Policy};
+    use throttllem::workload::trace::{synth_trace, TraceParams};
+    use throttllem::workload::LengthPredictor;
+
+    let fracs = [0.2, 0.35, 0.5, 0.65, 0.8, 1.0, 1.2];
+    let mut p99s = Vec::new();
+    for &f in &fracs {
+        let rps = f * spec.max_load_rps;
+        let mut reqs = synth_trace(&TraceParams::short(secs, rps, seed));
+        LengthPredictor::oracle().apply(&mut reqs, 1024);
+        let cfg = ServingConfig::triton(spec.clone());
+        let out = serve_trace(&cfg, Policy::triton(), model, &reqs);
+        p99s.push(out.stats.e2e.p99());
+    }
+    let min_p99 = p99s.iter().cloned().fold(f64::INFINITY, f64::min);
+    // Max load = highest ramp point whose p99 stays within 2x of the
+    // unloaded tail (before the "long tail latencies" knee).
+    let idx = p99s
+        .iter()
+        .rposition(|&p| p.is_finite() && p <= 2.0 * min_p99)
+        .unwrap_or(0);
+    (fracs[idx] * spec.max_load_rps, p99s[idx])
+}
+
+/// Precharacterize a scale set on this substrate (§IV-D: autoscaling
+/// decisions use "precharacterized performance profiles"): returns the
+/// specs with `max_load_rps` replaced by the measured sustainable load
+/// (with a small headroom factor), plus the deployment E2E SLO — the
+/// loosest per-engine p99-at-max-load, so every engine in the set can
+/// honor it at its rated point (the paper's per-engine SLOs are
+/// mutually consistent this way; on our substrate the KV-starved TP1
+/// dominates).
+pub fn derived_scale_set(
+    set: &[EngineSpec],
+    model: &throttllem::coordinator::PerfModel,
+    secs: f64,
+    seed: u64,
+) -> (Vec<EngineSpec>, f64) {
+    let mut out = Vec::new();
+    let mut slo: f64 = 0.0;
+    for spec in set {
+        let (rps, p99) = saturation_profile(spec, model, secs, seed);
+        eprintln!(
+            "   profile {}: max {:.2} RPS (rated {:.2}), p99 {:.1} s",
+            spec.name, rps, spec.max_load_rps, p99
+        );
+        let mut s = spec.clone();
+        s.max_load_rps = rps * 0.85; // headroom for spikes during spawn
+        out.push(s);
+        slo = slo.max(p99);
+    }
+    (out, slo)
+}

@@ -1,0 +1,78 @@
+//! Fig. 2 reproduction: impact of batch size and GPU frequency on
+//! throughput, E2E latency, TBT, power and energy efficiency
+//! (Llama2-13B TP2; identical queries, 1 prompt / 1024 gen tokens).
+
+mod common;
+
+use common::{batch_lifetime, c};
+use throttllem::bench_util::{print_table, section};
+use throttllem::config::models::llama2_13b;
+
+fn main() {
+    let spec = llama2_13b(2);
+    let batches = [1u32, 2, 4, 8, 16, 32];
+    let freqs = [210u32, 510, 810, 1050, 1260, 1410];
+
+    let mut tps_rows = vec![];
+    let mut e2e_rows = vec![];
+    let mut tbt_rows = vec![];
+    let mut pow_rows = vec![];
+    let mut tpj_rows = vec![];
+    for &b in &batches {
+        let mut tps_r = vec![format!("B={b}")];
+        let mut e2e_r = tps_r.clone();
+        let mut tbt_r = tps_r.clone();
+        let mut pow_r = tps_r.clone();
+        let mut tpj_r = tps_r.clone();
+        for &f in &freqs {
+            let (tps, e2e, tbt, pow, tpj) = batch_lifetime(&spec, b, 1, 1024, f);
+            tps_r.push(c(tps, 0));
+            e2e_r.push(c(e2e, 1));
+            tbt_r.push(c(tbt * 1e3, 1));
+            pow_r.push(c(pow, 0));
+            tpj_r.push(c(tpj, 3));
+        }
+        tps_rows.push(tps_r);
+        e2e_rows.push(e2e_r);
+        tbt_rows.push(tbt_r);
+        pow_rows.push(pow_r);
+        tpj_rows.push(tpj_r);
+    }
+    let headers: Vec<String> = std::iter::once("batch".to_string())
+        .chain(freqs.iter().map(|f| format!("{f}MHz")))
+        .collect();
+    let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+
+    section("Fig. 2a — throughput (tokens/s)");
+    print_table(&h, &tps_rows);
+    section("Fig. 2b — E2E latency (s, 1024 tokens)");
+    print_table(&h, &e2e_rows);
+    section("Fig. 2c — TBT (ms)");
+    print_table(&h, &tbt_rows);
+    section("Fig. 2d — power (W)");
+    print_table(&h, &pow_rows);
+    section("Fig. 2e — energy efficiency (tokens/J)");
+    print_table(&h, &tpj_rows);
+
+    // Paper anchor points (§III-A1).
+    let (_, e2e_hi, tbt_hi, pow_hi, tpj_hi) = batch_lifetime(&spec, 32, 1, 1024, 1410);
+    let (_, e2e_sw, tbt_sw, _, tpj_sw) = batch_lifetime(&spec, 32, 1, 1024, 1050);
+    let (_, _, _, pow_lo, _) = batch_lifetime(&spec, 32, 1, 1024, 210);
+    section("anchors vs paper");
+    println!(
+        "TPJ boost @1050 MHz, B=32 : {:+.1}%  (paper: +37.4%)",
+        (tpj_sw / tpj_hi - 1.0) * 100.0
+    );
+    println!(
+        "E2E impact @1050 MHz      : {:+.2}%  (paper: +8.26%)",
+        (e2e_sw / e2e_hi - 1.0) * 100.0
+    );
+    println!(
+        "TBT impact @1050 MHz      : {:+.2}%  (paper: +5.41%)",
+        (tbt_sw / tbt_hi - 1.0) * 100.0
+    );
+    println!(
+        "power span 210->1410 MHz  : {:.2}x  (paper: >2x)",
+        pow_hi / pow_lo
+    );
+}

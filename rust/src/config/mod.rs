@@ -1,0 +1,128 @@
+//! Engine descriptors, SLO definitions and serving configuration.
+//!
+//! Table II of the paper defines the evaluated engines (model × tensor
+//! parallelism) with their rated max load, p99 E2E SLO, and KV-cache
+//! capacity.  Those numbers are reproduced here as configuration ground
+//! truth; the `table2` bench re-derives max load / E2E SLO from our own
+//! saturation profiling to mirror the paper's methodology.
+
+pub mod models;
+
+pub use models::{EngineSpec, ModelFamily, PartitionKind};
+
+/// Service-level objectives the coordinator enforces (paper §V-A).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Average time-between-tokens bound, seconds (paper: 200 ms — the
+    /// human reading rate, adopted by MLPerf).
+    pub tbt_avg: f64,
+    /// End-to-end p99 deadline, seconds (per-engine, from Table II or
+    /// re-derived by saturation profiling).
+    pub e2e_p99: f64,
+}
+
+impl SloSpec {
+    pub fn new(tbt_avg: f64, e2e_p99: f64) -> Self {
+        assert!(tbt_avg > 0.0 && e2e_p99 > 0.0);
+        Self { tbt_avg, e2e_p99 }
+    }
+
+    /// The paper's TBT SLO: 200 ms average between tokens.
+    pub const HUMAN_READING_TBT: f64 = 0.200;
+
+    /// SLO for an engine using its Table II E2E profile.
+    pub fn for_engine(spec: &EngineSpec) -> Self {
+        Self::new(Self::HUMAN_READING_TBT, spec.e2e_slo_p99)
+    }
+}
+
+/// Top-level serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Engine to serve on (ignored when autoscaling over `scale_set`).
+    pub engine: EngineSpec,
+    /// SLOs to enforce.
+    pub slo: SloSpec,
+    /// Enable the GPU frequency throttling controller.
+    pub throttling: bool,
+    /// Enable the TP autoscaler over `scale_set`.
+    pub autoscaling: bool,
+    /// Engines the autoscaler may pick from (ordered by capacity).
+    pub scale_set: Vec<EngineSpec>,
+    /// Generation-length predictor p95 relative error (0.0 = oracle).
+    pub predictor_p95_error: f64,
+    /// Autoscaler monitoring interval, seconds (paper: 10 s).
+    pub autoscale_interval: f64,
+    /// Maximum generation length supported by the deployment
+    /// (`max_tokens`); Scoreboard entries are bumped to this when a
+    /// query outlives its predicted length (paper §IV-F).
+    pub max_tokens: u32,
+    /// RNG seed for anything stochastic downstream.
+    pub seed: u64,
+}
+
+impl ServingConfig {
+    /// throttLL'eM defaults on a given engine (throttling on,
+    /// autoscaling off — the paper's §V-D1 configuration).
+    pub fn throttllem(engine: EngineSpec) -> Self {
+        let slo = SloSpec::for_engine(&engine);
+        Self {
+            engine,
+            slo,
+            throttling: true,
+            autoscaling: false,
+            scale_set: vec![],
+            predictor_p95_error: 0.0,
+            autoscale_interval: 10.0,
+            max_tokens: 1024,
+            seed: 0,
+        }
+    }
+
+    /// Triton-like baseline: max frequency, no throttling/autoscaling.
+    pub fn triton(engine: EngineSpec) -> Self {
+        Self {
+            throttling: false,
+            ..Self::throttllem(engine)
+        }
+    }
+
+    /// Full throttLL'eM (§V-D2): throttling + autoscaling over a set.
+    pub fn autoscaled(scale_set: Vec<EngineSpec>) -> Self {
+        assert!(!scale_set.is_empty());
+        let largest = scale_set.last().unwrap().clone();
+        Self {
+            autoscaling: true,
+            scale_set,
+            ..Self::throttllem(largest)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use models::llama2_13b;
+
+    #[test]
+    fn slo_for_engine_uses_table2() {
+        let e = llama2_13b(2);
+        let slo = SloSpec::for_engine(&e);
+        assert_eq!(slo.tbt_avg, 0.2);
+        assert!((slo.e2e_p99 - 30.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn triton_config_disables_throttling() {
+        let c = ServingConfig::triton(llama2_13b(2));
+        assert!(!c.throttling && !c.autoscaling);
+    }
+
+    #[test]
+    fn autoscaled_config_targets_largest() {
+        let set = vec![llama2_13b(1), llama2_13b(2), llama2_13b(4)];
+        let c = ServingConfig::autoscaled(set);
+        assert!(c.autoscaling && c.throttling);
+        assert_eq!(c.engine.tensor_parallel, 4);
+    }
+}

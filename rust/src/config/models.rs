@@ -1,0 +1,262 @@
+//! Engine specifications: the paper's evaluated LLM engines (Table II)
+//! plus the DDP/PP partition variants of §III-C (Fig. 4).
+//!
+//! `latency_scale` calibrates the per-iteration latency of an engine
+//! relative to the Llama2-13B TP2 reference the paper characterizes in
+//! §III-A; it tracks per-GPU weight bytes (decode is memory-bound) plus
+//! tensor-parallel communication overheads.  See `gpusim::latency` for
+//! the full model and DESIGN.md §1 for the calibration anchors.
+
+/// LLM families examined by the paper (§V-A, Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelFamily {
+    Llama3_8B,
+    Llama2_13B,
+    Llama3_70B,
+    /// The runnable tiny model served for real through PJRT.
+    TinyLlamaSim,
+}
+
+impl ModelFamily {
+    pub fn params_b(&self) -> f64 {
+        match self {
+            ModelFamily::Llama3_8B => 8.0,
+            ModelFamily::Llama2_13B => 13.0,
+            ModelFamily::Llama3_70B => 70.0,
+            ModelFamily::TinyLlamaSim => 0.0001,
+        }
+    }
+}
+
+/// Multi-GPU partitioning approach (§II / §III-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PartitionKind {
+    /// Tensor parallelism: weight tensors sharded across GPUs.
+    Tensor,
+    /// Distributed data parallelism: full model replicas.
+    DataParallel,
+    /// Pipeline parallelism: consecutive layers per GPU.
+    Pipeline,
+}
+
+/// A deployable engine configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineSpec {
+    pub name: String,
+    pub family: ModelFamily,
+    pub partition: PartitionKind,
+    /// Parallelism level (GPUs for TP/PP; replicas for DDP).
+    pub tensor_parallel: u32,
+    /// Physical GPUs occupied.
+    pub n_gpus: u32,
+    /// Paged-KV capacity in blocks (Table II).
+    pub kv_blocks: u32,
+    /// Tokens per KV block (TensorRT-LLM compile-time parameter N).
+    pub block_tokens: u32,
+    /// Largest batch the engine schedules.
+    pub max_batch: u32,
+    /// Rated max load before long tail latencies, requests/s (Table II).
+    pub max_load_rps: f64,
+    /// p99 E2E at rated max load, seconds (Table II) — the E2E SLO.
+    pub e2e_slo_p99: f64,
+    /// Iteration-latency multiplier vs the Llama2-13B TP2 reference.
+    pub latency_scale: f64,
+    /// Pipeline-bubble overhead fraction (PP only; 0 otherwise).
+    pub pipeline_bubble: f64,
+}
+
+impl EngineSpec {
+    /// KV capacity in tokens.
+    pub fn kv_capacity_tokens(&self) -> u64 {
+        self.kv_blocks as u64 * self.block_tokens as u64
+    }
+}
+
+/// Tokens per KV block used across the deployment.
+pub const BLOCK_TOKENS: u32 = 64;
+
+/// Llama3-8B (Table II row 1). Only TP1 is evaluated by the paper.
+pub fn llama3_8b(tp: u32) -> EngineSpec {
+    assert_eq!(tp, 1, "paper evaluates Llama3-8B at TP1 only");
+    EngineSpec {
+        name: "llama3-8b-tp1".into(),
+        family: ModelFamily::Llama3_8B,
+        partition: PartitionKind::Tensor,
+        tensor_parallel: 1,
+        n_gpus: 1,
+        kv_blocks: 1033,
+        block_tokens: BLOCK_TOKENS,
+        max_batch: 64,
+        max_load_rps: 13.0,
+        e2e_slo_p99: 37.7,
+        latency_scale: 0.75,
+        pipeline_bubble: 0.0,
+    }
+}
+
+/// Llama2-13B at TP 1, 2 or 4 (Table II rows 2-4).
+pub fn llama2_13b(tp: u32) -> EngineSpec {
+    let (kv_blocks, max_batch, max_load, e2e, scale) = match tp {
+        1 => (120, 8, 1.125, 22.7, 1.8),
+        2 => (439, 32, 4.0, 30.2, 1.0),
+        4 => (1050, 64, 7.5, 31.3, 0.65),
+        _ => panic!("llama2-13b supports TP in {{1,2,4}}, got {tp}"),
+    };
+    EngineSpec {
+        name: format!("llama2-13b-tp{tp}"),
+        family: ModelFamily::Llama2_13B,
+        partition: PartitionKind::Tensor,
+        tensor_parallel: tp,
+        n_gpus: tp,
+        kv_blocks,
+        block_tokens: BLOCK_TOKENS,
+        max_batch,
+        max_load_rps: max_load,
+        e2e_slo_p99: e2e,
+        latency_scale: scale,
+        pipeline_bubble: 0.0,
+    }
+}
+
+/// Llama3-70B TP8 (Table II row 5).
+pub fn llama3_70b(tp: u32) -> EngineSpec {
+    assert_eq!(tp, 8, "paper evaluates Llama3-70B at TP8 only");
+    EngineSpec {
+        name: "llama3-70b-tp8".into(),
+        family: ModelFamily::Llama3_70B,
+        partition: PartitionKind::Tensor,
+        tensor_parallel: 8,
+        n_gpus: 8,
+        kv_blocks: 2205,
+        block_tokens: BLOCK_TOKENS,
+        max_batch: 48,
+        max_load_rps: 7.0,
+        e2e_slo_p99: 44.0,
+        latency_scale: 1.6,
+        pipeline_bubble: 0.0,
+    }
+}
+
+/// Llama2-13B partition variants for the §III-C study (Fig. 4).
+///
+/// DDP(n): n independent TP1 replicas (n x 13B weights, n x TP1 KV).
+/// PP(n): layers split over n GPUs; per-iteration pipeline bubbles make
+/// it the slowest option (calibrated to the paper's 2.74x / 6.26x TP
+/// advantage at n = 2 / 4).
+pub fn llama2_13b_partitioned(kind: PartitionKind, n: u32) -> EngineSpec {
+    assert!(n == 2 || n == 4, "Fig. 4 evaluates parallelism 2 and 4");
+    match kind {
+        PartitionKind::Tensor => llama2_13b(n),
+        PartitionKind::DataParallel => {
+            let tp1 = llama2_13b(1);
+            EngineSpec {
+                name: format!("llama2-13b-ddp{n}"),
+                partition: PartitionKind::DataParallel,
+                tensor_parallel: n,
+                n_gpus: n,
+                kv_blocks: tp1.kv_blocks * n,
+                max_batch: tp1.max_batch * n,
+                // DDP replicas split the arrival stream.
+                max_load_rps: tp1.max_load_rps * n as f64,
+                latency_scale: tp1.latency_scale,
+                ..tp1
+            }
+        }
+        PartitionKind::Pipeline => {
+            let tp1 = llama2_13b(1);
+            let bubble = if n == 2 { 0.55 } else { 1.30 };
+            EngineSpec {
+                name: format!("llama2-13b-pp{n}"),
+                partition: PartitionKind::Pipeline,
+                tensor_parallel: n,
+                n_gpus: n,
+                kv_blocks: tp1.kv_blocks * n,
+                max_batch: tp1.max_batch * n,
+                max_load_rps: tp1.max_load_rps * 1.3,
+                latency_scale: tp1.latency_scale,
+                pipeline_bubble: bubble,
+                ..tp1
+            }
+        }
+    }
+}
+
+/// The runnable PJRT-served model (artifacts built by `make artifacts`).
+pub fn tiny_llama_sim() -> EngineSpec {
+    EngineSpec {
+        name: "tiny-llama-sim".into(),
+        family: ModelFamily::TinyLlamaSim,
+        partition: PartitionKind::Tensor,
+        tensor_parallel: 1,
+        n_gpus: 1,
+        // 256-token max_seq, 64-token blocks, 8-wide max bucket.
+        kv_blocks: 32,
+        block_tokens: BLOCK_TOKENS,
+        max_batch: 8,
+        max_load_rps: 16.0,
+        e2e_slo_p99: 10.0,
+        latency_scale: 0.02,
+        pipeline_bubble: 0.0,
+    }
+}
+
+/// The five engines of Table II, in paper order.
+pub fn table2_engines() -> Vec<EngineSpec> {
+    vec![
+        llama3_8b(1),
+        llama2_13b(1),
+        llama2_13b(2),
+        llama2_13b(4),
+        llama3_70b(8),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper() {
+        let engines = table2_engines();
+        assert_eq!(engines.len(), 5);
+        let blocks: Vec<u32> = engines.iter().map(|e| e.kv_blocks).collect();
+        assert_eq!(blocks, vec![1033, 120, 439, 1050, 2205]);
+        let rps: Vec<f64> = engines.iter().map(|e| e.max_load_rps).collect();
+        assert_eq!(rps, vec![13.0, 1.125, 4.0, 7.5, 7.0]);
+        let slo: Vec<f64> = engines.iter().map(|e| e.e2e_slo_p99).collect();
+        assert_eq!(slo, vec![37.7, 22.7, 30.2, 31.3, 44.0]);
+    }
+
+    #[test]
+    fn higher_tp_means_lower_latency_scale() {
+        assert!(llama2_13b(4).latency_scale < llama2_13b(2).latency_scale);
+        assert!(llama2_13b(2).latency_scale < llama2_13b(1).latency_scale);
+    }
+
+    #[test]
+    fn kv_capacity_tokens() {
+        assert_eq!(llama2_13b(2).kv_capacity_tokens(), 439 * 64);
+    }
+
+    #[test]
+    fn ddp_scales_replica_resources() {
+        let ddp2 = llama2_13b_partitioned(PartitionKind::DataParallel, 2);
+        assert_eq!(ddp2.kv_blocks, 240);
+        assert_eq!(ddp2.max_batch, 16);
+        assert_eq!(ddp2.n_gpus, 2);
+    }
+
+    #[test]
+    fn pp_has_bubble_overhead() {
+        let pp2 = llama2_13b_partitioned(PartitionKind::Pipeline, 2);
+        let pp4 = llama2_13b_partitioned(PartitionKind::Pipeline, 4);
+        assert!(pp2.pipeline_bubble > 0.0);
+        assert!(pp4.pipeline_bubble > pp2.pipeline_bubble);
+    }
+
+    #[test]
+    #[should_panic]
+    fn llama2_13b_rejects_bad_tp() {
+        llama2_13b(3);
+    }
+}

@@ -1,0 +1,240 @@
+//! LLM instance autoscaling (paper §IV-D).
+//!
+//! A 10-second monitoring agent right-sizes the engine's tensor
+//! parallelism against precharacterized per-engine max loads
+//! (Table II).  Provisioning a new inference server takes >20 s, so
+//! switching uses "shadow instancing": a warm-up phase (old engine
+//! keeps serving while the new one boots) followed by a transition
+//! (old engine drains, new engine takes all new requests).  A grace
+//! period equal to the spawn time prevents premature down-scaling:
+//! scale-up is always allowed, scale-down only once the grace period
+//! expires; the period renews whenever measured RPS is within the
+//! current engine's constraints.
+
+use crate::config::EngineSpec;
+
+/// Provisioning latency for a new engine instance, seconds
+/// (paper: "significant provisioning latency (>20 s)").
+pub const SPAWN_TIME_S: f64 = 25.0;
+
+/// What the autoscaler decided at a tick.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScaleDecision {
+    /// Keep the current engine.
+    Hold,
+    /// Begin shadow instancing toward `target` (index into the set).
+    StartShadow { target: usize },
+    /// Already shadowing; keep waiting.
+    Shadowing,
+}
+
+/// In-flight shadow instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Shadow {
+    pub target: usize,
+    pub started_at: f64,
+    pub ready_at: f64,
+}
+
+/// The autoscaler state machine.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    specs: Vec<EngineSpec>,
+    current: usize,
+    shadow: Option<Shadow>,
+    grace_until: f64,
+    pub spawn_time_s: f64,
+    pub interval_s: f64,
+}
+
+impl Autoscaler {
+    /// `specs` ordered by capacity (ascending max load); serving starts
+    /// on `initial`.
+    pub fn new(specs: Vec<EngineSpec>, initial: usize) -> Self {
+        assert!(!specs.is_empty() && initial < specs.len());
+        assert!(
+            specs
+                .windows(2)
+                .all(|w| w[0].max_load_rps <= w[1].max_load_rps),
+            "scale set must be ordered by max load"
+        );
+        Self {
+            specs,
+            current: initial,
+            shadow: None,
+            grace_until: 0.0,
+            spawn_time_s: SPAWN_TIME_S,
+            interval_s: 10.0,
+        }
+    }
+
+    pub fn specs(&self) -> &[EngineSpec] {
+        &self.specs
+    }
+
+    pub fn current_index(&self) -> usize {
+        self.current
+    }
+
+    pub fn current_spec(&self) -> &EngineSpec {
+        &self.specs[self.current]
+    }
+
+    pub fn shadow(&self) -> Option<Shadow> {
+        self.shadow
+    }
+
+    /// Smallest engine sustaining `rps` (falls back to the largest).
+    pub fn desired_index(&self, rps: f64) -> usize {
+        self.specs
+            .iter()
+            .position(|s| s.max_load_rps >= rps)
+            .unwrap_or(self.specs.len() - 1)
+    }
+
+    /// Monitoring tick: measured RPS over the last interval.
+    pub fn tick(&mut self, now: f64, measured_rps: f64) -> ScaleDecision {
+        let desired = self.desired_index(measured_rps);
+
+        // Renew the grace period while the current engine is the right
+        // size for the load.
+        if desired == self.current {
+            self.grace_until = now + self.spawn_time_s;
+        }
+
+        if let Some(sh) = self.shadow {
+            // May upgrade the in-flight target on a sudden spike
+            // ("the autoscaler may switch to a larger engine ... but
+            // may not switch to a smaller engine" during grace).
+            if desired > sh.target {
+                self.shadow = Some(Shadow {
+                    target: desired,
+                    started_at: now,
+                    ready_at: now + self.spawn_time_s,
+                });
+                return ScaleDecision::StartShadow { target: desired };
+            }
+            return ScaleDecision::Shadowing;
+        }
+
+        if desired > self.current {
+            // Scale-up: always allowed.
+            self.shadow = Some(Shadow {
+                target: desired,
+                started_at: now,
+                ready_at: now + self.spawn_time_s,
+            });
+            ScaleDecision::StartShadow { target: desired }
+        } else if desired < self.current && now >= self.grace_until {
+            // Scale-down: only after the grace period expires.
+            self.shadow = Some(Shadow {
+                target: desired,
+                started_at: now,
+                ready_at: now + self.spawn_time_s,
+            });
+            ScaleDecision::StartShadow { target: desired }
+        } else {
+            ScaleDecision::Hold
+        }
+    }
+
+    /// Complete the transition if the shadow instance is ready;
+    /// returns the new current index. The new engine receives a fresh
+    /// grace period.
+    pub fn poll_ready(&mut self, now: f64) -> Option<usize> {
+        if let Some(sh) = self.shadow {
+            if now >= sh.ready_at {
+                self.current = sh.target;
+                self.shadow = None;
+                self.grace_until = now + self.spawn_time_s;
+                return Some(self.current);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::llama2_13b;
+
+    fn scaler() -> Autoscaler {
+        Autoscaler::new(vec![llama2_13b(1), llama2_13b(2), llama2_13b(4)], 0)
+    }
+
+    #[test]
+    fn desired_index_matches_capacity() {
+        let a = scaler();
+        assert_eq!(a.desired_index(0.5), 0); // <= 1.125
+        assert_eq!(a.desired_index(2.0), 1); // <= 4.0
+        assert_eq!(a.desired_index(6.0), 2); // <= 7.5
+        assert_eq!(a.desired_index(50.0), 2); // saturate at largest
+    }
+
+    #[test]
+    fn scale_up_is_immediate() {
+        let mut a = scaler();
+        let d = a.tick(5.0, 3.0);
+        assert_eq!(d, ScaleDecision::StartShadow { target: 1 });
+        assert!(a.shadow().is_some());
+        // Not current yet (warm-up).
+        assert_eq!(a.current_index(), 0);
+        assert!(a.poll_ready(10.0).is_none());
+        assert_eq!(a.poll_ready(31.0), Some(1));
+        assert_eq!(a.current_index(), 1);
+    }
+
+    #[test]
+    fn scale_down_waits_for_grace_period() {
+        let mut a = scaler();
+        a.tick(0.0, 3.0); // start shadow to TP2
+        a.poll_ready(25.0).unwrap();
+        // load drops immediately; grace = 25 + 25 = until 50
+        assert_eq!(a.tick(30.0, 0.5), ScaleDecision::Hold);
+        assert_eq!(a.tick(40.0, 0.5), ScaleDecision::Hold);
+        // Past the grace period: scale-down allowed.
+        assert_eq!(
+            a.tick(51.0, 0.5),
+            ScaleDecision::StartShadow { target: 0 }
+        );
+    }
+
+    #[test]
+    fn grace_renewed_while_rightsized() {
+        let mut a = scaler();
+        a.tick(0.0, 3.0);
+        a.poll_ready(25.0).unwrap(); // now TP2, grace until 50
+        // At 40 s, the load matches TP2 -> grace renews to 65.
+        assert_eq!(a.tick(40.0, 3.0), ScaleDecision::Hold);
+        // At 55 (pre-65), a drop cannot downscale yet.
+        assert_eq!(a.tick(55.0, 0.5), ScaleDecision::Hold);
+        // At 66, it can.
+        assert_eq!(
+            a.tick(66.0, 0.5),
+            ScaleDecision::StartShadow { target: 0 }
+        );
+    }
+
+    #[test]
+    fn spike_during_shadow_upgrades_target() {
+        let mut a = scaler();
+        a.tick(0.0, 3.0); // shadow -> TP2
+        let d = a.tick(10.0, 7.0); // spike needing TP4
+        assert_eq!(d, ScaleDecision::StartShadow { target: 2 });
+        assert_eq!(a.poll_ready(36.0), Some(2));
+    }
+
+    #[test]
+    fn shadowing_reported_while_warming() {
+        let mut a = scaler();
+        a.tick(0.0, 3.0);
+        assert_eq!(a.tick(10.0, 3.0), ScaleDecision::Shadowing);
+    }
+
+    #[test]
+    #[should_panic(expected = "ordered by max load")]
+    fn rejects_unordered_scale_set() {
+        Autoscaler::new(vec![llama2_13b(4), llama2_13b(1)], 0);
+    }
+}

@@ -1,0 +1,33 @@
+//! The throttLL'eM coordinator (paper §IV) — the system contribution.
+//!
+//! Components, mirroring Fig. 6:
+//!   * [`scoreboard`]: per-query metadata `(s_i, |q_i|, |r̂_i|)` with
+//!     virtual append / commit / rollback for admission-control
+//!     what-ifs (§IV-B);
+//!   * [`projection`]: the analytical model producing the future batch
+//!     (`B`) and KV-usage (`KV`) vectors — Eq. (1), (2);
+//!   * [`perf_model`]: the GBDT `M` predicting iteration-level IPS
+//!     from (engine size, batch, KV, frequency), plus the throughput /
+//!     TBT / cumulative-time vectors `T`, `T'`, `T_R` — Eq. (3);
+//!   * [`scheduler`]: three-check admission control (KV capacity, TBT
+//!     SLO, E2E SLO) with "lost" marking (§IV-C2);
+//!   * [`throttle`]: binary search for the minimum SLO-satisfying GPU
+//!     frequency (§IV-E);
+//!   * [`autoscaler`]: TP right-sizing with shadow instancing and the
+//!     grace-period policy (§IV-D);
+//!   * [`server`]: the event loop wiring everything to the engine, and
+//!     the Triton-like baseline policies the paper compares against.
+
+pub mod autoscaler;
+pub mod perf_model;
+pub mod projection;
+pub mod scheduler;
+pub mod scoreboard;
+pub mod server;
+pub mod throttle;
+
+pub use perf_model::PerfModel;
+pub use projection::Projection;
+pub use scheduler::{AdmissionDecision, Scheduler};
+pub use scoreboard::Scoreboard;
+pub use server::{serve_trace, Policy, ServeOutcome};

@@ -1,0 +1,240 @@
+//! The performance-prediction model `M` (paper §IV-C1) and the derived
+//! throughput/TBT/remaining-time vectors (Eq. 3).
+//!
+//! `M` is a GBDT over (engine size, batch, KV blocks, frequency) -> IPS,
+//! trained on profiler data (`workload::profiler`).  The scheduler
+//! queries it per projected future iteration; `t_r` cumulatively sums
+//! predicted TBTs to estimate arrival times of future iterations.
+
+use crate::config::EngineSpec;
+use crate::coordinator::projection::Projection;
+use crate::mlmodel::{Gbdt, GbdtParams};
+use crate::workload::profiler::{collect_training_data, features};
+
+/// The wrapped model `M` for one deployment (covers every engine size
+/// it was trained on — engine size is a feature).
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    model: Gbdt,
+    /// Predict every `stride`-th future iteration and interpolate —
+    /// a hot-path optimization; 1 = exact.
+    pub stride: usize,
+}
+
+impl PerfModel {
+    pub fn from_gbdt(model: Gbdt) -> Self {
+        Self { model, stride: 4 }
+    }
+
+    /// Train on profiling data from the given engines (paper: "this
+    /// data collection process is repeated for all supported TP
+    /// levels").
+    pub fn train(engines: &[EngineSpec], samples_per_batch: u32, seed: u64) -> Self {
+        let mut data = crate::mlmodel::Dataset::new();
+        for e in engines {
+            let d = collect_training_data(e, samples_per_batch, seed);
+            for (f, t) in d.features.into_iter().zip(d.targets) {
+                data.push(f, t);
+            }
+        }
+        let params = GbdtParams {
+            n_trees: 150,
+            learning_rate: 0.12,
+            ..Default::default()
+        };
+        Self::from_gbdt(Gbdt::fit(&data, &params))
+    }
+
+    /// Train directly on a prepared dataset (Table III protocol).
+    pub fn train_on(data: &crate::mlmodel::Dataset) -> Self {
+        let params = GbdtParams {
+            n_trees: 150,
+            learning_rate: 0.12,
+            ..Default::default()
+        };
+        Self::from_gbdt(Gbdt::fit(data, &params))
+    }
+
+    /// Predict from a raw feature row
+    /// [engine size, batch, kv_blocks, freq_mhz].
+    pub fn predict_raw(&self, row: &[f64]) -> f64 {
+        self.model.predict(row)
+    }
+
+    /// Predict IPS for one state.
+    pub fn predict_ips(
+        &self,
+        spec: &EngineSpec,
+        batch: u32,
+        kv_blocks: u32,
+        freq_mhz: u32,
+    ) -> f64 {
+        self.model
+            .predict(&features(spec, batch, kv_blocks, freq_mhz))
+            .max(1e-3)
+    }
+
+    /// Vector T: predicted IPS for each projected future iteration at
+    /// frequency `freq_mhz` (paper §IV-C2 step 2). Iterations where
+    /// the batch is empty inherit the previous prediction.
+    ///
+    /// Hot-path optimizations (EXPERIMENTS.md §Perf): predictions run
+    /// at `stride` granularity, and consecutive stride points whose
+    /// (batch, KV-bucket) state is unchanged reuse the previous GBDT
+    /// inference — KV grows by ~batch/N blocks per iteration, so long
+    /// stretches of the horizon share a prediction.
+    pub fn throughput_vector(
+        &self,
+        spec: &EngineSpec,
+        proj: &Projection,
+        freq_mhz: u32,
+    ) -> Vec<f64> {
+        let n = proj.horizon();
+        let mut t = vec![0.0; n];
+        if n == 0 {
+            return t;
+        }
+        // KV quantization for prediction reuse: ~1.5% of capacity.
+        let kv_bucket = (spec.kv_blocks / 64).max(1);
+        let stride = self.stride.max(1);
+        let mut i = 0;
+        let mut last_key = (u32::MAX, u32::MAX);
+        let mut last =
+            self.predict_ips(spec, proj.batch[0].max(1), proj.kv_blocks[0], freq_mhz);
+        while i < n {
+            let b = proj.batch[i];
+            if b != 0 {
+                let key = (b, proj.kv_blocks[i] / kv_bucket);
+                if key != last_key {
+                    last = self.predict_ips(spec, b, proj.kv_blocks[i], freq_mhz);
+                    last_key = key;
+                }
+            }
+            let hi = (i + stride).min(n);
+            for v in &mut t[i..hi] {
+                *v = last;
+            }
+            i = hi;
+        }
+        t
+    }
+
+    /// T' = 1/T (TBT per iteration) and T_R = cumulative sum of T'
+    /// (estimated time to REACH each future iteration — Eq. 3).
+    pub fn remaining_time_vector(t: &[f64]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(t.len());
+        let mut acc = 0.0;
+        for &ips in t {
+            acc += 1.0 / ips;
+            out.push(acc);
+        }
+        out
+    }
+
+    /// Mean TBT over the horizon (the §IV-C2 TBT check statistic).
+    pub fn mean_tbt(t: &[f64]) -> f64 {
+        if t.is_empty() {
+            return 0.0;
+        }
+        t.iter().map(|&ips| 1.0 / ips).sum::<f64>() / t.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::llama2_13b;
+    use crate::coordinator::projection::Projection;
+    use crate::gpusim::latency::{ips, GpuState};
+
+    fn model() -> (PerfModel, EngineSpec) {
+        let e = llama2_13b(2);
+        (PerfModel::train(&[e.clone()], 60, 0), e)
+    }
+
+    #[test]
+    fn predictions_track_ground_truth() {
+        let (m, e) = model();
+        // Interior points: tight tolerance; the all-dims-extreme corner
+        // (max batch, near-full KV, min frequency) is the sparsest part
+        // of the profiling space and gets a looser bound.
+        for (b, kv, f, tol) in [
+            (1u32, 10u32, 1410u32, 0.15),
+            (16, 200, 900, 0.15),
+            (32, 420, 210, 0.30),
+        ] {
+            let truth = ips(
+                &e,
+                &GpuState {
+                    batch: b,
+                    kv_blocks: kv,
+                    freq_mhz: f,
+                },
+            );
+            let pred = m.predict_ips(&e, b, kv, f);
+            let rel = (pred - truth).abs() / truth;
+            assert!(rel < tol, "b={b} kv={kv} f={f}: {pred} vs {truth}");
+        }
+    }
+
+    #[test]
+    fn ips_increases_with_frequency() {
+        let (m, e) = model();
+        let lo = m.predict_ips(&e, 16, 200, 210);
+        let hi = m.predict_ips(&e, 16, 200, 1410);
+        assert!(hi > lo * 1.3, "hi={hi} lo={lo}");
+    }
+
+    #[test]
+    fn throughput_vector_follows_projection() {
+        let (m, e) = model();
+        let proj = Projection {
+            start_iter: 1,
+            batch: vec![8; 16],
+            kv_blocks: (0..16).map(|i| 20 * (i as u32 + 1)).collect(),
+            ..Default::default()
+        };
+        let t = m.throughput_vector(&e, &proj, 1410);
+        assert_eq!(t.len(), 16);
+        // Growing KV -> falling throughput (weak monotonicity over
+        // stride boundaries).
+        assert!(t[0] >= t[15], "t0={} t15={}", t[0], t[15]);
+        assert!(t.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn remaining_time_is_cumulative() {
+        let t = vec![50.0, 25.0, 10.0];
+        let tr = PerfModel::remaining_time_vector(&t);
+        assert!((tr[0] - 0.02).abs() < 1e-12);
+        assert!((tr[1] - 0.06).abs() < 1e-12);
+        assert!((tr[2] - 0.16).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_tbt_matches_hand_calc() {
+        let t = vec![50.0, 25.0];
+        assert!((PerfModel::mean_tbt(&t) - 0.03).abs() < 1e-12);
+        assert_eq!(PerfModel::mean_tbt(&[]), 0.0);
+    }
+
+    #[test]
+    fn stride_one_and_four_agree_closely() {
+        let (mut m, e) = model();
+        let proj = Projection {
+            start_iter: 1,
+            batch: vec![16; 64],
+            kv_blocks: (0..64).map(|i| 5 * i as u32 + 50).collect(),
+            ..Default::default()
+        };
+        m.stride = 1;
+        let exact = m.throughput_vector(&e, &proj, 1050);
+        m.stride = 4;
+        let fast = m.throughput_vector(&e, &proj, 1050);
+        let tr_a = PerfModel::remaining_time_vector(&exact);
+        let tr_b = PerfModel::remaining_time_vector(&fast);
+        let rel = (tr_a.last().unwrap() - tr_b.last().unwrap()).abs()
+            / tr_a.last().unwrap();
+        assert!(rel < 0.02, "rel={rel}");
+    }
+}

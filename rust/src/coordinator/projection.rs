@@ -1,0 +1,230 @@
+//! KV-usage & batch-size projection (paper §IV-B, Eq. 1-2).
+//!
+//! Given the Scoreboard and the current iteration `k`, produce vectors
+//! `B` and `KV` over future iterations `j = k+1 .. n` (until the last
+//! scheduled query completes), assuming no new arrivals:
+//!
+//!   KV_{q_i}[j] = ceil((j - s_i + |q_i|) / N)   for s_i <= j < s_i+|r̂_i|
+//!   KV[j]       = sum_i KV_{q_i}[j]
+//!   B[j]        = |{ i : s_i <= j < s_i + |r̂_i| }|
+//!
+//! The projection is exact under an oracle predictor; the paper
+//! measures 0.19% batch and 2.26% KV mean absolute error under real
+//! inflight conditions (Fig. 7), dominated by prefill-stall effects.
+
+use crate::coordinator::scoreboard::Scoreboard;
+
+/// Projected engine state per future iteration.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Projection {
+    /// First projected iteration index (k + 1).
+    pub start_iter: u64,
+    /// B[j]: projected batch size; index 0 <=> iteration `start_iter`.
+    pub batch: Vec<u32>,
+    /// KV[j]: projected allocated blocks.
+    pub kv_blocks: Vec<u32>,
+}
+
+impl Projection {
+    pub fn horizon(&self) -> usize {
+        self.batch.len()
+    }
+
+    /// Largest projected KV usage (the capacity check input).
+    pub fn peak_kv(&self) -> u32 {
+        self.kv_blocks.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Relative iteration offset (0-based) at which a query scheduled
+    /// at `s_i` with prediction `pred` completes; `None` if already
+    /// past. Offset indexes into `batch` / `kv_blocks` / `T_R`.
+    pub fn completion_offset(&self, scheduled_iter: u64, pred: u32) -> Option<usize> {
+        let end = scheduled_iter + pred as u64; // first iter NOT running
+        if end < self.start_iter {
+            return None;
+        }
+        Some((end - self.start_iter) as usize)
+    }
+}
+
+/// Compute the projection at current iteration `k` (vectors start at
+/// k+1). `block_tokens` is the engine's N.
+pub fn project(sb: &Scoreboard, k: u64, block_tokens: u32) -> Projection {
+    let visible: Vec<crate::coordinator::scoreboard::Entry> =
+        sb.visible().copied().collect();
+    project_entries(&visible, k, block_tokens)
+}
+
+/// Projection over an explicit entry set (used by admission control to
+/// compare "with candidate" vs "without candidate" worlds).
+///
+/// Implemented with difference arrays (EXPERIMENTS.md §Perf): a query
+/// contributes a constant batch increment over its active range and a
+/// KV step that grows by one block every `block_tokens` iterations, so
+/// each query costs O(range / N) updates instead of O(range); a single
+/// prefix-sum pass then materializes both vectors.
+pub fn project_entries(
+    entries: &[crate::coordinator::scoreboard::Entry],
+    k: u64,
+    block_tokens: u32,
+) -> Projection {
+    let start = k + 1;
+    // Horizon: furthest end_iter among visible entries.
+    let end = entries.iter().map(|e| e.end_iter()).max().unwrap_or(start);
+    let n = end.saturating_sub(start) as usize;
+    let mut batch_d = vec![0i64; n + 1];
+    let mut kv_d = vec![0i64; n + 1];
+    let bt = block_tokens as u64;
+    for e in entries {
+        // Active range of iterations [max(start, s_i), e.end_iter()).
+        let lo = e.scheduled_iter.max(start);
+        let hi = e.end_iter();
+        if hi <= lo {
+            continue;
+        }
+        let lo_idx = (lo - start) as usize;
+        let hi_idx = (hi - start) as usize;
+        batch_d[lo_idx] += 1;
+        batch_d[hi_idx] -= 1;
+
+        // Blocks at iteration j: ceil((j - s + prompt)/N). At j = lo:
+        let tokens_lo = lo - e.scheduled_iter + e.prompt_tokens as u64;
+        let blocks_lo = tokens_lo.div_ceil(bt) as i64;
+        kv_d[lo_idx] += blocks_lo;
+        kv_d[hi_idx] -= blocks_lo;
+        // +1 block each time tokens crosses a multiple of N, i.e. at
+        // tokens = m*N + 1 for m >= blocks_lo (tokens_lo < m*N + 1).
+        let mut boundary_tokens = blocks_lo as u64 * bt + 1;
+        while boundary_tokens <= tokens_lo {
+            boundary_tokens += bt;
+        }
+        let mut j = lo + (boundary_tokens - tokens_lo);
+        while j < hi {
+            let idx = (j - start) as usize;
+            kv_d[idx] += 1;
+            kv_d[hi_idx] -= 1;
+            j += bt;
+        }
+    }
+    // Prefix sums.
+    let mut batch = vec![0u32; n];
+    let mut kv = vec![0u32; n];
+    let (mut acc_b, mut acc_kv) = (0i64, 0i64);
+    for i in 0..n {
+        acc_b += batch_d[i];
+        acc_kv += kv_d[i];
+        batch[i] = acc_b as u32;
+        kv[i] = acc_kv as u32;
+    }
+    Projection {
+        start_iter: start,
+        batch,
+        kv_blocks: kv,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scoreboard::Entry;
+
+    fn entry(id: u64, s: u64, prompt: u32, pred: u32) -> Entry {
+        Entry {
+            id,
+            scheduled_iter: s,
+            prompt_tokens: prompt,
+            predicted_gen: pred,
+            deadline_s: f64::INFINITY,
+            lost: false,
+        }
+    }
+
+    #[test]
+    fn empty_scoreboard_projects_nothing() {
+        let p = project(&Scoreboard::new(), 5, 64);
+        assert_eq!(p.horizon(), 0);
+        assert_eq!(p.peak_kv(), 0);
+    }
+
+    #[test]
+    fn single_query_projection_matches_eq1() {
+        let mut sb = Scoreboard::new();
+        // scheduled at iter 0, prompt 100, predicted 10 -> ends iter 10
+        sb.insert(entry(1, 0, 100, 10));
+        let p = project(&sb, 0, 64);
+        // vectors cover iterations 1..=9 (horizon 9)
+        assert_eq!(p.start_iter, 1);
+        assert_eq!(p.horizon(), 9);
+        assert!(p.batch.iter().all(|&b| b == 1));
+        // Eq. 1: at iter j, tokens = (j - 0) + 100; blocks = ceil(t/64)
+        assert_eq!(p.kv_blocks[0], (101u32).div_ceil(64)); // j=1
+        assert_eq!(p.kv_blocks[8], (109u32).div_ceil(64)); // j=9
+    }
+
+    #[test]
+    fn kv_grows_on_block_boundaries() {
+        let mut sb = Scoreboard::new();
+        // prompt 60, N=64: crosses to 2 blocks at j-s+prompt = 65 -> j=5
+        sb.insert(entry(1, 0, 60, 20));
+        let p = project(&sb, 0, 64);
+        assert_eq!(p.kv_blocks[3], 1); // j=4 -> 64 tokens
+        assert_eq!(p.kv_blocks[4], 2); // j=5 -> 65 tokens
+    }
+
+    #[test]
+    fn batch_steps_down_as_queries_finish() {
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 10, 5)); // ends at iter 5
+        sb.insert(entry(2, 0, 10, 12)); // ends at iter 12
+        let p = project(&sb, 0, 64);
+        assert_eq!(p.horizon(), 11); // iters 1..=11
+        assert_eq!(p.batch[3], 2); // iter 4: both live
+        assert_eq!(p.batch[4], 1); // iter 5: q1 finished (runs s..s+5)
+        assert_eq!(p.batch[10], 1); // iter 11: q2 last iteration
+    }
+
+    #[test]
+    fn total_kv_sums_queries() {
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 64, 10));
+        sb.insert(entry(2, 0, 128, 10));
+        let p = project(&sb, 0, 64);
+        // At iter 1: q1 holds ceil(65/64)=2, q2 ceil(129/64)=3.
+        assert_eq!(p.kv_blocks[0], 5);
+    }
+
+    #[test]
+    fn virtual_entry_included_until_rollback() {
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 10, 10));
+        sb.virtual_append(entry(2, 3, 10, 10));
+        let with = project(&sb, 3, 64);
+        sb.rollback_virtual();
+        let without = project(&sb, 3, 64);
+        assert!(with.peak_kv() > without.peak_kv());
+        assert!(with.batch[0] > without.batch[0]);
+    }
+
+    #[test]
+    fn completion_offset_indexes_vectors() {
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 2, 10, 8)); // ends at iteration 10
+        let p = project(&sb, 4, 64);
+        // start_iter = 5; completion at iter 10 -> offset 5
+        assert_eq!(p.completion_offset(2, 8), Some(5));
+        // Entry ending before the window floor:
+        assert_eq!(p.completion_offset(0, 3), None);
+    }
+
+    #[test]
+    fn mid_generation_entries_project_remaining_only() {
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 100, 50));
+        // Now at iteration k=40: only 9 more iterations produce tokens
+        let p = project(&sb, 40, 64);
+        assert_eq!(p.horizon(), 9); // iters 41..=49
+        assert!(p.batch.iter().all(|&b| b == 1));
+        // tokens at iter 41 = 41 + 100 = 141 -> 3 blocks
+        assert_eq!(p.kv_blocks[0], 3);
+    }
+}

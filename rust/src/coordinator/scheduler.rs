@@ -1,0 +1,367 @@
+//! Query scheduling & admission control (paper §IV-C2).
+//!
+//! Upon arrival, the new query is virtually appended to the Scoreboard
+//! and three checks run against the resulting projection:
+//!   1. KV capacity: no projected iteration may exceed the engine's
+//!      block pool (prevents swapping);
+//!   2. TBT SLO: mean predicted TBT at MAX frequency over the horizon
+//!      must be within the SLO;
+//!   3. E2E SLO: every scheduled query's predicted completion time
+//!      (T_R at its final iteration, Eq. 3-4) must beat its deadline.
+//! If only the NEW query's own E2E fails, it is admitted but marked
+//! "lost" (ignored by future validations); if it would break others,
+//! it is queued and the virtual entry rolled back.
+
+use crate::config::{EngineSpec, SloSpec};
+use crate::coordinator::perf_model::PerfModel;
+use crate::coordinator::projection::{project, Projection};
+use crate::coordinator::scoreboard::{Entry, Scoreboard};
+use crate::engine::request::RequestId;
+use crate::gpusim::dvfs::FREQ_MAX_MHZ;
+
+/// Outcome of admission control.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    Admit,
+    /// Own E2E unmeetable but harmless to others (§IV-C2).
+    AdmitLost,
+    Queue(QueueReason),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueReason {
+    KvCapacity,
+    TbtSlo,
+    E2eSlo,
+}
+
+/// SLO evaluation detail shared by the scheduler and the throttling
+/// controller.
+#[derive(Debug, Clone)]
+pub struct SloEval {
+    pub tbt_ok: bool,
+    pub mean_tbt_s: f64,
+    /// Queries whose predicted completion misses their deadline.
+    pub e2e_violators: Vec<RequestId>,
+}
+
+impl SloEval {
+    pub fn all_ok(&self) -> bool {
+        self.tbt_ok && self.e2e_violators.is_empty()
+    }
+}
+
+/// Evaluate TBT + E2E SLOs at `freq_mhz` for the visible scoreboard
+/// entries under `proj`. "Lost" entries are skipped (§IV-C2).
+pub fn evaluate_slo(
+    model: &PerfModel,
+    spec: &EngineSpec,
+    slo: &SloSpec,
+    sb: &Scoreboard,
+    proj: &Projection,
+    freq_mhz: u32,
+    now: f64,
+) -> SloEval {
+    let visible: Vec<Entry> = sb.visible().copied().collect();
+    evaluate_slo_entries(model, spec, slo, &visible, proj, freq_mhz, now, 1.0)
+}
+
+/// `evaluate_slo` over an explicit entry set.
+///
+/// `t_r_scale` inflates the predicted remaining times: the projection
+/// assumes no new arrivals (§IV-B), but every future admission fuses a
+/// prefill into an iteration and stalls decoding, so under sustained
+/// load realized progress is systematically slower than T_R predicts.
+/// The throttling controller passes `1 + λ·t_prefill` (expected
+/// prefill-stall fraction); admission control keeps the paper's
+/// optimistic 1.0.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_slo_entries(
+    model: &PerfModel,
+    spec: &EngineSpec,
+    slo: &SloSpec,
+    entries: &[Entry],
+    proj: &Projection,
+    freq_mhz: u32,
+    now: f64,
+    t_r_scale: f64,
+) -> SloEval {
+    let t = model.throughput_vector(spec, proj, freq_mhz);
+    let mean_tbt = PerfModel::mean_tbt(&t);
+    let tbt_ok = mean_tbt <= slo.tbt_avg || t.is_empty();
+    let t_r = PerfModel::remaining_time_vector(&t);
+    let mut violators = vec![];
+    if !t_r.is_empty() {
+        for e in entries {
+            if e.lost {
+                continue;
+            }
+            let Some(off) = proj.completion_offset(e.scheduled_iter, e.predicted_gen)
+            else {
+                continue;
+            };
+            // The query's last iteration is end_iter - 1; clamp into
+            // the horizon.
+            let idx = off.saturating_sub(1).min(t_r.len() - 1);
+            if now + t_r[idx] * t_r_scale >= e.deadline_s {
+                violators.push(e.id);
+            }
+        }
+    }
+    SloEval {
+        tbt_ok,
+        mean_tbt_s: mean_tbt,
+        e2e_violators: violators,
+    }
+}
+
+/// The scheduler: owns the SLO spec; stateless otherwise.
+#[derive(Debug, Clone)]
+pub struct Scheduler {
+    pub slo: SloSpec,
+}
+
+impl Scheduler {
+    pub fn new(slo: SloSpec) -> Self {
+        Self { slo }
+    }
+
+    /// Run admission control for a new query.
+    ///
+    /// The caller must have `virtual_append`ed the candidate entry (id
+    /// `new_id`) to `sb`; this function neither commits nor rolls back
+    /// — it only decides.
+    ///
+    /// The third returned value lists RESIDENT queries whose deadlines
+    /// are unmeetable even *without* the candidate: they are de-facto
+    /// lost (the continuous extension of the paper's "lost" marking)
+    /// and the caller should mark them so; they do not block the
+    /// candidate, which is only blamed for violations it newly causes.
+    pub fn admission_check(
+        &self,
+        model: &PerfModel,
+        spec: &EngineSpec,
+        sb: &Scoreboard,
+        current_iter: u64,
+        now: f64,
+        new_id: RequestId,
+    ) -> (AdmissionDecision, Projection, Vec<RequestId>) {
+        let proj = project(sb, current_iter, spec.block_tokens);
+
+        // Check 1: KV cache capacity.
+        if proj.peak_kv() > spec.kv_blocks {
+            return (
+                AdmissionDecision::Queue(QueueReason::KvCapacity),
+                proj,
+                vec![],
+            );
+        }
+
+        // Checks 2-3 at maximum frequency (peak theoretical perf).
+        let eval = evaluate_slo(model, spec, &self.slo, sb, &proj, FREQ_MAX_MHZ, now);
+        if !eval.tbt_ok {
+            return (AdmissionDecision::Queue(QueueReason::TbtSlo), proj, vec![]);
+        }
+
+        // Residents predicted to violate with the candidate on board.
+        let mut blamed: Vec<RequestId> = eval
+            .e2e_violators
+            .iter()
+            .copied()
+            .filter(|&id| id != new_id)
+            .collect();
+        let mut already_lost: Vec<RequestId> = vec![];
+        if !blamed.is_empty() {
+            // Which of them violate even WITHOUT the candidate?
+            let committed: Vec<Entry> = sb.committed().to_vec();
+            let proj_wo =
+                crate::coordinator::projection::project_entries(
+                    &committed,
+                    current_iter,
+                    spec.block_tokens,
+                );
+            let eval_wo = evaluate_slo_entries(
+                model,
+                spec,
+                &self.slo,
+                &committed,
+                &proj_wo,
+                FREQ_MAX_MHZ,
+                now,
+                1.0,
+            );
+            blamed.retain(|id| {
+                if eval_wo.e2e_violators.contains(id) {
+                    already_lost.push(*id);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+
+        let decision = if !blamed.is_empty() {
+            AdmissionDecision::Queue(QueueReason::E2eSlo)
+        } else if eval.e2e_violators.contains(&new_id) {
+            // Only its own SLO unmeetable: schedule but mark lost.
+            AdmissionDecision::AdmitLost
+        } else {
+            AdmissionDecision::Admit
+        };
+        (decision, proj, already_lost)
+    }
+}
+
+/// Build a scoreboard entry for an arriving request.
+pub fn entry_for(
+    id: RequestId,
+    prompt_tokens: u32,
+    predicted_gen: u32,
+    arrival_s: f64,
+    current_iter: u64,
+    slo: &SloSpec,
+) -> Entry {
+    Entry {
+        id,
+        scheduled_iter: current_iter,
+        prompt_tokens,
+        predicted_gen: predicted_gen.max(1),
+        deadline_s: arrival_s + slo.e2e_p99,
+        lost: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::llama2_13b;
+
+    fn setup() -> (PerfModel, EngineSpec, Scheduler) {
+        let e = llama2_13b(2);
+        let m = PerfModel::train(&[e.clone()], 40, 0);
+        let s = Scheduler::new(SloSpec::new(0.2, 30.2));
+        (m, e, s)
+    }
+
+    fn entry(id: u64, s_i: u64, prompt: u32, pred: u32, deadline: f64) -> Entry {
+        Entry {
+            id,
+            scheduled_iter: s_i,
+            prompt_tokens: prompt,
+            predicted_gen: pred,
+            deadline_s: deadline,
+            lost: false,
+        }
+    }
+
+    #[test]
+    fn admits_easy_query() {
+        let (m, e, sched) = setup();
+        let mut sb = Scoreboard::new();
+        sb.virtual_append(entry(1, 0, 100, 50, 30.2));
+        let (d, _, _) = sched.admission_check(&m, &e, &sb, 0, 0.0, 1);
+        assert_eq!(d, AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn queues_on_kv_overflow() {
+        let (m, e, sched) = setup();
+        let mut sb = Scoreboard::new();
+        // One giant resident query occupying most of the pool.
+        sb.insert(entry(1, 0, 24_000, 900, 1e9));
+        // Candidate whose projection overflows 439 blocks * 64 tokens.
+        sb.virtual_append(entry(2, 0, 6_000, 900, 1e9));
+        let (d, proj, _) = sched.admission_check(&m, &e, &sb, 0, 0.0, 2);
+        assert_eq!(d, AdmissionDecision::Queue(QueueReason::KvCapacity));
+        assert!(proj.peak_kv() > e.kv_blocks);
+    }
+
+    #[test]
+    fn marks_lost_when_only_own_deadline_fails() {
+        let (m, e, sched) = setup();
+        let mut sb = Scoreboard::new();
+        // Candidate with an absurdly tight deadline (already passed).
+        let mut cand = entry(7, 0, 100, 400, 0.001);
+        cand.deadline_s = 0.001;
+        sb.virtual_append(cand);
+        let (d, _, _) = sched.admission_check(&m, &e, &sb, 0, 1.0, 7);
+        assert_eq!(d, AdmissionDecision::AdmitLost);
+    }
+
+    #[test]
+    fn queues_when_it_breaks_others() {
+        let (m, e, sched) = setup();
+        let mut sb = Scoreboard::new();
+        // Eight residents that finish JUST inside their deadlines when
+        // alone; a huge new query inflates batch + KV enough to push
+        // them over (the blame-the-candidate case).
+        let now = 0.0;
+        // Find the residents-alone completion estimate from the model
+        // itself so the test is robust to calibration changes.
+        for id in 0..8 {
+            sb.insert(entry(id, 0, 1000, 600, 1e9));
+        }
+        let proj = project(&sb, 0, e.block_tokens);
+        let t = m.throughput_vector(&e, &proj, FREQ_MAX_MHZ);
+        let t_r = PerfModel::remaining_time_vector(&t);
+        let alone = *t_r.last().unwrap();
+        // Deadline with ~2.5% headroom over the alone-case estimate.
+        let deadline = now + alone * 1.025;
+        let mut sb = Scoreboard::new();
+        for id in 0..8 {
+            sb.insert(entry(id, 0, 1000, 600, deadline));
+        }
+        sb.virtual_append(entry(99, 0, 4000, 1024, now + 30.2));
+        let (d, _, lost) = sched.admission_check(&m, &e, &sb, 0, now, 99);
+        assert_eq!(d, AdmissionDecision::Queue(QueueReason::E2eSlo));
+        assert!(lost.is_empty(), "residents were fine without candidate");
+    }
+
+    #[test]
+    fn doomed_residents_do_not_block_admission() {
+        // Residents whose deadlines are hopeless regardless of the
+        // candidate must be reported de-facto lost, not blamed on the
+        // candidate (otherwise one doomed query blocks all admissions
+        // until it completes — the convoy pathology).
+        let (m, e, sched) = setup();
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 500, 600, 0.5)); // deadline long gone
+        sb.virtual_append(entry(2, 0, 100, 100, 1000.0));
+        let (d, _, lost) = sched.admission_check(&m, &e, &sb, 0, 5.0, 2);
+        assert_eq!(d, AdmissionDecision::Admit);
+        assert_eq!(lost, vec![1]);
+    }
+
+    #[test]
+    fn lost_entries_ignored_in_validation() {
+        let (m, e, sched) = setup();
+        let mut sb = Scoreboard::new();
+        let mut hopeless = entry(1, 0, 3000, 600, 0.0);
+        hopeless.lost = true;
+        sb.insert(hopeless);
+        sb.virtual_append(entry(2, 0, 100, 100, 1000.0));
+        let (d, _, _) = sched.admission_check(&m, &e, &sb, 0, 1.0, 2);
+        assert_eq!(d, AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn evaluate_slo_mean_tbt_sane() {
+        let (m, e, _s) = setup();
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 100, 100, 1e9));
+        let proj = project(&sb, 0, e.block_tokens);
+        let eval = evaluate_slo(
+            &m,
+            &e,
+            &SloSpec::new(0.2, 30.2),
+            &sb,
+            &proj,
+            FREQ_MAX_MHZ,
+            0.0,
+        );
+        // 13B TP2 at batch 1: TBT ~14 ms, far under 200 ms.
+        assert!(eval.tbt_ok);
+        assert!(eval.mean_tbt_s > 0.005 && eval.mean_tbt_s < 0.05);
+        assert!(eval.all_ok());
+    }
+}

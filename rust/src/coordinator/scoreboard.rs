@@ -1,0 +1,238 @@
+//! The Scoreboard (paper §IV-B): metadata for every scheduled query,
+//! with virtual append / commit / rollback used by admission control.
+//!
+//! Each entry tracks: the iteration the query was scheduled at (s_i),
+//! its input length (|q_i|), its (conservatively adjusted) predicted
+//! generation length (|r̂_i|), its E2E deadline, and whether it was
+//! marked "lost".  When a query outlives its prediction, its entry is
+//! bumped to `max_tokens` (§IV-F); when it terminates, the entry is
+//! struck.
+
+use crate::engine::request::RequestId;
+
+/// One scheduled query's metadata.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Entry {
+    pub id: RequestId,
+    /// Iteration at which the query was scheduled (s_i).
+    pub scheduled_iter: u64,
+    /// Input length |q_i| (tokens).
+    pub prompt_tokens: u32,
+    /// Predicted generation length |r̂_i| (tokens), conservatively
+    /// adjusted; maintained >= tokens already generated + 1 while live.
+    pub predicted_gen: u32,
+    /// Absolute E2E deadline (arrival + E2E SLO), seconds.
+    pub deadline_s: f64,
+    /// "Lost" queries are ignored in later SLO validations (§IV-C2).
+    pub lost: bool,
+}
+
+impl Entry {
+    /// Final iteration (exclusive): the query completes at
+    /// s_i + |r̂_i| (Eq. 1's upper bound).
+    pub fn end_iter(&self) -> u64 {
+        self.scheduled_iter + self.predicted_gen as u64
+    }
+}
+
+/// The scoreboard: committed entries + at most one virtual entry.
+#[derive(Debug, Clone, Default)]
+pub struct Scoreboard {
+    entries: Vec<Entry>,
+    virtual_entry: Option<Entry>,
+}
+
+impl Scoreboard {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Committed entries (excludes the virtual one).
+    pub fn committed(&self) -> &[Entry] {
+        &self.entries
+    }
+
+    /// All entries visible to projection: committed + virtual.
+    pub fn visible(&self) -> impl Iterator<Item = &Entry> {
+        self.entries.iter().chain(self.virtual_entry.iter())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len() + usize::from(self.virtual_entry.is_some())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether any live (non-virtual) entry is marked lost.
+    pub fn any_lost(&self) -> bool {
+        self.entries.iter().any(|e| e.lost)
+    }
+
+    /// Add a committed entry directly (engine-side admission).
+    pub fn insert(&mut self, e: Entry) {
+        debug_assert!(
+            !self.entries.iter().any(|x| x.id == e.id),
+            "duplicate scoreboard entry {}",
+            e.id
+        );
+        self.entries.push(e);
+    }
+
+    /// "Virtually" append a new query (paper: assess how future KV and
+    /// batch would look if it were scheduled now). At most one virtual
+    /// entry can be outstanding.
+    pub fn virtual_append(&mut self, e: Entry) {
+        assert!(
+            self.virtual_entry.is_none(),
+            "virtual entry already outstanding"
+        );
+        self.virtual_entry = Some(e);
+    }
+
+    /// Commit the virtual entry (query admitted).
+    pub fn commit_virtual(&mut self) -> Entry {
+        let e = self
+            .virtual_entry
+            .take()
+            .expect("no virtual entry to commit");
+        self.entries.push(e);
+        e
+    }
+
+    /// Roll back the virtual entry (query queued).
+    pub fn rollback_virtual(&mut self) {
+        assert!(
+            self.virtual_entry.take().is_some(),
+            "no virtual entry to roll back"
+        );
+    }
+
+    /// Mark the committed entry as lost.
+    pub fn mark_lost(&mut self, id: RequestId) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.id == id) {
+            e.lost = true;
+        }
+    }
+
+    /// Strike a terminated query (§IV-B: signals block deallocation).
+    pub fn strike(&mut self, id: RequestId) {
+        self.entries.retain(|e| e.id != id);
+    }
+
+    /// §IV-F: the query at `generated` tokens has outlived |r̂_i| —
+    /// bump its predicted length. The paper bumps straight to the
+    /// model's `max_tokens` limit.
+    pub fn bump_overrun(&mut self, id: RequestId, max_tokens: u32) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.id == id) {
+            e.predicted_gen = max_tokens;
+        }
+    }
+
+    /// Keep predictions consistent with reality: any live query that
+    /// has already generated `generated` tokens must have
+    /// |r̂_i| > generated (otherwise projection would claim it
+    /// finished). Returns ids that were bumped.
+    pub fn sync_overruns(
+        &mut self,
+        live: &[(RequestId, u32)],
+        max_tokens: u32,
+    ) -> Vec<RequestId> {
+        let mut bumped = vec![];
+        for &(id, generated) in live {
+            if let Some(e) = self.entries.iter_mut().find(|e| e.id == id) {
+                if e.predicted_gen <= generated {
+                    e.predicted_gen = max_tokens.max(generated + 1);
+                    bumped.push(id);
+                }
+            }
+        }
+        bumped
+    }
+
+    pub fn get(&self, id: RequestId) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.id == id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(id: u64, s: u64, prompt: u32, pred: u32) -> Entry {
+        Entry {
+            id,
+            scheduled_iter: s,
+            prompt_tokens: prompt,
+            predicted_gen: pred,
+            deadline_s: 30.0,
+            lost: false,
+        }
+    }
+
+    #[test]
+    fn end_iter_is_schedule_plus_prediction() {
+        assert_eq!(entry(1, 10, 100, 50).end_iter(), 60);
+    }
+
+    #[test]
+    fn virtual_commit_persists() {
+        let mut sb = Scoreboard::new();
+        sb.virtual_append(entry(1, 0, 10, 5));
+        assert_eq!(sb.len(), 1);
+        assert_eq!(sb.committed().len(), 0);
+        sb.commit_virtual();
+        assert_eq!(sb.committed().len(), 1);
+    }
+
+    #[test]
+    fn virtual_rollback_erases() {
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 10, 5));
+        sb.virtual_append(entry(2, 0, 10, 5));
+        assert_eq!(sb.visible().count(), 2);
+        sb.rollback_virtual();
+        assert_eq!(sb.visible().count(), 1);
+        assert!(sb.get(2).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "virtual entry already outstanding")]
+    fn single_virtual_entry_enforced() {
+        let mut sb = Scoreboard::new();
+        sb.virtual_append(entry(1, 0, 1, 1));
+        sb.virtual_append(entry(2, 0, 1, 1));
+    }
+
+    #[test]
+    fn strike_removes() {
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 10, 5));
+        sb.insert(entry(2, 0, 10, 5));
+        sb.strike(1);
+        assert_eq!(sb.committed().len(), 1);
+        assert!(sb.get(1).is_none());
+    }
+
+    #[test]
+    fn overrun_bumps_to_max_tokens() {
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 10, 5));
+        let bumped = sb.sync_overruns(&[(1, 5)], 1024);
+        assert_eq!(bumped, vec![1]);
+        assert_eq!(sb.get(1).unwrap().predicted_gen, 1024);
+        // No bump while under prediction.
+        let bumped = sb.sync_overruns(&[(1, 900)], 1024);
+        assert!(bumped.is_empty());
+    }
+
+    #[test]
+    fn mark_lost_sets_flag() {
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 10, 5));
+        assert!(!sb.any_lost());
+        sb.mark_lost(1);
+        assert!(sb.any_lost());
+    }
+}

@@ -1,0 +1,688 @@
+//! The serving event loop: throttLL'eM and the baseline policies over
+//! a request trace (paper §V evaluation harness).
+//!
+//! Policies (the §V-D2 comparison matrix):
+//!   * `triton()`            — KV-only admission, max frequency;
+//!   * `triton_autoscale()`  — Triton + throttLL'eM autoscaling;
+//!   * `throttle_only()`     — throttLL'eM w/o autoscaling (§V-D1);
+//!   * `throttllem()`        — full system (§V-D2).
+//!
+//! The loop is a discrete-event simulation over virtual time: engines
+//! execute iterations back-to-back while non-idle; arrivals, autoscaler
+//! ticks and shadow-instance readiness are decision points.  Admission
+//! happens at iteration boundaries, exactly as inflight batching allows.
+
+use std::collections::VecDeque;
+
+use crate::config::ServingConfig;
+use crate::coordinator::autoscaler::{Autoscaler, ScaleDecision};
+use crate::coordinator::perf_model::PerfModel;
+use crate::coordinator::projection::project;
+use crate::coordinator::scheduler::{entry_for, AdmissionDecision, Scheduler};
+use crate::coordinator::scoreboard::Scoreboard;
+use crate::coordinator::throttle::min_slo_frequency;
+use crate::engine::request::{Request, RequestOutcome};
+use crate::engine::sim::EngineSim;
+use crate::gpusim::dvfs::FREQ_MAX_MHZ;
+use crate::gpusim::power::idle_power_w;
+use crate::metrics::ServingStats;
+use crate::workload::predictor::conservative_adjust;
+
+/// Serving policy knobs (the paper's ablation axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Policy {
+    /// SLO-aware admission control (vs KV-only, Triton-style).
+    pub slo_admission: bool,
+    /// GPU frequency throttling controller.
+    pub throttling: bool,
+    /// TP autoscaling over the configured scale set.
+    pub autoscaling: bool,
+}
+
+impl Policy {
+    pub fn triton() -> Self {
+        Self {
+            slo_admission: false,
+            throttling: false,
+            autoscaling: false,
+        }
+    }
+    pub fn triton_autoscale() -> Self {
+        Self {
+            autoscaling: true,
+            ..Self::triton()
+        }
+    }
+    pub fn throttle_only() -> Self {
+        Self {
+            slo_admission: true,
+            throttling: true,
+            autoscaling: false,
+        }
+    }
+    pub fn throttllem() -> Self {
+        Self {
+            slo_admission: true,
+            throttling: true,
+            autoscaling: true,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match (self.slo_admission, self.throttling, self.autoscaling) {
+            (false, false, false) => "triton",
+            (false, false, true) => "triton+autoscale",
+            (true, true, false) => "throttllem-noAS",
+            (true, true, true) => "throttllem",
+            _ => "custom",
+        }
+    }
+}
+
+/// One sampled point of the runtime timeline (Fig. 11).
+#[derive(Debug, Clone)]
+pub struct TimelinePoint {
+    pub t: f64,
+    /// Tensor parallelism of the engine that executed the iteration.
+    pub engine_tp: u32,
+    pub freq_mhz: u32,
+    pub power_w: f64,
+    /// Idle power of a warming shadow instance at this moment, W.
+    pub shadow_power_w: f64,
+    pub batch: u32,
+    pub kv_blocks: u32,
+}
+
+/// Everything a serving run produces.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    pub stats: ServingStats,
+    pub outcomes: Vec<RequestOutcome>,
+    pub timeline: Vec<TimelinePoint>,
+    /// Energy burned by warming shadow instances, J.
+    pub shadow_energy_j: f64,
+    /// Engine switches performed by the autoscaler.
+    pub engine_switches: u32,
+}
+
+struct EngineRt {
+    sim: EngineSim,
+    sb: Scoreboard,
+    /// Time its next iteration may start.
+    cursor: f64,
+    accepting: bool,
+    /// Completions seen so far (admission-retry invalidation).
+    completions: u64,
+    /// Recent arrival timestamps (sliding window) for the throttle's
+    /// prefill-load estimate.
+    recent_arrivals: VecDeque<f64>,
+    /// EMA of admitted prompt lengths (prefill-cost estimate input).
+    prompt_ema: f64,
+    /// Head-of-line request that failed admission, and the completion
+    /// count at that moment.  Re-checking is pointless until another
+    /// request completes (KV and batch only shrink on completion), so
+    /// the hot loop skips redundant admission-control evaluations.
+    blocked_head: Option<(u64, u64)>,
+}
+
+impl EngineRt {
+    fn new(spec: crate::config::EngineSpec, at: f64) -> Self {
+        let mut sim = EngineSim::new(spec, FREQ_MAX_MHZ);
+        sim.account_idle(at.max(0.0)); // zero-cost: marks accounting start
+        Self {
+            sim,
+            sb: Scoreboard::new(),
+            cursor: at,
+            accepting: true,
+            completions: 0,
+            blocked_head: None,
+            recent_arrivals: VecDeque::new(),
+            prompt_ema: 0.0,
+        }
+    }
+
+    /// Expected slowdown factor from future-arrival prefill stalls:
+    /// 1 + λ · t_prefill (the projection assumes no arrivals; under
+    /// sustained load every admission fuses a prefill into an
+    /// iteration, stalling all decodes — §IV-F's TTFT discussion).
+    fn load_inflation(&mut self, now: f64) -> f64 {
+        const WINDOW_S: f64 = 30.0;
+        while self
+            .recent_arrivals
+            .front()
+            .map(|&t| t < now - WINDOW_S)
+            .unwrap_or(false)
+        {
+            self.recent_arrivals.pop_front();
+        }
+        // Relative margin on top of the arrival-driven term: long-
+        // horizon T_R predictions are systematically optimistic (model
+        // bias compounds over hundreds of iterations).
+        const REL_MARGIN: f64 = 1.10;
+        if self.recent_arrivals.is_empty() || self.prompt_ema <= 0.0 {
+            return REL_MARGIN;
+        }
+        let span = (now - self.recent_arrivals.front().unwrap()).max(1.0);
+        let lambda = self.recent_arrivals.len() as f64 / span.min(WINDOW_S);
+        let t_prefill = crate::gpusim::latency::prefill_latency_s(
+            self.sim.spec(),
+            self.prompt_ema as u32,
+            FREQ_MAX_MHZ,
+        );
+        (1.0 + lambda * t_prefill) * REL_MARGIN
+    }
+}
+
+/// Serve `requests` (sorted by arrival) under `policy`; returns stats.
+pub fn serve_trace(
+    cfg: &ServingConfig,
+    policy: Policy,
+    model: &PerfModel,
+    requests: &[Request],
+) -> ServeOutcome {
+    debug_assert!(requests.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    let sched = Scheduler::new(cfg.slo);
+
+    let mut scaler = if policy.autoscaling {
+        Some(Autoscaler::new(cfg.scale_set.clone(), 0))
+    } else {
+        None
+    };
+    let initial_spec = scaler
+        .as_ref()
+        .map(|s| s.current_spec().clone())
+        .unwrap_or_else(|| cfg.engine.clone());
+
+    let mut engines: Vec<EngineRt> = vec![EngineRt::new(initial_spec, 0.0)];
+    let mut queue: VecDeque<Request> = VecDeque::new();
+    let mut next_arrival = 0usize;
+    let mut next_tick = scaler.as_ref().map(|s| s.interval_s);
+    let mut window_arrivals = 0u64;
+
+    let mut stats = ServingStats::default();
+    let mut outcomes = Vec::new();
+    let mut timeline = Vec::new();
+    let mut shadow_energy = 0.0f64;
+    let mut switches = 0u32;
+    let mut now = 0.0f64;
+
+    loop {
+        let arrivals_done = next_arrival >= requests.len();
+        let all_idle = engines.iter().all(|e| e.sim.is_idle());
+        if arrivals_done && queue.is_empty() && all_idle {
+            break;
+        }
+
+        // ---- next decision point -------------------------------------
+        let mut decision = f64::INFINITY;
+        if let Some(r) = requests.get(next_arrival) {
+            decision = decision.min(r.arrival_s);
+        }
+        if let Some(t) = next_tick {
+            if !arrivals_done || !queue.is_empty() || !all_idle {
+                decision = decision.min(t);
+            }
+        }
+        if let Some(s) = scaler.as_ref().and_then(|s| s.shadow()) {
+            decision = decision.min(s.ready_at);
+        }
+
+        // ---- run engine iterations up to the decision point ----------
+        let mut progressed = false;
+        for idx in 0..engines.len() {
+            loop {
+                let e = &mut engines[idx];
+                if e.sim.is_idle() || e.cursor >= decision {
+                    break;
+                }
+                if e.accepting {
+                    try_admissions(
+                        e, &mut queue, cfg, policy, model, &sched, &mut stats,
+                    );
+                }
+                let e = &mut engines[idx];
+                if e.sim.is_idle() {
+                    break;
+                }
+                let shadow_p = shadow_power(scaler.as_ref(), e.cursor);
+                let report = e.sim.run_iteration(e.cursor);
+                e.cursor = report.start_s + report.duration_s;
+                progressed = true;
+                // Telemetry
+                stats.power.push(report.power_w);
+                stats.freq.push(report.freq_mhz as f64);
+                stats.iter_tbt.push(report.duration_s);
+                timeline.push(TimelinePoint {
+                    t: report.start_s,
+                    engine_tp: e.sim.spec().tensor_parallel,
+                    freq_mhz: report.freq_mhz,
+                    power_w: report.power_w,
+                    shadow_power_w: shadow_p,
+                    batch: report.batch,
+                    kv_blocks: report.kv_blocks,
+                });
+                e.completions += report.completed.len() as u64;
+                // Recompute-preempted rows go back to the queue head,
+                // BLOCKED until some request completes — re-admitting
+                // immediately would re-consume the freed blocks and
+                // livelock the evict/re-admit cycle.
+                for req in &report.evicted {
+                    e.sb.strike(req.id);
+                    queue.push_front(req.clone());
+                    e.blocked_head = Some((req.id, e.completions));
+                }
+                let had_completions =
+                    !report.completed.is_empty() || !report.evicted.is_empty();
+                for o in &report.completed {
+                    e.sb.strike(o.id);
+                    stats.record_outcome(o);
+                    outcomes.push(o.clone());
+                }
+                // §IV-F: bump predictions the reality has outrun.
+                let live: Vec<(u64, u32)> = e
+                    .sim
+                    .active_info()
+                    .iter()
+                    .map(|a| (a.id, a.generated))
+                    .collect();
+                let bumped = e.sb.sync_overruns(&live, cfg.max_tokens);
+                // Re-evaluate the throttling controller when the batch
+                // composition changed (completion or prediction bump):
+                // without this, a frequency chosen under light load
+                // would persist while a queue builds behind a full
+                // batch (§IV-E is admission-triggered; completions are
+                // the other composition-change event).
+                if policy.throttling && (had_completions || !bumped.is_empty()) {
+                    rethrottle(e, !queue.is_empty(), model, &sched);
+                }
+            }
+        }
+
+        // Drop drained non-accepting engines (graceful shutdown done).
+        engines.retain(|e| e.accepting || !e.sim.is_idle());
+
+        if decision.is_infinite() {
+            if !progressed {
+                // Queue blocked with every engine idle: resolve it.
+                force_progress(
+                    &mut engines, &mut queue, cfg, policy, model, &sched,
+                    &mut stats, now,
+                );
+                if queue.is_empty() && engines.iter().all(|e| e.sim.is_idle()) {
+                    continue;
+                }
+            }
+            continue;
+        }
+
+        // ---- handle the decision point --------------------------------
+        now = decision;
+
+        // Arrivals at `now`.
+        while let Some(r) = requests.get(next_arrival) {
+            if r.arrival_s > now {
+                break;
+            }
+            // Feed the accepting engine's load estimator.
+            if let Some(e) = engines.iter_mut().find(|e| e.accepting) {
+                e.recent_arrivals.push_back(r.arrival_s);
+                e.prompt_ema = if e.prompt_ema == 0.0 {
+                    r.prompt_tokens as f64
+                } else {
+                    0.9 * e.prompt_ema + 0.1 * r.prompt_tokens as f64
+                };
+            }
+            queue.push_back(r.clone());
+            window_arrivals += 1;
+            next_arrival += 1;
+        }
+        // Wake idle accepting engines for immediate admission.
+        for e in engines.iter_mut().filter(|e| e.accepting) {
+            if e.sim.is_idle() && e.cursor < now {
+                e.sim.account_idle(now);
+                e.cursor = now;
+            }
+            if e.sim.is_idle() {
+                try_admissions(e, &mut queue, cfg, policy, model, &sched, &mut stats);
+            }
+        }
+
+        // Autoscaler tick.
+        if let (Some(s), Some(t)) = (scaler.as_mut(), next_tick) {
+            if now >= t {
+                let rps = window_arrivals as f64 / s.interval_s;
+                window_arrivals = 0;
+                if let ScaleDecision::StartShadow { target } = s.tick(now, rps) {
+                    let _ = target; // energy accounted at switch time
+                }
+                next_tick = Some(t + s.interval_s);
+            }
+        }
+
+        // Shadow instance ready -> transition.
+        if let Some(s) = scaler.as_mut() {
+            if let Some(sh) = s.shadow() {
+                if now >= sh.ready_at {
+                    let warm = idle_power_w(&s.specs()[sh.target], FREQ_MAX_MHZ)
+                        * (sh.ready_at - sh.started_at);
+                    shadow_energy += warm;
+                    let new_idx = s.poll_ready(now).expect("shadow was ready");
+                    for e in engines.iter_mut() {
+                        e.accepting = false;
+                    }
+                    engines.push(EngineRt::new(s.specs()[new_idx].clone(), now));
+                    switches += 1;
+                }
+            }
+        }
+
+        // Blocked-queue guard at this decision point.
+        let all_idle = engines.iter().all(|e| e.sim.is_idle());
+        if all_idle && !queue.is_empty() {
+            force_progress(
+                &mut engines, &mut queue, cfg, policy, model, &sched, &mut stats,
+                now,
+            );
+        }
+    }
+
+    stats.wall_s = engines
+        .iter()
+        .map(|e| e.cursor)
+        .fold(now, f64::max);
+    stats.total_energy_j = engines
+        .iter()
+        .map(|e| e.sim.total_energy_j())
+        .sum::<f64>()
+        + shadow_energy;
+    outcomes.sort_by(|a, b| a.id.cmp(&b.id));
+    ServeOutcome {
+        stats,
+        outcomes,
+        timeline,
+        shadow_energy_j: shadow_energy,
+        engine_switches: switches,
+    }
+}
+
+fn shadow_power(scaler: Option<&Autoscaler>, t: f64) -> f64 {
+    match scaler.and_then(|s| s.shadow().map(|sh| (s, sh))) {
+        Some((s, sh)) if t >= sh.started_at && t < sh.ready_at => {
+            idle_power_w(&s.specs()[sh.target], FREQ_MAX_MHZ)
+        }
+        _ => 0.0,
+    }
+}
+
+/// Admit as many queued requests as the policy allows (FIFO with
+/// head-of-line blocking, matching the paper's single queue).
+fn try_admissions(
+    e: &mut EngineRt,
+    queue: &mut VecDeque<Request>,
+    cfg: &ServingConfig,
+    policy: Policy,
+    model: &PerfModel,
+    sched: &Scheduler,
+    stats: &mut ServingStats,
+) {
+    let now = e.cursor;
+    while let Some(req) = queue.front() {
+        // Blocked-head fast path: nothing relevant changed since the
+        // last failed check, so skip the expensive re-evaluation.
+        if let Some((id, at)) = e.blocked_head {
+            if id == req.id && at == e.completions {
+                break;
+            }
+            e.blocked_head = None;
+        }
+        if e.sim.batch() >= e.sim.spec().max_batch {
+            break;
+        }
+        let spec = e.sim.spec().clone();
+        let adjusted =
+            conservative_adjust(req.predicted_gen, cfg.predictor_p95_error, cfg.max_tokens);
+        let k = e.sim.iter_index();
+        let entry = entry_for(req.id, req.prompt_tokens, adjusted, req.arrival_s, k, &sched.slo);
+
+        let lost = if policy.slo_admission {
+            e.sb.virtual_append(entry);
+            let (decision, _, already_lost) =
+                sched.admission_check(model, &spec, &e.sb, k, now, req.id);
+            // De-facto-lost residents stop blocking future admissions.
+            for id in already_lost {
+                e.sb.mark_lost(id);
+            }
+            match decision {
+                AdmissionDecision::Admit => {
+                    e.sb.commit_virtual();
+                    false
+                }
+                AdmissionDecision::AdmitLost => {
+                    e.sb.commit_virtual();
+                    e.sb.mark_lost(req.id);
+                    true
+                }
+                AdmissionDecision::Queue(_) => {
+                    e.sb.rollback_virtual();
+                    e.blocked_head = Some((req.id, e.completions));
+                    break;
+                }
+            }
+        } else {
+            // Triton baseline: KV-capacity gate only.
+            if !e.sim.kv_fits(req.prompt_tokens) {
+                e.blocked_head = Some((req.id, e.completions));
+                break;
+            }
+            e.sb.insert(entry);
+            false
+        };
+
+        let req = queue.pop_front().unwrap();
+        match e.sim.admit(req.clone(), now, lost) {
+            Ok(()) => {}
+            Err(_) => {
+                // Engine-side admission raced (KV or batch slot): undo
+                // everything and leave the request at the queue head.
+                e.sb.strike(entry.id);
+                queue.push_front(req);
+                e.blocked_head = Some((entry.id, e.completions));
+                break;
+            }
+        }
+
+        // §IV-E: the throttling controller runs on admission.
+        if policy.throttling {
+            rethrottle(e, !queue.is_empty(), model, sched);
+        }
+    }
+    let _ = stats;
+}
+
+/// Run the §IV-E controller for the engine's current scoreboard.
+///
+/// `queue_pressure`: when admission control could NOT place every
+/// waiting query (the wait queue is non-empty), the engine runs at
+/// maximum frequency — queued queries' deadlines are burning and the
+/// fastest drain protects their SLOs (the paper observes "peak power
+/// equal to that of Triton when under high system pressure").
+fn rethrottle(e: &mut EngineRt, queue_pressure: bool, model: &PerfModel, sched: &Scheduler) {
+    let now = e.cursor;
+    let spec = e.sim.spec().clone();
+    let f = if queue_pressure {
+        FREQ_MAX_MHZ
+    } else {
+        let scale = e.load_inflation(now);
+        let proj = project(&e.sb, e.sim.iter_index(), spec.block_tokens);
+        min_slo_frequency(model, &spec, &sched.slo, &e.sb, &proj, now, scale)
+    };
+    e.sim.dvfs.set(now, f);
+}
+
+/// The engine is idle but the queue head cannot pass admission: admit
+/// it marked lost when it physically fits, otherwise drop it (it could
+/// never be served by this deployment).
+fn force_progress(
+    engines: &mut [EngineRt],
+    queue: &mut VecDeque<Request>,
+    cfg: &ServingConfig,
+    _policy: Policy,
+    model: &PerfModel,
+    sched: &Scheduler,
+    stats: &mut ServingStats,
+    now: f64,
+) {
+    let Some(e) = engines.iter_mut().find(|e| e.accepting) else {
+        return;
+    };
+    e.sim.account_idle(now);
+    e.cursor = e.cursor.max(now);
+    let Some(req) = queue.front() else { return };
+    if e.sim.kv_fits(req.prompt_tokens) {
+        let adjusted =
+            conservative_adjust(req.predicted_gen, cfg.predictor_p95_error, cfg.max_tokens);
+        let entry = entry_for(
+            req.id,
+            req.prompt_tokens,
+            adjusted,
+            req.arrival_s,
+            e.sim.iter_index(),
+            &sched.slo,
+        );
+        e.sb.insert(entry);
+        e.sb.mark_lost(req.id);
+        let req = queue.pop_front().unwrap();
+        let id = req.id;
+        if e.sim.admit(req, e.cursor, true).is_err() {
+            e.sb.strike(id);
+            stats.dropped += 1;
+        } else {
+            let spec = e.sim.spec().clone();
+            let proj = project(&e.sb, e.sim.iter_index(), spec.block_tokens);
+            let f = min_slo_frequency(model, &spec, &sched.slo, &e.sb, &proj, now, 1.0);
+            e.sim.dvfs.set(now, f);
+        }
+    } else {
+        queue.pop_front();
+        stats.dropped += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::llama2_13b;
+    use crate::config::ServingConfig;
+    use crate::workload::trace::{synth_trace, TraceParams};
+    use crate::workload::LengthPredictor;
+
+    fn quick_trace(peak: f64, secs: f64, seed: u64) -> Vec<Request> {
+        let mut reqs = synth_trace(&TraceParams::short(secs, peak, seed));
+        LengthPredictor::oracle().apply(&mut reqs, 1024);
+        reqs
+    }
+
+    fn model_for(spec: &crate::config::EngineSpec) -> PerfModel {
+        PerfModel::train(&[spec.clone()], 40, 0)
+    }
+
+    #[test]
+    fn triton_serves_everything_at_max_freq() {
+        let spec = llama2_13b(2);
+        let cfg = ServingConfig::triton(spec.clone());
+        let m = model_for(&spec);
+        let reqs = quick_trace(2.0, 60.0, 0);
+        let out = serve_trace(&cfg, Policy::triton(), &m, &reqs);
+        assert_eq!(out.stats.completed as usize, reqs.len());
+        assert_eq!(out.stats.dropped, 0);
+        assert!(out.stats.freq.values().iter().all(|&f| f == 1410.0));
+        assert!(out.stats.total_energy_j > 0.0);
+    }
+
+    #[test]
+    fn throttllem_reduces_energy_and_meets_slo() {
+        let spec = llama2_13b(2);
+        let m = model_for(&spec);
+        let reqs = quick_trace(2.0, 120.0, 1);
+
+        let cfg_t = ServingConfig::triton(spec.clone());
+        let triton = serve_trace(&cfg_t, Policy::triton(), &m, &reqs);
+
+        let cfg = ServingConfig::throttllem(spec.clone());
+        let ours = serve_trace(&cfg, Policy::throttle_only(), &m, &reqs);
+
+        assert_eq!(ours.stats.completed as usize, reqs.len());
+        // Energy strictly lower than Triton's.
+        assert!(
+            ours.stats.total_energy_j < triton.stats.total_energy_j,
+            "ours={} triton={}",
+            ours.stats.total_energy_j,
+            triton.stats.total_energy_j
+        );
+        // Mean frequency visibly below max.
+        assert!(ours.stats.freq.mean() < 1350.0);
+        // TBT SLO comfortably met on average.
+        assert!(ours.stats.tbt.mean() < cfg.slo.tbt_avg);
+        // E2E p99 within the SLO at this moderate load.
+        assert!(
+            ours.stats.e2e.p99() <= cfg.slo.e2e_p99,
+            "p99={} slo={}",
+            ours.stats.e2e.p99(),
+            cfg.slo.e2e_p99
+        );
+    }
+
+    #[test]
+    fn queueing_under_kv_pressure() {
+        // TP1 has only 120 blocks: long prompts must queue.
+        let spec = llama2_13b(1);
+        let m = model_for(&spec);
+        let cfg = ServingConfig::throttllem(spec.clone());
+        let reqs = quick_trace(1.0, 120.0, 2);
+        let out = serve_trace(&cfg, Policy::throttle_only(), &m, &reqs);
+        assert_eq!(
+            out.stats.completed + out.stats.dropped,
+            reqs.len() as u64
+        );
+        // Some queueing must have occurred.
+        assert!(out.stats.queue.max() > 0.0);
+    }
+
+    #[test]
+    fn autoscaler_switches_engines_under_varying_load() {
+        let set = vec![llama2_13b(1), llama2_13b(2), llama2_13b(4)];
+        let m = PerfModel::train(&set, 40, 0);
+        let mut cfg = ServingConfig::autoscaled(set);
+        cfg.slo = crate::config::SloSpec::new(0.2, 31.3);
+        // RPS ramps 0.75 -> 7.5: all three engines should be visited.
+        let reqs = crate::workload::trace::synth_trace_rps_range(
+            &TraceParams::short(600.0, 8.25, 3),
+            0.75,
+            7.5,
+        );
+        let out = serve_trace(&cfg, Policy::throttllem(), &m, &reqs);
+        assert!(out.engine_switches >= 1, "switches={}", out.engine_switches);
+        assert!(out.shadow_energy_j > 0.0);
+        let tps: Vec<u32> = out.timeline.iter().map(|p| p.engine_tp).collect();
+        assert!(tps.contains(&1) && tps.contains(&4));
+        assert_eq!(
+            out.stats.completed + out.stats.dropped,
+            reqs.len() as u64
+        );
+    }
+
+    #[test]
+    fn outcomes_complete_and_sorted() {
+        let spec = llama2_13b(2);
+        let m = model_for(&spec);
+        let cfg = ServingConfig::throttllem(spec.clone());
+        let reqs = quick_trace(1.5, 60.0, 4);
+        let out = serve_trace(&cfg, Policy::throttle_only(), &m, &reqs);
+        assert_eq!(out.outcomes.len() as u64, out.stats.completed);
+        assert!(out.outcomes.windows(2).all(|w| w[0].id < w[1].id));
+        for o in &out.outcomes {
+            assert!(o.e2e_s > 0.0 && o.ttft_s > 0.0);
+            assert!(o.e2e_s >= o.ttft_s);
+        }
+    }
+}

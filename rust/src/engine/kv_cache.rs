@@ -1,0 +1,233 @@
+//! Paged KV-cache block allocator (the vLLM/TensorRT-LLM "paged
+//! attention" substrate, paper §II).
+//!
+//! Blocks hold `N = block_tokens` tokens.  A request occupying `t`
+//! tokens holds `ceil(t / N)` blocks — exactly the quantity Eq. (1) of
+//! the paper projects.  Blocks are recycled through a free list; the
+//! allocator refuses to overcommit (the scheduler's KV-capacity check
+//! exists to keep swapping from ever happening).
+
+use std::collections::HashMap;
+
+use crate::engine::request::RequestId;
+
+/// Number of blocks needed for `tokens` tokens with `block_tokens` N.
+#[inline]
+pub fn blocks_for(tokens: u32, block_tokens: u32) -> u32 {
+    tokens.div_ceil(block_tokens)
+}
+
+/// Paged block allocator.
+#[derive(Debug, Clone)]
+pub struct KvAllocator {
+    capacity_blocks: u32,
+    block_tokens: u32,
+    free: Vec<u32>,
+    /// request -> (token count, owned block ids)
+    held: HashMap<RequestId, (u32, Vec<u32>)>,
+}
+
+/// Allocation failure: capacity would be exceeded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[error("KV cache exhausted: need {need} blocks, {free} free")]
+pub struct KvExhausted {
+    pub need: u32,
+    pub free: u32,
+}
+
+impl KvAllocator {
+    pub fn new(capacity_blocks: u32, block_tokens: u32) -> Self {
+        assert!(block_tokens > 0);
+        Self {
+            capacity_blocks,
+            block_tokens,
+            free: (0..capacity_blocks).rev().collect(),
+            held: HashMap::new(),
+        }
+    }
+
+    pub fn capacity_blocks(&self) -> u32 {
+        self.capacity_blocks
+    }
+
+    pub fn free_blocks(&self) -> u32 {
+        self.free.len() as u32
+    }
+
+    pub fn used_blocks(&self) -> u32 {
+        self.capacity_blocks - self.free_blocks()
+    }
+
+    pub fn block_tokens(&self) -> u32 {
+        self.block_tokens
+    }
+
+    /// Blocks held by one request.
+    pub fn blocks_of(&self, id: RequestId) -> u32 {
+        self.held.get(&id).map(|(_, b)| b.len() as u32).unwrap_or(0)
+    }
+
+    /// Register a request at `tokens` occupancy (prompt after prefill).
+    pub fn allocate(&mut self, id: RequestId, tokens: u32) -> Result<(), KvExhausted> {
+        assert!(
+            !self.held.contains_key(&id),
+            "request {id} already allocated"
+        );
+        let need = blocks_for(tokens, self.block_tokens);
+        if need > self.free_blocks() {
+            return Err(KvExhausted {
+                need,
+                free: self.free_blocks(),
+            });
+        }
+        let blocks = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.held.insert(id, (tokens, blocks));
+        Ok(())
+    }
+
+    /// Grow a request to `tokens` total (decode appends one token per
+    /// iteration; a new block is taken only on boundary crossings).
+    pub fn grow_to(&mut self, id: RequestId, tokens: u32) -> Result<(), KvExhausted> {
+        let (cur, blocks) = self
+            .held
+            .get_mut(&id)
+            .unwrap_or_else(|| panic!("grow of unknown request {id}"));
+        assert!(tokens >= *cur, "KV shrink not supported");
+        let need_total = blocks_for(tokens, self.block_tokens);
+        let extra = need_total.saturating_sub(blocks.len() as u32);
+        if extra > self.free.len() as u32 {
+            return Err(KvExhausted {
+                need: extra,
+                free: self.free.len() as u32,
+            });
+        }
+        for _ in 0..extra {
+            blocks.push(self.free.pop().unwrap());
+        }
+        *cur = tokens;
+        Ok(())
+    }
+
+    /// Release every block of a completed request.
+    pub fn release(&mut self, id: RequestId) {
+        if let Some((_, blocks)) = self.held.remove(&id) {
+            self.free.extend(blocks);
+        }
+    }
+
+    /// Invariant check (used by property tests): no block is both free
+    /// and held, and accounting adds up.
+    pub fn check_invariants(&self) {
+        let held: u32 = self.held.values().map(|(_, b)| b.len() as u32).sum();
+        assert_eq!(held + self.free_blocks(), self.capacity_blocks);
+        let mut seen = vec![false; self.capacity_blocks as usize];
+        for b in self
+            .free
+            .iter()
+            .chain(self.held.values().flat_map(|(_, b)| b.iter()))
+        {
+            assert!(!seen[*b as usize], "block {b} double-owned");
+            seen[*b as usize] = true;
+        }
+        for (id, (tokens, blocks)) in &self.held {
+            assert_eq!(
+                blocks.len() as u32,
+                blocks_for(*tokens, self.block_tokens),
+                "request {id} block count mismatch"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Pcg64;
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        assert_eq!(blocks_for(0, 64), 0);
+        assert_eq!(blocks_for(1, 64), 1);
+        assert_eq!(blocks_for(64, 64), 1);
+        assert_eq!(blocks_for(65, 64), 2);
+    }
+
+    #[test]
+    fn allocate_grow_release_roundtrip() {
+        let mut kv = KvAllocator::new(10, 64);
+        kv.allocate(1, 100).unwrap(); // 2 blocks
+        assert_eq!(kv.used_blocks(), 2);
+        kv.grow_to(1, 128).unwrap(); // still 2
+        assert_eq!(kv.used_blocks(), 2);
+        kv.grow_to(1, 129).unwrap(); // 3
+        assert_eq!(kv.used_blocks(), 3);
+        kv.release(1);
+        assert_eq!(kv.used_blocks(), 0);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn refuses_overcommit() {
+        let mut kv = KvAllocator::new(2, 64);
+        kv.allocate(1, 128).unwrap();
+        assert!(kv.allocate(2, 1).is_err());
+        kv.check_invariants();
+        // failed allocation must not leak state
+        kv.release(1);
+        kv.allocate(2, 1).unwrap();
+    }
+
+    #[test]
+    fn grow_failure_keeps_state() {
+        let mut kv = KvAllocator::new(2, 64);
+        kv.allocate(1, 64).unwrap();
+        kv.allocate(2, 64).unwrap();
+        assert!(kv.grow_to(1, 65).is_err());
+        assert_eq!(kv.blocks_of(1), 1);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn release_unknown_is_noop() {
+        let mut kv = KvAllocator::new(4, 64);
+        kv.release(99);
+        kv.check_invariants();
+    }
+
+    /// Property test: random alloc/grow/release interleavings preserve
+    /// allocator invariants (proptest substitute; see testutil).
+    #[test]
+    fn random_interleavings_preserve_invariants() {
+        for seed in 0..20 {
+            let mut rng = Pcg64::new(seed);
+            let mut kv = KvAllocator::new(64, 16);
+            let mut live: Vec<(RequestId, u32)> = vec![];
+            let mut next_id = 0u64;
+            for _ in 0..500 {
+                match rng.uniform_u64(0, 2) {
+                    0 => {
+                        let tokens = rng.uniform_u64(1, 200) as u32;
+                        if kv.allocate(next_id, tokens).is_ok() {
+                            live.push((next_id, tokens));
+                        }
+                        next_id += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let i = rng.uniform_usize(0, live.len() - 1);
+                        let (id, t) = live[i];
+                        let nt = t + rng.uniform_u64(1, 40) as u32;
+                        if kv.grow_to(id, nt).is_ok() {
+                            live[i].1 = nt;
+                        }
+                    }
+                    _ if !live.is_empty() => {
+                        let i = rng.uniform_usize(0, live.len() - 1);
+                        kv.release(live.swap_remove(i).0);
+                    }
+                    _ => {}
+                }
+                kv.check_invariants();
+            }
+        }
+    }
+}

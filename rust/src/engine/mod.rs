@@ -1,0 +1,23 @@
+//! LLM inference engine substrate: paged KV cache, inflight (fused)
+//! batching, iteration-level execution.
+//!
+//! The engine mirrors the observable behaviour of Triton+TensorRT-LLM
+//! (the paper's backend): requests enter/leave the running batch at
+//! iteration boundaries (inflight batching, Orca-style), each request
+//! holds `ceil((prompt + generated)/N)` KV blocks (paged attention),
+//! a newly admitted request's prefill runs fused with the next
+//! iteration and stalls decoding (the paper's explanation for TBT
+//! outliers), and per-iteration timing/power comes from `gpusim`.
+//!
+//! The coordinator (both throttLL'eM and the Triton baseline) drives
+//! `EngineSim::run_iteration` from its event loop and observes exactly
+//! what Triton's metrics endpoint would expose: batch size, KV usage,
+//! and iteration latency.
+
+pub mod kv_cache;
+pub mod request;
+pub mod sim;
+
+pub use kv_cache::KvAllocator;
+pub use request::{Request, RequestId, RequestOutcome};
+pub use sim::{EngineSim, IterationReport};

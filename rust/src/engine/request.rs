@@ -1,0 +1,88 @@
+//! Request model shared by the workload generator, engine and
+//! coordinator.
+
+/// Unique request identifier.
+pub type RequestId = u64;
+
+/// An inference request (lengths in tokens, times in seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: RequestId,
+    /// Prompt length |q_i| (known on arrival after tokenization).
+    pub prompt_tokens: u32,
+    /// ACTUAL generation length — ground truth from the trace; hidden
+    /// from the coordinator, which only sees the predictor's estimate.
+    pub gen_tokens: u32,
+    /// Predicted generation length |r̂_i| (predictor output, possibly
+    /// conservatively inflated — paper §IV-F).
+    pub predicted_gen: u32,
+    /// Arrival time.
+    pub arrival_s: f64,
+}
+
+impl Request {
+    /// Total KV tokens the request will occupy when fully generated.
+    pub fn total_tokens(&self) -> u32 {
+        self.prompt_tokens + self.gen_tokens
+    }
+}
+
+/// Completion record with everything the evaluation needs.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub id: RequestId,
+    pub prompt_tokens: u32,
+    pub gen_tokens: u32,
+    pub arrival_s: f64,
+    /// When the scheduler admitted it to the engine.
+    pub scheduled_s: f64,
+    /// Time to first token (arrival -> end of its prefill iteration).
+    pub ttft_s: f64,
+    /// End-to-end latency (arrival -> last token).
+    pub e2e_s: f64,
+    /// Mean time between tokens over the generation phase.
+    pub tbt_avg_s: f64,
+    /// Whether the scheduler marked it "lost" (own E2E SLO unmeetable
+    /// at admission; excluded from later SLO validations — §IV-C2).
+    pub lost: bool,
+}
+
+impl RequestOutcome {
+    /// Queueing delay before admission.
+    pub fn queue_s(&self) -> f64 {
+        self.scheduled_s - self.arrival_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_tokens_sums_phases() {
+        let r = Request {
+            id: 1,
+            prompt_tokens: 100,
+            gen_tokens: 50,
+            predicted_gen: 60,
+            arrival_s: 0.0,
+        };
+        assert_eq!(r.total_tokens(), 150);
+    }
+
+    #[test]
+    fn queue_delay() {
+        let o = RequestOutcome {
+            id: 1,
+            prompt_tokens: 10,
+            gen_tokens: 10,
+            arrival_s: 1.0,
+            scheduled_s: 1.5,
+            ttft_s: 0.7,
+            e2e_s: 3.0,
+            tbt_avg_s: 0.02,
+            lost: false,
+        };
+        assert!((o.queue_s() - 0.5).abs() < 1e-12);
+    }
+}

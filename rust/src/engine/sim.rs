@@ -1,0 +1,519 @@
+//! Iteration-level engine simulator with inflight fused batching.
+//!
+//! Semantics mirrored from Triton + TensorRT-LLM (paper §II, §V-A):
+//!   * requests join/leave the batch only at iteration boundaries;
+//!   * a newly admitted request's prefill runs fused with the next
+//!     iteration, stalling decode for everyone (TBT outliers, §V-D1);
+//!   * each live row generates one token per iteration and holds
+//!     `ceil((prompt + generated) / N)` KV blocks;
+//!   * if the KV pool is exhausted mid-generation (possible only under
+//!     length mispredictions), affected rows STALL — they stop
+//!     generating until blocks free up, modelling the severe
+//!     degradation the paper's KV-capacity admission check exists to
+//!     prevent;
+//!   * iteration duration and power come from `gpusim`, at the
+//!     frequency the DVFS actuator has made effective.
+
+use crate::config::EngineSpec;
+use crate::engine::kv_cache::KvAllocator;
+use crate::engine::request::{Request, RequestId, RequestOutcome};
+use crate::gpusim::dvfs::DvfsActuator;
+use crate::gpusim::latency::{decode_latency_s, prefill_latency_s, GpuState};
+use crate::gpusim::power::{idle_power_w, power_w};
+
+/// A request resident in the engine.
+#[derive(Debug, Clone)]
+struct Active {
+    req: Request,
+    scheduled_iter: u64,
+    scheduled_s: f64,
+    /// Tokens generated so far (first token produced by prefill).
+    generated: u32,
+    prefill_pending: bool,
+    /// Absolute time of the first token (set by the prefill iteration).
+    first_token_s: Option<f64>,
+    lost: bool,
+    /// Stalled by KV exhaustion in the previous iteration.
+    stalled: bool,
+}
+
+/// Public per-request view for the coordinator's scoreboard sync.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActiveInfo {
+    pub id: RequestId,
+    pub scheduled_iter: u64,
+    pub prompt_tokens: u32,
+    pub generated: u32,
+    pub predicted_gen: u32,
+    pub lost: bool,
+}
+
+/// What happened during one engine iteration.
+#[derive(Debug, Clone)]
+pub struct IterationReport {
+    pub iter_index: u64,
+    pub start_s: f64,
+    pub duration_s: f64,
+    /// Rows that were decoding this iteration.
+    pub batch: u32,
+    /// KV blocks allocated at the START of the iteration.
+    pub kv_blocks: u32,
+    pub freq_mhz: u32,
+    pub power_w: f64,
+    pub energy_j: f64,
+    /// Number of fused prefills in this iteration.
+    pub prefills: u32,
+    /// Tokens emitted (decode rows that actually advanced + prefills).
+    pub tokens: u32,
+    /// Requests that finished in this iteration.
+    pub completed: Vec<RequestOutcome>,
+    /// Rows stalled by KV exhaustion this iteration.
+    pub stalled: u32,
+    /// Requests preempted to break a total KV deadlock (vLLM-style
+    /// recompute preemption): their blocks are released and the caller
+    /// must re-queue them (they re-run prefill from scratch).
+    pub evicted: Vec<Request>,
+}
+
+/// The engine simulator.
+#[derive(Debug)]
+pub struct EngineSim {
+    spec: EngineSpec,
+    pub dvfs: DvfsActuator,
+    kv: KvAllocator,
+    active: Vec<Active>,
+    iter_index: u64,
+    total_energy_j: f64,
+    /// Last time idle energy was accounted up to.
+    accounted_until_s: f64,
+}
+
+impl EngineSim {
+    pub fn new(spec: EngineSpec, initial_freq_mhz: u32) -> Self {
+        let kv = KvAllocator::new(spec.kv_blocks, spec.block_tokens);
+        Self {
+            spec,
+            dvfs: DvfsActuator::new(initial_freq_mhz),
+            kv,
+            active: Vec::new(),
+            iter_index: 0,
+            total_energy_j: 0.0,
+            accounted_until_s: 0.0,
+        }
+    }
+
+    pub fn spec(&self) -> &EngineSpec {
+        &self.spec
+    }
+
+    pub fn batch(&self) -> u32 {
+        self.active.len() as u32
+    }
+
+    pub fn kv_blocks_used(&self) -> u32 {
+        self.kv.used_blocks()
+    }
+
+    pub fn kv_blocks_free(&self) -> u32 {
+        self.kv.free_blocks()
+    }
+
+    pub fn iter_index(&self) -> u64 {
+        self.iter_index
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.total_energy_j
+    }
+
+    /// Coordinator-visible view of resident requests.
+    pub fn active_info(&self) -> Vec<ActiveInfo> {
+        self.active
+            .iter()
+            .map(|a| ActiveInfo {
+                id: a.req.id,
+                scheduled_iter: a.scheduled_iter,
+                prompt_tokens: a.req.prompt_tokens,
+                generated: a.generated,
+                predicted_gen: a.req.predicted_gen,
+                lost: a.lost,
+            })
+            .collect()
+    }
+
+    /// Whether a prompt of `prompt_tokens` currently fits in free KV.
+    pub fn kv_fits(&self, prompt_tokens: u32) -> bool {
+        let need =
+            crate::engine::kv_cache::blocks_for(prompt_tokens, self.spec.block_tokens);
+        need <= self.kv.free_blocks()
+    }
+
+    /// Admit a request: allocates prompt KV; prefill runs fused with
+    /// the next iteration. Fails (leaving no state) on KV exhaustion.
+    pub fn admit(&mut self, req: Request, now: f64, lost: bool) -> anyhow::Result<()> {
+        if self.batch() >= self.spec.max_batch {
+            anyhow::bail!("engine at max batch {}", self.spec.max_batch);
+        }
+        self.kv
+            .allocate(req.id, req.prompt_tokens)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        self.active.push(Active {
+            scheduled_iter: self.iter_index,
+            scheduled_s: now,
+            generated: 0,
+            prefill_pending: true,
+            first_token_s: None,
+            lost,
+            stalled: false,
+            req,
+        });
+        Ok(())
+    }
+
+    /// Account idle (no-batch) energy from the last accounted instant
+    /// up to `now`. Call before admitting after an idle gap.
+    pub fn account_idle(&mut self, now: f64) {
+        if now > self.accounted_until_s {
+            let freq = self.dvfs.effective(now);
+            let dt = now - self.accounted_until_s;
+            if self.active.is_empty() {
+                self.total_energy_j += idle_power_w(&self.spec, freq) * dt;
+            }
+            self.accounted_until_s = now;
+        }
+    }
+
+    /// Execute one iteration starting at `now`; returns the report.
+    /// Panics if the engine is idle (callers gate on `is_idle`).
+    pub fn run_iteration(&mut self, now: f64) -> IterationReport {
+        assert!(!self.active.is_empty(), "iteration on idle engine");
+        let freq = self.dvfs.effective(now);
+        let kv_start = self.kv.used_blocks();
+        let batch = self.batch();
+
+        // Duration: fused prefills stall the whole batch, then one
+        // decode step for every row.
+        let mut prefills = 0u32;
+        let mut duration = 0.0;
+        for a in &self.active {
+            if a.prefill_pending {
+                duration += prefill_latency_s(&self.spec, a.req.prompt_tokens, freq);
+                prefills += 1;
+            }
+        }
+        duration += decode_latency_s(
+            &self.spec,
+            &GpuState {
+                batch,
+                kv_blocks: kv_start,
+                freq_mhz: freq,
+            },
+        );
+        let end = now + duration;
+
+        // Token bookkeeping.
+        let mut tokens = 0u32;
+        let mut stalled = 0u32;
+        let mut completed = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &mut self.active[i];
+            if a.prefill_pending {
+                // Prefill emits the first token.
+                a.prefill_pending = false;
+                a.generated = 1;
+                a.first_token_s = Some(end);
+                tokens += 1;
+            } else {
+                // Decode: grow KV by one token, then emit.
+                let want = a.req.prompt_tokens + a.generated + 1;
+                match self.kv.grow_to(a.req.id, want) {
+                    Ok(()) => {
+                        a.generated += 1;
+                        a.stalled = false;
+                        tokens += 1;
+                    }
+                    Err(_) => {
+                        // KV exhausted: row stalls this iteration.
+                        a.stalled = true;
+                        stalled += 1;
+                    }
+                }
+            }
+            if a.generated >= a.req.gen_tokens {
+                let a = self.active.swap_remove(i);
+                self.kv.release(a.req.id);
+                completed.push(Self::outcome(&a, end));
+            } else {
+                i += 1;
+            }
+        }
+
+        // Deadlock breaker: if every live decode row stalled and the
+        // pool is exhausted, preempt the youngest stalled row
+        // (recompute preemption — paged-attention engines swap or
+        // recompute here; the admission KV check exists to make this
+        // rare).
+        let mut evicted = Vec::new();
+        let live_decodes = self.active.iter().filter(|a| !a.prefill_pending).count() as u32;
+        if stalled > 0 && stalled == live_decodes && self.kv.free_blocks() == 0 {
+            if self.active.len() == 1 {
+                // A sole resident request larger than the whole pool can
+                // never finish: truncate it (the max_tokens limit of a
+                // sane deployment keeps per-request footprints below
+                // capacity, so this is a test-scale corner).
+                let a = self.active.swap_remove(0);
+                self.kv.release(a.req.id);
+                let mut a = a;
+                a.req.gen_tokens = a.generated;
+                completed.push(Self::outcome(&a, end));
+            } else if let Some(pos) = self
+                .active
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.stalled)
+                .max_by_key(|(_, a)| a.scheduled_iter)
+                .map(|(i, _)| i)
+            {
+                let a = self.active.swap_remove(pos);
+                self.kv.release(a.req.id);
+                evicted.push(a.req);
+            }
+        }
+
+        let p = power_w(&self.spec, batch, kv_start, freq);
+        let energy = p * duration;
+        self.total_energy_j += energy;
+        self.accounted_until_s = end;
+        let report = IterationReport {
+            iter_index: self.iter_index,
+            start_s: now,
+            duration_s: duration,
+            batch,
+            kv_blocks: kv_start,
+            freq_mhz: freq,
+            power_w: p,
+            energy_j: energy,
+            prefills,
+            tokens,
+            completed,
+            stalled,
+            evicted,
+        };
+        self.iter_index += 1;
+        report
+    }
+
+    fn outcome(a: &Active, end: f64) -> RequestOutcome {
+        let first = a.first_token_s.unwrap_or(end);
+        let gen = a.req.gen_tokens.max(1);
+        let tbt = if gen > 1 {
+            (end - first) / (gen - 1) as f64
+        } else {
+            0.0
+        };
+        RequestOutcome {
+            id: a.req.id,
+            prompt_tokens: a.req.prompt_tokens,
+            gen_tokens: a.req.gen_tokens,
+            arrival_s: a.req.arrival_s,
+            scheduled_s: a.scheduled_s,
+            ttft_s: first - a.req.arrival_s,
+            e2e_s: end - a.req.arrival_s,
+            tbt_avg_s: tbt,
+            lost: a.lost,
+        }
+    }
+
+    /// Drain all residents (used when an engine shuts down after its
+    /// shadow-instancing transition; callers re-route the returned
+    /// requests). KV is fully released.
+    pub fn drain(&mut self) -> Vec<Request> {
+        let reqs: Vec<Request> = self.active.iter().map(|a| a.req.clone()).collect();
+        for a in &self.active {
+            self.kv.release(a.req.id);
+        }
+        self.active.clear();
+        reqs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::llama2_13b;
+    use crate::gpusim::dvfs::FREQ_MAX_MHZ;
+
+    fn req(id: u64, prompt: u32, gen: u32, at: f64) -> Request {
+        Request {
+            id,
+            prompt_tokens: prompt,
+            gen_tokens: gen,
+            predicted_gen: gen,
+            arrival_s: at,
+        }
+    }
+
+    fn engine() -> EngineSim {
+        EngineSim::new(llama2_13b(2), FREQ_MAX_MHZ)
+    }
+
+    #[test]
+    fn request_lifecycle_and_metrics() {
+        let mut e = engine();
+        e.admit(req(1, 100, 5, 0.0), 0.0, false).unwrap();
+        let mut done = None;
+        let mut t = 0.0;
+        for _ in 0..5 {
+            let r = e.run_iteration(t);
+            t += r.duration_s;
+            if !r.completed.is_empty() {
+                done = Some(r.completed[0].clone());
+            }
+        }
+        let o = done.expect("finished in 5 iterations");
+        assert_eq!(o.gen_tokens, 5);
+        assert!(o.ttft_s > 0.0);
+        assert!(o.e2e_s > o.ttft_s);
+        assert!(o.tbt_avg_s > 0.0);
+        assert!(e.is_idle());
+        assert_eq!(e.kv_blocks_used(), 0);
+    }
+
+    #[test]
+    fn prefill_fused_into_first_iteration() {
+        let mut e = engine();
+        e.admit(req(1, 1000, 10, 0.0), 0.0, false).unwrap();
+        let r1 = e.run_iteration(0.0);
+        assert_eq!(r1.prefills, 1);
+        let d1 = r1.duration_s;
+        let r2 = e.run_iteration(d1);
+        assert_eq!(r2.prefills, 0);
+        // Prefill iteration much longer than a plain decode step.
+        assert!(d1 > 3.0 * r2.duration_s, "d1={d1} d2={}", r2.duration_s);
+    }
+
+    #[test]
+    fn kv_grows_one_token_per_iteration() {
+        let mut e = engine();
+        // 64-token blocks: a 64-token prompt uses exactly 1 block;
+        // the first decode token (generated=2 overall) forces block 2.
+        e.admit(req(1, 64, 4, 0.0), 0.0, false).unwrap();
+        assert_eq!(e.kv_blocks_used(), 1);
+        e.run_iteration(0.0); // prefill, no growth
+        assert_eq!(e.kv_blocks_used(), 1);
+        e.run_iteration(1.0); // decode token 2 -> 65 tokens
+        assert_eq!(e.kv_blocks_used(), 2);
+    }
+
+    #[test]
+    fn admission_rejected_when_kv_full() {
+        let mut e = engine();
+        // 439 blocks * 64 tokens = 28096 tokens capacity
+        e.admit(req(1, 20_000, 8, 0.0), 0.0, false).unwrap();
+        assert!(e.kv_fits(8_000));
+        assert!(!e.kv_fits(9_000));
+        assert!(e.admit(req(2, 9_000, 8, 0.0), 0.0, false).is_err());
+        // Failed admit leaves no residue.
+        assert_eq!(e.batch(), 1);
+    }
+
+    #[test]
+    fn max_batch_enforced() {
+        let mut e = engine();
+        for i in 0..32 {
+            e.admit(req(i, 10, 100, 0.0), 0.0, false).unwrap();
+        }
+        assert!(e.admit(req(99, 10, 100, 0.0), 0.0, false).is_err());
+    }
+
+    #[test]
+    fn stall_on_kv_exhaustion_then_recover() {
+        // 3-block pool, two 1-block prompts: on the first decode
+        // iteration both rows cross into a second block but only one
+        // spare block exists -> one row must stall.
+        let spec = EngineSpec {
+            kv_blocks: 3,
+            ..llama2_13b(2)
+        };
+        let mut e = EngineSim::new(spec, FREQ_MAX_MHZ);
+        e.admit(req(1, 64, 80, 0.0), 0.0, false).unwrap();
+        e.admit(req(2, 64, 40, 0.0), 0.0, false).unwrap();
+        let mut t = 0.0;
+        let mut saw_stall = false;
+        for _ in 0..12 {
+            if e.is_idle() {
+                break;
+            }
+            let r = e.run_iteration(t);
+            t += r.duration_s;
+            saw_stall |= r.stalled > 0;
+        }
+        assert!(saw_stall, "expected a KV stall");
+        assert!(e.kv_blocks_used() <= 3);
+    }
+
+    #[test]
+    fn energy_accumulates_and_idle_power_counts() {
+        let mut e = engine();
+        e.account_idle(1.0);
+        let idle = e.total_energy_j();
+        assert!(idle > 50.0, "idle energy {idle}"); // ~200W+ for 1 s
+        e.admit(req(1, 10, 3, 1.0), 1.0, false).unwrap();
+        let mut t = 1.0;
+        while !e.is_idle() {
+            t += e.run_iteration(t).duration_s;
+        }
+        assert!(e.total_energy_j() > idle);
+    }
+
+    #[test]
+    fn tbt_reflects_iteration_duration() {
+        let mut e = engine();
+        e.admit(req(1, 10, 50, 0.0), 0.0, false).unwrap();
+        let mut t = 0.0;
+        let mut out = None;
+        let mut decode_d = 0.0;
+        while !e.is_idle() {
+            let r = e.run_iteration(t);
+            t += r.duration_s;
+            if r.prefills == 0 {
+                decode_d = r.duration_s;
+            }
+            if !r.completed.is_empty() {
+                out = Some(r.completed[0].clone());
+            }
+        }
+        let o = out.unwrap();
+        assert!((o.tbt_avg_s - decode_d).abs() / decode_d < 0.05);
+    }
+
+    #[test]
+    fn drain_returns_requests_and_frees_kv() {
+        let mut e = engine();
+        e.admit(req(1, 100, 50, 0.0), 0.0, false).unwrap();
+        e.admit(req(2, 100, 50, 0.0), 0.0, false).unwrap();
+        e.run_iteration(0.0);
+        let drained = e.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(e.is_idle());
+        assert_eq!(e.kv_blocks_used(), 0);
+    }
+
+    #[test]
+    fn lower_frequency_lengthens_iterations() {
+        let mut hi = engine();
+        let mut lo = EngineSim::new(llama2_13b(2), 210);
+        hi.admit(req(1, 10, 4, 0.0), 0.0, false).unwrap();
+        lo.admit(req(1, 10, 4, 0.0), 0.0, false).unwrap();
+        hi.run_iteration(0.0);
+        lo.run_iteration(0.0);
+        let dh = hi.run_iteration(10.0).duration_s;
+        let dl = lo.run_iteration(10.0).duration_s;
+        assert!(dl > 1.5 * dh, "dl={dl} dh={dh}");
+    }
+}

@@ -1,0 +1,156 @@
+//! DVFS actuator: the `nvidia-smi -lgc`-style frequency knob.
+//!
+//! Frequencies are quantized to the A100's 15 MHz steps in
+//! [210, 1410] MHz.  A frequency change takes effect after the paper's
+//! measured ~200 ms switching latency; queries during the transition
+//! observe the old frequency.
+
+/// Minimum supported graphics clock, MHz.
+pub const FREQ_MIN_MHZ: u32 = 210;
+/// Maximum supported graphics clock, MHz.
+pub const FREQ_MAX_MHZ: u32 = 1410;
+/// Clock quantization step, MHz.
+pub const FREQ_STEP_MHZ: u32 = 15;
+/// Frequency-switch latency, seconds (paper §IV-F: avg. 200 ms).
+pub const SWITCH_LATENCY_S: f64 = 0.200;
+
+/// Snap an arbitrary MHz value to the supported grid (round to nearest).
+pub fn quantize(freq_mhz: u32) -> u32 {
+    let clamped = freq_mhz.clamp(FREQ_MIN_MHZ, FREQ_MAX_MHZ);
+    let steps = (clamped - FREQ_MIN_MHZ + FREQ_STEP_MHZ / 2) / FREQ_STEP_MHZ;
+    FREQ_MIN_MHZ + steps * FREQ_STEP_MHZ
+}
+
+/// All supported frequencies, ascending (81 settings).
+pub fn frequency_grid() -> Vec<u32> {
+    (FREQ_MIN_MHZ..=FREQ_MAX_MHZ)
+        .step_by(FREQ_STEP_MHZ as usize)
+        .collect()
+}
+
+/// Stateful frequency actuator with switching latency.
+#[derive(Debug, Clone)]
+pub struct DvfsActuator {
+    current: u32,
+    pending: Option<(f64, u32)>, // (effective_at, freq)
+    switches: u64,
+}
+
+impl DvfsActuator {
+    /// New actuator pinned at `initial` MHz (quantized).
+    pub fn new(initial: u32) -> Self {
+        Self {
+            current: quantize(initial),
+            pending: None,
+            switches: 0,
+        }
+    }
+
+    /// Request `freq_mhz` at time `now`; returns the quantized target.
+    /// A no-op if the (quantized) target equals the current/pending one.
+    pub fn set(&mut self, now: f64, freq_mhz: u32) -> u32 {
+        let target = quantize(freq_mhz);
+        let effective_target = self.pending.map(|(_, f)| f).unwrap_or(self.current);
+        if target != effective_target {
+            // Collapse the transition: latest request wins.
+            self.apply_pending(now);
+            if target != self.current {
+                self.pending = Some((now + SWITCH_LATENCY_S, target));
+                self.switches += 1;
+            } else {
+                self.pending = None;
+            }
+        }
+        target
+    }
+
+    fn apply_pending(&mut self, now: f64) {
+        if let Some((at, f)) = self.pending {
+            if now >= at {
+                self.current = f;
+                self.pending = None;
+            }
+        }
+    }
+
+    /// Frequency the GPU actually runs at, at time `now`.
+    pub fn effective(&mut self, now: f64) -> u32 {
+        self.apply_pending(now);
+        self.current
+    }
+
+    /// Last requested (target) frequency.
+    pub fn target(&self) -> u32 {
+        self.pending.map(|(_, f)| f).unwrap_or(self.current)
+    }
+
+    /// Number of frequency switches issued (telemetry).
+    pub fn switch_count(&self) -> u64 {
+        self.switches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_snaps_and_clamps() {
+        assert_eq!(quantize(210), 210);
+        assert_eq!(quantize(1410), 1410);
+        assert_eq!(quantize(100), 210);
+        assert_eq!(quantize(9999), 1410);
+        assert_eq!(quantize(1049), 1050);
+        assert_eq!(quantize(1057), 1050);
+        assert_eq!(quantize(1058), 1065);
+    }
+
+    #[test]
+    fn grid_has_81_settings() {
+        let g = frequency_grid();
+        assert_eq!(g.len(), 81);
+        assert_eq!(g[0], 210);
+        assert_eq!(*g.last().unwrap(), 1410);
+        assert!(g.windows(2).all(|w| w[1] - w[0] == 15));
+    }
+
+    #[test]
+    fn switch_takes_200ms() {
+        let mut a = DvfsActuator::new(1410);
+        a.set(0.0, 1050);
+        assert_eq!(a.effective(0.1), 1410, "old freq during transition");
+        assert_eq!(a.effective(0.21), 1050, "new freq after 200 ms");
+    }
+
+    #[test]
+    fn redundant_set_is_noop() {
+        let mut a = DvfsActuator::new(1410);
+        a.set(0.0, 1410);
+        assert_eq!(a.switch_count(), 0);
+        a.set(0.0, 1050);
+        a.set(0.05, 1050);
+        assert_eq!(a.switch_count(), 1);
+    }
+
+    #[test]
+    fn latest_request_wins() {
+        let mut a = DvfsActuator::new(1410);
+        a.set(0.0, 210);
+        a.set(0.05, 900);
+        assert_eq!(a.target(), 900);
+        // First transition superseded; 900 effective 200 ms after the
+        // second request.
+        assert_eq!(a.effective(0.20), 1410);
+        assert_eq!(a.effective(0.26), 900);
+    }
+
+    #[test]
+    fn target_tracks_pending() {
+        let mut a = DvfsActuator::new(600);
+        assert_eq!(a.target(), 600);
+        a.set(0.0, 1200);
+        assert_eq!(a.target(), 1200);
+        assert_eq!(a.effective(1.0), 1200);
+        assert_eq!(a.target(), 1200);
+    }
+}

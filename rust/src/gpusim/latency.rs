@@ -1,0 +1,205 @@
+//! Iteration-latency model: `t_iter(batch, kv, freq, engine)`.
+//!
+//! Decode is memory-bound (paper §II): the dominant term is weight +
+//! KV-cache traffic, which scales with a *saturating* effective-
+//! bandwidth curve in core frequency (DRAM clocks are constant, but a
+//! lower SM clock issues fewer outstanding loads, starving the memory
+//! pipeline at the bottom of the range).  The compute term scales
+//! inversely with frequency.  Prefill is compute-bound and scales ~1/f.
+
+use crate::config::{EngineSpec, PartitionKind};
+
+/// Reference calibration constants (Llama2-13B TP2, milliseconds at
+/// normalized frequency fn = f/1410).  See module docs for anchors.
+mod cal {
+    /// Compute time: (C0 + C1 * batch) / fn.
+    pub const C0: f64 = 0.30;
+    pub const C1: f64 = 0.028;
+    /// Memory time: (M0 + M1 * batch + M2 * kv_frac) / bw(fn).
+    pub const M0: f64 = 11.90;
+    pub const M1: f64 = 0.187;
+    pub const M2: f64 = 3.47;
+    /// Effective-bandwidth knee.
+    pub const BW_KNEE: f64 = 0.35;
+    /// Prefill: (P0 + P1 * prompt_tokens) / fn.
+    pub const P0: f64 = 3.0;
+    pub const P1: f64 = 0.16;
+}
+
+/// Saturating effective-bandwidth factor in [0, 1]; bw(1) = 1.
+#[inline]
+pub fn bandwidth_factor(fnorm: f64) -> f64 {
+    (1.0 + cal::BW_KNEE) * fnorm / (fnorm + cal::BW_KNEE)
+}
+
+/// Instantaneous GPU/engine state a latency query depends on.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuState {
+    /// Current batch size (live decode rows).
+    pub batch: u32,
+    /// Allocated KV blocks.
+    pub kv_blocks: u32,
+    /// Core frequency in MHz.
+    pub freq_mhz: u32,
+}
+
+impl GpuState {
+    pub fn kv_fraction(&self, spec: &EngineSpec) -> f64 {
+        (self.kv_blocks as f64 / spec.kv_blocks as f64).min(1.0)
+    }
+}
+
+#[inline]
+fn fnorm(freq_mhz: u32) -> f64 {
+    (freq_mhz as f64 / super::dvfs::FREQ_MAX_MHZ as f64).clamp(0.05, 1.0)
+}
+
+/// One decode iteration (one token for every row in the batch), seconds.
+pub fn decode_latency_s(spec: &EngineSpec, st: &GpuState) -> f64 {
+    assert!(st.batch >= 1, "decode with empty batch");
+    let fnn = fnorm(st.freq_mhz);
+    let kv = st.kv_fraction(spec);
+
+    // DDP replicas each run a slice of the batch in parallel; the
+    // iteration completes when the widest replica completes.
+    let (eff_batch, scale) = match spec.partition {
+        PartitionKind::DataParallel => {
+            let replicas = spec.tensor_parallel as f64;
+            ((st.batch as f64 / replicas).ceil(), spec.latency_scale)
+        }
+        _ => (st.batch as f64, spec.latency_scale),
+    };
+
+    let compute_ms = (cal::C0 + cal::C1 * eff_batch) / fnn;
+    let memory_ms =
+        (cal::M0 + cal::M1 * eff_batch + cal::M2 * kv) / bandwidth_factor(fnn);
+    let mut ms = scale * (compute_ms + memory_ms);
+    if spec.partition == PartitionKind::Pipeline {
+        ms *= 1.0 + spec.pipeline_bubble;
+    }
+    ms / 1e3
+}
+
+/// Prompt-phase latency for one request, seconds (compute-bound).
+pub fn prefill_latency_s(spec: &EngineSpec, prompt_tokens: u32, freq_mhz: u32) -> f64 {
+    let fnn = fnorm(freq_mhz);
+    let mut ms = spec.latency_scale * (cal::P0 + cal::P1 * prompt_tokens as f64) / fnn;
+    if spec.partition == PartitionKind::Pipeline {
+        ms *= 1.0 + spec.pipeline_bubble;
+    }
+    ms / 1e3
+}
+
+/// Iterations/second the engine sustains in a given state — the ground
+/// truth the performance-prediction model `M` learns to approximate.
+pub fn ips(spec: &EngineSpec, st: &GpuState) -> f64 {
+    1.0 / decode_latency_s(spec, st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::{llama2_13b, llama2_13b_partitioned};
+    use crate::gpusim::dvfs::FREQ_MAX_MHZ;
+
+    fn st(batch: u32, kv_blocks: u32, freq: u32) -> GpuState {
+        GpuState {
+            batch,
+            kv_blocks,
+            freq_mhz: freq,
+        }
+    }
+
+    #[test]
+    fn tbt_band_at_max_freq() {
+        // Paper Fig. 2c: 13B TP2 TBT is ~15-30 ms at high frequency.
+        let e = llama2_13b(2);
+        let t1 = decode_latency_s(&e, &st(1, 220, FREQ_MAX_MHZ));
+        let t32 = decode_latency_s(&e, &st(32, 220, FREQ_MAX_MHZ));
+        assert!((0.012..0.018).contains(&t1), "t1={t1}");
+        assert!((0.018..0.025).contains(&t32), "t32={t32}");
+    }
+
+    #[test]
+    fn batch_worsens_tbt_about_45_percent() {
+        let e = llama2_13b(2);
+        let t1 = decode_latency_s(&e, &st(1, 220, FREQ_MAX_MHZ));
+        let t32 = decode_latency_s(&e, &st(32, 220, FREQ_MAX_MHZ));
+        let ratio = t32 / t1;
+        assert!((1.35..1.60).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn full_kv_degrades_about_18_percent() {
+        // Paper §III-B: up to 18.2% performance degradation.
+        let e = llama2_13b(2);
+        let lo = decode_latency_s(&e, &st(32, 0, FREQ_MAX_MHZ));
+        let hi = decode_latency_s(&e, &st(32, e.kv_blocks, FREQ_MAX_MHZ));
+        let degr = hi / lo - 1.0;
+        assert!((0.15..0.21).contains(&degr), "degradation={degr}");
+    }
+
+    #[test]
+    fn tbt_monotone_in_batch_kv_and_inverse_freq() {
+        let e = llama2_13b(2);
+        let base = decode_latency_s(&e, &st(8, 100, 1050));
+        assert!(decode_latency_s(&e, &st(16, 100, 1050)) > base);
+        assert!(decode_latency_s(&e, &st(8, 300, 1050)) > base);
+        assert!(decode_latency_s(&e, &st(8, 100, 840)) > base);
+        assert!(decode_latency_s(&e, &st(8, 100, 1410)) < base);
+    }
+
+    #[test]
+    fn low_freq_tbt_roughly_doubles() {
+        // (high f, low B) -> (low f, high B): E2E/TBT ~2x (paper §III-A1).
+        let e = llama2_13b(2);
+        let fast = decode_latency_s(&e, &st(1, 220, FREQ_MAX_MHZ));
+        let slow = decode_latency_s(&e, &st(32, 220, 210));
+        let ratio = slow / fast;
+        assert!((1.8..4.5).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn tp_scaling_reduces_latency() {
+        let s = st(8, 100, FREQ_MAX_MHZ);
+        let t1 = decode_latency_s(&llama2_13b(1), &s);
+        let t2 = decode_latency_s(&llama2_13b(2), &s);
+        let t4 = decode_latency_s(&llama2_13b(4), &s);
+        assert!(t1 > t2 && t2 > t4);
+    }
+
+    #[test]
+    fn pipeline_slower_than_tensor() {
+        use crate::config::PartitionKind::*;
+        let s = st(16, 200, FREQ_MAX_MHZ);
+        let tp2 = decode_latency_s(&llama2_13b_partitioned(Tensor, 2), &s);
+        let pp2 = decode_latency_s(&llama2_13b_partitioned(Pipeline, 2), &s);
+        assert!(pp2 > tp2 * 1.5, "pp2={pp2} tp2={tp2}");
+    }
+
+    #[test]
+    fn ddp_parallelizes_batch() {
+        use crate::config::PartitionKind::*;
+        let ddp2 = llama2_13b_partitioned(DataParallel, 2);
+        let tp1 = llama2_13b(1);
+        // 16 requests over 2 replicas behave like 8 on one TP1 engine;
+        // compare at the same KV *fraction* (200/240 vs 100/120).
+        let t_ddp = decode_latency_s(&ddp2, &st(16, 200, FREQ_MAX_MHZ));
+        let t_tp1 = decode_latency_s(&tp1, &st(8, 100, FREQ_MAX_MHZ));
+        assert!(
+            (t_ddp / t_tp1 - 1.0).abs() < 0.01,
+            "t_ddp={t_ddp} t_tp1={t_tp1}"
+        );
+    }
+
+    #[test]
+    fn prefill_is_compute_bound_and_in_band() {
+        // Paper §IV-F: avg prefill ~175 ms (at ~1k-token prompts).
+        let e = llama2_13b(2);
+        let t = prefill_latency_s(&e, 1000, FREQ_MAX_MHZ);
+        assert!((0.13..0.22).contains(&t), "t={t}");
+        // compute-bound: halving frequency ~doubles it.
+        let t_half = prefill_latency_s(&e, 1000, FREQ_MAX_MHZ / 2);
+        assert!((t_half / t - 2.0).abs() < 0.1);
+    }
+}

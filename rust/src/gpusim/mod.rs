@@ -1,0 +1,27 @@
+//! Analytical A100 GPU model + DVFS actuator (the hardware substrate).
+//!
+//! The paper's testbed (8x NVIDIA A100 with per-GPU frequency control)
+//! is unavailable; this module reproduces the *behavioural surface* the
+//! coordinator observes and actuates: iteration latency as a function of
+//! (batch, KV usage, frequency, parallelism), power as a function of
+//! (frequency, KV usage), and a frequency actuator with the paper's
+//! 200 ms switching overhead and 15 MHz quantization.
+//!
+//! Calibration anchors (all from paper §III, Llama2-13B TP2):
+//!   * TBT in the 15-30 ms band at max frequency (Fig. 2c);
+//!   * batch 1 -> 32 worsens TBT by ~45% at fixed frequency (§III-A1);
+//!   * full KV cache degrades performance by ~18.2% (§III-B);
+//!   * power: >2x between 210 and 1410 MHz, ~flat vs batch (Fig. 2d);
+//!   * tokens/Joule sweet spot at ~1050 MHz, +37.4% vs 1410 MHz at
+//!     batch 32; below ~840 MHz efficiency decays again (Fig. 2e);
+//!   * Pearson(KV, TBT) ~ 0.92 at constant batch (Fig. 3d).
+//!
+//! `tests/gpusim_calibration.rs` asserts each anchor.
+
+pub mod dvfs;
+pub mod latency;
+pub mod power;
+
+pub use dvfs::{DvfsActuator, FREQ_MAX_MHZ, FREQ_MIN_MHZ, FREQ_STEP_MHZ};
+pub use latency::{decode_latency_s, prefill_latency_s, GpuState};
+pub use power::power_w;

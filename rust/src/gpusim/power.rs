@@ -1,0 +1,148 @@
+//! Power model: `P(freq, kv, batch, engine)` in Watts.
+//!
+//! Shape (paper §III-A1, Fig. 2d and §III-B, Fig. 3c):
+//!   * power rises >2x from 210 MHz to 1410 MHz;
+//!   * ~flat across batch sizes at fixed frequency;
+//!   * positive correlation with allocated KV blocks (DRAM reads),
+//!     steeper at higher frequencies;
+//!   * a voltage floor below ~1100 MHz makes dynamic power ~linear in
+//!     f at the bottom of the range and ~f*V(f)^2 at the top — this is
+//!     what creates the tokens/Joule sweet spot at ~1050 MHz instead of
+//!     at the minimum frequency.
+
+use crate::config::EngineSpec;
+
+/// Per-GPU static/idle power (SMs gated but HBM + board active), W.
+const P_STATIC_W: f64 = 100.0;
+/// Per-GPU dynamic-power span at fn=1, W.
+const P_DYN_W: f64 = 138.0;
+/// Per-GPU KV-traffic power at full cache and fn=1, W.
+const P_KV_W: f64 = 15.0;
+/// Per-request power (scheduling overhead), W — small: power is
+/// "primarily influenced by the GPU's operating frequency rather than
+/// workload size" (paper).
+const P_BATCH_W: f64 = 0.15;
+
+/// DVFS voltage floor: below this normalized frequency the voltage
+/// rail is pinned (A100 V/F curves flatten near ~1100 MHz).
+const V_FLOOR_FN: f64 = 0.78;
+const V_FLOOR: f64 = 0.78;
+const V_SLOPE: f64 = 1.1;
+
+/// Normalized dynamic-power factor fn * V(fn)^2, scaled so pdyn(1) = 1.
+#[inline]
+fn pdyn_norm(fnorm: f64) -> f64 {
+    let v = if fnorm > V_FLOOR_FN {
+        V_FLOOR + V_SLOPE * (fnorm - V_FLOOR_FN)
+    } else {
+        V_FLOOR
+    };
+    let v_max = V_FLOOR + V_SLOPE * (1.0 - V_FLOOR_FN);
+    (fnorm * v * v) / (1.0 * v_max * v_max)
+}
+
+/// Whole-engine power draw, Watts (sums every GPU the engine occupies).
+pub fn power_w(spec: &EngineSpec, batch: u32, kv_blocks: u32, freq_mhz: u32) -> f64 {
+    let fnorm =
+        (freq_mhz as f64 / super::dvfs::FREQ_MAX_MHZ as f64).clamp(0.05, 1.0);
+    let kv_frac = (kv_blocks as f64 / spec.kv_blocks as f64).min(1.0);
+    let per_gpu = P_STATIC_W
+        + P_DYN_W * pdyn_norm(fnorm)
+        + P_KV_W * kv_frac * fnorm.powf(1.5)
+        + P_BATCH_W * batch as f64 / spec.n_gpus as f64;
+    per_gpu * spec.n_gpus as f64
+}
+
+/// Idle power of a (shadow/warm) engine holding no batch, Watts.
+pub fn idle_power_w(spec: &EngineSpec, freq_mhz: u32) -> f64 {
+    power_w(spec, 0, 0, freq_mhz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::llama2_13b;
+    use crate::gpusim::dvfs::{FREQ_MAX_MHZ, FREQ_MIN_MHZ};
+    use crate::gpusim::latency::{decode_latency_s, GpuState};
+
+    #[test]
+    fn power_more_than_doubles_over_freq_range() {
+        let e = llama2_13b(2);
+        let lo = power_w(&e, 16, 220, FREQ_MIN_MHZ);
+        let hi = power_w(&e, 16, 220, FREQ_MAX_MHZ);
+        let ratio = hi / lo;
+        assert!(ratio > 2.0, "ratio={ratio}");
+        assert!(ratio < 3.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn power_roughly_flat_in_batch() {
+        let e = llama2_13b(2);
+        let p1 = power_w(&e, 1, 220, FREQ_MAX_MHZ);
+        let p32 = power_w(&e, 32, 220, FREQ_MAX_MHZ);
+        assert!((p32 - p1) / p1 < 0.03, "p1={p1} p32={p32}");
+    }
+
+    #[test]
+    fn power_increases_with_kv_steeper_at_high_freq() {
+        let e = llama2_13b(2);
+        let slope_hi = power_w(&e, 32, e.kv_blocks, FREQ_MAX_MHZ)
+            - power_w(&e, 32, 0, FREQ_MAX_MHZ);
+        let slope_lo =
+            power_w(&e, 32, e.kv_blocks, 420) - power_w(&e, 32, 0, 420);
+        assert!(slope_hi > 0.0 && slope_lo > 0.0);
+        assert!(slope_hi > 2.0 * slope_lo, "hi={slope_hi} lo={slope_lo}");
+    }
+
+    #[test]
+    fn power_scales_with_gpu_count() {
+        let p2 = power_w(&llama2_13b(2), 8, 100, FREQ_MAX_MHZ);
+        let p4 = power_w(&llama2_13b(4), 8, 100, FREQ_MAX_MHZ);
+        assert!((p4 / p2 - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn efficiency_sweet_spot_near_1050() {
+        // Paper Fig. 2e: tokens/J peaks ~1050 MHz, +37.4% vs 1410 at
+        // batch 32; low frequencies are inefficient again.
+        let e = llama2_13b(2);
+        let tpj = |f: u32| {
+            let st = GpuState {
+                batch: 32,
+                kv_blocks: 220,
+                freq_mhz: f,
+            };
+            let tbt = decode_latency_s(&e, &st);
+            let tps = 32.0 / tbt;
+            tps / power_w(&e, 32, 220, f)
+        };
+        // argmax over the frequency grid
+        let mut best_f = 0;
+        let mut best = 0.0;
+        let mut f = FREQ_MIN_MHZ;
+        while f <= FREQ_MAX_MHZ {
+            let v = tpj(f);
+            if v > best {
+                best = v;
+                best_f = f;
+            }
+            f += 15;
+        }
+        assert!(
+            (930..=1170).contains(&best_f),
+            "sweet spot at {best_f} MHz"
+        );
+        let boost = tpj(1050) / tpj(FREQ_MAX_MHZ) - 1.0;
+        assert!((0.25..0.50).contains(&boost), "boost={boost}");
+        // 210 MHz is NOT efficient (within ~15% of max-freq TPJ).
+        let low = tpj(FREQ_MIN_MHZ) / tpj(FREQ_MAX_MHZ);
+        assert!(low < 1.15, "low-freq TPJ ratio={low}");
+    }
+
+    #[test]
+    fn idle_power_positive_but_below_loaded() {
+        let e = llama2_13b(2);
+        assert!(idle_power_w(&e, 210) > 0.0);
+        assert!(idle_power_w(&e, 1410) < power_w(&e, 32, 400, 1410));
+    }
+}

@@ -1,0 +1,38 @@
+//! # throttLL'eM — SLO-aware GPU frequency scaling for energy-efficient
+//! LLM inference serving (paper reproduction).
+//!
+//! Layer-3 (Rust) of the three-layer Rust + JAX + Pallas stack.  The
+//! crate implements the paper's coordination contribution — KV/batch
+//! projection, an iteration-level GBDT performance model, SLO admission
+//! control, a binary-search GPU frequency throttling controller, and a
+//! tensor-parallelism autoscaler — together with every substrate it
+//! depends on: a discrete-event A100/DVFS simulator, a paged-KV inflight
+//! batching engine, an Azure-like workload synthesizer, a Triton-like
+//! baseline, gradient-boosted decision trees, and a PJRT runtime that
+//! executes the AOT-compiled tiny-llama-sim artifacts (Python never runs
+//! on the request path).
+//!
+//! Start at [`coordinator::server::ThrottllemServer`] for the full
+//! system, or `examples/quickstart.rs` for a 5-minute tour.
+
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod gpusim;
+pub mod jsonl;
+pub mod metrics;
+pub mod mlmodel;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+pub mod workload;
+
+pub mod baseline {
+    //! Triton-like baseline servers (max frequency, KV-only admission).
+    pub use crate::coordinator::server::{serve_trace, Policy, ServeOutcome};
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

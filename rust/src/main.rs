@@ -1,0 +1,231 @@
+//! `throttllem` CLI: the deployment launcher and experiment driver.
+//!
+//! Subcommands:
+//!   serve        — replay a synthetic Azure-like trace under a policy
+//!                  and print the serving report
+//!   profile      — run the §IV-C1 profiling campaign for an engine
+//!   train-model  — train + evaluate the performance model (Table III)
+//!   engines      — list the Table II engine descriptors
+//!   real-serve   — serve real batched requests through the PJRT
+//!                  tiny-llama-sim artifacts
+//!
+//! Examples:
+//!   throttllem serve --engine llama2-13b-tp2 --policy throttllem \
+//!       --duration 600 --error 0.15
+//!   throttllem serve --policy throttllem --autoscale
+//!   throttllem train-model --engine llama2-13b-tp2
+//!   throttllem real-serve --artifacts artifacts --batch 4 --steps 32
+
+use throttllem::cli::Args;
+use throttllem::config::models::{
+    llama2_13b, llama3_70b, llama3_8b, table2_engines, tiny_llama_sim,
+};
+use throttllem::config::{EngineSpec, ServingConfig};
+use throttllem::coordinator::{serve_trace, PerfModel, Policy};
+use throttllem::mlmodel::{mae, mape, r2_score};
+use throttllem::sim::Pcg64;
+use throttllem::workload::trace::{synth_trace, synth_trace_rps_range, TraceParams};
+use throttllem::workload::{collect_training_data, LengthPredictor};
+
+fn engine_by_name(name: &str) -> anyhow::Result<EngineSpec> {
+    Ok(match name {
+        "llama3-8b-tp1" => llama3_8b(1),
+        "llama2-13b-tp1" => llama2_13b(1),
+        "llama2-13b-tp2" => llama2_13b(2),
+        "llama2-13b-tp4" => llama2_13b(4),
+        "llama3-70b-tp8" => llama3_70b(8),
+        "tiny-llama-sim" => tiny_llama_sim(),
+        other => anyhow::bail!("unknown engine {other:?}; see `throttllem engines`"),
+    })
+}
+
+fn policy_by_name(name: &str) -> anyhow::Result<Policy> {
+    Ok(match name {
+        "triton" => Policy::triton(),
+        "triton-autoscale" => Policy::triton_autoscale(),
+        "throttle-only" | "throttllem-noas" => Policy::throttle_only(),
+        "throttllem" => Policy::throttllem(),
+        other => anyhow::bail!("unknown policy {other:?}"),
+    })
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("train-model") => cmd_train(&args),
+        Some("engines") => cmd_engines(),
+        Some("real-serve") => cmd_real_serve(&args),
+        Some(other) => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "throttllem — SLO-aware GPU frequency scaling for LLM serving
+usage: throttllem <serve|profile|train-model|engines|real-serve> [--options]
+  serve:       --engine <name> --policy <triton|triton-autoscale|throttle-only|throttllem>
+               --duration <s> --error <p95 frac> --seed <n> [--autoscale]
+  profile:     --engine <name> --samples <n>
+  train-model: --engine <name> [--samples <n>]
+  real-serve:  --artifacts <dir> --batch <n> --steps <n>";
+
+fn cmd_engines() -> anyhow::Result<()> {
+    println!(
+        "{:<16} {:>3} {:>9} {:>9} {:>10} {:>9}",
+        "engine", "TP", "maxRPS", "E2E SLO", "KV blocks", "maxBatch"
+    );
+    for e in table2_engines() {
+        println!(
+            "{:<16} {:>3} {:>9.3} {:>9.1} {:>10} {:>9}",
+            e.name, e.tensor_parallel, e.max_load_rps, e.e2e_slo_p99, e.kv_blocks, e.max_batch
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let policy = policy_by_name(args.get_or("policy", "throttllem"))?;
+    let duration = args.get_f64("duration", 600.0)?;
+    let error = args.get_f64("error", 0.0)?;
+    let seed = args.get_u64("seed", 0)?;
+
+    let autoscale = policy.autoscaling || args.flag("autoscale");
+    let (mut cfg, engines) = if autoscale {
+        let set = vec![llama2_13b(1), llama2_13b(2), llama2_13b(4)];
+        (ServingConfig::autoscaled(set.clone()), set)
+    } else {
+        let engine = engine_by_name(args.get_or("engine", "llama2-13b-tp2"))?;
+        let c = if policy.throttling {
+            ServingConfig::throttllem(engine.clone())
+        } else {
+            ServingConfig::triton(engine.clone())
+        };
+        (c, vec![engine])
+    };
+    cfg.predictor_p95_error = error;
+
+    eprintln!("training performance model on {} engine(s)...", engines.len());
+    let model = PerfModel::train(&engines, 120, seed);
+
+    let peak = if autoscale { 7.5 } else { cfg.engine.max_load_rps };
+    let params = TraceParams::short(duration, peak, seed);
+    let mut reqs = if autoscale {
+        synth_trace_rps_range(&params, 0.75, 7.5)
+    } else {
+        synth_trace(&params)
+    };
+    let predictor = if error > 0.0 {
+        LengthPredictor::noisy(error, seed)
+    } else {
+        LengthPredictor::oracle()
+    };
+    predictor.apply(&mut reqs, cfg.max_tokens);
+    eprintln!(
+        "replaying {} requests over {:.0} s under policy {}...",
+        reqs.len(),
+        duration,
+        policy.name()
+    );
+
+    let out = serve_trace(&cfg, policy, &model, &reqs);
+    let s = &out.stats;
+    println!("policy             : {}", policy.name());
+    println!("completed/dropped  : {}/{}", s.completed, s.dropped);
+    println!("lost (SLO waived)  : {}", s.lost);
+    println!(
+        "E2E p50/p99 [s]    : {:.2} / {:.2}  (SLO {:.1})",
+        s.e2e.p50(),
+        s.e2e.p99(),
+        cfg.slo.e2e_p99
+    );
+    println!(
+        "TBT avg [ms]       : {:.1}  (SLO {:.0})",
+        s.tbt.mean() * 1e3,
+        cfg.slo.tbt_avg * 1e3
+    );
+    println!("TTFT p50 [ms]      : {:.0}", s.ttft.p50() * 1e3);
+    println!("queue p99 [s]      : {:.2}", s.queue.p99());
+    println!("mean freq [MHz]    : {:.0}", s.freq.mean());
+    println!("mean power [W]     : {:.0}", s.power.mean());
+    println!("energy [kJ]        : {:.1}", s.total_energy_j / 1e3);
+    println!("tokens/J           : {:.3}", s.tokens_per_joule());
+    println!("engine switches    : {}", out.engine_switches);
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let engine = engine_by_name(args.get_or("engine", "llama2-13b-tp2"))?;
+    let samples = args.get_u64("samples", 200)? as u32;
+    let data = collect_training_data(&engine, samples, args.get_u64("seed", 0)?);
+    println!("# engine batch kv_blocks freq_mhz ips");
+    for (f, t) in data.features.iter().zip(&data.targets) {
+        println!("{} {} {} {} {:.3}", f[0], f[1], f[2], f[3], t);
+    }
+    eprintln!("{} samples for {}", data.len(), engine.name);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let engine = engine_by_name(args.get_or("engine", "llama2-13b-tp2"))?;
+    let samples = args.get_u64("samples", 300)? as u32;
+    let seed = args.get_u64("seed", 0)?;
+    let data = collect_training_data(&engine, samples, seed);
+    for (label, frac) in [("train=90%", 0.9), ("train=10%", 0.1)] {
+        let mut rng = Pcg64::new(seed + 1);
+        let (train, test) = data.split(frac, &mut rng);
+        let model = PerfModel::train_on(&train);
+        let pred: Vec<f64> = test.features.iter().map(|f| model.predict_raw(f)).collect();
+        println!(
+            "{} {}: R2={:.3} MAPE={:.1}% MAE={:.2} iters/s",
+            engine.name,
+            label,
+            r2_score(&test.targets, &pred),
+            mape(&test.targets, &pred),
+            mae(&test.targets, &pred),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_real_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let batch = args.get_u64("batch", 4)? as usize;
+    let steps = args.get_u64("steps", 32)? as usize;
+    let rt = throttllem::runtime::ModelRuntime::load(&dir)?;
+    println!("platform: {}", rt.platform());
+    let mut rng = Pcg64::new(args.get_u64("seed", 0)?);
+    let vocab = rt.config().vocab;
+    let prompts: Vec<Vec<i32>> = (0..batch)
+        .map(|_| {
+            (0..rng.uniform_usize(3, rt.config().prompt_len as usize))
+                .map(|_| rng.uniform_u64(1, vocab as u64 - 1) as i32)
+                .collect()
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let rows = rt.greedy_generate(&prompts, steps)?;
+    let dt = t0.elapsed().as_secs_f64();
+    for (i, row) in rows.iter().enumerate() {
+        println!("row {i}: {row:?}");
+    }
+    let tokens = batch * steps;
+    println!(
+        "{} tokens in {:.3} s -> {:.1} tok/s ({:.2} ms/decode-iter)",
+        tokens,
+        dt,
+        tokens as f64 / dt,
+        dt * 1e3 / steps as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,244 @@
+//! Metrics substrate: streaming recorders for latency/power series,
+//! percentiles, energy accounting, and the serving-level summary used
+//! by every experiment (E2E, TBT, TTFT, queue time, TPJ).
+
+use crate::engine::request::RequestOutcome;
+
+/// A recorded sample series with percentile/summary queries.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    values: Vec<f64>,
+}
+
+impl Series {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        debug_assert!(x.is_finite(), "non-finite sample {x}");
+        self.values.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        if self.values.len() < 2 {
+            return 0.0;
+        }
+        (self
+            .values
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / self.values.len() as f64)
+            .sqrt()
+    }
+
+    /// Percentile in [0, 100] by linear interpolation (NaN if empty).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_of_sorted(&sorted, p)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Percentile of an already-sorted slice.
+pub fn percentile_of_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Full serving-run summary (one per policy/engine/trace combination).
+#[derive(Debug, Clone, Default)]
+pub struct ServingStats {
+    pub e2e: Series,
+    pub tbt: Series,
+    pub ttft: Series,
+    pub queue: Series,
+    /// Per-iteration power samples, W.
+    pub power: Series,
+    /// Per-iteration applied frequency, MHz.
+    pub freq: Series,
+    /// Per-iteration duration samples (token-level TBT distribution).
+    pub iter_tbt: Series,
+    pub total_energy_j: f64,
+    pub total_tokens: u64,
+    pub completed: u64,
+    pub lost: u64,
+    /// Requests that could never fit the engine (oversized even when
+    /// idle) and were rejected.
+    pub dropped: u64,
+    pub wall_s: f64,
+}
+
+impl ServingStats {
+    pub fn record_outcome(&mut self, o: &RequestOutcome) {
+        self.e2e.push(o.e2e_s);
+        if o.gen_tokens > 1 {
+            self.tbt.push(o.tbt_avg_s);
+        }
+        self.ttft.push(o.ttft_s);
+        self.queue.push(o.queue_s());
+        self.total_tokens += o.gen_tokens as u64;
+        self.completed += 1;
+        if o.lost {
+            self.lost += 1;
+        }
+    }
+
+    /// Tokens per Joule — the paper's energy-efficiency metric.
+    pub fn tokens_per_joule(&self) -> f64 {
+        if self.total_energy_j <= 0.0 {
+            return f64::NAN;
+        }
+        self.total_tokens as f64 / self.total_energy_j
+    }
+
+    /// Aggregate throughput, tokens/s.
+    pub fn tokens_per_second(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return f64::NAN;
+        }
+        self.total_tokens as f64 / self.wall_s
+    }
+
+    /// Fraction of completions whose E2E beats `slo` (p99 target check).
+    pub fn e2e_slo_attainment(&self, slo: f64) -> f64 {
+        if self.e2e.is_empty() {
+            return f64::NAN;
+        }
+        let ok = self.e2e.values().iter().filter(|&&x| x <= slo).count();
+        ok as f64 / self.e2e.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(e2e: f64, gen: u32) -> RequestOutcome {
+        RequestOutcome {
+            id: 0,
+            prompt_tokens: 10,
+            gen_tokens: gen,
+            arrival_s: 0.0,
+            scheduled_s: 0.1,
+            ttft_s: 0.3,
+            e2e_s: e2e,
+            tbt_avg_s: 0.02,
+            lost: false,
+        }
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut s = Series::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.p99() - 99.01).abs() < 0.02);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn single_sample_percentiles() {
+        let mut s = Series::new();
+        s.push(7.0);
+        assert_eq!(s.p50(), 7.0);
+        assert_eq!(s.p99(), 7.0);
+    }
+
+    #[test]
+    fn empty_series_is_nan() {
+        let s = Series::new();
+        assert!(s.mean().is_nan());
+        assert!(s.p99().is_nan());
+    }
+
+    #[test]
+    fn mean_std() {
+        let mut s = Series::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_aggregate_outcomes() {
+        let mut st = ServingStats::default();
+        st.record_outcome(&outcome(1.0, 10));
+        st.record_outcome(&outcome(3.0, 20));
+        st.total_energy_j = 60.0;
+        st.wall_s = 10.0;
+        assert_eq!(st.completed, 2);
+        assert_eq!(st.total_tokens, 30);
+        assert!((st.tokens_per_joule() - 0.5).abs() < 1e-12);
+        assert!((st.tokens_per_second() - 3.0).abs() < 1e-12);
+        assert!((st.e2e_slo_attainment(2.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_token_requests_skip_tbt() {
+        let mut st = ServingStats::default();
+        st.record_outcome(&outcome(1.0, 1));
+        assert!(st.tbt.is_empty());
+        assert_eq!(st.completed, 1);
+    }
+}

@@ -1,0 +1,103 @@
+//! Tabular dataset container with train/test splitting.
+
+use crate::sim::Pcg64;
+
+/// A dense (rows x features) dataset with a scalar target per row.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub features: Vec<Vec<f64>>,
+    pub targets: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, row: Vec<f64>, target: f64) {
+        if let Some(first) = self.features.first() {
+            assert_eq!(first.len(), row.len(), "inconsistent feature count");
+        }
+        self.features.push(row);
+        self.targets.push(target);
+    }
+
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.features.first().map(|r| r.len()).unwrap_or(0)
+    }
+
+    /// Random split: first element holds `train_frac` of rows.
+    /// Mirrors the paper's 90/10 and 10/90 protocols (Table III).
+    pub fn split(&self, train_frac: f64, rng: &mut Pcg64) -> (Dataset, Dataset) {
+        assert!((0.0..=1.0).contains(&train_frac));
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        let n_train = ((self.len() as f64) * train_frac).round() as usize;
+        let mut train = Dataset::new();
+        let mut test = Dataset::new();
+        for (pos, &i) in idx.iter().enumerate() {
+            let dst = if pos < n_train { &mut train } else { &mut test };
+            dst.push(self.features[i].clone(), self.targets[i]);
+        }
+        (train, test)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> Dataset {
+        let mut d = Dataset::new();
+        for i in 0..n {
+            d.push(vec![i as f64, (i * 2) as f64], i as f64);
+        }
+        d
+    }
+
+    #[test]
+    fn push_and_shape() {
+        let d = toy(10);
+        assert_eq!(d.len(), 10);
+        assert_eq!(d.n_features(), 2);
+    }
+
+    #[test]
+    fn split_fractions() {
+        let d = toy(100);
+        let mut rng = Pcg64::new(0);
+        let (tr, te) = d.split(0.9, &mut rng);
+        assert_eq!(tr.len(), 90);
+        assert_eq!(te.len(), 10);
+        let (tr2, te2) = d.split(0.1, &mut rng);
+        assert_eq!(tr2.len(), 10);
+        assert_eq!(te2.len(), 90);
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = toy(50);
+        let mut rng = Pcg64::new(1);
+        let (tr, te) = d.split(0.5, &mut rng);
+        let mut all: Vec<f64> =
+            tr.targets.iter().chain(te.targets.iter()).copied().collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(all, (0..50).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "inconsistent feature count")]
+    fn rejects_ragged_rows() {
+        let mut d = Dataset::new();
+        d.push(vec![1.0], 0.0);
+        d.push(vec![1.0, 2.0], 0.0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Regression metrics: R², MAE, MAPE (Table III protocol).
+
+/// Coefficient of determination.
+pub fn r2_score(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    assert!(!truth.is_empty());
+    let mean = truth.iter().sum::<f64>() / truth.len() as f64;
+    let ss_res: f64 = truth
+        .iter()
+        .zip(pred)
+        .map(|(t, p)| (t - p) * (t - p))
+        .sum();
+    let ss_tot: f64 = truth.iter().map(|t| (t - mean) * (t - mean)).sum();
+    if ss_tot == 0.0 {
+        return if ss_res == 0.0 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Mean absolute error.
+pub fn mae(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    assert!(!truth.is_empty());
+    truth
+        .iter()
+        .zip(pred)
+        .map(|(t, p)| (t - p).abs())
+        .sum::<f64>()
+        / truth.len() as f64
+}
+
+/// Mean absolute percentage error, in percent.
+pub fn mape(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    assert!(!truth.is_empty());
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (t, p) in truth.iter().zip(pred) {
+        if t.abs() > 1e-12 {
+            total += ((t - p) / t).abs();
+            n += 1;
+        }
+    }
+    assert!(n > 0, "mape: all targets zero");
+    100.0 * total / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction() {
+        let t = [1.0, 2.0, 3.0];
+        assert_eq!(r2_score(&t, &t), 1.0);
+        assert_eq!(mae(&t, &t), 0.0);
+        assert_eq!(mape(&t, &t), 0.0);
+    }
+
+    #[test]
+    fn mean_prediction_gives_zero_r2() {
+        let t = [1.0, 2.0, 3.0];
+        let p = [2.0, 2.0, 2.0];
+        assert!(r2_score(&t, &p).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_values() {
+        let t = [10.0, 20.0];
+        let p = [11.0, 18.0];
+        assert!((mae(&t, &p) - 1.5).abs() < 1e-12);
+        assert!((mape(&t, &p) - 10.0).abs() < 1e-9); // (10% + 10%) / 2
+    }
+
+    #[test]
+    fn mape_skips_zero_targets() {
+        let t = [0.0, 10.0];
+        let p = [1.0, 9.0];
+        assert!((mape(&t, &p) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_truth_r2() {
+        let t = [5.0, 5.0];
+        assert_eq!(r2_score(&t, &[5.0, 5.0]), 1.0);
+        assert_eq!(r2_score(&t, &[4.0, 6.0]), 0.0);
+    }
+}

@@ -1,0 +1,206 @@
+//! Gradient boosting over regression trees (squared loss).
+
+use crate::mlmodel::dataset::Dataset;
+use crate::mlmodel::tree::{RegressionTree, TreeParams};
+use crate::sim::Pcg64;
+
+/// Boosting hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GbdtParams {
+    pub n_trees: u32,
+    pub learning_rate: f64,
+    pub tree: TreeParams,
+    /// Row subsample fraction per tree (1.0 = deterministic boosting).
+    pub subsample: f64,
+    pub seed: u64,
+}
+
+impl Default for GbdtParams {
+    fn default() -> Self {
+        Self {
+            n_trees: 200,
+            learning_rate: 0.1,
+            tree: TreeParams::default(),
+            subsample: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// A fitted gradient-boosted ensemble.
+#[derive(Debug, Clone)]
+pub struct Gbdt {
+    base: f64,
+    learning_rate: f64,
+    trees: Vec<RegressionTree>,
+}
+
+impl Gbdt {
+    /// Fit with squared loss: each tree regresses the current residual.
+    pub fn fit(data: &Dataset, params: &GbdtParams) -> Self {
+        assert!(!data.is_empty(), "empty training set");
+        assert!(params.learning_rate > 0.0 && params.subsample > 0.0);
+        let n = data.len();
+        let base = data.targets.iter().sum::<f64>() / n as f64;
+        let mut pred = vec![base; n];
+        let mut trees = Vec::with_capacity(params.n_trees as usize);
+        let mut rng = Pcg64::new(params.seed);
+        let mut residual = vec![0.0; n];
+        let mut all_idx: Vec<usize> = (0..n).collect();
+
+        for _ in 0..params.n_trees {
+            for i in 0..n {
+                residual[i] = data.targets[i] - pred[i];
+            }
+            let idx: Vec<usize> = if params.subsample >= 1.0 {
+                all_idx.clone()
+            } else {
+                rng.shuffle(&mut all_idx);
+                let take = ((n as f64) * params.subsample).ceil() as usize;
+                all_idx[..take.max(2 * params.tree.min_samples_leaf).min(n)].to_vec()
+            };
+            let tree = RegressionTree::fit(&data.features, &residual, &idx, &params.tree);
+            for i in 0..n {
+                pred[i] += params.learning_rate * tree.predict(&data.features[i]);
+            }
+            trees.push(tree);
+        }
+        Gbdt {
+            base,
+            learning_rate: params.learning_rate,
+            trees,
+        }
+    }
+
+    /// Predict a single row.
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        let mut y = self.base;
+        for t in &self.trees {
+            y += self.learning_rate * t.predict(row);
+        }
+        y
+    }
+
+    /// Predict many rows.
+    pub fn predict_batch(&self, rows: &[Vec<f64>]) -> Vec<f64> {
+        rows.iter().map(|r| self.predict(r)).collect()
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlmodel::eval::{mae, r2_score};
+
+    fn synthetic(n: usize, seed: u64) -> Dataset {
+        // A bounded 4-feature surface shaped like the serving problem:
+        // ips = g(engine, batch, kv, freq) with feature interactions.
+        let mut rng = Pcg64::new(seed);
+        let mut d = Dataset::new();
+        for _ in 0..n {
+            let engine = rng.uniform_u64(1, 4) as f64;
+            let batch = rng.uniform_u64(1, 32) as f64;
+            let kv = rng.next_f64();
+            let freq = rng.uniform_f64(210.0, 1410.0);
+            let fn_ = freq / 1410.0;
+            let ips = 1000.0
+                / (2.0 / engine / fn_ + (10.0 + 0.2 * batch + 3.0 * kv) / engine
+                    / (0.3 + 0.7 * fn_));
+            d.push(vec![engine, batch, kv, freq], ips);
+        }
+        d
+    }
+
+    #[test]
+    fn fits_serving_like_surface_with_high_r2() {
+        let data = synthetic(4000, 0);
+        let mut rng = Pcg64::new(1);
+        let (train, test) = data.split(0.9, &mut rng);
+        let model = Gbdt::fit(&train, &GbdtParams::default());
+        let pred = model.predict_batch(&test.features);
+        let r2 = r2_score(&test.targets, &pred);
+        assert!(r2 > 0.97, "r2={r2}");
+    }
+
+    #[test]
+    fn sparse_training_still_generalizes() {
+        // The paper's 10/90 split protocol.
+        let data = synthetic(4000, 2);
+        let mut rng = Pcg64::new(3);
+        let (train, test) = data.split(0.1, &mut rng);
+        let model = Gbdt::fit(&train, &GbdtParams::default());
+        let pred = model.predict_batch(&test.features);
+        let r2 = r2_score(&test.targets, &pred);
+        assert!(r2 > 0.93, "r2={r2}");
+    }
+
+    #[test]
+    fn more_trees_reduce_training_error() {
+        let data = synthetic(1000, 4);
+        let small = Gbdt::fit(
+            &data,
+            &GbdtParams {
+                n_trees: 5,
+                ..Default::default()
+            },
+        );
+        let big = Gbdt::fit(
+            &data,
+            &GbdtParams {
+                n_trees: 100,
+                ..Default::default()
+            },
+        );
+        let mae_small = mae(&data.targets, &small.predict_batch(&data.features));
+        let mae_big = mae(&data.targets, &big.predict_batch(&data.features));
+        assert!(mae_big < mae_small * 0.5, "{mae_big} vs {mae_small}");
+    }
+
+    #[test]
+    fn subsampling_works() {
+        let data = synthetic(2000, 5);
+        let model = Gbdt::fit(
+            &data,
+            &GbdtParams {
+                subsample: 0.5,
+                ..Default::default()
+            },
+        );
+        let r2 = r2_score(&data.targets, &model.predict_batch(&data.features));
+        assert!(r2 > 0.95, "r2={r2}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let data = synthetic(500, 6);
+        let p = GbdtParams {
+            subsample: 0.7,
+            seed: 9,
+            n_trees: 20,
+            ..Default::default()
+        };
+        let a = Gbdt::fit(&data, &p);
+        let b = Gbdt::fit(&data, &p);
+        for row in data.features.iter().take(50) {
+            assert_eq!(a.predict(row), b.predict(row));
+        }
+    }
+
+    #[test]
+    fn base_prediction_is_mean_with_zero_trees() {
+        let data = synthetic(100, 7);
+        let model = Gbdt::fit(
+            &data,
+            &GbdtParams {
+                n_trees: 0,
+                ..Default::default()
+            },
+        );
+        let mean = data.targets.iter().sum::<f64>() / data.len() as f64;
+        assert_eq!(model.predict(&data.features[0]), mean);
+    }
+}

@@ -1,0 +1,20 @@
+//! Gradient-boosted decision trees, from scratch (XGBoost substitute).
+//!
+//! The paper's performance-prediction model `M` is a Gradient Boosted
+//! Decision Tree (§IV-C1, refs [10], [20]) over four bounded features —
+//! engine size, batch size, KV cache usage, GPU frequency — predicting
+//! iterations/second.  This module implements the model class:
+//! regression trees greedily split on exact sorted thresholds
+//! (variance gain), boosted under squared loss with shrinkage and
+//! optional row subsampling.  Inference is a few hundred shallow-tree
+//! traversals — microseconds, far inside the paper's ~3 ms budget.
+
+pub mod dataset;
+pub mod eval;
+pub mod gbdt;
+pub mod tree;
+
+pub use dataset::Dataset;
+pub use eval::{mae, mape, r2_score};
+pub use gbdt::{Gbdt, GbdtParams};
+pub use tree::{RegressionTree, TreeParams};

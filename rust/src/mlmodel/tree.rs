@@ -1,0 +1,292 @@
+//! Regression tree with exact greedy splits (variance gain).
+
+/// Tree growth parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    pub max_depth: u32,
+    pub min_samples_leaf: usize,
+    /// Minimum variance gain to accept a split.
+    pub min_gain: f64,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        Self {
+            max_depth: 5,
+            min_samples_leaf: 5,
+            min_gain: 1e-12,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf {
+        value: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+}
+
+/// A fitted regression tree (flat node arena, root at 0).
+#[derive(Debug, Clone)]
+pub struct RegressionTree {
+    nodes: Vec<Node>,
+}
+
+impl RegressionTree {
+    /// Fit on rows `idx` of (x, y).
+    pub fn fit(x: &[Vec<f64>], y: &[f64], idx: &[usize], params: &TreeParams) -> Self {
+        assert_eq!(x.len(), y.len());
+        assert!(!idx.is_empty(), "empty training set");
+        let mut tree = RegressionTree { nodes: Vec::new() };
+        let mut scratch = idx.to_vec();
+        tree.grow(x, y, &mut scratch, 0, params);
+        tree
+    }
+
+    /// Recursively grow; returns the index of the created node.
+    fn grow(
+        &mut self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        idx: &mut [usize],
+        depth: u32,
+        params: &TreeParams,
+    ) -> usize {
+        let mean = idx.iter().map(|&i| y[i]).sum::<f64>() / idx.len() as f64;
+        if depth >= params.max_depth || idx.len() < 2 * params.min_samples_leaf {
+            return self.leaf(mean);
+        }
+        match best_split(x, y, idx, params) {
+            None => self.leaf(mean),
+            Some(split) => {
+                // Partition idx in-place around the chosen threshold.
+                let mid = partition(x, idx, split.feature, split.threshold);
+                debug_assert!(mid > 0 && mid < idx.len());
+                let node_id = self.nodes.len();
+                self.nodes.push(Node::Leaf { value: mean }); // placeholder
+                let (l_idx, r_idx) = idx.split_at_mut(mid);
+                let left = self.grow(x, y, l_idx, depth + 1, params);
+                let right = self.grow(x, y, r_idx, depth + 1, params);
+                self.nodes[node_id] = Node::Split {
+                    feature: split.feature,
+                    threshold: split.threshold,
+                    left,
+                    right,
+                };
+                node_id
+            }
+        }
+    }
+
+    fn leaf(&mut self, value: f64) -> usize {
+        self.nodes.push(Node::Leaf { value });
+        self.nodes.len() - 1
+    }
+
+    /// Predict one row.
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        let mut node = 0usize;
+        loop {
+            match &self.nodes[node] {
+                Node::Leaf { value } => return *value,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    node = if row[*feature] <= *threshold {
+                        *left
+                    } else {
+                        *right
+                    };
+                }
+            }
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn depth(&self) -> u32 {
+        fn d(nodes: &[Node], i: usize) -> u32 {
+            match &nodes[i] {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => {
+                    1 + d(nodes, *left).max(d(nodes, *right))
+                }
+            }
+        }
+        d(&self.nodes, 0)
+    }
+}
+
+struct Split {
+    feature: usize,
+    threshold: f64,
+}
+
+/// Exact best split by variance gain over all features.
+fn best_split(
+    x: &[Vec<f64>],
+    y: &[f64],
+    idx: &[usize],
+    params: &TreeParams,
+) -> Option<Split> {
+    let n = idx.len() as f64;
+    let total_sum: f64 = idx.iter().map(|&i| y[i]).sum();
+    let total_sq: f64 = idx.iter().map(|&i| y[i] * y[i]).sum();
+    let parent_sse = total_sq - total_sum * total_sum / n;
+
+    let n_features = x[idx[0]].len();
+    let mut best: Option<(f64, Split)> = None;
+    let mut order: Vec<usize> = idx.to_vec();
+    for f in 0..n_features {
+        order.sort_by(|&a, &b| x[a][f].partial_cmp(&x[b][f]).unwrap());
+        let mut left_sum = 0.0;
+        let mut left_sq = 0.0;
+        for (k, &i) in order.iter().enumerate().take(order.len() - 1) {
+            left_sum += y[i];
+            left_sq += y[i] * y[i];
+            let nl = (k + 1) as f64;
+            let nr = n - nl;
+            // Can't split between equal feature values.
+            if x[i][f] == x[order[k + 1]][f] {
+                continue;
+            }
+            if (k + 1) < params.min_samples_leaf
+                || (order.len() - k - 1) < params.min_samples_leaf
+            {
+                continue;
+            }
+            let right_sum = total_sum - left_sum;
+            let right_sq = total_sq - left_sq;
+            let sse = (left_sq - left_sum * left_sum / nl)
+                + (right_sq - right_sum * right_sum / nr);
+            let gain = parent_sse - sse;
+            if gain > params.min_gain
+                && best.as_ref().map(|(g, _)| gain > *g).unwrap_or(true)
+            {
+                best = Some((
+                    gain,
+                    Split {
+                        feature: f,
+                        threshold: 0.5 * (x[i][f] + x[order[k + 1]][f]),
+                    },
+                ));
+            }
+        }
+    }
+    best.map(|(_, s)| s)
+}
+
+/// Partition `idx` so rows with x[f] <= t come first; returns the
+/// boundary position.
+fn partition(x: &[Vec<f64>], idx: &mut [usize], feature: usize, t: f64) -> usize {
+    let mut mid = 0;
+    for k in 0..idx.len() {
+        if x[idx[k]][feature] <= t {
+            idx.swap(mid, k);
+            mid += 1;
+        }
+    }
+    mid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Pcg64;
+
+    fn fit_all(x: &[Vec<f64>], y: &[f64], p: &TreeParams) -> RegressionTree {
+        let idx: Vec<usize> = (0..y.len()).collect();
+        RegressionTree::fit(x, y, &idx, p)
+    }
+
+    #[test]
+    fn constant_target_gives_single_leaf() {
+        let x: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let y = vec![3.5; 20];
+        let t = fit_all(&x, &y, &TreeParams::default());
+        assert_eq!(t.n_nodes(), 1);
+        assert_eq!(t.predict(&[100.0]), 3.5);
+    }
+
+    #[test]
+    fn learns_step_function() {
+        let x: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..100).map(|i| if i < 50 { 1.0 } else { 9.0 }).collect();
+        let t = fit_all(&x, &y, &TreeParams::default());
+        assert!((t.predict(&[10.0]) - 1.0).abs() < 1e-9);
+        assert!((t.predict(&[90.0]) - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let mut rng = Pcg64::new(4);
+        let x: Vec<Vec<f64>> = (0..500).map(|_| vec![rng.next_f64()]).collect();
+        let y: Vec<f64> = x.iter().map(|r| (10.0 * r[0]).sin()).collect();
+        let p = TreeParams {
+            max_depth: 3,
+            ..Default::default()
+        };
+        let t = fit_all(&x, &y, &p);
+        assert!(t.depth() <= 3);
+    }
+
+    #[test]
+    fn splits_on_informative_feature() {
+        // Feature 1 is noise; feature 0 drives the target.
+        let mut rng = Pcg64::new(5);
+        let x: Vec<Vec<f64>> = (0..400)
+            .map(|_| vec![rng.next_f64(), rng.next_f64()])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| if r[0] > 0.5 { 4.0 } else { -4.0 }).collect();
+        let t = fit_all(&x, &y, &TreeParams::default());
+        // Evaluate: predictions should track feature 0.
+        for probe in [0.1, 0.3, 0.7, 0.9] {
+            let want = if probe > 0.5 { 4.0 } else { -4.0 };
+            assert!((t.predict(&[probe, 0.5]) - want).abs() < 0.5);
+        }
+    }
+
+    #[test]
+    fn min_samples_leaf_enforced() {
+        let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let p = TreeParams {
+            min_samples_leaf: 6,
+            ..Default::default()
+        };
+        // 10 rows cannot split into two leaves of >= 6.
+        let t = fit_all(&x, &y, &p);
+        assert_eq!(t.n_nodes(), 1);
+    }
+
+    #[test]
+    fn interpolates_smooth_function() {
+        let mut rng = Pcg64::new(6);
+        let x: Vec<Vec<f64>> = (0..2000)
+            .map(|_| vec![rng.uniform_f64(0.0, 1.0), rng.uniform_f64(0.0, 1.0)])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| 3.0 * r[0] + r[1] * r[1]).collect();
+        let p = TreeParams {
+            max_depth: 8,
+            min_samples_leaf: 4,
+            min_gain: 1e-12,
+        };
+        let t = fit_all(&x, &y, &p);
+        let mut err = 0.0;
+        for r in x.iter().take(200) {
+            err += (t.predict(r) - (3.0 * r[0] + r[1] * r[1])).abs();
+        }
+        assert!(err / 200.0 < 0.1, "mae={}", err / 200.0);
+    }
+}

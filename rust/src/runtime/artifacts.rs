@@ -1,0 +1,196 @@
+//! Artifact discovery: `artifacts/manifest.json`, HLO text files and
+//! the flat weights binary emitted by `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use crate::jsonl::{parse, Json};
+
+/// Architecture of the AOT-compiled model (mirrors python ModelConfig).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TinyConfig {
+    pub vocab: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    pub n_layers: u32,
+    pub d_ff: u32,
+    pub max_seq: u32,
+    pub prompt_len: u32,
+}
+
+impl TinyConfig {
+    pub fn head_dim(&self) -> u32 {
+        self.d_model / self.n_heads
+    }
+
+    /// Elements in one KV cache tensor for batch bucket `b`:
+    /// [n_layers, b, n_heads, max_seq, head_dim].
+    pub fn cache_elems(&self, b: u32) -> usize {
+        (self.n_layers * b * self.n_heads * self.max_seq * self.head_dim()) as usize
+    }
+
+    pub fn cache_dims(&self, b: u32) -> [i64; 5] {
+        [
+            self.n_layers as i64,
+            b as i64,
+            self.n_heads as i64,
+            self.max_seq as i64,
+            self.head_dim() as i64,
+        ]
+    }
+}
+
+/// Parsed manifest + resolved paths.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: TinyConfig,
+    pub num_params: usize,
+    pub batches: Vec<u32>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let j = parse(&text)?;
+        let cfg = j
+            .get("config")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing config"))?;
+        let num = |k: &str| -> anyhow::Result<u32> {
+            cfg.get(k)
+                .and_then(Json::as_u64)
+                .map(|x| x as u32)
+                .ok_or_else(|| anyhow::anyhow!("manifest config missing {k}"))
+        };
+        let config = TinyConfig {
+            vocab: num("vocab")?,
+            d_model: num("d_model")?,
+            n_heads: num("n_heads")?,
+            n_layers: num("n_layers")?,
+            d_ff: num("d_ff")?,
+            max_seq: num("max_seq")?,
+            prompt_len: num("prompt_len")?,
+        };
+        let batches = j
+            .get("batches")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing batches"))?
+            .iter()
+            .filter_map(Json::as_u64)
+            .map(|b| b as u32)
+            .collect::<Vec<_>>();
+        anyhow::ensure!(!batches.is_empty(), "no batch buckets in manifest");
+        let num_params = j
+            .get("num_params")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing num_params"))?
+            as usize;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            config,
+            num_params,
+            batches,
+        })
+    }
+
+    pub fn hlo_path(&self, kind: &str, batch: u32) -> PathBuf {
+        self.dir.join(format!("{kind}_b{batch}.hlo.txt"))
+    }
+
+    /// Read `weights.bin` as little-endian f32.
+    pub fn load_weights(&self) -> anyhow::Result<Vec<f32>> {
+        let path = self.dir.join("weights.bin");
+        let bytes = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == self.num_params * 4,
+            "weights.bin: {} bytes, expected {}",
+            bytes.len(),
+            self.num_params * 4
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Smallest batch bucket >= `batch`.
+    pub fn bucket_for(&self, batch: u32) -> anyhow::Result<u32> {
+        self.batches
+            .iter()
+            .copied()
+            .filter(|&b| b >= batch)
+            .min()
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "batch {batch} exceeds largest bucket {:?}",
+                    self.batches.iter().max()
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_when_artifacts_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.config.vocab > 0);
+        assert_eq!(m.batches, vec![1, 2, 4, 8]);
+        let w = m.load_weights().unwrap();
+        assert_eq!(w.len(), m.num_params);
+        assert!(w.iter().all(|x| x.is_finite()));
+        assert!(m.hlo_path("decode", 1).exists());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest {
+            dir: PathBuf::new(),
+            config: TinyConfig {
+                vocab: 8,
+                d_model: 8,
+                n_heads: 2,
+                n_layers: 1,
+                d_ff: 8,
+                max_seq: 8,
+                prompt_len: 4,
+            },
+            num_params: 0,
+            batches: vec![1, 2, 4, 8],
+        };
+        assert_eq!(m.bucket_for(1).unwrap(), 1);
+        assert_eq!(m.bucket_for(3).unwrap(), 4);
+        assert_eq!(m.bucket_for(8).unwrap(), 8);
+        assert!(m.bucket_for(9).is_err());
+    }
+
+    #[test]
+    fn cache_dims_shape() {
+        let c = TinyConfig {
+            vocab: 256,
+            d_model: 64,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 128,
+            max_seq: 256,
+            prompt_len: 32,
+        };
+        assert_eq!(c.head_dim(), 16);
+        assert_eq!(c.cache_dims(4), [2, 4, 4, 256, 16]);
+        assert_eq!(c.cache_elems(1), 2 * 4 * 256 * 16);
+    }
+}

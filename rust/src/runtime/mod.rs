@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and serves the
+//! tiny-llama-sim model from Rust — Python never runs at request time.
+//!
+//! Pipeline (see /opt/xla-example/load_hlo and DESIGN.md):
+//!   `HloModuleProto::from_text_file` -> `XlaComputation::from_proto`
+//!   -> `PjRtClient::compile` (once per batch bucket, cached)
+//!   -> `execute` per prefill/decode step.
+//!
+//! HLO *text* is the interchange format: jax >= 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids.
+
+pub mod artifacts;
+pub mod model;
+
+pub use artifacts::{Manifest, TinyConfig};
+pub use model::{DecodeState, ModelRuntime};

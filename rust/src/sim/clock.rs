@@ -1,0 +1,180 @@
+//! Virtual clock + binary-heap event queue (the tokio substitute for
+//! trace-level experiments).
+//!
+//! Time is `f64` seconds since simulation start.  Events carry an
+//! opaque payload; owners interpret them.  The queue is stable for
+//! equal timestamps (FIFO by sequence number) so replays are exactly
+//! reproducible.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Monotonic virtual clock (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self { now: 0.0 }
+    }
+
+    /// Current virtual time in seconds.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance to an absolute time. Panics on time travel.
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(
+            t >= self.now - 1e-12,
+            "clock moved backwards: {} -> {}",
+            self.now,
+            t
+        );
+        self.now = self.now.max(t);
+    }
+
+    /// Advance by a delta (seconds).
+    pub fn advance_by(&mut self, dt: f64) {
+        assert!(dt >= 0.0, "negative advance {dt}");
+        self.now += dt;
+    }
+}
+
+/// A scheduled event with payload `T`.
+#[derive(Debug, Clone)]
+struct Scheduled<T> {
+    at: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Scheduled<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<T> Eq for Scheduled<T> {}
+impl<T> PartialOrd for Scheduled<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Scheduled<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: earliest time first; ties broken FIFO by seq.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Time-ordered event queue.
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Scheduled<T>>,
+    seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    /// Schedule `payload` at absolute time `at` (seconds).
+    pub fn push(&mut self, at: f64, payload: T) {
+        assert!(at.is_finite(), "non-finite event time");
+        self.heap.push(Scheduled {
+            at,
+            seq: self.seq,
+            payload,
+        });
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event as `(time, payload)`.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|s| (s.at, s.payload))
+    }
+
+    /// Time of the next event, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_by(1.5);
+        c.advance_to(2.0);
+        assert!((c.now() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "clock moved backwards")]
+    fn clock_rejects_time_travel() {
+        let mut c = VirtualClock::new();
+        c.advance_to(5.0);
+        c.advance_to(4.0);
+    }
+
+    #[test]
+    fn queue_orders_by_time() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_is_fifo_for_ties() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(1.0, i);
+        }
+        for i in 0..10 {
+            assert_eq!(q.pop(), Some((1.0, i)));
+        }
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        q.push(7.0, ());
+        q.push(4.0, ());
+        assert_eq!(q.peek_time(), Some(4.0));
+        q.pop();
+        assert_eq!(q.peek_time(), Some(7.0));
+    }
+}

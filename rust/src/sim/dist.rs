@@ -1,0 +1,136 @@
+//! Distribution helpers shared by the workload synthesizer and tests:
+//! empirical histograms, truncated samplers, Pearson correlation.
+
+use super::rng::Pcg64;
+
+/// Sample a truncated log-normal, clamped to [lo, hi].
+pub fn lognormal_clamped(
+    rng: &mut Pcg64,
+    mu: f64,
+    sigma: f64,
+    lo: f64,
+    hi: f64,
+) -> f64 {
+    rng.lognormal(mu, sigma).clamp(lo, hi)
+}
+
+/// Pearson correlation coefficient of two equal-length series.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len(), "pearson: length mismatch");
+    let n = xs.len() as f64;
+    assert!(n > 1.0, "pearson: need at least 2 points");
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for (x, y) in xs.iter().zip(ys) {
+        let dx = x - mx;
+        let dy = y - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let bins = self.counts.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * bins as f64) as usize;
+            let idx = idx.min(bins - 1);
+            self.counts[idx] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Bin centers for plotting/printing.
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len())
+            .map(|i| self.lo + w * (i as f64 + 0.5))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x + 1.0).collect();
+        let zs: Vec<f64> = xs.iter().map(|x| -x).collect();
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        assert!((pearson(&xs, &zs) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_uncorrelated_near_zero() {
+        let mut rng = Pcg64::new(5);
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.normal()).collect();
+        let ys: Vec<f64> = (0..20_000).map(|_| rng.normal()).collect();
+        assert!(pearson(&xs, &ys).abs() < 0.03);
+    }
+
+    #[test]
+    fn pearson_constant_series_is_zero() {
+        let xs = vec![1.0; 10];
+        let ys: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        assert_eq!(pearson(&xs, &ys), 0.0);
+    }
+
+    #[test]
+    fn histogram_counts_and_edges() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.0, 0.5, 9.99, 10.0, -0.1, 5.0] {
+            h.add(x);
+        }
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.counts[9], 1);
+        assert_eq!(h.counts[5], 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.total(), 6);
+    }
+
+    #[test]
+    fn lognormal_clamp_respected() {
+        let mut rng = Pcg64::new(9);
+        for _ in 0..1000 {
+            let x = lognormal_clamped(&mut rng, 5.0, 2.0, 10.0, 700.0);
+            assert!((10.0..=700.0).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Discrete-event simulation substrate: virtual clock, event queue,
+//! PRNG and samplers.
+//!
+//! The serving stack runs against virtual time so trace-level
+//! experiments (60-minute Azure traces) replay in milliseconds while
+//! preserving every iteration-level interleaving the paper's system
+//! reacts to.  The same coordinator code drives the real PJRT engine in
+//! wall-clock mode (`runtime`).
+
+pub mod clock;
+pub mod dist;
+pub mod rng;
+
+pub use clock::{EventQueue, VirtualClock};
+pub use rng::Pcg64;

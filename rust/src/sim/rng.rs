@@ -1,0 +1,218 @@
+//! PCG-64 (XSL-RR 128/64) pseudo-random generator.
+//!
+//! The `rand` crate is unavailable offline; this is a self-contained,
+//! reproducible PRNG with the samplers the workload synthesizer needs.
+//! Reference: O'Neill, "PCG: A Family of Simple Fast Space-Efficient
+//! Statistically Good Algorithms for Random Number Generation" (2014).
+
+/// PCG-64 XSL-RR generator. Deterministic for a given seed.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    /// Create a generator from a seed; stream is fixed.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Create a generator with an explicit stream id (odd-ified).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+        };
+        rng.next_u64();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.next_u64();
+        rng
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [lo, hi] (inclusive). Panics if lo > hi.
+    pub fn uniform_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "uniform_u64: lo > hi");
+        let span = hi - lo + 1;
+        if span == 0 {
+            // full range
+            return self.next_u64();
+        }
+        // Lemire's method with rejection to kill modulo bias.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(span as u128);
+            let l = m as u64;
+            if l >= span.wrapping_neg() % span {
+                return lo + (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform usize in [lo, hi] (inclusive).
+    pub fn uniform_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.uniform_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn uniform_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (single value; the spare is
+    /// discarded to keep the generator state trivially reproducible).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal with the given parameters of the underlying normal.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        -self.next_f64().max(1e-300).ln() / lambda
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "categorical: non-positive total weight");
+        let mut x = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.uniform_usize(0, i);
+            items.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_bounds_inclusive() {
+        let mut r = Pcg64::new(3);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..10_000 {
+            let x = r.uniform_u64(10, 13);
+            assert!((10..=13).contains(&x));
+            seen_lo |= x == 10;
+            seen_hi |= x == 13;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg64::new(13);
+        let n = 50_000;
+        let m = (0..n).map(|_| r.exponential(4.0)).sum::<f64>() / n as f64;
+        assert!((m - 0.25).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn categorical_prefers_heavy_weight() {
+        let mut r = Pcg64::new(17);
+        let w = [1.0, 8.0, 1.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert!(counts[1] > counts[0] * 4 && counts[1] > counts[2] * 4);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(19);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,116 @@
+//! `proptest_lite`: a tiny randomized property-testing harness
+//! (proptest substitute, offline build).
+//!
+//! Runs a property over many PRNG-derived cases; on failure it reports
+//! the seed/case so the exact input is reproducible by construction
+//! (all generators are deterministic functions of the provided
+//! `Pcg64`).  No shrinking — failures print the case index and seed.
+
+use crate::sim::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0x7407_71e4,
+        }
+    }
+}
+
+/// Run `prop` for `cfg.cases` randomized cases. The property receives a
+/// per-case RNG; panic (assert) inside to fail. The failing case is
+/// re-runnable: the RNG is `Pcg64::with_stream(seed, case_index)`.
+pub fn proptest_lite<F: FnMut(&mut Pcg64)>(cfg: PropConfig, mut prop: F) {
+    for case in 0..cfg.cases {
+        let mut rng = Pcg64::with_stream(cfg.seed, case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "proptest_lite: case {case}/{} failed (seed={:#x}, stream={case})",
+                cfg.cases, cfg.seed
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Shorthand with default config.
+pub fn proptest<F: FnMut(&mut Pcg64)>(prop: F) {
+    proptest_lite(PropConfig::default(), prop)
+}
+
+/// Assert two floats agree to a relative tolerance.
+#[macro_export]
+macro_rules! assert_close {
+    ($a:expr, $b:expr, $rel:expr) => {{
+        let (a, b, rel) = ($a as f64, $b as f64, $rel as f64);
+        let denom = a.abs().max(b.abs()).max(1e-12);
+        assert!(
+            (a - b).abs() / denom <= rel,
+            "assert_close failed: {} vs {} (rel err {:.3e} > {:.1e})",
+            a,
+            b,
+            (a - b).abs() / denom,
+            rel
+        );
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0;
+        proptest_lite(
+            PropConfig {
+                cases: 10,
+                seed: 1,
+            },
+            |_rng| count += 1,
+        );
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = vec![];
+        proptest_lite(PropConfig { cases: 5, seed: 2 }, |rng| {
+            first.push(rng.next_u64())
+        });
+        let mut second: Vec<u64> = vec![];
+        proptest_lite(PropConfig { cases: 5, seed: 2 }, |rng| {
+            second.push(rng.next_u64())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        proptest_lite(PropConfig { cases: 3, seed: 3 }, |rng| {
+            assert!(rng.next_f64() < -1.0, "always fails");
+        });
+    }
+
+    #[test]
+    fn assert_close_macro() {
+        assert_close!(1.0, 1.0000001, 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "assert_close failed")]
+    fn assert_close_macro_fails() {
+        assert_close!(1.0, 1.2, 1e-3);
+    }
+}

@@ -1,0 +1,133 @@
+//! Training-data collection for the performance model (paper §IV-C1).
+//!
+//! The paper profiles each engine by spawning fixed-length batches that
+//! sweep the full KV range, randomizing GPU frequency between
+//! measurements, while a monitoring agent logs
+//! (engine size, batch, KV usage, frequency) -> IPS every second.
+//!
+//! Here the "hardware" is `gpusim`; measurements carry a small
+//! multiplicative noise term reproducing real monitoring variance (so
+//! Table III's 3-6% MAPE regime is non-trivial rather than an exact
+//! functional fit).
+
+use crate::config::EngineSpec;
+use crate::gpusim::dvfs::frequency_grid;
+use crate::gpusim::latency::{ips, GpuState};
+use crate::mlmodel::Dataset;
+use crate::sim::Pcg64;
+
+/// Relative measurement noise (std) of the monitoring agent.
+pub const MEASUREMENT_NOISE: f64 = 0.03;
+
+/// Feature vector layout for the performance model `M`:
+/// [engine size (TP), batch, KV blocks, frequency MHz].
+pub fn features(spec: &EngineSpec, batch: u32, kv_blocks: u32, freq_mhz: u32) -> Vec<f64> {
+    vec![
+        spec.tensor_parallel as f64,
+        batch as f64,
+        kv_blocks as f64,
+        freq_mhz as f64,
+    ]
+}
+
+/// Profile one engine: for every batch size, walk the KV range from
+/// near-empty to full (as generation would), switching to a random
+/// frequency before each measurement. Returns the labelled dataset.
+pub fn collect_training_data(
+    spec: &EngineSpec,
+    samples_per_batch: u32,
+    seed: u64,
+) -> Dataset {
+    let grid = frequency_grid();
+    let mut rng = Pcg64::with_stream(seed, 0x9f0f);
+    let mut data = Dataset::new();
+    let batch_sizes = batch_grid(spec.max_batch);
+    for &batch in &batch_sizes {
+        for s in 0..samples_per_batch {
+            // KV walks the full range; ensure both edges are present
+            // ("the edges of the profiling space are in the dataset").
+            let kv_frac = match s {
+                0 => 0.0,
+                _ if s == samples_per_batch - 1 => 1.0,
+                _ => rng.next_f64(),
+            };
+            let kv_blocks = (kv_frac * spec.kv_blocks as f64).round() as u32;
+            let freq = grid[rng.uniform_usize(0, grid.len() - 1)];
+            let truth = ips(
+                spec,
+                &GpuState {
+                    batch,
+                    kv_blocks,
+                    freq_mhz: freq,
+                },
+            );
+            let measured = truth * (1.0 + MEASUREMENT_NOISE * rng.normal());
+            data.push(features(spec, batch, kv_blocks, freq), measured);
+        }
+    }
+    data
+}
+
+/// Batch sizes profiled for an engine: 1, 2, 4, ... up to max_batch,
+/// plus the exact max.
+pub fn batch_grid(max_batch: u32) -> Vec<u32> {
+    let mut out = vec![];
+    let mut b = 1;
+    while b < max_batch {
+        out.push(b);
+        b *= 2;
+    }
+    out.push(max_batch);
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::llama2_13b;
+
+    #[test]
+    fn batch_grid_covers_range() {
+        assert_eq!(batch_grid(32), vec![1, 2, 4, 8, 16, 32]);
+        assert_eq!(batch_grid(1), vec![1]);
+        assert_eq!(batch_grid(48), vec![1, 2, 4, 8, 16, 32, 48]);
+    }
+
+    #[test]
+    fn dataset_shape_and_edges() {
+        let e = llama2_13b(2);
+        let d = collect_training_data(&e, 50, 0);
+        assert_eq!(d.len(), 6 * 50);
+        assert_eq!(d.n_features(), 4);
+        // Edge coverage: kv = 0 and kv = capacity both present.
+        let kvs: Vec<f64> = d.features.iter().map(|f| f[2]).collect();
+        assert!(kvs.iter().any(|&k| k == 0.0));
+        assert!(kvs.iter().any(|&k| k == e.kv_blocks as f64));
+    }
+
+    #[test]
+    fn targets_positive_and_noisy() {
+        let e = llama2_13b(2);
+        let d = collect_training_data(&e, 40, 1);
+        assert!(d.targets.iter().all(|&t| t > 0.0));
+        // Noise: identical configs measured twice rarely agree exactly;
+        // overall variance exists.
+        let mean = d.targets.iter().sum::<f64>() / d.len() as f64;
+        let var = d
+            .targets
+            .iter()
+            .map(|t| (t - mean) * (t - mean))
+            .sum::<f64>()
+            / d.len() as f64;
+        assert!(var > 1.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let e = llama2_13b(2);
+        let a = collect_training_data(&e, 10, 7);
+        let b = collect_training_data(&e, 10, 7);
+        assert_eq!(a.targets, b.targets);
+    }
+}

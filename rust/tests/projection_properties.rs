@@ -1,0 +1,158 @@
+//! Property tests (proptest_lite) for the coordinator's analytical
+//! core: the projection must match a brute-force evaluation of the
+//! paper's Eq. (1)-(2) for arbitrary scoreboards, and admission /
+//! throttling must be internally consistent.
+
+use throttllem::config::models::llama2_13b;
+use throttllem::config::SloSpec;
+use throttllem::coordinator::projection::project;
+use throttllem::coordinator::scheduler::evaluate_slo;
+use throttllem::coordinator::scoreboard::{Entry, Scoreboard};
+use throttllem::coordinator::throttle::min_slo_frequency;
+use throttllem::coordinator::PerfModel;
+use throttllem::gpusim::dvfs::FREQ_MAX_MHZ;
+use throttllem::sim::Pcg64;
+use throttllem::testutil::{proptest_lite, PropConfig};
+
+fn random_scoreboard(rng: &mut Pcg64, max_entries: u32) -> (Scoreboard, u64) {
+    let n = rng.uniform_u64(1, max_entries as u64) as u32;
+    let k = rng.uniform_u64(0, 200);
+    let mut sb = Scoreboard::new();
+    for id in 0..n {
+        let scheduled = rng.uniform_u64(0, k + 50);
+        sb.insert(Entry {
+            id: id as u64,
+            scheduled_iter: scheduled,
+            prompt_tokens: rng.uniform_u64(1, 3000) as u32,
+            predicted_gen: rng.uniform_u64(1, 1024) as u32,
+            deadline_s: rng.uniform_f64(1.0, 60.0),
+            lost: rng.next_f64() < 0.1,
+        });
+    }
+    (sb, k)
+}
+
+/// Brute-force Eq. (1)+(2) for one future iteration j.
+fn brute_force(sb: &Scoreboard, j: u64, n_tokens: u32) -> (u32, u32) {
+    let mut batch = 0u32;
+    let mut kv = 0u32;
+    for e in sb.committed() {
+        if e.scheduled_iter <= j && j < e.scheduled_iter + e.predicted_gen as u64 {
+            batch += 1;
+            let tokens = (j - e.scheduled_iter) as u32 + e.prompt_tokens;
+            kv += tokens.div_ceil(n_tokens);
+        }
+    }
+    (batch, kv)
+}
+
+#[test]
+fn projection_matches_brute_force_eq1_eq2() {
+    proptest_lite(PropConfig { cases: 200, seed: 1 }, |rng| {
+        let (sb, k) = random_scoreboard(rng, 40);
+        let n_tokens = 64;
+        let proj = project(&sb, k, n_tokens);
+        for off in 0..proj.horizon() {
+            let j = proj.start_iter + off as u64;
+            let (b, kv) = brute_force(&sb, j, n_tokens);
+            assert_eq!(proj.batch[off], b, "batch mismatch at j={j}");
+            assert_eq!(proj.kv_blocks[off], kv, "kv mismatch at j={j}");
+        }
+        // Beyond the horizon everything completed.
+        let (b, _) = brute_force(&sb, proj.start_iter + proj.horizon() as u64, n_tokens);
+        assert_eq!(b, 0, "horizon too short");
+    });
+}
+
+#[test]
+fn projection_batch_never_exceeds_entries() {
+    proptest_lite(PropConfig { cases: 100, seed: 2 }, |rng| {
+        let (sb, k) = random_scoreboard(rng, 64);
+        let proj = project(&sb, k, 64);
+        let n = sb.committed().len() as u32;
+        assert!(proj.batch.iter().all(|&b| b <= n));
+    });
+}
+
+#[test]
+fn kv_projection_monotone_while_batch_constant() {
+    // For a scoreboard whose entries are ALL already running (s_i <=
+    // k), membership can only shrink over future iterations, so a
+    // constant batch between j and j+1 means the same set — and KV can
+    // only grow. (With future s_i > k, a simultaneous leave+join keeps
+    // the count while changing the KV sum, so the property is scoped
+    // to running entries.)
+    proptest_lite(PropConfig { cases: 100, seed: 3 }, |rng| {
+        let (mut sb, k) = random_scoreboard(rng, 20);
+        let ids: Vec<u64> = sb.committed().iter().map(|e| e.id).collect();
+        for id in ids {
+            let mut e = *sb.get(id).unwrap();
+            if e.scheduled_iter > k {
+                sb.strike(id);
+                e.scheduled_iter = rng.uniform_u64(0, k);
+                sb.insert(e);
+            }
+        }
+        let proj = project(&sb, k, 64);
+        for w in 0..proj.horizon().saturating_sub(1) {
+            if proj.batch[w] == proj.batch[w + 1] {
+                assert!(
+                    proj.kv_blocks[w + 1] >= proj.kv_blocks[w],
+                    "KV shrank with constant batch at offset {w}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn throttle_choice_is_consistent_with_slo_eval() {
+    let spec = llama2_13b(2);
+    let model = PerfModel::train(&[spec.clone()], 40, 0);
+    let slo = SloSpec::new(0.2, 30.2);
+    proptest_lite(PropConfig { cases: 25, seed: 4 }, |rng| {
+        let n = rng.uniform_u64(1, 16) as u32;
+        let mut sb = Scoreboard::new();
+        for id in 0..n {
+            sb.insert(Entry {
+                id: id as u64,
+                scheduled_iter: 0,
+                prompt_tokens: rng.uniform_u64(16, 1500) as u32,
+                predicted_gen: rng.uniform_u64(16, 700) as u32,
+                deadline_s: rng.uniform_f64(8.0, 40.0),
+                lost: false,
+            });
+        }
+        let proj = project(&sb, 0, spec.block_tokens);
+        let f = min_slo_frequency(&model, &spec, &slo, &sb, &proj, 0.0, 1.0);
+        assert!((210..=1410).contains(&f));
+        assert_eq!(f % 15, 0, "frequency {f} not on the 15 MHz grid");
+        // If the max frequency passes, the chosen one must pass too.
+        if evaluate_slo(&model, &spec, &slo, &sb, &proj, FREQ_MAX_MHZ, 0.0).all_ok() {
+            assert!(
+                evaluate_slo(&model, &spec, &slo, &sb, &proj, f, 0.0).all_ok(),
+                "chosen frequency {f} violates SLOs"
+            );
+        }
+    });
+}
+
+#[test]
+fn virtual_rollback_is_always_clean() {
+    proptest_lite(PropConfig { cases: 100, seed: 5 }, |rng| {
+        let (mut sb, k) = random_scoreboard(rng, 20);
+        let before = project(&sb, k, 64);
+        sb.virtual_append(Entry {
+            id: 10_000,
+            scheduled_iter: k,
+            prompt_tokens: rng.uniform_u64(1, 4000) as u32,
+            predicted_gen: rng.uniform_u64(1, 1024) as u32,
+            deadline_s: 30.0,
+            lost: false,
+        });
+        let _with = project(&sb, k, 64);
+        sb.rollback_virtual();
+        let after = project(&sb, k, 64);
+        assert_eq!(before, after, "rollback left residue");
+    });
+}

@@ -1,0 +1,203 @@
+//! Integration tests: the full serving stack over traces — policy
+//! comparisons, SLO behaviour, accounting invariants, determinism.
+
+use throttllem::config::models::llama2_13b;
+use throttllem::config::ServingConfig;
+use throttllem::coordinator::{serve_trace, PerfModel, Policy};
+use throttllem::workload::trace::{synth_trace, synth_trace_rps_range, TraceParams};
+use throttllem::workload::LengthPredictor;
+
+fn trace(peak: f64, secs: f64, seed: u64) -> Vec<throttllem::engine::request::Request> {
+    let mut reqs = synth_trace(&TraceParams::short(secs, peak, seed));
+    LengthPredictor::oracle().apply(&mut reqs, 1024);
+    reqs
+}
+
+#[test]
+fn headline_energy_savings_on_moderate_load() {
+    // The core claim (§V-D1): throttling under SLOs cuts energy
+    // meaningfully vs the max-frequency baseline.
+    let spec = llama2_13b(2);
+    let model = PerfModel::train(&[spec.clone()], 80, 0);
+    let reqs = trace(0.6 * spec.max_load_rps, 300.0, 42);
+
+    let triton = serve_trace(
+        &ServingConfig::triton(spec.clone()),
+        Policy::triton(),
+        &model,
+        &reqs,
+    );
+    let ours = serve_trace(
+        &ServingConfig::throttllem(spec.clone()),
+        Policy::throttle_only(),
+        &model,
+        &reqs,
+    );
+    let savings = 1.0 - ours.stats.total_energy_j / triton.stats.total_energy_j;
+    assert!(
+        savings > 0.15,
+        "expected >15% energy savings, got {:.1}%",
+        savings * 100.0
+    );
+    // SLOs hold.
+    assert!(
+        ours.stats.e2e.p99() <= spec.e2e_slo_p99,
+        "p99={} slo={}",
+        ours.stats.e2e.p99(),
+        spec.e2e_slo_p99
+    );
+    assert!(ours.stats.tbt.mean() <= 0.2);
+    // Efficiency improves markedly (paper: +36.3% avg with oracle).
+    assert!(ours.stats.tokens_per_joule() > 1.2 * triton.stats.tokens_per_joule());
+}
+
+#[test]
+fn serve_trace_is_deterministic() {
+    let spec = llama2_13b(2);
+    let model = PerfModel::train(&[spec.clone()], 40, 0);
+    let reqs = trace(2.0, 120.0, 7);
+    let cfg = ServingConfig::throttllem(spec);
+    let a = serve_trace(&cfg, Policy::throttle_only(), &model, &reqs);
+    let b = serve_trace(&cfg, Policy::throttle_only(), &model, &reqs);
+    assert_eq!(a.stats.completed, b.stats.completed);
+    assert_eq!(a.stats.total_energy_j, b.stats.total_energy_j);
+    assert_eq!(a.stats.e2e.p99(), b.stats.e2e.p99());
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.e2e_s, y.e2e_s);
+    }
+}
+
+#[test]
+fn accounting_conserves_requests_and_tokens() {
+    let spec = llama2_13b(2);
+    let model = PerfModel::train(&[spec.clone()], 40, 0);
+    let reqs = trace(3.0, 180.0, 3);
+    let cfg = ServingConfig::throttllem(spec);
+    let out = serve_trace(&cfg, Policy::throttle_only(), &model, &reqs);
+    assert_eq!(out.stats.completed + out.stats.dropped, reqs.len() as u64);
+    let expected_tokens: u64 = reqs
+        .iter()
+        .filter(|r| out.outcomes.iter().any(|o| o.id == r.id))
+        .map(|r| r.gen_tokens as u64)
+        .sum();
+    assert_eq!(out.stats.total_tokens, expected_tokens);
+    // Every outcome is a trace request and E2E >= queue + TTFT parts.
+    for o in &out.outcomes {
+        let r = reqs.iter().find(|r| r.id == o.id).unwrap();
+        assert_eq!(r.gen_tokens, o.gen_tokens);
+        assert!(o.ttft_s >= o.queue_s() - 1e-9);
+        assert!(o.e2e_s >= o.ttft_s - 1e-9);
+    }
+}
+
+#[test]
+fn inflated_predictions_require_higher_frequency() {
+    // §V-D1 / Fig. 9a mechanism: conservative length inflation
+    // (predictor error) makes the throttle select an equal-or-higher
+    // frequency for the same resident set — asserted at the controller
+    // level, where it is deterministic. (In the full closed loop the
+    // time-weighted mean frequency also depends on batch/queue
+    // feedback; see EXPERIMENTS.md Fig. 9 discussion.)
+    use throttllem::config::SloSpec;
+    use throttllem::coordinator::projection::project;
+    use throttllem::coordinator::scoreboard::{Entry, Scoreboard};
+    use throttllem::coordinator::throttle::min_slo_frequency;
+    use throttllem::workload::predictor::conservative_adjust;
+
+    let spec = llama2_13b(2);
+    let model = PerfModel::train(&[spec.clone()], 80, 0);
+    let slo = SloSpec::new(0.2, 30.2);
+    for (n, base_pred, deadline) in [(4u64, 300u32, 12.0), (8, 500, 18.0), (2, 700, 25.0)] {
+        let mut freqs = vec![];
+        for err in [0.0, 0.30] {
+            let mut sb = Scoreboard::new();
+            for id in 0..n {
+                sb.insert(Entry {
+                    id,
+                    scheduled_iter: 0,
+                    prompt_tokens: 400,
+                    predicted_gen: conservative_adjust(base_pred, err, 1024),
+                    deadline_s: deadline,
+                    lost: false,
+                });
+            }
+            let proj = project(&sb, 0, spec.block_tokens);
+            freqs.push(min_slo_frequency(&model, &spec, &slo, &sb, &proj, 0.0, 1.0));
+        }
+        assert!(
+            freqs[1] >= freqs[0],
+            "inflation lowered the required frequency: {freqs:?}"
+        );
+    }
+}
+
+#[test]
+fn autoscaling_beats_static_tp4_on_energy() {
+    // §V-D2: right-sizing + throttling beats throttling alone on TP4.
+    let set = vec![llama2_13b(1), llama2_13b(2), llama2_13b(4)];
+    let model = PerfModel::train(&set, 60, 0);
+    let mut reqs = synth_trace_rps_range(
+        &TraceParams::short(900.0, 8.25, 2),
+        0.75,
+        7.5,
+    );
+    LengthPredictor::oracle().apply(&mut reqs, 1024);
+
+    let static_tp4 = serve_trace(
+        &ServingConfig::throttllem(set[2].clone()),
+        Policy::throttle_only(),
+        &model,
+        &reqs,
+    );
+    let full = serve_trace(
+        &ServingConfig::autoscaled(set.clone()),
+        Policy::throttllem(),
+        &model,
+        &reqs,
+    );
+    assert!(full.engine_switches >= 1);
+    assert!(
+        full.stats.total_energy_j < static_tp4.stats.total_energy_j,
+        "full {} vs static {}",
+        full.stats.total_energy_j,
+        static_tp4.stats.total_energy_j
+    );
+}
+
+#[test]
+fn triton_baseline_never_throttles() {
+    let spec = llama2_13b(4);
+    let model = PerfModel::train(&[spec.clone()], 40, 0);
+    let reqs = trace(4.0, 120.0, 9);
+    let out = serve_trace(
+        &ServingConfig::triton(spec),
+        Policy::triton(),
+        &model,
+        &reqs,
+    );
+    assert!(out.stats.freq.values().iter().all(|&f| f == 1410.0));
+    assert_eq!(out.engine_switches, 0);
+    assert_eq!(out.shadow_energy_j, 0.0);
+}
+
+#[test]
+fn throttled_run_uses_lower_frequencies_under_light_load() {
+    let spec = llama2_13b(2);
+    let model = PerfModel::train(&[spec.clone()], 80, 0);
+    let reqs = trace(0.4 * spec.max_load_rps, 240.0, 11);
+    let out = serve_trace(
+        &ServingConfig::throttllem(spec),
+        Policy::throttle_only(),
+        &model,
+        &reqs,
+    );
+    // Light load: substantial throttling expected (paper: 950-1260 avg
+    // under FULL load; light load goes lower).
+    assert!(
+        out.stats.freq.mean() < 1200.0,
+        "mean freq {}",
+        out.stats.freq.mean()
+    );
+}
