@@ -1,0 +1,123 @@
+//! Fleet coordinator demo: horizontal replication with per-replica
+//! frequency control (the GreenLLM/AGFT-style fleet extension of the
+//! paper's single-engine throttLL'eM).
+//!
+//! Serves a trace right-scaled to N replicas' aggregate capacity under
+//! every admission-router policy, against a fleet of Triton replicas
+//! at max frequency, and prints per-replica plus fleet-aggregate
+//! energy, TBT and E2E attainment.
+//!
+//! Run with:
+//!   cargo run --release --example fleet_demo [-- --replicas 4 --duration 600]
+
+use throttllem::cli::Args;
+use throttllem::config::models::llama2_13b;
+use throttllem::config::ServingConfig;
+use throttllem::coordinator::{
+    serve_fleet, FleetOutcome, FleetSpec, PerfModel, Policy, RouterPolicy,
+};
+use throttllem::workload::trace::{synth_trace, TraceParams};
+use throttllem::workload::LengthPredictor;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let replicas = args.get_u64("replicas", 4)? as usize;
+    let duration = args.get_f64("duration", 600.0)?;
+    let seed = args.get_u64("seed", 0)?;
+
+    let spec = llama2_13b(2);
+    let model = PerfModel::train(&[spec.clone()], 100, seed);
+    // Right-scale to ~80% of the fleet's aggregate rated load.
+    let peak = 0.8 * spec.max_load_rps * replicas as f64;
+    let mut reqs = synth_trace(&TraceParams::short(duration, peak, seed));
+    LengthPredictor::oracle().apply(&mut reqs, 1024);
+    println!(
+        "fleet of {replicas} x {} | {} requests over {duration:.0} s (peak ~{peak:.1} RPS)\n",
+        spec.name,
+        reqs.len()
+    );
+
+    let combos: Vec<(String, Policy, ServingConfig, RouterPolicy)> = vec![
+        (
+            format!("triton x{replicas} (rr)"),
+            Policy::triton(),
+            ServingConfig::triton(spec.clone()),
+            RouterPolicy::RoundRobin,
+        ),
+        (
+            format!("throttllem x{replicas} (rr)"),
+            Policy::throttle_only(),
+            ServingConfig::throttllem(spec.clone()),
+            RouterPolicy::RoundRobin,
+        ),
+        (
+            format!("throttllem x{replicas} (least-loaded)"),
+            Policy::throttle_only(),
+            ServingConfig::throttllem(spec.clone()),
+            RouterPolicy::LeastLoaded,
+        ),
+        (
+            format!("throttllem x{replicas} (headroom)"),
+            Policy::throttle_only(),
+            ServingConfig::throttllem(spec.clone()),
+            RouterPolicy::ProjectedHeadroom,
+        ),
+    ];
+
+    println!(
+        "{:<34} {:>9} {:>9} {:>9} {:>9} {:>10} {:>8}",
+        "deployment", "E2E p99", "E2E att.", "TBT att.", "freq", "energy", "TPJ"
+    );
+    println!(
+        "{:<34} {:>9} {:>9} {:>9} {:>9} {:>10} {:>8}",
+        "", "[s]", "[%]", "[%]", "[MHz]", "[kJ]", "[tok/J]"
+    );
+    let mut detailed: Option<FleetOutcome> = None;
+    for (name, policy, cfg, router) in combos {
+        let fleet = FleetSpec {
+            replicas,
+            router,
+            autoscale_replicas: false,
+        };
+        let out = serve_fleet(&cfg, policy, &model, &reqs, &fleet);
+        let s = &out.total.stats;
+        println!(
+            "{:<34} {:>9.2} {:>9.1} {:>9.1} {:>9.0} {:>10.1} {:>8.3}",
+            name,
+            s.e2e.p99(),
+            s.e2e_slo_attainment(cfg.slo.e2e_p99) * 100.0,
+            s.tbt_slo_attainment(cfg.slo.tbt_avg) * 100.0,
+            s.freq.mean(),
+            s.total_energy_j / 1e3,
+            s.tokens_per_joule(),
+        );
+        if router == RouterPolicy::LeastLoaded {
+            detailed = Some(out);
+        }
+    }
+
+    // Per-replica breakdown of the least-loaded throttLL'eM fleet.
+    let out = detailed.expect("least-loaded run present");
+    println!("\n-- per-replica breakdown (throttllem, least-loaded) --");
+    println!(
+        "{:<8} {:>8} {:>10} {:>8} {:>10} {:>11}",
+        "replica", "routed", "completed", "dropped", "freq[MHz]", "energy[kJ]"
+    );
+    for (i, r) in out.replicas.iter().enumerate() {
+        println!(
+            "{:<8} {:>8} {:>10} {:>8} {:>10.0} {:>11.1}",
+            i,
+            r.routed,
+            r.stats.completed,
+            r.stats.dropped,
+            r.stats.freq.mean(),
+            r.stats.total_energy_j / 1e3,
+        );
+    }
+    println!(
+        "rerouted on universal rejection: {} | aggregate energy {:.1} kJ",
+        out.rerouted,
+        out.total.stats.total_energy_j / 1e3
+    );
+    Ok(())
+}

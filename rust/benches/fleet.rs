@@ -1,0 +1,181 @@
+//! Fleet bench: fleet-throttLL'eM (per-replica frequency control +
+//! SLO-aware admission + least-loaded routing) against N independent
+//! Triton replicas (round-robin split, max frequency) on the same
+//! N-times-right-scaled trace, plus the single-replica reference the
+//! fleet's admitted-RPS scaling is measured against.
+//!
+//! Expectation (ISSUE acceptance): at equal SLO attainment a fleet of
+//! 4 sustains >= 3x the single replica's admitted RPS, while
+//! fleet-throttLL'eM burns measurably less energy than the Triton
+//! fleet at matched attainment.
+//!
+//! Run with: cargo bench --bench fleet
+//! (THROTTLLEM_BENCH_SECS overrides the trace length.)
+
+use throttllem::bench_util::{print_table, section};
+use throttllem::config::models::llama2_13b;
+use throttllem::config::ServingConfig;
+use throttllem::coordinator::{serve_fleet, FleetSpec, PerfModel, Policy, RouterPolicy};
+use throttllem::metrics::ServingStats;
+use throttllem::workload::trace::{synth_trace, TraceParams};
+use throttllem::workload::LengthPredictor;
+
+fn row(name: &str, s: &ServingStats, slo_e2e: f64, slo_tbt: f64) -> Vec<String> {
+    let admitted_rps = s.completed as f64 / s.wall_s;
+    vec![
+        name.to_string(),
+        format!("{}", s.completed),
+        format!("{:.2}", admitted_rps),
+        format!("{:.2}", s.e2e.p99()),
+        format!("{:.1}", s.e2e_slo_attainment(slo_e2e) * 100.0),
+        format!("{:.1}", s.tbt_slo_attainment(slo_tbt) * 100.0),
+        format!("{:.0}", s.freq.mean()),
+        format!("{:.1}", s.total_energy_j / 1e3),
+        format!("{:.3}", s.tokens_per_joule()),
+    ]
+}
+
+fn main() {
+    let secs: f64 = std::env::var("THROTTLLEM_BENCH_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(900.0);
+    let n = 4usize;
+    let seed = 0u64;
+    let spec = llama2_13b(2);
+    let slo = throttllem::config::SloSpec::for_engine(&spec);
+
+    eprintln!("training performance model...");
+    let model = PerfModel::train(&[spec.clone()], 120, seed);
+
+    // One trace, right-scaled to ~80% of the FLEET's aggregate rated
+    // load; the single-replica reference serves the same stream.
+    let peak = 0.8 * spec.max_load_rps * n as f64;
+    let mut reqs = synth_trace(&TraceParams::short(secs, peak, seed));
+    LengthPredictor::oracle().apply(&mut reqs, 1024);
+    eprintln!(
+        "trace: {} requests over {secs:.0} s (peak ~{peak:.1} RPS)",
+        reqs.len()
+    );
+
+    let triton_cfg = ServingConfig::triton(spec.clone());
+    let ours_cfg = ServingConfig::throttllem(spec.clone());
+
+    let single = serve_fleet(
+        &triton_cfg,
+        Policy::triton(),
+        &model,
+        &reqs,
+        &FleetSpec {
+            replicas: 1,
+            router: RouterPolicy::RoundRobin,
+            autoscale_replicas: false,
+        },
+    );
+    let triton_fleet = serve_fleet(
+        &triton_cfg,
+        Policy::triton(),
+        &model,
+        &reqs,
+        &FleetSpec {
+            replicas: n,
+            router: RouterPolicy::RoundRobin,
+            autoscale_replicas: false,
+        },
+    );
+    let ours_fleet = serve_fleet(
+        &ours_cfg,
+        Policy::throttle_only(),
+        &model,
+        &reqs,
+        &FleetSpec {
+            replicas: n,
+            router: RouterPolicy::LeastLoaded,
+            autoscale_replicas: false,
+        },
+    );
+
+    section(&format!(
+        "Fleet comparison: {n} x {} vs 1 x (same {peak:.1}-RPS-peak trace)",
+        spec.name
+    ));
+    let rows = vec![
+        row("triton x1", &single.total.stats, slo.e2e_p99, slo.tbt_avg),
+        row(
+            &format!("triton x{n} (rr)"),
+            &triton_fleet.total.stats,
+            slo.e2e_p99,
+            slo.tbt_avg,
+        ),
+        row(
+            &format!("throttllem x{n} (ll)"),
+            &ours_fleet.total.stats,
+            slo.e2e_p99,
+            slo.tbt_avg,
+        ),
+    ];
+    print_table(
+        &[
+            "deployment",
+            "completed",
+            "adm.RPS",
+            "E2Ep99[s]",
+            "E2Eatt[%]",
+            "TBTatt[%]",
+            "freq[MHz]",
+            "energy[kJ]",
+            "TPJ",
+        ],
+        &rows,
+    );
+
+    let single_rps = single.total.stats.completed as f64 / single.total.stats.wall_s;
+    let fleet_rps =
+        ours_fleet.total.stats.completed as f64 / ours_fleet.total.stats.wall_s;
+    let att_single = single.total.stats.e2e_slo_attainment(slo.e2e_p99);
+    let att_fleet = ours_fleet.total.stats.e2e_slo_attainment(slo.e2e_p99);
+    println!(
+        "\nadmitted RPS: fleet {fleet_rps:.2} vs single {single_rps:.2} \
+         -> {:.2}x (target >= 3x at equal-or-better attainment: \
+         fleet {:.1}% vs single {:.1}%)",
+        fleet_rps / single_rps,
+        att_fleet * 100.0,
+        att_single * 100.0
+    );
+    println!(
+        "energy: throttllem fleet {:.1} kJ vs triton fleet {:.1} kJ \
+         ({:+.1}%)",
+        ours_fleet.total.stats.total_energy_j / 1e3,
+        triton_fleet.total.stats.total_energy_j / 1e3,
+        (ours_fleet.total.stats.total_energy_j
+            / triton_fleet.total.stats.total_energy_j
+            - 1.0)
+            * 100.0
+    );
+
+    section("Per-replica breakdown (throttllem fleet)");
+    let rrows: Vec<Vec<String>> = ours_fleet
+        .replicas
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            vec![
+                format!("{i}"),
+                format!("{}", r.routed),
+                format!("{}", r.stats.completed),
+                format!("{}", r.stats.dropped),
+                format!("{:.0}", r.stats.freq.mean()),
+                format!("{:.1}", r.stats.total_energy_j / 1e3),
+                format!("{}", r.engine_switches),
+            ]
+        })
+        .collect();
+    print_table(
+        &[
+            "replica", "routed", "completed", "dropped", "freq[MHz]", "energy[kJ]",
+            "switches",
+        ],
+        &rrows,
+    );
+    println!("rerouted on universal rejection: {}", ours_fleet.rerouted);
+}

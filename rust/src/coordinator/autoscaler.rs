@@ -62,7 +62,10 @@ impl Autoscaler {
             specs,
             current: initial,
             shadow: None,
-            grace_until: 0.0,
+            // A fresh deployment gets a full grace period: scaling
+            // DOWN before a single spawn time has elapsed would act on
+            // less monitoring history than one provisioning takes.
+            grace_until: SPAWN_TIME_S,
             spawn_time_s: SPAWN_TIME_S,
             interval_s: 10.0,
         }
@@ -152,6 +155,96 @@ impl Autoscaler {
         }
         None
     }
+
+    /// Abort an in-flight shadow instance (used when the fleet axis
+    /// deactivates a replica mid-transition: the warming engine is
+    /// discarded, not adopted).
+    pub fn cancel_shadow(&mut self) {
+        self.shadow = None;
+    }
+}
+
+/// What the fleet (replica-count) axis decided at a tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetDecision {
+    /// Keep the current replica count.
+    Hold,
+    /// Spin up `count` more replicas (each pays the spawn time).
+    Activate { count: usize },
+    /// Drain and power off `count` replicas.
+    Deactivate { count: usize },
+}
+
+/// The replica-count axis of the two-axis autoscaler (replica count x
+/// TP size).  Each active replica still right-sizes its own tensor
+/// parallelism through [`Autoscaler`] (shadow instancing per replica);
+/// this state machine decides how many replicas should be active at
+/// all, following the same grace-period discipline: scale-out is
+/// immediate, scale-in only once a spawn time has elapsed without the
+/// load justifying the current count.
+#[derive(Debug, Clone)]
+pub struct FleetScaler {
+    pub max_replicas: usize,
+    pub spawn_time_s: f64,
+    pub interval_s: f64,
+    grace_until: f64,
+}
+
+impl FleetScaler {
+    pub fn new(max_replicas: usize) -> Self {
+        assert!(max_replicas >= 1);
+        Self {
+            max_replicas,
+            spawn_time_s: SPAWN_TIME_S,
+            interval_s: 10.0,
+            // Same boot-time grace as the TP axis: no scale-in before
+            // one spawn time of history exists.
+            grace_until: SPAWN_TIME_S,
+        }
+    }
+
+    /// Replicas needed to sustain `rps` when one replica handles
+    /// `per_replica_rps` (clamped to [1, max_replicas]).
+    pub fn desired_replicas(&self, rps: f64, per_replica_rps: f64) -> usize {
+        if per_replica_rps <= 0.0 {
+            return self.max_replicas;
+        }
+        let need = (rps / per_replica_rps).ceil() as usize;
+        need.clamp(1, self.max_replicas)
+    }
+
+    /// Monitoring tick: `provisioned` counts active replicas plus any
+    /// already spinning up.
+    pub fn tick(
+        &mut self,
+        now: f64,
+        rps: f64,
+        per_replica_rps: f64,
+        provisioned: usize,
+    ) -> FleetDecision {
+        let desired = self.desired_replicas(rps, per_replica_rps);
+        if desired >= provisioned {
+            // The load justifies (at least) the current count: renew
+            // the grace window — scale-in later must observe a full
+            // spawn time of UNJUSTIFIED load, even right after a ramp
+            // of consecutive Activate ticks.
+            self.grace_until = now + self.spawn_time_s;
+            return if desired > provisioned {
+                FleetDecision::Activate {
+                    count: desired - provisioned,
+                }
+            } else {
+                FleetDecision::Hold
+            };
+        }
+        if now >= self.grace_until {
+            FleetDecision::Deactivate {
+                count: provisioned - desired,
+            }
+        } else {
+            FleetDecision::Hold
+        }
+    }
 }
 
 #[cfg(test)]
@@ -236,5 +329,96 @@ mod tests {
     #[should_panic(expected = "ordered by max load")]
     fn rejects_unordered_scale_set() {
         Autoscaler::new(vec![llama2_13b(4), llama2_13b(1)], 0);
+    }
+
+    #[test]
+    fn no_scale_down_before_spawn_time_even_at_boot() {
+        // Start on the LARGEST engine: a load drop right after boot
+        // must not trigger a down-scale before SPAWN_TIME_S elapses.
+        let mut a = Autoscaler::new(vec![llama2_13b(1), llama2_13b(2), llama2_13b(4)], 2);
+        assert_eq!(a.tick(5.0, 0.5), ScaleDecision::Hold);
+        assert_eq!(a.tick(SPAWN_TIME_S - 1.0, 0.5), ScaleDecision::Hold);
+        assert_eq!(
+            a.tick(SPAWN_TIME_S + 1.0, 0.5),
+            ScaleDecision::StartShadow { target: 0 }
+        );
+    }
+
+    #[test]
+    fn cancel_shadow_discards_transition() {
+        let mut a = scaler();
+        a.tick(0.0, 3.0);
+        assert!(a.shadow().is_some());
+        a.cancel_shadow();
+        assert!(a.shadow().is_none());
+        assert!(a.poll_ready(100.0).is_none());
+        assert_eq!(a.current_index(), 0);
+    }
+
+    #[test]
+    fn fleet_desired_replicas_clamps() {
+        let f = FleetScaler::new(4);
+        assert_eq!(f.desired_replicas(0.0, 4.0), 1);
+        assert_eq!(f.desired_replicas(3.9, 4.0), 1);
+        assert_eq!(f.desired_replicas(4.1, 4.0), 2);
+        assert_eq!(f.desired_replicas(100.0, 4.0), 4);
+        assert_eq!(f.desired_replicas(1.0, 0.0), 4, "unknown capacity -> max");
+    }
+
+    #[test]
+    fn fleet_scale_out_is_immediate_scale_in_waits() {
+        let mut f = FleetScaler::new(4);
+        // Load spike at boot: activate immediately.
+        assert_eq!(
+            f.tick(5.0, 16.0, 4.0, 1),
+            FleetDecision::Activate { count: 3 }
+        );
+        // Load drop while all four run: no deactivation inside grace.
+        assert_eq!(f.tick(10.0, 2.0, 4.0, 4), FleetDecision::Hold);
+        // Right-sized tick renews the grace window.
+        assert_eq!(f.tick(20.0, 15.0, 4.0, 4), FleetDecision::Hold);
+        // Drop again: still inside the renewed grace (20 + 25 = 45).
+        assert_eq!(f.tick(40.0, 2.0, 4.0, 4), FleetDecision::Hold);
+        // Past it: drain three replicas.
+        assert_eq!(
+            f.tick(46.0, 2.0, 4.0, 4),
+            FleetDecision::Deactivate { count: 3 }
+        );
+    }
+
+    #[test]
+    fn fleet_activate_ticks_renew_grace() {
+        // A sustained ramp (every tick demanding MORE replicas) must
+        // keep renewing the grace window: the load drop right after
+        // the ramp may not trigger an immediate scale-in.
+        let mut f = FleetScaler::new(4);
+        assert_eq!(
+            f.tick(30.0, 5.0, 4.0, 1),
+            FleetDecision::Activate { count: 1 }
+        );
+        assert_eq!(
+            f.tick(40.0, 9.0, 4.0, 2),
+            FleetDecision::Activate { count: 1 }
+        );
+        assert_eq!(
+            f.tick(50.0, 16.0, 4.0, 3),
+            FleetDecision::Activate { count: 1 }
+        );
+        // Collapse at t=60: the last Activate renewed grace to 75.
+        assert_eq!(f.tick(60.0, 0.5, 4.0, 4), FleetDecision::Hold);
+        assert_eq!(
+            f.tick(76.0, 0.5, 4.0, 4),
+            FleetDecision::Deactivate { count: 3 }
+        );
+    }
+
+    #[test]
+    fn fleet_no_scale_in_before_spawn_time_at_boot() {
+        let mut f = FleetScaler::new(4);
+        assert_eq!(f.tick(5.0, 0.5, 4.0, 4), FleetDecision::Hold);
+        assert_eq!(
+            f.tick(SPAWN_TIME_S + 1.0, 0.5, 4.0, 4),
+            FleetDecision::Deactivate { count: 3 }
+        );
     }
 }

@@ -14,13 +14,18 @@
 //!   * [`throttle`]: binary search for the minimum SLO-satisfying GPU
 //!     frequency (§IV-E);
 //!   * [`autoscaler`]: TP right-sizing with shadow instancing and the
-//!     grace-period policy (§IV-D);
-//!   * [`server`]: the event loop wiring everything to the engine, and
-//!     the Triton-like baseline policies the paper compares against.
+//!     grace-period policy (§IV-D), plus the fleet (replica-count)
+//!     axis of the two-axis autoscaler;
+//!   * [`router`]: the fleet admission router (round-robin /
+//!     least-loaded / projected-headroom);
+//!   * [`server`]: the event loop wiring everything to the engine —
+//!     generalized to an N-replica fleet coordinator — and the
+//!     Triton-like baseline policies the paper compares against.
 
 pub mod autoscaler;
 pub mod perf_model;
 pub mod projection;
+pub mod router;
 pub mod scheduler;
 pub mod scoreboard;
 pub mod server;
@@ -28,6 +33,10 @@ pub mod throttle;
 
 pub use perf_model::PerfModel;
 pub use projection::Projection;
+pub use router::RouterPolicy;
 pub use scheduler::{AdmissionDecision, Scheduler};
 pub use scoreboard::Scoreboard;
-pub use server::{serve_trace, Policy, ServeOutcome};
+pub use server::{
+    serve_fleet, serve_trace, FleetOutcome, FleetSpec, Policy, ReplicaOutcome,
+    ServeOutcome,
+};

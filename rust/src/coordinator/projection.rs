@@ -45,6 +45,26 @@ impl Projection {
         }
         Some((end - self.start_iter) as usize)
     }
+
+    /// Bounds-safe index of the query's LAST running iteration into
+    /// this projection's vectors (`batch` / `kv_blocks` / `T_R`).
+    ///
+    /// The raw [`Self::completion_offset`] can point at or past the
+    /// horizon when the evaluated entry set differs from the one the
+    /// projection was built from (admission control's with/without
+    /// candidate worlds, §IV-C2) or when predictions were bumped after
+    /// the projection was taken (§IV-F).  Such offsets clamp to the
+    /// last projected iteration instead of indexing out of bounds.
+    /// Returns `None` when the query already completed before the
+    /// window, or when the projection is empty.
+    pub fn completion_index(&self, scheduled_iter: u64, pred: u32) -> Option<usize> {
+        let horizon = self.horizon();
+        if horizon == 0 {
+            return None;
+        }
+        let off = self.completion_offset(scheduled_iter, pred)?;
+        Some(off.saturating_sub(1).min(horizon - 1))
+    }
 }
 
 /// Compute the projection at current iteration `k` (vectors start at
@@ -214,6 +234,28 @@ mod tests {
         assert_eq!(p.completion_offset(2, 8), Some(5));
         // Entry ending before the window floor:
         assert_eq!(p.completion_offset(0, 3), None);
+    }
+
+    #[test]
+    fn completion_index_clamps_to_horizon() {
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 100, 10)); // horizon: iters 1..=9 (len 9)
+        let p = project(&sb, 0, 64);
+        assert_eq!(p.horizon(), 9);
+        // In-window: last running iteration of the same entry.
+        assert_eq!(p.completion_index(0, 10), Some(8));
+        // An entry evaluated against this projection but ending far
+        // past its horizon clamps to the last projected iteration.
+        assert_eq!(p.completion_index(0, 1000), Some(8));
+        assert_eq!(p.completion_index(500, 1000), Some(8));
+        // Offset 0 (ends exactly at the window start) stays in bounds.
+        assert_eq!(p.completion_index(0, 1), Some(0));
+        // Already completed before the window: no index.
+        let late = project(&sb, 4, 64);
+        assert_eq!(late.completion_index(0, 3), None);
+        // Empty projection: no index at all.
+        let empty = project(&Scoreboard::new(), 0, 64);
+        assert_eq!(empty.completion_index(0, 10), None);
     }
 
     #[test]

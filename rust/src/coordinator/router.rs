@@ -1,0 +1,123 @@
+//! Fleet admission router: picks the replica that receives each
+//! arriving request.
+//!
+//! The fleet coordinator (GreenLLM/AGFT-style horizontal scaling on top
+//! of the paper's single-engine controller) fronts N replicas with a
+//! router.  Three policies are provided:
+//!
+//!   * `round-robin` — cycle over active replicas (the "N independent
+//!     instances" baseline split);
+//!   * `least-loaded` — fewest outstanding requests (resident batch
+//!     rows + queued arrivals);
+//!   * `projected-headroom` — most *projected* headroom: the minimum of
+//!     the replica's KV headroom (capacity minus projected peak KV
+//!     minus the blocks its queue will demand) and its batch-slot
+//!     headroom, both normalized.  This reuses the paper's §IV-B
+//!     projection as the load signal instead of instantaneous counts.
+
+/// Router policy selecting a replica per arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouterPolicy {
+    /// Cycle over active replicas.
+    #[default]
+    RoundRobin,
+    /// Fewest outstanding (resident + queued) requests.
+    LeastLoaded,
+    /// Largest projected KV/batch headroom (§IV-B projection signal).
+    ProjectedHeadroom,
+}
+
+impl RouterPolicy {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "round-robin" | "rr" => RouterPolicy::RoundRobin,
+            "least-loaded" | "ll" => RouterPolicy::LeastLoaded,
+            "projected-headroom" | "headroom" | "ph" => RouterPolicy::ProjectedHeadroom,
+            other => anyhow::bail!(
+                "unknown router policy {other:?} \
+                 (expected round-robin | least-loaded | projected-headroom)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastLoaded => "least-loaded",
+            RouterPolicy::ProjectedHeadroom => "projected-headroom",
+        }
+    }
+}
+
+/// Normalized headroom score: the binding constraint of KV and batch
+/// headroom (each in (-inf, 1], 1 = completely free). Negative values
+/// mean the replica is already over-committed.
+pub fn headroom_score(
+    kv_capacity: u32,
+    projected_peak_kv: u32,
+    queued_blocks: u32,
+    max_batch: u32,
+    resident_batch: u32,
+    queued_requests: usize,
+) -> f64 {
+    let kv = (kv_capacity as f64 - projected_peak_kv as f64 - queued_blocks as f64)
+        / kv_capacity.max(1) as f64;
+    let batch = (max_batch as f64 - resident_batch as f64 - queued_requests as f64)
+        / max_batch.max(1) as f64;
+    kv.min(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_all_spellings() {
+        assert_eq!(RouterPolicy::parse("rr").unwrap(), RouterPolicy::RoundRobin);
+        assert_eq!(
+            RouterPolicy::parse("round-robin").unwrap(),
+            RouterPolicy::RoundRobin
+        );
+        assert_eq!(
+            RouterPolicy::parse("least-loaded").unwrap(),
+            RouterPolicy::LeastLoaded
+        );
+        assert_eq!(
+            RouterPolicy::parse("projected-headroom").unwrap(),
+            RouterPolicy::ProjectedHeadroom
+        );
+        assert!(RouterPolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for p in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::ProjectedHeadroom,
+        ] {
+            assert_eq!(RouterPolicy::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn headroom_score_binds_on_the_scarcer_resource() {
+        // Plenty of KV, batch nearly full -> batch binds.
+        let s = headroom_score(1000, 100, 0, 8, 7, 0);
+        assert!((s - 0.125).abs() < 1e-12);
+        // Plenty of batch, KV nearly full -> KV binds.
+        let s = headroom_score(100, 90, 5, 64, 1, 0);
+        assert!((s - 0.05).abs() < 1e-12);
+        // Over-committed queues push the score negative.
+        let s = headroom_score(100, 90, 20, 64, 1, 0);
+        assert!(s < 0.0);
+    }
+
+    #[test]
+    fn headroom_score_survives_degenerate_capacities() {
+        // Zero capacities must not divide by zero.
+        let s = headroom_score(0, 0, 0, 0, 0, 0);
+        assert!(s.is_finite());
+    }
+}

@@ -96,13 +96,15 @@ pub fn evaluate_slo_entries(
             if e.lost {
                 continue;
             }
-            let Some(off) = proj.completion_offset(e.scheduled_iter, e.predicted_gen)
+            // Bounds-safe: the query's last iteration (end_iter - 1)
+            // clamped into the horizon even when the entry outlives
+            // the projection (with/without-candidate worlds, §IV-F
+            // prediction bumps).
+            let Some(idx) = proj.completion_index(e.scheduled_iter, e.predicted_gen)
             else {
                 continue;
             };
-            // The query's last iteration is end_iter - 1; clamp into
-            // the horizon.
-            let idx = off.saturating_sub(1).min(t_r.len() - 1);
+            debug_assert!(idx < t_r.len(), "completion index out of horizon");
             if now + t_r[idx] * t_r_scale >= e.deadline_s {
                 violators.push(e.id);
             }

@@ -1,5 +1,6 @@
 //! The serving event loop: throttLL'eM and the baseline policies over
-//! a request trace (paper §V evaluation harness).
+//! a request trace (paper §V evaluation harness), generalized into a
+//! multi-replica FLEET coordinator.
 //!
 //! Policies (the §V-D2 comparison matrix):
 //!   * `triton()`            — KV-only admission, max frequency;
@@ -9,19 +10,37 @@
 //!
 //! The loop is a discrete-event simulation over virtual time: engines
 //! execute iterations back-to-back while non-idle; arrivals, autoscaler
-//! ticks and shadow-instance readiness are decision points.  Admission
-//! happens at iteration boundaries, exactly as inflight batching allows.
+//! ticks, shadow-instance readiness and replica activations are
+//! decision points.  Admission happens at iteration boundaries, exactly
+//! as inflight batching allows.
+//!
+//! Fleet topology ([`serve_fleet`]): N replicas, each owning its own
+//! [`EngineSim`], [`Scoreboard`], DVFS state and §IV-E frequency
+//! controller, fronted by an admission router ([`RouterPolicy`]) that
+//! picks a replica per arrival and re-routes a request on universal
+//! rejection before ever dropping it.  Autoscaling is two-axis: every
+//! replica right-sizes its own tensor parallelism through
+//! [`Autoscaler`] (shadow instancing per replica), while a
+//! [`FleetScaler`] activates/drains whole replicas against the
+//! aggregate arrival rate.  `serve_trace` (== a fleet of one) is the
+//! unchanged single-engine semantics: with `replicas == 1` every code
+//! path below degenerates to the original event loop, so the results
+//! are bit-identical — `tests/fleet_equivalence.rs` pins this.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
-use crate::config::ServingConfig;
-use crate::coordinator::autoscaler::{Autoscaler, ScaleDecision};
+use crate::config::{EngineSpec, ServingConfig};
+use crate::coordinator::autoscaler::{
+    Autoscaler, FleetDecision, FleetScaler, ScaleDecision,
+};
 use crate::coordinator::perf_model::PerfModel;
 use crate::coordinator::projection::project;
+use crate::coordinator::router::{headroom_score, RouterPolicy};
 use crate::coordinator::scheduler::{entry_for, AdmissionDecision, Scheduler};
 use crate::coordinator::scoreboard::Scoreboard;
 use crate::coordinator::throttle::min_slo_frequency;
-use crate::engine::request::{Request, RequestOutcome};
+use crate::engine::kv_cache::blocks_for;
+use crate::engine::request::{Request, RequestId, RequestOutcome};
 use crate::engine::sim::EngineSim;
 use crate::gpusim::dvfs::FREQ_MAX_MHZ;
 use crate::gpusim::power::idle_power_w;
@@ -83,6 +102,8 @@ impl Policy {
 #[derive(Debug, Clone)]
 pub struct TimelinePoint {
     pub t: f64,
+    /// Replica that executed the iteration (0 for single-engine runs).
+    pub replica: usize,
     /// Tensor parallelism of the engine that executed the iteration.
     pub engine_tp: u32,
     pub freq_mhz: u32,
@@ -103,6 +124,69 @@ pub struct ServeOutcome {
     pub shadow_energy_j: f64,
     /// Engine switches performed by the autoscaler.
     pub engine_switches: u32,
+}
+
+/// Fleet topology: replica count and admission-router policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetSpec {
+    /// Number of replicas provisioned (the fleet's maximum size).
+    pub replicas: usize,
+    /// Admission-router policy picking a replica per arrival.
+    pub router: RouterPolicy,
+    /// Enable the replica-count autoscaling axis (only meaningful with
+    /// `Policy::autoscaling` and more than one replica).
+    pub autoscale_replicas: bool,
+}
+
+impl FleetSpec {
+    /// The single-engine deployment `serve_trace` runs on.
+    pub fn single() -> Self {
+        Self {
+            replicas: 1,
+            router: RouterPolicy::RoundRobin,
+            autoscale_replicas: false,
+        }
+    }
+
+    pub fn new(replicas: usize, router: RouterPolicy) -> Self {
+        assert!(replicas >= 1, "a fleet needs at least one replica");
+        Self {
+            replicas,
+            router,
+            autoscale_replicas: true,
+        }
+    }
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        Self::single()
+    }
+}
+
+/// Per-replica slice of a fleet run.
+#[derive(Debug, Clone)]
+pub struct ReplicaOutcome {
+    pub stats: ServingStats,
+    pub shadow_energy_j: f64,
+    pub engine_switches: u32,
+    /// Arrivals the router assigned to this replica.
+    pub routed: u64,
+}
+
+/// Everything a fleet run produces: the aggregate view plus the
+/// per-replica breakdown.
+#[derive(Debug)]
+pub struct FleetOutcome {
+    /// Fleet-aggregate outcome (identical to the single-engine outcome
+    /// when `replicas == 1`).
+    pub total: ServeOutcome,
+    pub replicas: Vec<ReplicaOutcome>,
+    /// Requests moved between replicas on universal rejection.
+    pub rerouted: u64,
+    /// Fleet-axis scale events.
+    pub replica_activations: u32,
+    pub replica_deactivations: u32,
 }
 
 struct EngineRt {
@@ -126,7 +210,7 @@ struct EngineRt {
 }
 
 impl EngineRt {
-    fn new(spec: crate::config::EngineSpec, at: f64) -> Self {
+    fn new(spec: EngineSpec, at: f64) -> Self {
         let mut sim = EngineSim::new(spec, FREQ_MAX_MHZ);
         sim.account_idle(at.max(0.0)); // zero-cost: marks accounting start
         Self {
@@ -173,87 +257,160 @@ impl EngineRt {
     }
 }
 
-/// Serve `requests` (sorted by arrival) under `policy`; returns stats.
-pub fn serve_trace(
-    cfg: &ServingConfig,
-    policy: Policy,
-    model: &PerfModel,
-    requests: &[Request],
-) -> ServeOutcome {
-    debug_assert!(requests.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
-    let sched = Scheduler::new(cfg.slo);
+/// One fleet replica: its engines (more than one only while an old
+/// engine drains after a shadow-instancing switch), its FIFO queue,
+/// its TP-axis autoscaler, and its telemetry.
+struct Replica {
+    id: usize,
+    engines: Vec<EngineRt>,
+    queue: VecDeque<Request>,
+    scaler: Option<Autoscaler>,
+    next_tick: Option<f64>,
+    window_arrivals: u64,
+    stats: ServingStats,
+    outcomes: Vec<RequestOutcome>,
+    timeline: Vec<TimelinePoint>,
+    shadow_energy: f64,
+    /// Energy of engines already drained and retired (fixes the seed's
+    /// leak where `engines.retain(..)` dropped their accumulated
+    /// energy before the final sum).
+    retired_energy: f64,
+    switches: u32,
+    routed: u64,
+    /// Fleet axis: whether the router may assign new arrivals here.
+    active: bool,
+    /// Pending fleet-axis activation (spawn) completion time.
+    activation_ready: Option<f64>,
+    /// Last instant this replica did anything (iteration end, idle
+    /// accounting while powered on, engine retirement) — the end of
+    /// ITS serving window, unlike the fleet-global clock.
+    last_event_s: f64,
+}
 
-    let mut scaler = if policy.autoscaling {
-        Some(Autoscaler::new(cfg.scale_set.clone(), 0))
-    } else {
-        None
-    };
-    let initial_spec = scaler
-        .as_ref()
-        .map(|s| s.current_spec().clone())
-        .unwrap_or_else(|| cfg.engine.clone());
-
-    let mut engines: Vec<EngineRt> = vec![EngineRt::new(initial_spec, 0.0)];
-    let mut queue: VecDeque<Request> = VecDeque::new();
-    let mut next_arrival = 0usize;
-    let mut next_tick = scaler.as_ref().map(|s| s.interval_s);
-    let mut window_arrivals = 0u64;
-
-    let mut stats = ServingStats::default();
-    let mut outcomes = Vec::new();
-    let mut timeline = Vec::new();
-    let mut shadow_energy = 0.0f64;
-    let mut switches = 0u32;
-    let mut now = 0.0f64;
-
-    loop {
-        let arrivals_done = next_arrival >= requests.len();
-        let all_idle = engines.iter().all(|e| e.sim.is_idle());
-        if arrivals_done && queue.is_empty() && all_idle {
-            break;
+impl Replica {
+    fn new(id: usize, cfg: &ServingConfig, policy: Policy) -> Self {
+        let scaler = if policy.autoscaling {
+            Some(Autoscaler::new(cfg.scale_set.clone(), 0))
+        } else {
+            None
+        };
+        let spec = scaler
+            .as_ref()
+            .map(|s| s.current_spec().clone())
+            .unwrap_or_else(|| cfg.engine.clone());
+        let next_tick = scaler.as_ref().map(|s| s.interval_s);
+        Replica {
+            id,
+            engines: vec![EngineRt::new(spec, 0.0)],
+            queue: VecDeque::new(),
+            scaler,
+            next_tick,
+            window_arrivals: 0,
+            stats: ServingStats::default(),
+            outcomes: Vec::new(),
+            timeline: Vec::new(),
+            shadow_energy: 0.0,
+            retired_energy: 0.0,
+            switches: 0,
+            routed: 0,
+            active: true,
+            activation_ready: None,
+            last_event_s: 0.0,
         }
+    }
 
-        // ---- next decision point -------------------------------------
-        let mut decision = f64::INFINITY;
-        if let Some(r) = requests.get(next_arrival) {
-            decision = decision.min(r.arrival_s);
-        }
-        if let Some(t) = next_tick {
-            if !arrivals_done || !queue.is_empty() || !all_idle {
-                decision = decision.min(t);
-            }
-        }
-        if let Some(s) = scaler.as_ref().and_then(|s| s.shadow()) {
-            decision = decision.min(s.ready_at);
-        }
+    fn all_idle(&self) -> bool {
+        self.engines.iter().all(|e| e.sim.is_idle())
+    }
 
-        // ---- run engine iterations up to the decision point ----------
+    fn drained(&self) -> bool {
+        self.queue.is_empty() && self.all_idle()
+    }
+
+    /// Spec a (re)activated replica boots with.
+    fn respec(&self, cfg: &ServingConfig) -> EngineSpec {
+        self.scaler
+            .as_ref()
+            .map(|s| s.current_spec().clone())
+            .unwrap_or_else(|| cfg.engine.clone())
+    }
+
+    /// Router signal: outstanding work (resident rows + queued).
+    fn outstanding(&self) -> u64 {
+        let resident: u64 = self.engines.iter().map(|e| e.sim.batch() as u64).sum();
+        resident + self.queue.len() as u64
+    }
+
+    /// Router signal: projected KV/batch headroom of the accepting
+    /// engine (§IV-B projection), minus what the queue will demand.
+    fn projected_headroom(&self) -> f64 {
+        let Some(e) = self.engines.iter().find(|e| e.accepting) else {
+            return f64::NEG_INFINITY;
+        };
+        let spec = e.sim.spec();
+        let proj = project(&e.sb, e.sim.iter_index(), spec.block_tokens);
+        let queued_blocks: u32 = self
+            .queue
+            .iter()
+            .map(|r| blocks_for(r.prompt_tokens, spec.block_tokens))
+            .sum();
+        headroom_score(
+            spec.kv_blocks,
+            proj.peak_kv(),
+            queued_blocks,
+            spec.max_batch,
+            e.sim.batch(),
+            self.queue.len(),
+        )
+    }
+
+    /// Run this replica's engines up to the decision point, then retire
+    /// drained non-accepting engines (capturing their energy). Returns
+    /// whether any iteration executed.
+    fn run_until(
+        &mut self,
+        decision: f64,
+        cfg: &ServingConfig,
+        policy: Policy,
+        model: &PerfModel,
+        sched: &Scheduler,
+    ) -> bool {
         let mut progressed = false;
-        for idx in 0..engines.len() {
+        for idx in 0..self.engines.len() {
             loop {
-                let e = &mut engines[idx];
+                let e = &mut self.engines[idx];
                 if e.sim.is_idle() || e.cursor >= decision {
                     break;
                 }
                 if e.accepting {
                     try_admissions(
-                        e, &mut queue, cfg, policy, model, &sched, &mut stats,
+                        e,
+                        &mut self.queue,
+                        cfg,
+                        policy,
+                        model,
+                        sched,
+                        &mut self.stats,
                     );
                 }
-                let e = &mut engines[idx];
+                let e = &mut self.engines[idx];
                 if e.sim.is_idle() {
                     break;
                 }
-                let shadow_p = shadow_power(scaler.as_ref(), e.cursor);
+                let shadow_p = shadow_power(self.scaler.as_ref(), e.cursor);
                 let report = e.sim.run_iteration(e.cursor);
                 e.cursor = report.start_s + report.duration_s;
+                if e.cursor > self.last_event_s {
+                    self.last_event_s = e.cursor;
+                }
                 progressed = true;
                 // Telemetry
-                stats.power.push(report.power_w);
-                stats.freq.push(report.freq_mhz as f64);
-                stats.iter_tbt.push(report.duration_s);
-                timeline.push(TimelinePoint {
+                self.stats.power.push(report.power_w);
+                self.stats.freq.push(report.freq_mhz as f64);
+                self.stats.iter_tbt.push(report.duration_s);
+                self.timeline.push(TimelinePoint {
                     t: report.start_s,
+                    replica: self.id,
                     engine_tp: e.sim.spec().tensor_parallel,
                     freq_mhz: report.freq_mhz,
                     power_w: report.power_w,
@@ -268,15 +425,15 @@ pub fn serve_trace(
                 // livelock the evict/re-admit cycle.
                 for req in &report.evicted {
                     e.sb.strike(req.id);
-                    queue.push_front(req.clone());
+                    self.queue.push_front(req.clone());
                     e.blocked_head = Some((req.id, e.completions));
                 }
                 let had_completions =
                     !report.completed.is_empty() || !report.evicted.is_empty();
                 for o in &report.completed {
                     e.sb.strike(o.id);
-                    stats.record_outcome(o);
-                    outcomes.push(o.clone());
+                    self.stats.record_outcome(o);
+                    self.outcomes.push(o.clone());
                 }
                 // §IV-F: bump predictions the reality has outrun.
                 let live: Vec<(u64, u32)> = e
@@ -293,23 +450,219 @@ pub fn serve_trace(
                 // batch (§IV-E is admission-triggered; completions are
                 // the other composition-change event).
                 if policy.throttling && (had_completions || !bumped.is_empty()) {
-                    rethrottle(e, !queue.is_empty(), model, &sched);
+                    rethrottle(e, !self.queue.is_empty(), model, sched);
                 }
             }
         }
 
-        // Drop drained non-accepting engines (graceful shutdown done).
-        engines.retain(|e| e.accepting || !e.sim.is_idle());
+        // Retire drained non-accepting engines (graceful shutdown
+        // done), folding their accumulated energy and final clock
+        // into the replica.
+        let retired = &mut self.retired_energy;
+        let last = &mut self.last_event_s;
+        self.engines.retain(|e| {
+            let keep = e.accepting || !e.sim.is_idle();
+            if !keep {
+                *retired += e.sim.total_energy_j();
+                if e.cursor > *last {
+                    *last = e.cursor;
+                }
+            }
+            keep
+        });
+        progressed
+    }
+
+    /// Wake idle accepting engines at `now` for immediate admission.
+    fn wake_and_admit(
+        &mut self,
+        now: f64,
+        cfg: &ServingConfig,
+        policy: Policy,
+        model: &PerfModel,
+        sched: &Scheduler,
+    ) {
+        let mut powered_on = false;
+        for e in self.engines.iter_mut().filter(|e| e.accepting) {
+            powered_on = true;
+            if e.sim.is_idle() && e.cursor < now {
+                e.sim.account_idle(now);
+                e.cursor = now;
+            }
+            if e.sim.is_idle() {
+                try_admissions(e, &mut self.queue, cfg, policy, model, sched, &mut self.stats);
+            }
+        }
+        // A powered-on replica is live (burning at least idle power)
+        // even when no iteration runs: its serving window extends.
+        if powered_on && now > self.last_event_s {
+            self.last_event_s = now;
+        }
+    }
+
+    /// Fast-forward a stale tick cadence before handing rerouted work
+    /// to this replica.  A drained replica's `next_tick` is excluded
+    /// from the decision min (nothing to do) and freezes; if work is
+    /// later rerouted here, the frozen timestamp would re-enter the
+    /// decision min and drag the fleet's event clock BACKWARDS.
+    fn catch_up_tick(&mut self, now: f64) {
+        if let (Some(s), Some(t)) = (self.scaler.as_ref(), self.next_tick) {
+            if t < now {
+                let intervals = ((now - t) / s.interval_s).ceil();
+                self.next_tick = Some(t + intervals * s.interval_s);
+            }
+        }
+    }
+
+    /// TP-axis monitoring tick.
+    fn tick_scaler(&mut self, now: f64) {
+        if let (Some(s), Some(t)) = (self.scaler.as_mut(), self.next_tick) {
+            if now >= t {
+                let rps = self.window_arrivals as f64 / s.interval_s;
+                self.window_arrivals = 0;
+                if let ScaleDecision::StartShadow { target } = s.tick(now, rps) {
+                    let _ = target; // energy accounted at switch time
+                }
+                self.next_tick = Some(t + s.interval_s);
+            }
+        }
+    }
+
+    /// Shadow instance ready -> transition to the new engine size.
+    fn complete_shadow(&mut self, now: f64) {
+        if let Some(s) = self.scaler.as_mut() {
+            if let Some(sh) = s.shadow() {
+                if now >= sh.ready_at {
+                    let warm = idle_power_w(&s.specs()[sh.target], FREQ_MAX_MHZ)
+                        * (sh.ready_at - sh.started_at);
+                    self.shadow_energy += warm;
+                    let new_idx = s.poll_ready(now).expect("shadow was ready");
+                    let spec = s.specs()[new_idx].clone();
+                    for e in self.engines.iter_mut() {
+                        e.accepting = false;
+                    }
+                    self.engines.push(EngineRt::new(spec, now));
+                    self.switches += 1;
+                }
+            }
+        }
+    }
+
+    /// Fleet axis: stop accepting, drain, and power off when idle.
+    fn deactivate(&mut self, now: f64) {
+        self.active = false;
+        self.activation_ready = None;
+        for e in self.engines.iter_mut() {
+            e.accepting = false;
+        }
+        if let Some(s) = self.scaler.as_mut() {
+            // An in-flight TP shadow is discarded, but the warm-up
+            // idle power it burned until now is real energy — charge
+            // it, mirroring complete_shadow's lump accounting.
+            if let Some(sh) = s.shadow() {
+                let warmed = (now.min(sh.ready_at) - sh.started_at).max(0.0);
+                self.shadow_energy +=
+                    idle_power_w(&s.specs()[sh.target], FREQ_MAX_MHZ) * warmed;
+            }
+            s.cancel_shadow();
+        }
+        self.next_tick = None;
+        self.window_arrivals = 0;
+    }
+}
+
+/// Serve `requests` (sorted by arrival) under `policy` on a fleet of
+/// one; returns the single-engine outcome. Exactly equivalent to
+/// `serve_fleet(.., &FleetSpec::single()).total`.
+pub fn serve_trace(
+    cfg: &ServingConfig,
+    policy: Policy,
+    model: &PerfModel,
+    requests: &[Request],
+) -> ServeOutcome {
+    serve_fleet(cfg, policy, model, requests, &FleetSpec::single()).total
+}
+
+/// Serve `requests` (sorted by arrival) on `fleet.replicas` replicas
+/// under `policy`; returns per-replica and aggregate outcomes.
+pub fn serve_fleet(
+    cfg: &ServingConfig,
+    policy: Policy,
+    model: &PerfModel,
+    requests: &[Request],
+    fleet: &FleetSpec,
+) -> FleetOutcome {
+    debug_assert!(requests.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    assert!(fleet.replicas >= 1, "a fleet needs at least one replica");
+    let sched = Scheduler::new(cfg.slo);
+    let n = fleet.replicas;
+
+    let mut replicas: Vec<Replica> =
+        (0..n).map(|id| Replica::new(id, cfg, policy)).collect();
+
+    let fleet_scaling = fleet.autoscale_replicas && policy.autoscaling && n > 1;
+    let mut fleet_scaler = fleet_scaling.then(|| FleetScaler::new(n));
+    let mut fleet_tick = fleet_scaler.as_ref().map(|s| s.interval_s);
+    let mut fleet_window = 0u64;
+
+    let mut rr_cursor = 0usize;
+    let mut reroutes: HashMap<RequestId, usize> = HashMap::new();
+    let mut rerouted = 0u64;
+    let mut activations = 0u32;
+    let mut deactivations = 0u32;
+
+    let mut next_arrival = 0usize;
+    let mut now = 0.0f64;
+
+    loop {
+        let arrivals_done = next_arrival >= requests.len();
+        if arrivals_done && replicas.iter().all(Replica::drained) {
+            break;
+        }
+
+        // ---- next decision point -------------------------------------
+        let mut decision = f64::INFINITY;
+        if let Some(r) = requests.get(next_arrival) {
+            decision = decision.min(r.arrival_s);
+        }
+        for rp in &replicas {
+            if let Some(t) = rp.next_tick {
+                if !arrivals_done || !rp.queue.is_empty() || !rp.all_idle() {
+                    decision = decision.min(t);
+                }
+            }
+            if let Some(s) = rp.scaler.as_ref().and_then(|s| s.shadow()) {
+                decision = decision.min(s.ready_at);
+            }
+            if let Some(at) = rp.activation_ready {
+                decision = decision.min(at);
+            }
+        }
+        if let Some(t) = fleet_tick {
+            // Reaching this point means work remains somewhere.
+            decision = decision.min(t);
+        }
+
+        // ---- run engine iterations up to the decision point ----------
+        let mut progressed = false;
+        for rp in replicas.iter_mut() {
+            progressed |= rp.run_until(decision, cfg, policy, model, &sched);
+        }
 
         if decision.is_infinite() {
             if !progressed {
-                // Queue blocked with every engine idle: resolve it.
-                force_progress(
-                    &mut engines, &mut queue, cfg, policy, model, &sched,
-                    &mut stats, now,
-                );
-                if queue.is_empty() && engines.iter().all(|e| e.sim.is_idle()) {
-                    continue;
+                // Queues blocked with every engine idle: resolve them.
+                for idx in 0..replicas.len() {
+                    resolve_blocked(
+                        &mut replicas,
+                        idx,
+                        cfg,
+                        model,
+                        &sched,
+                        now,
+                        &mut reroutes,
+                        &mut rerouted,
+                    );
                 }
             }
             continue;
@@ -318,13 +671,15 @@ pub fn serve_trace(
         // ---- handle the decision point --------------------------------
         now = decision;
 
-        // Arrivals at `now`.
+        // Arrivals at `now`, routed to a replica each.
         while let Some(r) = requests.get(next_arrival) {
             if r.arrival_s > now {
                 break;
             }
+            let target = route_arrival(fleet, &mut rr_cursor, &replicas);
+            let rp = &mut replicas[target];
             // Feed the accepting engine's load estimator.
-            if let Some(e) = engines.iter_mut().find(|e| e.accepting) {
+            if let Some(e) = rp.engines.iter_mut().find(|e| e.accepting) {
                 e.recent_arrivals.push_back(r.arrival_s);
                 e.prompt_ema = if e.prompt_ema == 0.0 {
                     r.prompt_tokens as f64
@@ -332,77 +687,297 @@ pub fn serve_trace(
                     0.9 * e.prompt_ema + 0.1 * r.prompt_tokens as f64
                 };
             }
-            queue.push_back(r.clone());
-            window_arrivals += 1;
+            rp.queue.push_back(r.clone());
+            rp.window_arrivals += 1;
+            rp.routed += 1;
+            fleet_window += 1;
             next_arrival += 1;
         }
         // Wake idle accepting engines for immediate admission.
-        for e in engines.iter_mut().filter(|e| e.accepting) {
-            if e.sim.is_idle() && e.cursor < now {
-                e.sim.account_idle(now);
-                e.cursor = now;
-            }
-            if e.sim.is_idle() {
-                try_admissions(e, &mut queue, cfg, policy, model, &sched, &mut stats);
-            }
+        for rp in replicas.iter_mut() {
+            rp.wake_and_admit(now, cfg, policy, model, &sched);
         }
 
-        // Autoscaler tick.
-        if let (Some(s), Some(t)) = (scaler.as_mut(), next_tick) {
+        // TP-axis autoscaler ticks (active replicas only).
+        for rp in replicas.iter_mut().filter(|r| r.active) {
+            rp.tick_scaler(now);
+        }
+
+        // Shadow instances ready -> transitions.
+        for rp in replicas.iter_mut().filter(|r| r.active) {
+            rp.complete_shadow(now);
+        }
+
+        // Fleet-axis tick: activate/drain whole replicas.
+        if let (Some(fs), Some(t)) = (fleet_scaler.as_mut(), fleet_tick) {
             if now >= t {
-                let rps = window_arrivals as f64 / s.interval_s;
-                window_arrivals = 0;
-                if let ScaleDecision::StartShadow { target } = s.tick(now, rps) {
-                    let _ = target; // energy accounted at switch time
+                let rps = fleet_window as f64 / fs.interval_s;
+                fleet_window = 0;
+                let active_count = replicas.iter().filter(|r| r.active).count();
+                let pending = replicas
+                    .iter()
+                    .filter(|r| r.activation_ready.is_some())
+                    .count();
+                let per_replica_rps = if active_count == 0 {
+                    cfg.engine.max_load_rps
+                } else {
+                    replicas
+                        .iter()
+                        .filter(|r| r.active)
+                        .map(|r| r.respec(cfg).max_load_rps)
+                        .sum::<f64>()
+                        / active_count as f64
+                };
+                let provisioned = active_count + pending;
+                match fs.tick(now, rps, per_replica_rps, provisioned) {
+                    FleetDecision::Hold => {}
+                    FleetDecision::Activate { count } => {
+                        let mut remaining = count;
+                        for rp in replicas.iter_mut() {
+                            if remaining == 0 {
+                                break;
+                            }
+                            if !rp.active && rp.activation_ready.is_none() {
+                                rp.activation_ready = Some(now + fs.spawn_time_s);
+                                remaining -= 1;
+                            }
+                        }
+                    }
+                    FleetDecision::Deactivate { count } => {
+                        let mut remaining = count;
+                        // Cancel pending spawns first — the cheapest
+                        // capacity to shed (FleetScaler's provisioned
+                        // count includes them). The partial warm-up
+                        // already burned is still charged.
+                        for rp in replicas.iter_mut() {
+                            if remaining == 0 {
+                                break;
+                            }
+                            if let Some(at) = rp.activation_ready {
+                                let warmed =
+                                    (now - (at - fs.spawn_time_s)).max(0.0);
+                                let spec = rp.respec(cfg);
+                                rp.shadow_energy +=
+                                    idle_power_w(&spec, FREQ_MAX_MHZ) * warmed;
+                                rp.activation_ready = None;
+                                remaining -= 1;
+                            }
+                        }
+                        for _ in 0..remaining {
+                            let actives =
+                                replicas.iter().filter(|r| r.active).count();
+                            if actives <= 1 {
+                                break;
+                            }
+                            // Drain the active replica with the least
+                            // outstanding work (ties -> highest index).
+                            let Some(j) = replicas
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, r)| r.active)
+                                .min_by_key(|(i, r)| {
+                                    (r.outstanding(), usize::MAX - *i)
+                                })
+                                .map(|(i, _)| i)
+                            else {
+                                break;
+                            };
+                            replicas[j].deactivate(now);
+                            deactivations += 1;
+                            // Redistribute its queued work.
+                            let moved: Vec<Request> =
+                                replicas[j].queue.drain(..).collect();
+                            for req in moved {
+                                let tgt =
+                                    route_arrival(fleet, &mut rr_cursor, &replicas);
+                                replicas[tgt].catch_up_tick(now);
+                                replicas[tgt].queue.push_back(req);
+                            }
+                        }
+                    }
                 }
-                next_tick = Some(t + s.interval_s);
+                fleet_tick = Some(t + fs.interval_s);
             }
         }
 
-        // Shadow instance ready -> transition.
-        if let Some(s) = scaler.as_mut() {
-            if let Some(sh) = s.shadow() {
-                if now >= sh.ready_at {
-                    let warm = idle_power_w(&s.specs()[sh.target], FREQ_MAX_MHZ)
-                        * (sh.ready_at - sh.started_at);
-                    shadow_energy += warm;
-                    let new_idx = s.poll_ready(now).expect("shadow was ready");
-                    for e in engines.iter_mut() {
-                        e.accepting = false;
+        // Replica activations completing their spawn.
+        if let Some(fs) = fleet_scaler.as_ref() {
+            for rp in replicas.iter_mut() {
+                if let Some(at) = rp.activation_ready {
+                    if now >= at {
+                        rp.activation_ready = None;
+                        let spec = rp.respec(cfg);
+                        // Warm-up energy, same accounting as a shadow.
+                        rp.shadow_energy +=
+                            idle_power_w(&spec, FREQ_MAX_MHZ) * fs.spawn_time_s;
+                        rp.engines.push(EngineRt::new(spec, now));
+                        rp.active = true;
+                        rp.next_tick =
+                            rp.scaler.as_ref().map(|s| now + s.interval_s);
+                        activations += 1;
                     }
-                    engines.push(EngineRt::new(s.specs()[new_idx].clone(), now));
-                    switches += 1;
                 }
             }
         }
 
         // Blocked-queue guard at this decision point.
-        let all_idle = engines.iter().all(|e| e.sim.is_idle());
-        if all_idle && !queue.is_empty() {
-            force_progress(
-                &mut engines, &mut queue, cfg, policy, model, &sched, &mut stats,
-                now,
-            );
+        for idx in 0..replicas.len() {
+            if replicas[idx].all_idle() && !replicas[idx].queue.is_empty() {
+                resolve_blocked(
+                    &mut replicas,
+                    idx,
+                    cfg,
+                    model,
+                    &sched,
+                    now,
+                    &mut reroutes,
+                    &mut rerouted,
+                );
+            }
         }
     }
 
-    stats.wall_s = engines
-        .iter()
-        .map(|e| e.cursor)
-        .fold(now, f64::max);
-    stats.total_energy_j = engines
-        .iter()
-        .map(|e| e.sim.total_energy_j())
-        .sum::<f64>()
-        + shadow_energy;
-    outcomes.sort_by(|a, b| a.id.cmp(&b.id));
-    ServeOutcome {
-        stats,
-        outcomes,
-        timeline,
-        shadow_energy_j: shadow_energy,
-        engine_switches: switches,
+    // ---- finalize -----------------------------------------------------
+    let mut replica_outcomes = Vec::with_capacity(n);
+    let mut parts: Vec<ServeOutcome> = Vec::with_capacity(n);
+    for mut rp in replicas {
+        // Fleet clock for the aggregate (bit-identical to the single-
+        // engine loop when replicas == 1).
+        rp.stats.wall_s = rp.engines.iter().map(|e| e.cursor).fold(now, f64::max);
+        rp.stats.total_energy_j = rp
+            .engines
+            .iter()
+            .map(|e| e.sim.total_energy_j())
+            .sum::<f64>()
+            + rp.retired_energy
+            + rp.shadow_energy;
+        rp.outcomes.sort_by(|a, b| a.id.cmp(&b.id));
+        // The per-replica view gets the replica's OWN serving-window
+        // end, not the fleet's: a replica drained and powered off at
+        // t=60 of a 240 s run reports wall_s ~60 (its throughput and
+        // tokens/s stay meaningful).
+        let mut replica_stats = rp.stats.clone();
+        replica_stats.wall_s = rp
+            .engines
+            .iter()
+            .map(|e| e.cursor)
+            .fold(rp.last_event_s, f64::max);
+        replica_outcomes.push(ReplicaOutcome {
+            stats: replica_stats,
+            shadow_energy_j: rp.shadow_energy,
+            engine_switches: rp.switches,
+            routed: rp.routed,
+        });
+        parts.push(ServeOutcome {
+            stats: rp.stats,
+            outcomes: rp.outcomes,
+            timeline: rp.timeline,
+            shadow_energy_j: rp.shadow_energy,
+            engine_switches: rp.switches,
+        });
     }
+    let total = if parts.len() == 1 {
+        // Fleet of one: hand back the replica's outcome verbatim so the
+        // single-engine path stays bit-identical.
+        parts.pop().unwrap()
+    } else {
+        let mut stats = ServingStats::default();
+        let mut outcomes = Vec::new();
+        let mut timeline = Vec::new();
+        let mut shadow = 0.0f64;
+        let mut switches = 0u32;
+        for part in parts {
+            stats.merge_from(&part.stats);
+            outcomes.extend(part.outcomes);
+            timeline.extend(part.timeline);
+            shadow += part.shadow_energy_j;
+            switches += part.engine_switches;
+        }
+        outcomes.sort_by(|a, b| a.id.cmp(&b.id));
+        timeline.sort_by(|a, b| {
+            a.t.partial_cmp(&b.t).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        ServeOutcome {
+            stats,
+            outcomes,
+            timeline,
+            shadow_energy_j: shadow,
+            engine_switches: switches,
+        }
+    };
+    FleetOutcome {
+        total,
+        replicas: replica_outcomes,
+        rerouted,
+        replica_activations: activations,
+        replica_deactivations: deactivations,
+    }
+}
+
+/// Pick the replica an arrival is routed to.
+fn route_arrival(fleet: &FleetSpec, rr_cursor: &mut usize, replicas: &[Replica]) -> usize {
+    let active: Vec<usize> = replicas
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.active && r.engines.iter().any(|e| e.accepting))
+        .map(|(i, _)| i)
+        .collect();
+    match active.len() {
+        0 => 0, // unreachable: the fleet axis keeps >= 1 active
+        1 => active[0],
+        _ => match fleet.router {
+            RouterPolicy::RoundRobin => {
+                let i = active[*rr_cursor % active.len()];
+                *rr_cursor += 1;
+                i
+            }
+            RouterPolicy::LeastLoaded => active
+                .iter()
+                .copied()
+                .min_by_key(|&i| replicas[i].outstanding())
+                .unwrap(),
+            RouterPolicy::ProjectedHeadroom => {
+                let mut best = active[0];
+                let mut best_score = f64::NEG_INFINITY;
+                for &i in &active {
+                    let score = replicas[i].projected_headroom();
+                    if score > best_score {
+                        best_score = score;
+                        best = i;
+                    }
+                }
+                best
+            }
+        },
+    }
+}
+
+/// Replica (other than `from`) best suited to take a request no engine
+/// at `from` can ever hold: must be active, accepting, and have the
+/// total KV capacity for the prompt; prefer the most free KV.
+fn best_reroute_target(
+    replicas: &[Replica],
+    from: usize,
+    prompt_tokens: u32,
+) -> Option<usize> {
+    let mut best: Option<(u32, usize)> = None;
+    for (j, rp) in replicas.iter().enumerate() {
+        if j == from || !rp.active {
+            continue;
+        }
+        let Some(e) = rp.engines.iter().find(|e| e.accepting) else {
+            continue;
+        };
+        let spec = e.sim.spec();
+        if blocks_for(prompt_tokens, spec.block_tokens) > spec.kv_blocks {
+            continue; // could never fit even empty
+        }
+        let free = e.sim.kv_blocks_free();
+        if best.map(|(bf, _)| free > bf).unwrap_or(true) {
+            best = Some((free, j));
+        }
+    }
+    best.map(|(_, j)| j)
 }
 
 fn shadow_power(scaler: Option<&Autoscaler>, t: f64) -> f64 {
@@ -519,52 +1094,89 @@ fn rethrottle(e: &mut EngineRt, queue_pressure: bool, model: &PerfModel, sched: 
     e.sim.dvfs.set(now, f);
 }
 
-/// The engine is idle but the queue head cannot pass admission: admit
-/// it marked lost when it physically fits, otherwise drop it (it could
-/// never be served by this deployment).
-fn force_progress(
-    engines: &mut [EngineRt],
-    queue: &mut VecDeque<Request>,
+/// The replica's queue head cannot pass admission with every engine
+/// idle: admit it marked lost when it physically fits; otherwise hand
+/// it to another replica with enough total KV capacity.  A request is
+/// dropped only on UNIVERSAL rejection — no replica could ever serve
+/// it (or it has already been bounced through every other replica).
+#[allow(clippy::too_many_arguments)]
+fn resolve_blocked(
+    replicas: &mut [Replica],
+    idx: usize,
     cfg: &ServingConfig,
-    _policy: Policy,
     model: &PerfModel,
     sched: &Scheduler,
-    stats: &mut ServingStats,
     now: f64,
+    reroutes: &mut HashMap<RequestId, usize>,
+    rerouted: &mut u64,
 ) {
-    let Some(e) = engines.iter_mut().find(|e| e.accepting) else {
-        return;
-    };
-    e.sim.account_idle(now);
-    e.cursor = e.cursor.max(now);
-    let Some(req) = queue.front() else { return };
-    if e.sim.kv_fits(req.prompt_tokens) {
-        let adjusted =
-            conservative_adjust(req.predicted_gen, cfg.predictor_p95_error, cfg.max_tokens);
-        let entry = entry_for(
-            req.id,
-            req.prompt_tokens,
-            adjusted,
-            req.arrival_s,
-            e.sim.iter_index(),
-            &sched.slo,
-        );
-        e.sb.insert(entry);
-        e.sb.mark_lost(req.id);
-        let req = queue.pop_front().unwrap();
-        let id = req.id;
-        if e.sim.admit(req, e.cursor, true).is_err() {
-            e.sb.strike(id);
-            stats.dropped += 1;
+    let n = replicas.len();
+    let unplaceable: Option<Request> = {
+        let rp = &mut replicas[idx];
+        if let Some(e) = rp.engines.iter_mut().find(|e| e.accepting) {
+            e.sim.account_idle(now);
+            e.cursor = e.cursor.max(now);
+            if e.cursor > rp.last_event_s {
+                rp.last_event_s = e.cursor;
+            }
+            let Some(req) = rp.queue.front() else { return };
+            if e.sim.kv_fits(req.prompt_tokens) {
+                let adjusted = conservative_adjust(
+                    req.predicted_gen,
+                    cfg.predictor_p95_error,
+                    cfg.max_tokens,
+                );
+                let entry = entry_for(
+                    req.id,
+                    req.prompt_tokens,
+                    adjusted,
+                    req.arrival_s,
+                    e.sim.iter_index(),
+                    &sched.slo,
+                );
+                e.sb.insert(entry);
+                e.sb.mark_lost(req.id);
+                let req = rp.queue.pop_front().unwrap();
+                let id = req.id;
+                if e.sim.admit(req, e.cursor, true).is_err() {
+                    e.sb.strike(id);
+                    rp.stats.dropped += 1;
+                } else {
+                    let spec = e.sim.spec().clone();
+                    let proj = project(&e.sb, e.sim.iter_index(), spec.block_tokens);
+                    let f = min_slo_frequency(
+                        model, &spec, &sched.slo, &e.sb, &proj, now, 1.0,
+                    );
+                    e.sim.dvfs.set(now, f);
+                }
+                None
+            } else {
+                rp.queue.pop_front()
+            }
         } else {
-            let spec = e.sim.spec().clone();
-            let proj = project(&e.sb, e.sim.iter_index(), spec.block_tokens);
-            let f = min_slo_frequency(model, &spec, &sched.slo, &e.sb, &proj, now, 1.0);
-            e.sim.dvfs.set(now, f);
+            // No accepting engine (a deactivated replica still holding
+            // re-queued evictions): hand the head to the fleet.
+            rp.queue.pop_front()
         }
+    };
+    let Some(req) = unplaceable else { return };
+
+    let hops = reroutes.entry(req.id).or_insert(0);
+    let target = if *hops + 1 < n {
+        best_reroute_target(replicas, idx, req.prompt_tokens)
     } else {
-        queue.pop_front();
-        stats.dropped += 1;
+        None
+    };
+    match target {
+        Some(j) => {
+            *hops += 1;
+            *rerouted += 1;
+            replicas[j].catch_up_tick(now);
+            replicas[j].queue.push_back(req);
+        }
+        None => {
+            replicas[idx].stats.dropped += 1;
+        }
     }
 }
 
@@ -684,5 +1296,100 @@ mod tests {
             assert!(o.e2e_s > 0.0 && o.ttft_s > 0.0);
             assert!(o.e2e_s >= o.ttft_s);
         }
+    }
+
+    #[test]
+    fn fleet_round_robin_splits_arrivals_evenly() {
+        let spec = llama2_13b(2);
+        let cfg = ServingConfig::triton(spec.clone());
+        let m = model_for(&spec);
+        let reqs = quick_trace(3.0, 90.0, 5);
+        let fleet = FleetSpec {
+            replicas: 4,
+            router: RouterPolicy::RoundRobin,
+            autoscale_replicas: false,
+        };
+        let out = serve_fleet(&cfg, Policy::triton(), &m, &reqs, &fleet);
+        assert_eq!(out.replicas.len(), 4);
+        let routed: Vec<u64> = out.replicas.iter().map(|r| r.routed).collect();
+        assert_eq!(routed.iter().sum::<u64>(), reqs.len() as u64);
+        let max = *routed.iter().max().unwrap();
+        let min = *routed.iter().min().unwrap();
+        assert!(max - min <= 1, "uneven split: {routed:?}");
+        // Conservation across the fleet.
+        assert_eq!(
+            out.total.stats.completed + out.total.stats.dropped,
+            reqs.len() as u64
+        );
+        // Per-replica stats sum to the aggregate.
+        let sum: u64 = out.replicas.iter().map(|r| r.stats.completed).sum();
+        assert_eq!(sum, out.total.stats.completed);
+        let energy: f64 =
+            out.replicas.iter().map(|r| r.stats.total_energy_j).sum();
+        assert!((energy - out.total.stats.total_energy_j).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fleet_least_loaded_and_headroom_serve_everything() {
+        let spec = llama2_13b(2);
+        let cfg = ServingConfig::throttllem(spec.clone());
+        let m = model_for(&spec);
+        let reqs = quick_trace(4.0, 90.0, 6);
+        for router in [RouterPolicy::LeastLoaded, RouterPolicy::ProjectedHeadroom] {
+            let fleet = FleetSpec {
+                replicas: 2,
+                router,
+                autoscale_replicas: false,
+            };
+            let out = serve_fleet(&cfg, Policy::throttle_only(), &m, &reqs, &fleet);
+            assert_eq!(
+                out.total.stats.completed + out.total.stats.dropped,
+                reqs.len() as u64,
+                "router {:?}",
+                router
+            );
+            // Both replicas must actually receive work at this load.
+            assert!(out.replicas.iter().all(|r| r.routed > 0));
+        }
+    }
+
+    #[test]
+    fn fleet_deactivates_replicas_under_low_load() {
+        let set = vec![llama2_13b(1), llama2_13b(2), llama2_13b(4)];
+        let m = PerfModel::train(&set, 40, 0);
+        let cfg = ServingConfig::autoscaled(set);
+        // ~0.5 RPS over 4 replicas: one TP1 replica suffices.
+        let reqs = quick_trace(0.5, 240.0, 7);
+        let fleet = FleetSpec::new(4, RouterPolicy::LeastLoaded);
+        let out = serve_fleet(&cfg, Policy::throttllem(), &m, &reqs, &fleet);
+        assert!(
+            out.replica_deactivations >= 1,
+            "expected fleet scale-in, got {} deactivations",
+            out.replica_deactivations
+        );
+        assert_eq!(
+            out.total.stats.completed + out.total.stats.dropped,
+            reqs.len() as u64
+        );
+    }
+
+    #[test]
+    fn reroute_targets_prefer_capacity() {
+        let policy = Policy::throttle_only();
+        let cfg_small = ServingConfig::throttllem(llama2_13b(1)); // 120 blocks
+        let cfg_big = ServingConfig::throttllem(llama2_13b(2)); // 439 blocks
+        let replicas = vec![
+            Replica::new(0, &cfg_small, policy),
+            Replica::new(1, &cfg_big, policy),
+            Replica::new(2, &cfg_small, policy),
+        ];
+        // 20k-token prompt: 313 blocks; only the TP2 replica can ever
+        // hold it.
+        assert_eq!(best_reroute_target(&replicas, 0, 20_000), Some(1));
+        // 64k tokens: 1000 blocks; nobody can.
+        assert_eq!(best_reroute_target(&replicas, 0, 64_000), None);
+        // From the big replica itself: the small ones can hold a small
+        // prompt; ties prefer the most free KV (equal here -> first).
+        assert_eq!(best_reroute_target(&replicas, 1, 64), Some(0));
     }
 }

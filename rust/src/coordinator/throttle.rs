@@ -34,14 +34,37 @@ pub fn min_slo_frequency(
     now: f64,
     t_r_scale: f64,
 ) -> u32 {
+    min_slo_frequency_on_grid(&frequency_grid(), model, spec, slo, sb, proj, now, t_r_scale)
+}
+
+/// [`min_slo_frequency`] over an explicit ascending frequency grid.
+///
+/// Hardened for degenerate grids: an empty grid falls back to
+/// [`FREQ_MAX_MHZ`], a single-entry grid (lo == hi) returns that sole
+/// setting without entering the search, and the bisection loop
+/// maintains `lo < hi` so it can neither underflow nor spin.
+#[allow(clippy::too_many_arguments)]
+pub fn min_slo_frequency_on_grid(
+    grid: &[u32],
+    model: &PerfModel,
+    spec: &EngineSpec,
+    slo: &SloSpec,
+    sb: &Scoreboard,
+    proj: &Projection,
+    now: f64,
+    t_r_scale: f64,
+) -> u32 {
+    let Some(&fallback) = grid.last() else {
+        // Empty grid: nothing to search; run flat out.
+        return FREQ_MAX_MHZ;
+    };
     if sb.any_lost() {
         // Attempt to recover the lost query's SLO at peak performance.
-        return FREQ_MAX_MHZ;
+        return fallback;
     }
     if proj.horizon() == 0 {
-        return FREQ_MAX_MHZ;
+        return fallback;
     }
-    let grid = frequency_grid();
     let entries: Vec<crate::coordinator::scoreboard::Entry> =
         sb.visible().copied().collect();
     // Deadlines are tightened by the safety slack (evaluate_slo
@@ -63,17 +86,19 @@ pub fn min_slo_frequency(
 
     // Monotone predicate (higher f => faster => SLOs easier):
     // binary search for the first passing grid index.
-    let (mut lo, mut hi) = (0usize, grid.len() - 1);
-    if ok(grid[lo]) {
-        return grid[lo];
+    if ok(grid[0]) {
+        return grid[0];
     }
     // invariant: grid[lo] fails, grid[hi] passes (guaranteed by the
     // scheduler's max-frequency validation; re-check defensively).
-    if !ok(grid[hi]) {
-        return FREQ_MAX_MHZ;
+    // Single-entry grids land here directly: grid[0] failed, so the
+    // only setting doubles as the fallback.
+    if grid.len() == 1 || !ok(fallback) {
+        return fallback;
     }
+    let (mut lo, mut hi) = (0usize, grid.len() - 1);
     while hi - lo > 1 {
-        let mid = (lo + hi) / 2;
+        let mid = lo + (hi - lo) / 2;
         if ok(grid[mid]) {
             hi = mid;
         } else {
@@ -186,6 +211,77 @@ mod tests {
         assert_eq!(
             min_slo_frequency(&m, &e, &slo, &sb, &proj, 0.0, 1.0),
             FREQ_MAX_MHZ
+        );
+    }
+
+    #[test]
+    fn empty_grid_falls_back_to_max() {
+        let (m, e, slo) = setup();
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 100, 200, 1e9));
+        let proj = project(&sb, 0, e.block_tokens);
+        assert_eq!(
+            min_slo_frequency_on_grid(&[], &m, &e, &slo, &sb, &proj, 0.0, 1.0),
+            FREQ_MAX_MHZ
+        );
+    }
+
+    #[test]
+    fn single_entry_grid_returns_sole_setting() {
+        let (m, e, slo) = setup();
+        // Feasible at the sole setting (relaxed deadline).
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 100, 200, 1e9));
+        let proj = project(&sb, 0, e.block_tokens);
+        assert_eq!(
+            min_slo_frequency_on_grid(&[1410], &m, &e, &slo, &sb, &proj, 0.0, 1.0),
+            1410
+        );
+        // Infeasible even at the sole setting (deadline long gone):
+        // must still terminate and return it, not underflow or spin.
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(2, 100, 600, 0.001));
+        let proj = project(&sb, 0, e.block_tokens);
+        assert_eq!(
+            min_slo_frequency_on_grid(&[210], &m, &e, &slo, &sb, &proj, 0.0, 1.0),
+            210
+        );
+    }
+
+    #[test]
+    fn two_entry_grid_picks_the_boundary() {
+        let (m, e, slo) = setup();
+        // ~600 iterations in 8 s needs near-peak frequency: 210 fails,
+        // 1410 passes -> the search must settle on 1410 without looping.
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 100, 600, 8.0));
+        let proj = project(&sb, 0, e.block_tokens);
+        assert_eq!(
+            min_slo_frequency_on_grid(&[210, 1410], &m, &e, &slo, &sb, &proj, 0.0, 1.0),
+            1410
+        );
+    }
+
+    #[test]
+    fn truncated_grid_clamps_to_its_top() {
+        let (m, e, slo) = setup();
+        // Infeasible deadline on a grid whose top is NOT the global
+        // max: fall back to the grid's own top, not FREQ_MAX_MHZ.
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 100, 600, 0.001));
+        let proj = project(&sb, 0, e.block_tokens);
+        assert_eq!(
+            min_slo_frequency_on_grid(
+                &[210, 420, 630],
+                &m,
+                &e,
+                &slo,
+                &sb,
+                &proj,
+                0.0,
+                1.0
+            ),
+            630
         );
     }
 }

@@ -28,12 +28,23 @@ pub struct KvAllocator {
 }
 
 /// Allocation failure: capacity would be exceeded.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
-#[error("KV cache exhausted: need {need} blocks, {free} free")]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KvExhausted {
     pub need: u32,
     pub free: u32,
 }
+
+impl std::fmt::Display for KvExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "KV cache exhausted: need {} blocks, {} free",
+            self.need, self.free
+        )
+    }
+}
+
+impl std::error::Error for KvExhausted {}
 
 impl KvAllocator {
     pub fn new(capacity_blocks: u32, block_tokens: u32) -> Self {

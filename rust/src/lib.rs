@@ -12,8 +12,9 @@
 //! executes the AOT-compiled tiny-llama-sim artifacts (Python never runs
 //! on the request path).
 //!
-//! Start at [`coordinator::server::ThrottllemServer`] for the full
-//! system, or `examples/quickstart.rs` for a 5-minute tour.
+//! Start at [`coordinator::server::serve_fleet`] for the full system
+//! (a fleet of one is the paper's single-engine deployment), or
+//! `examples/quickstart.rs` for a 5-minute tour.
 
 pub mod bench_util;
 pub mod cli;

@@ -21,7 +21,7 @@ use throttllem::config::models::{
     llama2_13b, llama3_70b, llama3_8b, table2_engines, tiny_llama_sim,
 };
 use throttllem::config::{EngineSpec, ServingConfig};
-use throttllem::coordinator::{serve_trace, PerfModel, Policy};
+use throttllem::coordinator::{serve_fleet, FleetSpec, PerfModel, Policy, RouterPolicy};
 use throttllem::mlmodel::{mae, mape, r2_score};
 use throttllem::sim::Pcg64;
 use throttllem::workload::trace::{synth_trace, synth_trace_rps_range, TraceParams};
@@ -76,6 +76,8 @@ const USAGE: &str = "throttllem — SLO-aware GPU frequency scaling for LLM serv
 usage: throttllem <serve|profile|train-model|engines|real-serve> [--options]
   serve:       --engine <name> --policy <triton|triton-autoscale|throttle-only|throttllem>
                --duration <s> --error <p95 frac> --seed <n> [--autoscale]
+               --replicas <n> --router <round-robin|least-loaded|projected-headroom>
+               --peak <rps>   (default: rated max load x replicas)
   profile:     --engine <name> --samples <n>
   train-model: --engine <name> [--samples <n>]
   real-serve:  --artifacts <dir> --batch <n> --steps <n>";
@@ -99,6 +101,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let duration = args.get_f64("duration", 600.0)?;
     let error = args.get_f64("error", 0.0)?;
     let seed = args.get_u64("seed", 0)?;
+    let replicas = args.get_u64("replicas", 1)? as usize;
+    anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
+    let router = RouterPolicy::parse(args.get_or("router", "round-robin"))?;
 
     let autoscale = policy.autoscaling || args.flag("autoscale");
     let (mut cfg, engines) = if autoscale {
@@ -118,10 +123,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     eprintln!("training performance model on {} engine(s)...", engines.len());
     let model = PerfModel::train(&engines, 120, seed);
 
-    let peak = if autoscale { 7.5 } else { cfg.engine.max_load_rps };
+    // The trace is right-scaled to the deployment: rated max load (7.5
+    // for the autoscaled set) times the fleet size, unless overridden.
+    let base_peak = if autoscale { 7.5 } else { cfg.engine.max_load_rps };
+    let peak = args.get_f64("peak", base_peak * replicas as f64)?;
     let params = TraceParams::short(duration, peak, seed);
     let mut reqs = if autoscale {
-        synth_trace_rps_range(&params, 0.75, 7.5)
+        synth_trace_rps_range(&params, 0.75, peak)
     } else {
         synth_trace(&params)
     };
@@ -132,15 +140,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     predictor.apply(&mut reqs, cfg.max_tokens);
     eprintln!(
-        "replaying {} requests over {:.0} s under policy {}...",
+        "replaying {} requests over {:.0} s under policy {} on {} replica(s) ({})...",
         reqs.len(),
         duration,
-        policy.name()
+        policy.name(),
+        replicas,
+        router.name()
     );
 
-    let out = serve_trace(&cfg, policy, &model, &reqs);
+    let fleet = FleetSpec {
+        replicas,
+        router,
+        autoscale_replicas: policy.autoscaling && replicas > 1,
+    };
+    let fleet_out = serve_fleet(&cfg, policy, &model, &reqs, &fleet);
+    let out = &fleet_out.total;
     let s = &out.stats;
     println!("policy             : {}", policy.name());
+    println!("replicas / router  : {} / {}", replicas, router.name());
     println!("completed/dropped  : {}/{}", s.completed, s.dropped);
     println!("lost (SLO waived)  : {}", s.lost);
     println!(
@@ -150,9 +167,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         cfg.slo.e2e_p99
     );
     println!(
-        "TBT avg [ms]       : {:.1}  (SLO {:.0})",
+        "E2E SLO attainment : {:.1}%",
+        s.e2e_slo_attainment(cfg.slo.e2e_p99) * 100.0
+    );
+    println!(
+        "TBT avg [ms]       : {:.1}  (SLO {:.0}, attainment {:.1}%)",
         s.tbt.mean() * 1e3,
-        cfg.slo.tbt_avg * 1e3
+        cfg.slo.tbt_avg * 1e3,
+        s.tbt_slo_attainment(cfg.slo.tbt_avg) * 100.0
     );
     println!("TTFT p50 [ms]      : {:.0}", s.ttft.p50() * 1e3);
     println!("queue p99 [s]      : {:.2}", s.queue.p99());
@@ -161,6 +183,30 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     println!("energy [kJ]        : {:.1}", s.total_energy_j / 1e3);
     println!("tokens/J           : {:.3}", s.tokens_per_joule());
     println!("engine switches    : {}", out.engine_switches);
+    if replicas > 1 {
+        println!(
+            "rerouted / replica scale in+out : {} / {}+{}",
+            fleet_out.rerouted,
+            fleet_out.replica_activations,
+            fleet_out.replica_deactivations
+        );
+        println!(
+            "{:<8} {:>8} {:>10} {:>8} {:>10} {:>10} {:>9}",
+            "replica", "routed", "completed", "dropped", "freq[MHz]", "energy[kJ]", "switches"
+        );
+        for (i, r) in fleet_out.replicas.iter().enumerate() {
+            println!(
+                "{:<8} {:>8} {:>10} {:>8} {:>10.0} {:>10.1} {:>9}",
+                i,
+                r.routed,
+                r.stats.completed,
+                r.stats.dropped,
+                r.stats.freq.mean(),
+                r.stats.total_energy_j / 1e3,
+                r.engine_switches
+            );
+        }
+    }
     Ok(())
 }
 

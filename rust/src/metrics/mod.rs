@@ -83,6 +83,20 @@ impl Series {
     pub fn p99(&self) -> f64 {
         self.percentile(99.0)
     }
+
+    /// Append every sample of `other` (fleet aggregation).
+    pub fn extend_from(&mut self, other: &Series) {
+        self.values.extend_from_slice(&other.values);
+    }
+
+    /// Fraction of samples at or below `bound` (NaN if empty).
+    pub fn frac_within(&self, bound: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let ok = self.values.iter().filter(|&&x| x <= bound).count();
+        ok as f64 / self.values.len() as f64
+    }
 }
 
 /// Percentile of an already-sorted slice.
@@ -157,11 +171,31 @@ impl ServingStats {
 
     /// Fraction of completions whose E2E beats `slo` (p99 target check).
     pub fn e2e_slo_attainment(&self, slo: f64) -> f64 {
-        if self.e2e.is_empty() {
-            return f64::NAN;
-        }
-        let ok = self.e2e.values().iter().filter(|&&x| x <= slo).count();
-        ok as f64 / self.e2e.len() as f64
+        self.e2e.frac_within(slo)
+    }
+
+    /// Fraction of completions whose mean TBT beats `slo`.
+    pub fn tbt_slo_attainment(&self, slo: f64) -> f64 {
+        self.tbt.frac_within(slo)
+    }
+
+    /// Fold another replica's serving stats into this one (fleet
+    /// aggregation): sample series concatenate, counters and energy
+    /// add, and the wall clock is the latest replica to drain.
+    pub fn merge_from(&mut self, other: &ServingStats) {
+        self.e2e.extend_from(&other.e2e);
+        self.tbt.extend_from(&other.tbt);
+        self.ttft.extend_from(&other.ttft);
+        self.queue.extend_from(&other.queue);
+        self.power.extend_from(&other.power);
+        self.freq.extend_from(&other.freq);
+        self.iter_tbt.extend_from(&other.iter_tbt);
+        self.total_energy_j += other.total_energy_j;
+        self.total_tokens += other.total_tokens;
+        self.completed += other.completed;
+        self.lost += other.lost;
+        self.dropped += other.dropped;
+        self.wall_s = self.wall_s.max(other.wall_s);
     }
 }
 
@@ -240,5 +274,42 @@ mod tests {
         st.record_outcome(&outcome(1.0, 1));
         assert!(st.tbt.is_empty());
         assert_eq!(st.completed, 1);
+    }
+
+    #[test]
+    fn merge_concatenates_and_sums() {
+        let mut a = ServingStats::default();
+        a.record_outcome(&outcome(1.0, 10));
+        a.total_energy_j = 100.0;
+        a.wall_s = 5.0;
+        let mut b = ServingStats::default();
+        b.record_outcome(&outcome(3.0, 20));
+        b.record_outcome(&outcome(4.0, 5));
+        b.total_energy_j = 50.0;
+        b.wall_s = 9.0;
+        b.dropped = 2;
+        a.merge_from(&b);
+        assert_eq!(a.completed, 3);
+        assert_eq!(a.dropped, 2);
+        assert_eq!(a.total_tokens, 35);
+        assert!((a.total_energy_j - 150.0).abs() < 1e-12);
+        assert!((a.wall_s - 9.0).abs() < 1e-12);
+        assert_eq!(a.e2e.len(), 3);
+        assert_eq!(a.e2e.values(), &[1.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn attainment_fractions() {
+        let mut st = ServingStats::default();
+        for e2e in [1.0, 2.0, 3.0, 10.0] {
+            st.record_outcome(&outcome(e2e, 10));
+        }
+        assert!((st.e2e_slo_attainment(3.0) - 0.75).abs() < 1e-12);
+        // All recorded outcomes share tbt_avg 0.02.
+        assert!((st.tbt_slo_attainment(0.2) - 1.0).abs() < 1e-12);
+        assert!((st.tbt_slo_attainment(0.01) - 0.0).abs() < 1e-12);
+        let empty = ServingStats::default();
+        assert!(empty.e2e_slo_attainment(1.0).is_nan());
+        assert!(empty.tbt_slo_attainment(1.0).is_nan());
     }
 }

@@ -1,195 +1,287 @@
 //! Model execution: compiled prefill/decode executables per batch
 //! bucket, KV-cache state management, greedy sampling.
+//!
+//! The real execution path goes through the `xla` PJRT FFI
+//! (`HloModuleProto::from_text_file` -> `XlaComputation::from_proto`
+//! -> `PjRtClient::compile` -> `execute`) and is gated behind the
+//! `pjrt` cargo feature because that toolchain is not vendored in the
+//! offline build.  The default build ships an API-compatible stub:
+//! artifact discovery (`Manifest`) still works, but
+//! [`ModelRuntime::load`] returns an explanatory error, and the
+//! runtime integration tests self-skip (they already skip when
+//! `make artifacts` has not been run).
 
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::HashMap;
+    use std::path::Path;
 
-use anyhow::Context;
+    use anyhow::Context;
 
-use super::artifacts::{Manifest, TinyConfig};
+    use super::super::artifacts::{Manifest, TinyConfig};
 
-/// Live decode state for a batch (dense KV caches + positions).
-pub struct DecodeState {
-    /// Batch bucket the caches are shaped for.
-    pub bucket: u32,
-    /// Live rows (<= bucket); padded rows are ignored.
-    pub live: usize,
-    /// Per-row write position (== tokens so far) for live rows.
-    pub positions: Vec<i32>,
-    k_cache: xla::Literal,
-    v_cache: xla::Literal,
-}
-
-/// The PJRT-backed model runtime.
-pub struct ModelRuntime {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    weights: xla::Literal,
-    decode: HashMap<u32, xla::PjRtLoadedExecutable>,
-    prefill: HashMap<u32, xla::PjRtLoadedExecutable>,
-}
-
-impl ModelRuntime {
-    /// Load artifacts from `dir` and compile every batch bucket.
-    pub fn load(dir: &Path) -> anyhow::Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        let w = manifest.load_weights()?;
-        let weights = xla::Literal::vec1(&w);
-
-        let mut decode = HashMap::new();
-        let mut prefill = HashMap::new();
-        for &b in &manifest.batches {
-            decode.insert(b, Self::compile(&client, &manifest.hlo_path("decode", b))?);
-            prefill.insert(b, Self::compile(&client, &manifest.hlo_path("prefill", b))?);
-        }
-        Ok(Self {
-            manifest,
-            client,
-            weights,
-            decode,
-            prefill,
-        })
+    /// Live decode state for a batch (dense KV caches + positions).
+    pub struct DecodeState {
+        /// Batch bucket the caches are shaped for.
+        pub bucket: u32,
+        /// Live rows (<= bucket); padded rows are ignored.
+        pub live: usize,
+        /// Per-row write position (== tokens so far) for live rows.
+        pub positions: Vec<i32>,
+        k_cache: xla::Literal,
+        v_cache: xla::Literal,
     }
 
-    fn compile(
-        client: &xla::PjRtClient,
-        path: &Path,
-    ) -> anyhow::Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parse {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", path.display()))
+    /// The PJRT-backed model runtime.
+    pub struct ModelRuntime {
+        pub manifest: Manifest,
+        client: xla::PjRtClient,
+        weights: xla::Literal,
+        decode: HashMap<u32, xla::PjRtLoadedExecutable>,
+        prefill: HashMap<u32, xla::PjRtLoadedExecutable>,
     }
 
-    pub fn config(&self) -> &TinyConfig {
-        &self.manifest.config
-    }
+    impl ModelRuntime {
+        /// Load artifacts from `dir` and compile every batch bucket.
+        pub fn load(dir: &Path) -> anyhow::Result<Self> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu()?;
+            let w = manifest.load_weights()?;
+            let weights = xla::Literal::vec1(&w);
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Run the prompt phase for `prompts` (token ids per row).  Prompts
-    /// are truncated/padded to the `prompt_len` bucket.  Returns the
-    /// decode state and the first generated token per row (greedy).
-    pub fn prefill(&self, prompts: &[Vec<i32>]) -> anyhow::Result<(DecodeState, Vec<i32>)> {
-        anyhow::ensure!(!prompts.is_empty(), "empty prompt batch");
-        let cfg = *self.config();
-        let bucket = self.manifest.bucket_for(prompts.len() as u32)?;
-        let plen = cfg.prompt_len as usize;
-
-        let mut tokens = vec![0i32; bucket as usize * plen];
-        let mut lengths = vec![1i32; bucket as usize];
-        for (r, p) in prompts.iter().enumerate() {
-            anyhow::ensure!(!p.is_empty(), "empty prompt row {r}");
-            let n = p.len().min(plen);
-            tokens[r * plen..r * plen + n].copy_from_slice(&p[..n]);
-            lengths[r] = n as i32;
-        }
-        let tok_lit = xla::Literal::vec1(&tokens).reshape(&[bucket as i64, plen as i64])?;
-        let len_lit = xla::Literal::vec1(&lengths);
-
-        let exe = &self.prefill[&bucket];
-        let result = exe.execute(&[&self.weights, &tok_lit, &len_lit])?;
-        let out = result[0][0].to_literal_sync()?;
-        let (logits, k_cache, v_cache) = out.to_tuple3()?;
-
-        let first = argmax_rows(&logits, bucket as usize, cfg.vocab as usize)?;
-        let positions: Vec<i32> = lengths.clone();
-        Ok((
-            DecodeState {
-                bucket,
-                live: prompts.len(),
-                positions,
-                k_cache,
-                v_cache,
-            },
-            first[..prompts.len()].to_vec(),
-        ))
-    }
-
-    /// One decode iteration: feed the last generated token per live
-    /// row; returns the next greedy token per live row.
-    pub fn decode_step(
-        &self,
-        state: &mut DecodeState,
-        last_tokens: &[i32],
-    ) -> anyhow::Result<Vec<i32>> {
-        let cfg = *self.config();
-        anyhow::ensure!(
-            last_tokens.len() == state.live,
-            "expected {} tokens, got {}",
-            state.live,
-            last_tokens.len()
-        );
-        let b = state.bucket as usize;
-        let mut toks = vec![0i32; b];
-        toks[..state.live].copy_from_slice(last_tokens);
-        let tok_lit = xla::Literal::vec1(&toks);
-        let pos_lit = xla::Literal::vec1(&state.positions);
-
-        let exe = &self.decode[&state.bucket];
-        let result = exe.execute(&[
-            &self.weights,
-            &state.k_cache,
-            &state.v_cache,
-            &tok_lit,
-            &pos_lit,
-        ])?;
-        let out = result[0][0].to_literal_sync()?;
-        let (logits, k, v) = out.to_tuple3()?;
-        state.k_cache = k;
-        state.v_cache = v;
-        for p in state.positions.iter_mut().take(state.live) {
-            *p = (*p + 1).min(cfg.max_seq as i32 - 1);
-        }
-        let next = argmax_rows(&logits, b, cfg.vocab as usize)?;
-        Ok(next[..state.live].to_vec())
-    }
-
-    /// Greedy generation: prefill + `steps - 1` decode iterations.
-    /// Returns `steps` generated tokens per row.
-    pub fn greedy_generate(
-        &self,
-        prompts: &[Vec<i32>],
-        steps: usize,
-    ) -> anyhow::Result<Vec<Vec<i32>>> {
-        anyhow::ensure!(steps >= 1);
-        let (mut state, first) = self.prefill(prompts)?;
-        let mut rows: Vec<Vec<i32>> = first.iter().map(|&t| vec![t]).collect();
-        let mut last = first;
-        for _ in 1..steps {
-            last = self.decode_step(&mut state, &last)?;
-            for (row, &t) in rows.iter_mut().zip(&last) {
-                row.push(t);
+            let mut decode = HashMap::new();
+            let mut prefill = HashMap::new();
+            for &b in &manifest.batches {
+                decode.insert(b, Self::compile(&client, &manifest.hlo_path("decode", b))?);
+                prefill.insert(b, Self::compile(&client, &manifest.hlo_path("prefill", b))?);
             }
+            Ok(Self {
+                manifest,
+                client,
+                weights,
+                decode,
+                prefill,
+            })
         }
-        Ok(rows)
+
+        fn compile(
+            client: &xla::PjRtClient,
+            path: &Path,
+        ) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", path.display()))
+        }
+
+        pub fn config(&self) -> &TinyConfig {
+            &self.manifest.config
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Run the prompt phase for `prompts` (token ids per row).
+        /// Prompts are truncated/padded to the `prompt_len` bucket.
+        /// Returns the decode state and the first generated token per
+        /// row (greedy).
+        pub fn prefill(
+            &self,
+            prompts: &[Vec<i32>],
+        ) -> anyhow::Result<(DecodeState, Vec<i32>)> {
+            anyhow::ensure!(!prompts.is_empty(), "empty prompt batch");
+            let cfg = *self.config();
+            let bucket = self.manifest.bucket_for(prompts.len() as u32)?;
+            let plen = cfg.prompt_len as usize;
+
+            let mut tokens = vec![0i32; bucket as usize * plen];
+            let mut lengths = vec![1i32; bucket as usize];
+            for (r, p) in prompts.iter().enumerate() {
+                anyhow::ensure!(!p.is_empty(), "empty prompt row {r}");
+                let n = p.len().min(plen);
+                tokens[r * plen..r * plen + n].copy_from_slice(&p[..n]);
+                lengths[r] = n as i32;
+            }
+            let tok_lit =
+                xla::Literal::vec1(&tokens).reshape(&[bucket as i64, plen as i64])?;
+            let len_lit = xla::Literal::vec1(&lengths);
+
+            let exe = &self.prefill[&bucket];
+            let result = exe.execute(&[&self.weights, &tok_lit, &len_lit])?;
+            let out = result[0][0].to_literal_sync()?;
+            let (logits, k_cache, v_cache) = out.to_tuple3()?;
+
+            let first = argmax_rows(&logits, bucket as usize, cfg.vocab as usize)?;
+            let positions: Vec<i32> = lengths.clone();
+            Ok((
+                DecodeState {
+                    bucket,
+                    live: prompts.len(),
+                    positions,
+                    k_cache,
+                    v_cache,
+                },
+                first[..prompts.len()].to_vec(),
+            ))
+        }
+
+        /// One decode iteration: feed the last generated token per live
+        /// row; returns the next greedy token per live row.
+        pub fn decode_step(
+            &self,
+            state: &mut DecodeState,
+            last_tokens: &[i32],
+        ) -> anyhow::Result<Vec<i32>> {
+            let cfg = *self.config();
+            anyhow::ensure!(
+                last_tokens.len() == state.live,
+                "expected {} tokens, got {}",
+                state.live,
+                last_tokens.len()
+            );
+            let b = state.bucket as usize;
+            let mut toks = vec![0i32; b];
+            toks[..state.live].copy_from_slice(last_tokens);
+            let tok_lit = xla::Literal::vec1(&toks);
+            let pos_lit = xla::Literal::vec1(&state.positions);
+
+            let exe = &self.decode[&state.bucket];
+            let result = exe.execute(&[
+                &self.weights,
+                &state.k_cache,
+                &state.v_cache,
+                &tok_lit,
+                &pos_lit,
+            ])?;
+            let out = result[0][0].to_literal_sync()?;
+            let (logits, k, v) = out.to_tuple3()?;
+            state.k_cache = k;
+            state.v_cache = v;
+            for p in state.positions.iter_mut().take(state.live) {
+                *p = (*p + 1).min(cfg.max_seq as i32 - 1);
+            }
+            let next = argmax_rows(&logits, b, cfg.vocab as usize)?;
+            Ok(next[..state.live].to_vec())
+        }
+
+        /// Greedy generation: prefill + `steps - 1` decode iterations.
+        /// Returns `steps` generated tokens per row.
+        pub fn greedy_generate(
+            &self,
+            prompts: &[Vec<i32>],
+            steps: usize,
+        ) -> anyhow::Result<Vec<Vec<i32>>> {
+            anyhow::ensure!(steps >= 1);
+            let (mut state, first) = self.prefill(prompts)?;
+            let mut rows: Vec<Vec<i32>> = first.iter().map(|&t| vec![t]).collect();
+            let mut last = first;
+            for _ in 1..steps {
+                last = self.decode_step(&mut state, &last)?;
+                for (row, &t) in rows.iter_mut().zip(&last) {
+                    row.push(t);
+                }
+            }
+            Ok(rows)
+        }
+    }
+
+    /// Row-wise argmax over a [rows, vocab] f32 literal.
+    fn argmax_rows(
+        logits: &xla::Literal,
+        rows: usize,
+        vocab: usize,
+    ) -> anyhow::Result<Vec<i32>> {
+        let data: Vec<f32> = logits.to_vec()?;
+        anyhow::ensure!(
+            data.len() == rows * vocab,
+            "logits size {} != {rows}x{vocab}",
+            data.len()
+        );
+        Ok((0..rows)
+            .map(|r| {
+                let row = &data[r * vocab..(r + 1) * vocab];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect())
     }
 }
 
-/// Row-wise argmax over a [rows, vocab] f32 literal.
-fn argmax_rows(logits: &xla::Literal, rows: usize, vocab: usize) -> anyhow::Result<Vec<i32>> {
-    let data: Vec<f32> = logits.to_vec()?;
-    anyhow::ensure!(
-        data.len() == rows * vocab,
-        "logits size {} != {rows}x{vocab}",
-        data.len()
-    );
-    Ok((0..rows)
-        .map(|r| {
-            let row = &data[r * vocab..(r + 1) * vocab];
-            row.iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i as i32)
-                .unwrap_or(0)
-        })
-        .collect())
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::Path;
+
+    use super::super::artifacts::{Manifest, TinyConfig};
+
+    /// Live decode state for a batch (stub: never constructed).
+    pub struct DecodeState {
+        /// Batch bucket the caches are shaped for.
+        pub bucket: u32,
+        /// Live rows (<= bucket); padded rows are ignored.
+        pub live: usize,
+        /// Per-row write position (== tokens so far) for live rows.
+        pub positions: Vec<i32>,
+    }
+
+    /// Stub runtime: discovers artifacts but cannot execute them.
+    pub struct ModelRuntime {
+        pub manifest: Manifest,
+    }
+
+    fn unavailable<T>() -> anyhow::Result<T> {
+        anyhow::bail!(
+            "PJRT runtime unavailable: this build has no `xla` FFI toolchain \
+             (rebuild with `--features pjrt` in an environment that provides \
+             the xla_extension crate)"
+        )
+    }
+
+    impl ModelRuntime {
+        /// Load artifacts from `dir`. The stub validates the manifest
+        /// and weights, then reports that execution is unavailable.
+        pub fn load(dir: &Path) -> anyhow::Result<Self> {
+            let manifest = Manifest::load(dir)?;
+            let _ = manifest.load_weights()?;
+            unavailable()
+        }
+
+        pub fn config(&self) -> &TinyConfig {
+            &self.manifest.config
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (built without the `pjrt` feature)".to_string()
+        }
+
+        pub fn prefill(
+            &self,
+            _prompts: &[Vec<i32>],
+        ) -> anyhow::Result<(DecodeState, Vec<i32>)> {
+            unavailable()
+        }
+
+        pub fn decode_step(
+            &self,
+            _state: &mut DecodeState,
+            _last_tokens: &[i32],
+        ) -> anyhow::Result<Vec<i32>> {
+            unavailable()
+        }
+
+        pub fn greedy_generate(
+            &self,
+            _prompts: &[Vec<i32>],
+            _steps: usize,
+        ) -> anyhow::Result<Vec<Vec<i32>>> {
+            unavailable()
+        }
+    }
 }
 
-// Integration tests requiring built artifacts live in
-// rust/tests/runtime_integration.rs.
+pub use imp::{DecodeState, ModelRuntime};

@@ -1,0 +1,218 @@
+//! Fleet-vs-single equivalence and fleet-behaviour integration tests.
+//!
+//! The load-bearing invariant of the fleet refactor: a fleet of ONE
+//! replica reproduces the single-engine serving loop EXACTLY — same
+//! admissions, same frequencies, same energy, bit-for-bit — under
+//! every router policy (the router must not perturb a fleet of one).
+//! Plus the autoscaler grace-period regressions (no scale-down before
+//! `SPAWN_TIME_S` elapses) on both scaling axes, and directional
+//! checks that a real fleet actually scales serving capacity.
+
+use throttllem::config::models::llama2_13b;
+use throttllem::config::ServingConfig;
+use throttllem::coordinator::autoscaler::{
+    Autoscaler, FleetDecision, FleetScaler, ScaleDecision, SPAWN_TIME_S,
+};
+use throttllem::coordinator::{
+    serve_fleet, serve_trace, FleetSpec, PerfModel, Policy, RouterPolicy, ServeOutcome,
+};
+use throttllem::workload::trace::{synth_trace, TraceParams};
+use throttllem::workload::LengthPredictor;
+
+fn trace(peak: f64, secs: f64, seed: u64) -> Vec<throttllem::engine::request::Request> {
+    let mut reqs = synth_trace(&TraceParams::short(secs, peak, seed));
+    LengthPredictor::oracle().apply(&mut reqs, 1024);
+    reqs
+}
+
+/// Bit-identical comparison of two serving outcomes.
+fn assert_outcomes_identical(a: &ServeOutcome, b: &ServeOutcome) {
+    assert_eq!(a.stats.completed, b.stats.completed);
+    assert_eq!(a.stats.dropped, b.stats.dropped);
+    assert_eq!(a.stats.lost, b.stats.lost);
+    assert_eq!(a.stats.total_tokens, b.stats.total_tokens);
+    // Energy and wall clock must match to the BIT: the fleet-of-one
+    // path has to execute the same floating-point operations in the
+    // same order as the single-engine loop.
+    assert_eq!(
+        a.stats.total_energy_j.to_bits(),
+        b.stats.total_energy_j.to_bits(),
+        "energy diverged: {} vs {}",
+        a.stats.total_energy_j,
+        b.stats.total_energy_j
+    );
+    assert_eq!(a.stats.wall_s.to_bits(), b.stats.wall_s.to_bits());
+    assert_eq!(a.stats.e2e.values(), b.stats.e2e.values());
+    assert_eq!(a.stats.tbt.values(), b.stats.tbt.values());
+    assert_eq!(a.stats.ttft.values(), b.stats.ttft.values());
+    assert_eq!(a.stats.queue.values(), b.stats.queue.values());
+    assert_eq!(a.stats.freq.values(), b.stats.freq.values());
+    assert_eq!(a.stats.power.values(), b.stats.power.values());
+    assert_eq!(a.stats.iter_tbt.values(), b.stats.iter_tbt.values());
+    assert_eq!(a.shadow_energy_j.to_bits(), b.shadow_energy_j.to_bits());
+    assert_eq!(a.engine_switches, b.engine_switches);
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.e2e_s.to_bits(), y.e2e_s.to_bits());
+        assert_eq!(x.ttft_s.to_bits(), y.ttft_s.to_bits());
+        assert_eq!(x.tbt_avg_s.to_bits(), y.tbt_avg_s.to_bits());
+        assert_eq!(x.lost, y.lost);
+    }
+    assert_eq!(a.timeline.len(), b.timeline.len());
+    for (x, y) in a.timeline.iter().zip(&b.timeline) {
+        assert_eq!(x.t.to_bits(), y.t.to_bits());
+        assert_eq!(x.freq_mhz, y.freq_mhz);
+        assert_eq!(x.batch, y.batch);
+        assert_eq!(x.kv_blocks, y.kv_blocks);
+    }
+}
+
+#[test]
+fn fleet_of_one_is_bit_identical_for_every_router() {
+    // Property-style sweep: seeds x policies x router policies. The
+    // router choice must be unobservable with a single replica — even
+    // projected-headroom, which evaluates the §IV-B projection, may
+    // only READ state.
+    let spec = llama2_13b(2);
+    let model = PerfModel::train(&[spec.clone()], 40, 0);
+    for seed in [0u64, 1, 2] {
+        for (policy, cfg) in [
+            (Policy::triton(), ServingConfig::triton(spec.clone())),
+            (
+                Policy::throttle_only(),
+                ServingConfig::throttllem(spec.clone()),
+            ),
+        ] {
+            let reqs = trace(2.5, 90.0, seed);
+            let single = serve_trace(&cfg, policy, &model, &reqs);
+            for router in [
+                RouterPolicy::RoundRobin,
+                RouterPolicy::LeastLoaded,
+                RouterPolicy::ProjectedHeadroom,
+            ] {
+                let fleet = FleetSpec {
+                    replicas: 1,
+                    router,
+                    autoscale_replicas: true,
+                };
+                let out = serve_fleet(&cfg, policy, &model, &reqs, &fleet);
+                assert_outcomes_identical(&single, &out.total);
+                assert_eq!(out.replicas.len(), 1);
+                assert_eq!(out.replicas[0].routed, reqs.len() as u64);
+                assert_eq!(out.rerouted, 0);
+                assert_eq!(out.replica_activations, 0);
+                assert_eq!(out.replica_deactivations, 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_of_one_matches_single_with_autoscaling() {
+    // The TP-axis autoscaler (shadow instancing, switches) must also be
+    // untouched by the fleet wrapper when replicas == 1.
+    let set = vec![llama2_13b(1), llama2_13b(2), llama2_13b(4)];
+    let model = PerfModel::train(&set, 40, 0);
+    let cfg = ServingConfig::autoscaled(set);
+    let reqs = {
+        let mut reqs = throttllem::workload::trace::synth_trace_rps_range(
+            &TraceParams::short(300.0, 8.25, 9),
+            0.75,
+            7.5,
+        );
+        LengthPredictor::oracle().apply(&mut reqs, 1024);
+        reqs
+    };
+    let single = serve_trace(&cfg, Policy::throttllem(), &model, &reqs);
+    let out = serve_fleet(
+        &cfg,
+        Policy::throttllem(),
+        &model,
+        &reqs,
+        &FleetSpec {
+            replicas: 1,
+            router: RouterPolicy::LeastLoaded,
+            autoscale_replicas: true,
+        },
+    );
+    assert_outcomes_identical(&single, &out.total);
+}
+
+#[test]
+fn autoscaler_grace_period_no_scale_down_before_spawn_time() {
+    // TP axis: starting on the largest engine, a load collapse right
+    // after boot must hold for SPAWN_TIME_S before any down-scale.
+    let mut a = Autoscaler::new(vec![llama2_13b(1), llama2_13b(2), llama2_13b(4)], 2);
+    assert_eq!(a.tick(1.0, 0.1), ScaleDecision::Hold);
+    assert_eq!(a.tick(SPAWN_TIME_S * 0.6, 0.1), ScaleDecision::Hold);
+    assert_eq!(a.tick(SPAWN_TIME_S - 0.5, 0.1), ScaleDecision::Hold);
+    assert!(matches!(
+        a.tick(SPAWN_TIME_S + 0.5, 0.1),
+        ScaleDecision::StartShadow { .. }
+    ));
+
+    // Fleet axis: same discipline for replica-count scale-in.
+    let mut f = FleetScaler::new(4);
+    assert_eq!(f.tick(1.0, 0.1, 4.0, 4), FleetDecision::Hold);
+    assert_eq!(f.tick(SPAWN_TIME_S - 0.5, 0.1, 4.0, 4), FleetDecision::Hold);
+    assert!(matches!(
+        f.tick(SPAWN_TIME_S + 0.5, 0.1, 4.0, 4),
+        FleetDecision::Deactivate { .. }
+    ));
+}
+
+#[test]
+fn four_replicas_scale_serving_capacity() {
+    // A 4x-overloaded single engine queues badly; the same trace split
+    // over 4 replicas runs each at ~rated load. The fleet must drain
+    // sooner and attain strictly better E2E.
+    let spec = llama2_13b(2);
+    let model = PerfModel::train(&[spec.clone()], 40, 0);
+    let cfg = ServingConfig::triton(spec.clone());
+    // 4x the rated max load for 180 s.
+    let reqs = trace(4.0 * spec.max_load_rps, 180.0, 11);
+
+    let single = serve_trace(&cfg, Policy::triton(), &model, &reqs);
+    let fleet = serve_fleet(
+        &cfg,
+        Policy::triton(),
+        &model,
+        &reqs,
+        &FleetSpec {
+            replicas: 4,
+            router: RouterPolicy::RoundRobin,
+            autoscale_replicas: false,
+        },
+    );
+
+    assert_eq!(
+        fleet.total.stats.completed + fleet.total.stats.dropped,
+        reqs.len() as u64
+    );
+    // Strictly faster drain => strictly higher admitted RPS for the
+    // same completion count.
+    assert!(
+        fleet.total.stats.wall_s < single.stats.wall_s,
+        "fleet wall {} >= single wall {}",
+        fleet.total.stats.wall_s,
+        single.stats.wall_s
+    );
+    let single_rps = single.stats.completed as f64 / single.stats.wall_s;
+    let fleet_rps = fleet.total.stats.completed as f64 / fleet.total.stats.wall_s;
+    assert!(
+        fleet_rps > single_rps,
+        "fleet rps {fleet_rps} <= single rps {single_rps}"
+    );
+    // Tail latency collapses once each replica runs at rated load.
+    assert!(
+        fleet.total.stats.e2e.p99() < single.stats.e2e.p99(),
+        "fleet p99 {} >= single p99 {}",
+        fleet.total.stats.e2e.p99(),
+        single.stats.e2e.p99()
+    );
+    assert!(
+        fleet.total.stats.e2e_slo_attainment(spec.e2e_slo_p99)
+            >= single.stats.e2e_slo_attainment(spec.e2e_slo_p99)
+    );
+}

@@ -1,0 +1,180 @@
+//! Minimal `anyhow` substitute (offline build).
+//!
+//! The repo vendors tiny stand-ins for every external crate it would
+//! normally pull from crates.io (clap, serde, rand, proptest, criterion
+//! substitutes live in the main crate); this one covers the `anyhow`
+//! API subset the codebase uses: [`Error`], [`Result`], the
+//! [`anyhow!`], [`bail!`] and [`ensure!`] macros, and the [`Context`]
+//! extension trait with `context` / `with_context`.
+//!
+//! Errors are stored as a flat message chain (outermost context first).
+//! `{}` displays the outermost message, `{:#}` joins the whole chain
+//! with `": "`, matching how the real crate is used by callers here.
+
+use std::fmt;
+
+/// A dynamic error carrying a message-context chain.
+pub struct Error {
+    /// Outermost message first; `context` pushes to the front.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn push_context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` alias defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().push_context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn might_fail(ok: bool) -> Result<u32> {
+        ensure!(ok, "flag was {ok}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let v = 3;
+        let e = anyhow!("value {v} and {}", 4);
+        assert_eq!(e.to_string(), "value 3 and 4");
+        assert!(might_fail(true).is_ok());
+        assert_eq!(might_fail(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(e.root_cause(), "inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        let e = none.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+}
