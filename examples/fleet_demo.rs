@@ -2,29 +2,85 @@
 //! frequency control (the GreenLLM/AGFT-style fleet extension of the
 //! paper's single-engine throttLL'eM).
 //!
-//! Serves a trace right-scaled to N replicas' aggregate capacity under
-//! every admission-router policy, against a fleet of Triton replicas
-//! at max frequency, and prints per-replica plus fleet-aggregate
-//! energy, TBT and E2E attainment.
+//! Two modes:
+//!   * default — N identical llama2-13b TP2 replicas, served under
+//!     every admission-router policy against a Triton fleet at max
+//!     frequency;
+//!   * `--mixed` — a heterogeneous fleet (1×TP4 + 1×TP2 + 2×TP1) with
+//!     occasional long prompts only the large replicas can hold, where
+//!     capacity-aware `projected-headroom` routing visibly beats
+//!     round-robin on SLO attainment (the §IV-B projection signal is
+//!     load-bearing on the main path).
 //!
 //! Run with:
 //!   cargo run --release --example fleet_demo [-- --replicas 4 --duration 600]
+//!   cargo run --release --example fleet_demo -- --mixed [--duration 600]
 
 use throttllem::cli::Args;
 use throttllem::config::models::llama2_13b;
-use throttllem::config::ServingConfig;
+use throttllem::config::{ReplicaSpec, ServingConfig};
 use throttllem::coordinator::{
-    serve_fleet, FleetOutcome, FleetSpec, PerfModel, Policy, RouterPolicy,
+    serve_fleet_plan, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
 };
-use throttllem::workload::trace::{synth_trace, TraceParams};
+use throttllem::workload::trace::{inject_long_prompts, synth_trace, TraceParams};
 use throttllem::workload::LengthPredictor;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    let replicas = args.get_u64("replicas", 4)? as usize;
     let duration = args.get_f64("duration", 600.0)?;
     let seed = args.get_u64("seed", 0)?;
+    if args.flag("mixed") {
+        mixed_demo(duration, seed)
+    } else {
+        homogeneous_demo(args.get_u64("replicas", 4)? as usize, duration, seed)
+    }
+}
 
+fn print_header() {
+    println!(
+        "{:<34} {:>9} {:>9} {:>9} {:>9} {:>10} {:>8}",
+        "deployment", "E2E p99", "E2E att.", "TBT att.", "freq", "energy", "TPJ"
+    );
+    println!(
+        "{:<34} {:>9} {:>9} {:>9} {:>9} {:>10} {:>8}",
+        "", "[s]", "[%]", "[%]", "[MHz]", "[kJ]", "[tok/J]"
+    );
+}
+
+fn print_row(name: &str, cfg: &ServingConfig, out: &FleetOutcome) {
+    let s = &out.total.stats;
+    println!(
+        "{:<34} {:>9.2} {:>9.1} {:>9.1} {:>9.0} {:>10.1} {:>8.3}",
+        name,
+        s.e2e.p99(),
+        s.e2e_slo_attainment(cfg.slo.e2e_p99) * 100.0,
+        s.tbt_slo_attainment(cfg.slo.tbt_avg) * 100.0,
+        s.freq.mean(),
+        s.total_energy_j / 1e3,
+        s.tokens_per_joule(),
+    );
+}
+
+fn print_replica_breakdown(out: &FleetOutcome) {
+    println!(
+        "{:<8} {:<16} {:>8} {:>10} {:>8} {:>10} {:>11}",
+        "replica", "engine", "routed", "completed", "dropped", "freq[MHz]", "energy[kJ]"
+    );
+    for (i, r) in out.replicas.iter().enumerate() {
+        println!(
+            "{:<8} {:<16} {:>8} {:>10} {:>8} {:>10.0} {:>11.1}",
+            i,
+            r.engine,
+            r.routed,
+            r.stats.completed,
+            r.stats.dropped,
+            r.stats.freq.mean(),
+            r.stats.total_energy_j / 1e3,
+        );
+    }
+}
+
+fn homogeneous_demo(replicas: usize, duration: f64, seed: u64) -> anyhow::Result<()> {
     let spec = llama2_13b(2);
     let model = PerfModel::train(&[spec.clone()], 100, seed);
     // Right-scale to ~80% of the fleet's aggregate rated load.
@@ -64,33 +120,12 @@ fn main() -> anyhow::Result<()> {
         ),
     ];
 
-    println!(
-        "{:<34} {:>9} {:>9} {:>9} {:>9} {:>10} {:>8}",
-        "deployment", "E2E p99", "E2E att.", "TBT att.", "freq", "energy", "TPJ"
-    );
-    println!(
-        "{:<34} {:>9} {:>9} {:>9} {:>9} {:>10} {:>8}",
-        "", "[s]", "[%]", "[%]", "[MHz]", "[kJ]", "[tok/J]"
-    );
+    print_header();
     let mut detailed: Option<FleetOutcome> = None;
     for (name, policy, cfg, router) in combos {
-        let fleet = FleetSpec {
-            replicas,
-            router,
-            autoscale_replicas: false,
-        };
-        let out = serve_fleet(&cfg, policy, &model, &reqs, &fleet);
-        let s = &out.total.stats;
-        println!(
-            "{:<34} {:>9.2} {:>9.1} {:>9.1} {:>9.0} {:>10.1} {:>8.3}",
-            name,
-            s.e2e.p99(),
-            s.e2e_slo_attainment(cfg.slo.e2e_p99) * 100.0,
-            s.tbt_slo_attainment(cfg.slo.tbt_avg) * 100.0,
-            s.freq.mean(),
-            s.total_energy_j / 1e3,
-            s.tokens_per_joule(),
-        );
+        let plan = FleetPlan::homogeneous(replicas, router, &cfg, policy, false);
+        let out = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
+        print_row(&name, &cfg, &out);
         if router == RouterPolicy::LeastLoaded {
             detailed = Some(out);
         }
@@ -99,25 +134,66 @@ fn main() -> anyhow::Result<()> {
     // Per-replica breakdown of the least-loaded throttLL'eM fleet.
     let out = detailed.expect("least-loaded run present");
     println!("\n-- per-replica breakdown (throttllem, least-loaded) --");
-    println!(
-        "{:<8} {:>8} {:>10} {:>8} {:>10} {:>11}",
-        "replica", "routed", "completed", "dropped", "freq[MHz]", "energy[kJ]"
-    );
-    for (i, r) in out.replicas.iter().enumerate() {
-        println!(
-            "{:<8} {:>8} {:>10} {:>8} {:>10.0} {:>11.1}",
-            i,
-            r.routed,
-            r.stats.completed,
-            r.stats.dropped,
-            r.stats.freq.mean(),
-            r.stats.total_energy_j / 1e3,
-        );
-    }
+    print_replica_breakdown(&out);
     println!(
         "rerouted on universal rejection: {} | aggregate energy {:.1} kJ",
         out.rerouted,
         out.total.stats.total_energy_j / 1e3
+    );
+    Ok(())
+}
+
+fn mixed_demo(duration: f64, seed: u64) -> anyhow::Result<()> {
+    let specs = vec![
+        ReplicaSpec::fixed(llama2_13b(4)),
+        ReplicaSpec::fixed(llama2_13b(2)),
+        ReplicaSpec::fixed(llama2_13b(1)),
+        ReplicaSpec::fixed(llama2_13b(1)),
+    ];
+    let base = FleetPlan::heterogeneous(specs, RouterPolicy::RoundRobin);
+    let rated = base.rated_rps();
+    let peak = 0.6 * rated;
+    let cfg = ServingConfig::throttllem(llama2_13b(4));
+    // Train on the fleet's unique engines (two replicas share TP1).
+    let model = PerfModel::train(&base.engines(), 100, seed);
+
+    let mut reqs = synth_trace(&TraceParams::short(duration, peak, seed));
+    // 10k tokens -> 157 KV blocks: impossible on TP1 (120 blocks),
+    // comfortable on TP2 (439) and TP4 (1050).
+    inject_long_prompts(&mut reqs, duration, 20.0, 10_000, 64);
+    LengthPredictor::oracle().apply(&mut reqs, 1024);
+    println!(
+        "mixed fleet (1xTP4 + 1xTP2 + 2xTP1, rated {rated:.1} RPS) | {} requests \
+         over {duration:.0} s (peak ~{peak:.1} RPS, long 10k-token prompt every 20 s)\n",
+        reqs.len()
+    );
+
+    print_header();
+    let mut best: Option<FleetOutcome> = None;
+    for router in [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastLoaded,
+        RouterPolicy::ProjectedHeadroom,
+    ] {
+        let plan = FleetPlan {
+            router,
+            ..base.clone()
+        };
+        let out =
+            serve_fleet_plan(&cfg, Policy::throttle_only(), &model, &reqs, &plan);
+        print_row(&format!("throttllem mixed ({})", router.name()), &cfg, &out);
+        if router == RouterPolicy::ProjectedHeadroom {
+            best = Some(out);
+        }
+    }
+
+    let out = best.expect("projected-headroom run present");
+    println!("\n-- per-replica breakdown (throttllem mixed, projected-headroom) --");
+    print_replica_breakdown(&out);
+    println!(
+        "rerouted on universal rejection: {} (capacity-aware routing places long \
+         prompts on the large replicas up front)",
+        out.rerouted
     );
     Ok(())
 }

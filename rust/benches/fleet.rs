@@ -14,10 +14,13 @@
 
 use throttllem::bench_util::{print_table, section};
 use throttllem::config::models::llama2_13b;
-use throttllem::config::ServingConfig;
-use throttllem::coordinator::{serve_fleet, FleetSpec, PerfModel, Policy, RouterPolicy};
+use throttllem::config::{ReplicaSpec, ServingConfig};
+use throttllem::coordinator::{
+    serve_fleet, serve_fleet_plan, FleetPlan, FleetSpec, PerfModel, Policy,
+    RouterPolicy,
+};
 use throttllem::metrics::ServingStats;
-use throttllem::workload::trace::{synth_trace, TraceParams};
+use throttllem::workload::trace::{inject_long_prompts, synth_trace, TraceParams};
 use throttllem::workload::LengthPredictor;
 
 fn row(name: &str, s: &ServingStats, slo_e2e: f64, slo_tbt: f64) -> Vec<String> {
@@ -178,4 +181,92 @@ fn main() {
         &rrows,
     );
     println!("rerouted on universal rejection: {}", ours_fleet.rerouted);
+
+    hetero_bench(secs, seed);
+}
+
+/// Heterogeneous fleet: mixed TP sizes with occasional long prompts
+/// only the large replicas can hold.  Acceptance (ISSUE 2):
+/// `projected-headroom` must achieve strictly better SLO attainment or
+/// lower energy than round-robin on the same trace — round-robin parks
+/// long prompts on TP1 replicas (120 KV blocks < the prompt), blocking
+/// their queue heads until the replica drains and the request reroutes.
+fn hetero_bench(secs: f64, seed: u64) {
+    let specs = vec![
+        ReplicaSpec::fixed(llama2_13b(1)),
+        ReplicaSpec::fixed(llama2_13b(2)),
+        ReplicaSpec::fixed(llama2_13b(2)),
+        ReplicaSpec::fixed(llama2_13b(4)),
+    ];
+    let base = FleetPlan::heterogeneous(specs, RouterPolicy::RoundRobin);
+    let rated = base.rated_rps();
+    let peak = 0.6 * rated;
+    let cfg = ServingConfig::throttllem(llama2_13b(4));
+    let slo = cfg.slo;
+    // Train on the fleet's unique engines (two replicas share TP2).
+    eprintln!("training performance model for the mixed fleet...");
+    let model = PerfModel::train(&base.engines(), 120, seed);
+
+    let mut reqs = synth_trace(&TraceParams::short(secs, peak, seed));
+    // A 10k-token prompt every 20 s: 157 KV blocks, impossible on the
+    // TP1 replica, comfortable on TP2/TP4.
+    inject_long_prompts(&mut reqs, secs, 20.0, 10_000, 64);
+    LengthPredictor::oracle().apply(&mut reqs, 1024);
+
+    section(&format!(
+        "Heterogeneous fleet (TP1+2xTP2+TP4, rated {rated:.1} RPS): \
+         round-robin vs capacity-aware routing"
+    ));
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    for router in [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastLoaded,
+        RouterPolicy::ProjectedHeadroom,
+    ] {
+        let plan = FleetPlan {
+            router,
+            ..base.clone()
+        };
+        let out =
+            serve_fleet_plan(&cfg, Policy::throttle_only(), &model, &reqs, &plan);
+        rows.push(row(
+            &format!("mixed ({})", router.name()),
+            &out.total.stats,
+            slo.e2e_p99,
+            slo.tbt_avg,
+        ));
+        results.push((router, out));
+    }
+    print_table(
+        &[
+            "deployment",
+            "completed",
+            "adm.RPS",
+            "E2Ep99[s]",
+            "E2Eatt[%]",
+            "TBTatt[%]",
+            "freq[MHz]",
+            "energy[kJ]",
+            "TPJ",
+        ],
+        &rows,
+    );
+    let rr = &results[0].1;
+    let ph = &results[2].1;
+    let rr_att = rr.total.stats.e2e_slo_attainment(slo.e2e_p99);
+    let ph_att = ph.total.stats.e2e_slo_attainment(slo.e2e_p99);
+    println!(
+        "\nprojected-headroom vs round-robin: E2E attainment {:.1}% vs {:.1}%, \
+         energy {:.1} kJ vs {:.1} kJ, rerouted {} vs {}  \
+         (acceptance: ph strictly better attainment OR lower energy: {})",
+        ph_att * 100.0,
+        rr_att * 100.0,
+        ph.total.stats.total_energy_j / 1e3,
+        rr.total.stats.total_energy_j / 1e3,
+        ph.rerouted,
+        rr.rerouted,
+        ph_att > rr_att
+            || ph.total.stats.total_energy_j < rr.total.stats.total_energy_j
+    );
 }

@@ -8,6 +8,7 @@ use throttllem::bench_util::{bench, black_box, section};
 use throttllem::config::models::llama2_13b;
 use throttllem::config::SloSpec;
 use throttllem::coordinator::projection::project;
+use throttllem::coordinator::router::{headroom_score, HeadroomCache};
 use throttllem::coordinator::scheduler::{entry_for, Scheduler};
 use throttllem::coordinator::scoreboard::{Entry, Scoreboard};
 use throttllem::coordinator::throttle::min_slo_frequency;
@@ -69,6 +70,42 @@ fn main() {
 
     let r = bench("throttle binary search (§IV-E)", 500, || {
         black_box(min_slo_frequency(&model, &spec, &slo, &sb, &proj, 0.0, 1.0));
+    });
+    println!("{r}");
+
+    // Fleet router scoring: the projected-headroom signal per arrival.
+    // Uncached rebuilds the §IV-B projection every time (the pre-cache
+    // hot path, O(arrivals x replicas) builds); cached reuses the
+    // memoized summary until an admission/completion/iteration moves
+    // the key.  The cached path must be orders of magnitude cheaper —
+    // and bit-identical (Replica::headroom_for cross-checks in debug).
+    let sb64 = scoreboard(64, &mut rng);
+    let r = bench("router headroom score, uncached", 300, || {
+        let proj = project(&sb64, 60, spec.block_tokens);
+        black_box(headroom_score(
+            spec.kv_blocks,
+            proj.peak_kv(),
+            40,
+            spec.max_batch,
+            32,
+            3,
+        ));
+    });
+    println!("{r}");
+    let mut cache = HeadroomCache::new();
+    let r = bench("router headroom score, cached", 300, || {
+        let (peak, qb, qr) = cache.fetch((60, 7, 9), || {
+            let proj = project(&sb64, 60, spec.block_tokens);
+            (proj.peak_kv(), 40, 3)
+        });
+        black_box(headroom_score(
+            spec.kv_blocks,
+            peak,
+            qb,
+            spec.max_batch,
+            32,
+            qr,
+        ));
     });
     println!("{r}");
 

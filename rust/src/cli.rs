@@ -6,10 +6,13 @@
 use std::collections::BTreeMap;
 
 /// Parsed arguments: a subcommand plus `--key value` options.
+/// Options are repeatable: every occurrence is kept in order
+/// ([`Args::get_all`]); the scalar accessors read the last one, so
+/// `--seed 1 --seed 2` means seed 2.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
-    opts: BTreeMap<String, String>,
+    opts: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     positional: Vec<String>,
 }
@@ -22,14 +25,17 @@ impl Args {
         while let Some(arg) = iter.next() {
             if let Some(stripped) = arg.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
-                    out.opts.insert(k.to_string(), v.to_string());
+                    out.opts
+                        .entry(k.to_string())
+                        .or_default()
+                        .push(v.to_string());
                 } else if iter
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = iter.next().unwrap();
-                    out.opts.insert(stripped.to_string(), v);
+                    out.opts.entry(stripped.to_string()).or_default().push(v);
                 } else {
                     out.flags.push(stripped.to_string());
                 }
@@ -52,7 +58,16 @@ impl Args {
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.opts.get(name).map(|s| s.as_str())
+        self.opts
+            .get(name)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable `--key value` option, in the
+    /// order given (empty when absent).
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.opts.get(name).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -123,5 +138,26 @@ mod tests {
     fn positional_after_subcommand() {
         let a = parse(&["run", "file1", "file2"]);
         assert_eq!(a.positional(), &["file1".to_string(), "file2".into()]);
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let a = parse(&[
+            "serve",
+            "--replica-spec",
+            "tp=1",
+            "--replica-spec=tp=2,count=2",
+            "--seed",
+            "1",
+            "--seed",
+            "2",
+        ]);
+        assert_eq!(
+            a.get_all("replica-spec"),
+            &["tp=1".to_string(), "tp=2,count=2".into()]
+        );
+        // Scalar accessors read the LAST occurrence.
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 2);
+        assert!(a.get_all("missing").is_empty());
     }
 }

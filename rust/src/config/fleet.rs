@@ -1,0 +1,428 @@
+//! Per-replica deployment descriptions for heterogeneous fleets.
+//!
+//! The fleet coordinator originally replicated ONE [`ServingConfig`]
+//! across every replica, so the router's capacity-aware scoring never
+//! faced a real trade-off (ROADMAP "Heterogeneous fleets").  A
+//! [`ReplicaSpec`] describes one replica on its own terms — boot
+//! engine, its own TP autoscaling ladder, and an optional per-replica
+//! SLO override — so one fleet can mix TP sizes and model families,
+//! the direction *Offline Energy-Optimal LLM Serving* (2407.04014) and
+//! *GreenLLM* (2508.16449) motivate for heterogeneous serving systems.
+//!
+//! Two CLI surfaces parse into `ReplicaSpec` lists:
+//!   * a repeatable `--replica-spec tp=2,model=llama2-13b,count=2`
+//!     key-value flag ([`parse_replica_spec`]);
+//!   * a `--fleet <file>` JSONL file, one replica group per line
+//!     ([`parse_fleet_jsonl`]).
+
+use crate::config::models::{default_tp, engine_by_name, family_engine};
+use crate::config::{EngineSpec, ServingConfig, SloSpec};
+use crate::jsonl::Json;
+
+/// One replica's deployment description: which engine it boots, which
+/// TP ladder its own autoscaler may climb, and which SLO it enforces.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaSpec {
+    /// Engine this replica serves on when it has no TP ladder (and the
+    /// spec the fleet's capacity estimates use).
+    pub engine: EngineSpec,
+    /// TP ladder this replica's own autoscaler may pick from (ordered
+    /// by rated max load, ascending).  Empty disables TP autoscaling
+    /// for THIS replica even when the fleet policy enables it.
+    pub scale_set: Vec<EngineSpec>,
+    /// Per-replica SLO override; `None` inherits the fleet-wide SLO.
+    pub slo: Option<SloSpec>,
+}
+
+impl ReplicaSpec {
+    /// A replica pinned to one engine (no TP autoscaling).
+    pub fn fixed(engine: EngineSpec) -> Self {
+        Self {
+            engine,
+            scale_set: vec![],
+            slo: None,
+        }
+    }
+
+    /// A replica autoscaling over its own TP ladder (ordered by rated
+    /// max load); capacity estimates use the largest rung.
+    pub fn autoscaled(scale_set: Vec<EngineSpec>) -> Self {
+        assert!(!scale_set.is_empty(), "a TP ladder needs at least one engine");
+        let engine = scale_set.last().unwrap().clone();
+        Self {
+            engine,
+            scale_set,
+            slo: None,
+        }
+    }
+
+    /// Override the SLO this replica enforces.
+    pub fn with_slo(mut self, slo: SloSpec) -> Self {
+        self.slo = Some(slo);
+        self
+    }
+
+    /// Enforce the replica engine's own Table II SLO instead of the
+    /// fleet-wide one.
+    pub fn with_engine_slo(mut self) -> Self {
+        self.slo = Some(SloSpec::for_engine(&self.engine));
+        self
+    }
+
+    /// The replica a homogeneous fleet boots from `cfg` — exactly the
+    /// derivation the pre-heterogeneous coordinator used (autoscaling
+    /// replicas ran `cfg.scale_set`, fixed ones `cfg.engine`).
+    pub fn from_config(cfg: &ServingConfig, autoscaling: bool) -> Self {
+        if autoscaling && !cfg.scale_set.is_empty() {
+            Self {
+                engine: cfg.engine.clone(),
+                scale_set: cfg.scale_set.clone(),
+                slo: None,
+            }
+        } else {
+            Self {
+                engine: cfg.engine.clone(),
+                scale_set: vec![],
+                slo: None,
+            }
+        }
+    }
+
+    /// Every engine this replica may ever run (the TP ladder, or just
+    /// the boot engine) — the performance-model training set.
+    pub fn engines(&self) -> Vec<EngineSpec> {
+        if self.scale_set.is_empty() {
+            vec![self.engine.clone()]
+        } else {
+            self.scale_set.clone()
+        }
+    }
+}
+
+/// A strictly-integral JSON number in u32 range (`Json::as_u64` would
+/// silently truncate 2.5 to 2 and wrap out-of-range values).
+fn json_u32(j: &Json) -> Option<u32> {
+    match j {
+        Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x <= u32::MAX as f64 => {
+            Some(*x as u32)
+        }
+        _ => None,
+    }
+}
+
+/// Order a TP ladder by rated max load (what [`crate::coordinator`]'s
+/// `Autoscaler` requires).
+fn sort_ladder(mut specs: Vec<EngineSpec>) -> Vec<EngineSpec> {
+    specs.sort_by(|a, b| {
+        a.max_load_rps
+            .partial_cmp(&b.max_load_rps)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    specs
+}
+
+/// Parse one `--replica-spec` value into (possibly `count` repeated)
+/// replica descriptions.
+///
+/// Grammar: comma-separated `key=value` pairs.
+///   * `engine=<name>` — an exact engine (`throttllem engines` lists
+///     them); mutually exclusive with `model`/`tp`;
+///   * `model=<family>` — model family (default `llama2-13b`);
+///   * `tp=<n>` — tensor parallelism; `tp=1+2+4` declares a TP
+///     autoscaling ladder for this replica;
+///   * `count=<n>` — replicate this description n times (default 1);
+///   * `slo=engine|fleet` — enforce the engine's own Table II SLO or
+///     the fleet-wide one (default `fleet`).
+///
+/// Examples: `tp=2`, `model=llama3-8b,count=2`, `tp=1+2+4,slo=engine`.
+pub fn parse_replica_spec(s: &str) -> anyhow::Result<Vec<ReplicaSpec>> {
+    let mut engine: Option<EngineSpec> = None;
+    let mut model: Option<String> = None;
+    let mut tps: Vec<u32> = vec![];
+    let mut count: usize = 1;
+    let mut engine_slo = false;
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let Some((k, v)) = part.split_once('=') else {
+            anyhow::bail!("replica-spec part {part:?} is not key=value (in {s:?})");
+        };
+        match k {
+            "engine" => engine = Some(engine_by_name(v)?),
+            "model" => model = Some(v.to_string()),
+            "tp" => {
+                tps = v
+                    .split('+')
+                    .map(|t| {
+                        t.parse::<u32>().map_err(|e| {
+                            anyhow::anyhow!("replica-spec tp {t:?}: {e} (in {s:?})")
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<u32>>>()?;
+            }
+            "count" => {
+                count = v.parse::<usize>().map_err(|e| {
+                    anyhow::anyhow!("replica-spec count {v:?}: {e} (in {s:?})")
+                })?;
+            }
+            "slo" => match v {
+                "engine" => engine_slo = true,
+                "fleet" => engine_slo = false,
+                other => anyhow::bail!(
+                    "replica-spec slo {other:?} (expected engine | fleet)"
+                ),
+            },
+            other => anyhow::bail!(
+                "unknown replica-spec key {other:?} \
+                 (expected engine | model | tp | count | slo)"
+            ),
+        }
+    }
+    anyhow::ensure!(count >= 1, "replica-spec count must be >= 1 (in {s:?})");
+    let spec = match engine {
+        Some(e) => {
+            anyhow::ensure!(
+                model.is_none() && tps.is_empty(),
+                "replica-spec: engine= is mutually exclusive with model=/tp= (in {s:?})"
+            );
+            ReplicaSpec::fixed(e)
+        }
+        None => {
+            let model = model.as_deref().unwrap_or("llama2-13b");
+            if tps.is_empty() {
+                tps = vec![default_tp(model)];
+            }
+            if tps.len() == 1 {
+                ReplicaSpec::fixed(family_engine(model, tps[0])?)
+            } else {
+                let ladder = tps
+                    .iter()
+                    .map(|&tp| family_engine(model, tp))
+                    .collect::<anyhow::Result<Vec<EngineSpec>>>()?;
+                ReplicaSpec::autoscaled(sort_ladder(ladder))
+            }
+        }
+    };
+    let spec = if engine_slo { spec.with_engine_slo() } else { spec };
+    Ok(vec![spec; count])
+}
+
+/// Parse a JSONL fleet file: one replica group per line (blank lines
+/// and `#` comments skipped).  Keys per line:
+///   * `"engine"`: exact engine name — or `"model"` (+ `"tp"`);
+///   * `"tp"`: a number, or an array declaring a TP ladder;
+///   * `"count"`: replicas with this description (default 1);
+///   * `"slo"`: `"engine"` or `"fleet"` (default).
+///
+/// Example:
+/// ```text
+/// {"engine": "llama2-13b-tp4"}
+/// {"model": "llama2-13b", "tp": [1, 2], "count": 2, "slo": "engine"}
+/// ```
+pub fn parse_fleet_jsonl(text: &str) -> anyhow::Result<Vec<ReplicaSpec>> {
+    let mut out: Vec<ReplicaSpec> = vec![];
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let v = crate::jsonl::parse(line)
+            .map_err(|e| anyhow::anyhow!("fleet file line {}: {e:#}", i + 1))?;
+        // Reject misspelled keys instead of silently deploying the
+        // default replica (the --replica-spec parser does the same).
+        let Json::Obj(obj) = &v else {
+            anyhow::bail!("fleet file line {}: expected a JSON object", i + 1);
+        };
+        for key in obj.keys() {
+            anyhow::ensure!(
+                matches!(key.as_str(), "engine" | "model" | "tp" | "count" | "slo"),
+                "fleet file line {}: unknown key {key:?} \
+                 (expected engine | model | tp | count | slo)",
+                i + 1
+            );
+        }
+        let count = match v.get("count") {
+            None => 1usize,
+            Some(c) => json_u32(c).filter(|&c| c >= 1).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "fleet file line {}: count must be a positive integer",
+                    i + 1
+                )
+            })? as usize,
+        };
+        let engine_slo = match v.get("slo").and_then(Json::as_str) {
+            None | Some("fleet") => false,
+            Some("engine") => true,
+            Some(other) => anyhow::bail!(
+                "fleet file line {}: slo {other:?} (expected engine | fleet)",
+                i + 1
+            ),
+        };
+        let spec = if let Some(name) = v.get("engine").and_then(Json::as_str) {
+            anyhow::ensure!(
+                v.get("model").is_none() && v.get("tp").is_none(),
+                "fleet file line {}: \"engine\" is mutually exclusive with \
+                 \"model\"/\"tp\"",
+                i + 1
+            );
+            ReplicaSpec::fixed(engine_by_name(name)?)
+        } else {
+            let model = v.get("model").and_then(Json::as_str).unwrap_or("llama2-13b");
+            match v.get("tp") {
+                Some(Json::Arr(arr)) => {
+                    anyhow::ensure!(
+                        !arr.is_empty(),
+                        "fleet file line {}: empty tp ladder",
+                        i + 1
+                    );
+                    let ladder = arr
+                        .iter()
+                        .map(|t| {
+                            let tp = json_u32(t).ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "fleet file line {}: tp entries must be small \
+                                     non-negative integers",
+                                    i + 1
+                                )
+                            })?;
+                            family_engine(model, tp)
+                        })
+                        .collect::<anyhow::Result<Vec<EngineSpec>>>()?;
+                    if ladder.len() == 1 {
+                        ReplicaSpec::fixed(ladder.into_iter().next().unwrap())
+                    } else {
+                        ReplicaSpec::autoscaled(sort_ladder(ladder))
+                    }
+                }
+                Some(t) => {
+                    let tp = json_u32(t).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "fleet file line {}: tp must be a small \
+                             non-negative integer",
+                            i + 1
+                        )
+                    })?;
+                    ReplicaSpec::fixed(family_engine(model, tp)?)
+                }
+                None => ReplicaSpec::fixed(family_engine(model, default_tp(model))?),
+            }
+        };
+        let spec = if engine_slo { spec.with_engine_slo() } else { spec };
+        for _ in 0..count {
+            out.push(spec.clone());
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "fleet file defines no replicas");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::{llama2_13b, llama3_8b};
+
+    #[test]
+    fn parse_single_tp() {
+        let specs = parse_replica_spec("tp=2").unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0], ReplicaSpec::fixed(llama2_13b(2)));
+    }
+
+    #[test]
+    fn parse_model_count_and_slo() {
+        let specs = parse_replica_spec("model=llama3-8b,count=2,slo=engine").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].engine, llama3_8b(1));
+        assert_eq!(specs[0].slo, Some(SloSpec::for_engine(&llama3_8b(1))));
+        assert_eq!(specs[0], specs[1]);
+    }
+
+    #[test]
+    fn parse_tp_ladder_sorts_by_capacity() {
+        let specs = parse_replica_spec("tp=4+1+2").unwrap();
+        assert_eq!(specs.len(), 1);
+        let tps: Vec<u32> = specs[0]
+            .scale_set
+            .iter()
+            .map(|e| e.tensor_parallel)
+            .collect();
+        assert_eq!(tps, vec![1, 2, 4]);
+        // Capacity estimates anchor on the largest rung.
+        assert_eq!(specs[0].engine, llama2_13b(4));
+    }
+
+    #[test]
+    fn parse_engine_name_directly() {
+        let specs = parse_replica_spec("engine=llama2-13b-tp4").unwrap();
+        assert_eq!(specs[0].engine, llama2_13b(4));
+        assert!(specs[0].scale_set.is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_replica_spec("tp").is_err());
+        assert!(parse_replica_spec("tp=banana").is_err());
+        assert!(parse_replica_spec("model=gpt-5").is_err());
+        assert!(parse_replica_spec("model=llama3-8b,tp=2").is_err());
+        assert!(parse_replica_spec("flavor=spicy").is_err());
+        assert!(parse_replica_spec("engine=llama2-13b-tp2,tp=2").is_err());
+        assert!(parse_replica_spec("count=0").is_err());
+        assert!(parse_replica_spec("slo=maybe").is_err());
+    }
+
+    #[test]
+    fn parse_jsonl_fleet() {
+        let text = r#"
+# mixed fleet
+{"engine": "llama2-13b-tp4"}
+{"model": "llama2-13b", "tp": 1, "count": 2}
+{"tp": [1, 2], "slo": "engine"}
+"#;
+        let specs = parse_fleet_jsonl(text).unwrap();
+        assert_eq!(specs.len(), 4);
+        assert_eq!(specs[0].engine, llama2_13b(4));
+        assert_eq!(specs[1].engine, llama2_13b(1));
+        assert_eq!(specs[1], specs[2]);
+        assert_eq!(specs[3].scale_set.len(), 2);
+        assert_eq!(specs[3].slo, Some(SloSpec::for_engine(&llama2_13b(2))));
+    }
+
+    #[test]
+    fn parse_jsonl_rejects_bad_lines() {
+        assert!(parse_fleet_jsonl("").is_err());
+        assert!(parse_fleet_jsonl("{\"tp\": \"two\"}").is_err());
+        assert!(parse_fleet_jsonl("{\"engine\": \"nope\"}").is_err());
+        assert!(parse_fleet_jsonl("{\"count\": 0}").is_err());
+        assert!(parse_fleet_jsonl("not json").is_err());
+        // Misspelled keys must error, not silently deploy the default.
+        assert!(parse_fleet_jsonl("{\"egnine\": \"llama2-13b-tp4\"}").is_err());
+        assert!(parse_fleet_jsonl("{\"modle\": \"llama3-8b\", \"tp\": 1}").is_err());
+        assert!(parse_fleet_jsonl("[1, 2]").is_err());
+        // Out-of-u32-range / non-integral tp must error, not wrap or
+        // truncate to a valid engine.
+        assert!(parse_fleet_jsonl("{\"tp\": 4294967298}").is_err());
+        assert!(parse_fleet_jsonl("{\"tp\": [1, 4294967298]}").is_err());
+        assert!(parse_fleet_jsonl("{\"tp\": 2.5}").is_err());
+        // Non-integer count must error, not silently deploy 1 replica.
+        assert!(parse_fleet_jsonl("{\"tp\": 2, \"count\": \"4\"}").is_err());
+        assert!(parse_fleet_jsonl("{\"tp\": 2, \"count\": 1.5}").is_err());
+        // engine + model/tp on one line is a contradiction, not a
+        // silent precedence rule (same as --replica-spec).
+        assert!(
+            parse_fleet_jsonl("{\"engine\": \"llama2-13b-tp1\", \"tp\": 4}").is_err()
+        );
+    }
+
+    #[test]
+    fn from_config_mirrors_homogeneous_derivation() {
+        let fixed_cfg = ServingConfig::throttllem(llama2_13b(2));
+        let rs = ReplicaSpec::from_config(&fixed_cfg, false);
+        assert_eq!(rs.engine, fixed_cfg.engine);
+        assert!(rs.scale_set.is_empty() && rs.slo.is_none());
+
+        let auto_cfg =
+            ServingConfig::autoscaled(vec![llama2_13b(1), llama2_13b(2), llama2_13b(4)]);
+        let rs = ReplicaSpec::from_config(&auto_cfg, true);
+        assert_eq!(rs.scale_set, auto_cfg.scale_set);
+        assert_eq!(rs.engine, auto_cfg.engine);
+        assert_eq!(rs.engines().len(), 3);
+    }
+}

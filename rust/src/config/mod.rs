@@ -6,8 +6,10 @@
 //! truth; the `table2` bench re-derives max load / E2E SLO from our own
 //! saturation profiling to mirror the paper's methodology.
 
+pub mod fleet;
 pub mod models;
 
+pub use fleet::{parse_fleet_jsonl, parse_replica_spec, ReplicaSpec};
 pub use models::{EngineSpec, ModelFamily, PartitionKind};
 
 /// Service-level objectives the coordinator enforces (paper §V-A).

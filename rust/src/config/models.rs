@@ -26,6 +26,16 @@ impl ModelFamily {
             ModelFamily::TinyLlamaSim => 0.0001,
         }
     }
+
+    /// CLI / report spelling (heterogeneous-fleet stat breakdown).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelFamily::Llama3_8B => "llama3-8b",
+            ModelFamily::Llama2_13B => "llama2-13b",
+            ModelFamily::Llama3_70B => "llama3-70b",
+            ModelFamily::TinyLlamaSim => "tiny-llama-sim",
+        }
+    }
 }
 
 /// Multi-GPU partitioning approach (§II / §III-C).
@@ -200,6 +210,48 @@ pub fn tiny_llama_sim() -> EngineSpec {
     }
 }
 
+/// Resolve an engine descriptor by its CLI spelling.
+pub fn engine_by_name(name: &str) -> anyhow::Result<EngineSpec> {
+    Ok(match name {
+        "llama3-8b-tp1" => llama3_8b(1),
+        "llama2-13b-tp1" => llama2_13b(1),
+        "llama2-13b-tp2" => llama2_13b(2),
+        "llama2-13b-tp4" => llama2_13b(4),
+        "llama3-70b-tp8" => llama3_70b(8),
+        "tiny-llama-sim" => tiny_llama_sim(),
+        other => anyhow::bail!("unknown engine {other:?}; see `throttllem engines`"),
+    })
+}
+
+/// Resolve a (family, tensor-parallelism) pair to its engine
+/// descriptor, rejecting combinations the paper does not characterize
+/// instead of panicking like the raw constructors.
+pub fn family_engine(model: &str, tp: u32) -> anyhow::Result<EngineSpec> {
+    Ok(match (model, tp) {
+        ("llama3-8b", 1) => llama3_8b(1),
+        ("llama2-13b", 1 | 2 | 4) => llama2_13b(tp),
+        ("llama3-70b", 8) => llama3_70b(8),
+        ("tiny-llama-sim", 1) => tiny_llama_sim(),
+        (m @ ("llama3-8b" | "llama2-13b" | "llama3-70b" | "tiny-llama-sim"), t) => {
+            anyhow::bail!("model {m:?} is not characterized at tp={t}")
+        }
+        (other, _) => anyhow::bail!(
+            "unknown model {other:?} \
+             (expected llama3-8b | llama2-13b | llama3-70b | tiny-llama-sim)"
+        ),
+    })
+}
+
+/// Default tensor parallelism for a family (Table II's evaluated
+/// points; llama2-13b defaults to the TP2 reference engine).
+pub fn default_tp(model: &str) -> u32 {
+    match model {
+        "llama2-13b" => 2,
+        "llama3-70b" => 8,
+        _ => 1,
+    }
+}
+
 /// The five engines of Table II, in paper order.
 pub fn table2_engines() -> Vec<EngineSpec> {
     vec![
@@ -258,5 +310,18 @@ mod tests {
     #[should_panic]
     fn llama2_13b_rejects_bad_tp() {
         llama2_13b(3);
+    }
+
+    #[test]
+    fn engine_lookup_by_name_and_family() {
+        for e in table2_engines() {
+            assert_eq!(engine_by_name(&e.name).unwrap(), e);
+            assert_eq!(family_engine(e.family.name(), e.tensor_parallel).unwrap(), e);
+        }
+        assert!(engine_by_name("gpt-5").is_err());
+        assert!(family_engine("llama2-13b", 3).is_err());
+        assert!(family_engine("llama3-8b", 2).is_err());
+        assert_eq!(default_tp("llama2-13b"), 2);
+        assert_eq!(default_tp("llama3-70b"), 8);
     }
 }

@@ -33,10 +33,10 @@ pub mod throttle;
 
 pub use perf_model::PerfModel;
 pub use projection::Projection;
-pub use router::RouterPolicy;
+pub use router::{HeadroomCache, RouterPolicy};
 pub use scheduler::{AdmissionDecision, Scheduler};
 pub use scoreboard::Scoreboard;
 pub use server::{
-    serve_fleet, serve_trace, FleetOutcome, FleetSpec, Policy, ReplicaOutcome,
-    ServeOutcome,
+    serve_fleet, serve_fleet_plan, serve_trace, FamilyStats, FleetOutcome,
+    FleetPlan, FleetSpec, Policy, ReplicaOutcome, ServeOutcome,
 };

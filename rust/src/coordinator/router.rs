@@ -52,7 +52,15 @@ impl RouterPolicy {
 
 /// Normalized headroom score: the binding constraint of KV and batch
 /// headroom (each in (-inf, 1], 1 = completely free). Negative values
-/// mean the replica is already over-committed.
+/// mean the replica is already over-committed.  Each replica is scored
+/// against its OWN capacity grid, so heterogeneous fleets compare
+/// fractions of capacity rather than raw block counts.
+///
+/// A replica with zero KV or batch capacity can never serve anything
+/// and scores `NEG_INFINITY` — ranking strictly below any genuinely
+/// over-committed healthy replica.  (The previous `max(1)` clamp
+/// normalized such degenerate replicas to 0.0, OUTRANKING healthy
+/// replicas with negative scores.)
 pub fn headroom_score(
     kv_capacity: u32,
     projected_peak_kv: u32,
@@ -61,11 +69,59 @@ pub fn headroom_score(
     resident_batch: u32,
     queued_requests: usize,
 ) -> f64 {
+    if kv_capacity == 0 || max_batch == 0 {
+        return f64::NEG_INFINITY;
+    }
     let kv = (kv_capacity as f64 - projected_peak_kv as f64 - queued_blocks as f64)
-        / kv_capacity.max(1) as f64;
+        / kv_capacity as f64;
     let batch = (max_batch as f64 - resident_batch as f64 - queued_requests as f64)
-        / max_batch.max(1) as f64;
+        / max_batch as f64;
     kv.min(batch)
+}
+
+/// Cached §IV-B projection summary for router scoring.
+///
+/// `projected-headroom` used to rebuild the full projection for EVERY
+/// arrival — O(arrivals × replicas) projection builds on the admission
+/// hot path (ROADMAP "Router feedback").  The projection only changes
+/// at admission/completion/iteration boundaries (any scoreboard
+/// mutation or iteration advance) or when the replica's queue changes,
+/// so the summary is memoized under a `(iteration, scoreboard epoch,
+/// queue epoch)` key and recomputed only when the key moves.
+#[derive(Debug, Clone, Default)]
+pub struct HeadroomCache {
+    key: Option<(u64, u64, u64)>,
+    peak_kv: u32,
+    queued_blocks: u32,
+    queued_requests: usize,
+}
+
+impl HeadroomCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop the cached summary unconditionally.
+    pub fn clear(&mut self) {
+        self.key = None;
+    }
+
+    /// The `(projected peak KV, queued blocks, queued requests)`
+    /// summary for `key`, recomputing via `compute` on a miss.
+    pub fn fetch(
+        &mut self,
+        key: (u64, u64, u64),
+        compute: impl FnOnce() -> (u32, u32, usize),
+    ) -> (u32, u32, usize) {
+        if self.key != Some(key) {
+            let (peak_kv, queued_blocks, queued_requests) = compute();
+            self.peak_kv = peak_kv;
+            self.queued_blocks = queued_blocks;
+            self.queued_requests = queued_requests;
+            self.key = Some(key);
+        }
+        (self.peak_kv, self.queued_blocks, self.queued_requests)
+    }
 }
 
 #[cfg(test)]
@@ -115,9 +171,41 @@ mod tests {
     }
 
     #[test]
-    fn headroom_score_survives_degenerate_capacities() {
-        // Zero capacities must not divide by zero.
-        let s = headroom_score(0, 0, 0, 0, 0, 0);
-        assert!(s.is_finite());
+    fn zero_capacity_replica_ranks_strictly_last() {
+        // Regression: a degenerate replica (0 KV / 0 batch) used to be
+        // normalized to 0.0 by the max(1) clamp, OUTRANKING genuinely
+        // over-committed healthy replicas whose scores are negative.
+        let degenerate_kv = headroom_score(0, 0, 0, 8, 0, 0);
+        let degenerate_batch = headroom_score(100, 0, 0, 0, 0, 0);
+        let overcommitted = headroom_score(100, 150, 30, 8, 8, 4);
+        assert!(overcommitted < 0.0);
+        assert_eq!(degenerate_kv, f64::NEG_INFINITY);
+        assert_eq!(degenerate_batch, f64::NEG_INFINITY);
+        assert!(degenerate_kv < overcommitted);
+        assert!(headroom_score(0, 0, 0, 0, 0, 0) == f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn headroom_cache_memoizes_until_key_moves() {
+        let computes = std::cell::Cell::new(0u32);
+        let compute = || {
+            computes.set(computes.get() + 1);
+            (40u32, 10u32, 3usize)
+        };
+        let mut cache = HeadroomCache::new();
+        assert_eq!(cache.fetch((5, 1, 0), compute), (40, 10, 3));
+        assert_eq!(cache.fetch((5, 1, 0), compute), (40, 10, 3));
+        assert_eq!(computes.get(), 1, "second lookup must hit");
+        // Any key component moving recomputes.
+        cache.fetch((6, 1, 0), compute);
+        assert_eq!(computes.get(), 2);
+        cache.fetch((6, 2, 0), compute);
+        assert_eq!(computes.get(), 3);
+        cache.fetch((6, 2, 1), compute);
+        assert_eq!(computes.get(), 4);
+        // clear() forces the next fetch to recompute.
+        cache.clear();
+        cache.fetch((6, 2, 1), compute);
+        assert_eq!(computes.get(), 5);
     }
 }

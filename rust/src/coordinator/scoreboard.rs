@@ -40,11 +40,22 @@ impl Entry {
 pub struct Scoreboard {
     entries: Vec<Entry>,
     virtual_entry: Option<Entry>,
+    /// Mutation counter: bumps on every entry-set change.  Consumers
+    /// caching projection-derived state (the fleet router's headroom
+    /// cache) key on it to invalidate on admission/completion without
+    /// diffing the entries themselves.
+    epoch: u64,
 }
 
 impl Scoreboard {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Mutation counter; changes whenever the visible entry set may
+    /// have changed.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// Committed entries (excludes the virtual one).
@@ -78,6 +89,7 @@ impl Scoreboard {
             e.id
         );
         self.entries.push(e);
+        self.epoch += 1;
     }
 
     /// "Virtually" append a new query (paper: assess how future KV and
@@ -89,6 +101,7 @@ impl Scoreboard {
             "virtual entry already outstanding"
         );
         self.virtual_entry = Some(e);
+        self.epoch += 1;
     }
 
     /// Commit the virtual entry (query admitted).
@@ -98,6 +111,7 @@ impl Scoreboard {
             .take()
             .expect("no virtual entry to commit");
         self.entries.push(e);
+        self.epoch += 1;
         e
     }
 
@@ -107,18 +121,21 @@ impl Scoreboard {
             self.virtual_entry.take().is_some(),
             "no virtual entry to roll back"
         );
+        self.epoch += 1;
     }
 
     /// Mark the committed entry as lost.
     pub fn mark_lost(&mut self, id: RequestId) {
         if let Some(e) = self.entries.iter_mut().find(|e| e.id == id) {
             e.lost = true;
+            self.epoch += 1;
         }
     }
 
     /// Strike a terminated query (§IV-B: signals block deallocation).
     pub fn strike(&mut self, id: RequestId) {
         self.entries.retain(|e| e.id != id);
+        self.epoch += 1;
     }
 
     /// §IV-F: the query at `generated` tokens has outlived |r̂_i| —
@@ -127,6 +144,7 @@ impl Scoreboard {
     pub fn bump_overrun(&mut self, id: RequestId, max_tokens: u32) {
         if let Some(e) = self.entries.iter_mut().find(|e| e.id == id) {
             e.predicted_gen = max_tokens;
+            self.epoch += 1;
         }
     }
 
@@ -147,6 +165,9 @@ impl Scoreboard {
                     bumped.push(id);
                 }
             }
+        }
+        if !bumped.is_empty() {
+            self.epoch += 1;
         }
         bumped
     }
@@ -225,6 +246,25 @@ mod tests {
         // No bump while under prediction.
         let bumped = sb.sync_overruns(&[(1, 900)], 1024);
         assert!(bumped.is_empty());
+    }
+
+    #[test]
+    fn epoch_tracks_mutations() {
+        let mut sb = Scoreboard::new();
+        let e0 = sb.epoch();
+        sb.insert(entry(1, 0, 10, 5));
+        assert!(sb.epoch() > e0);
+        let e1 = sb.epoch();
+        sb.mark_lost(1);
+        assert!(sb.epoch() > e1);
+        let e2 = sb.epoch();
+        sb.strike(1);
+        assert!(sb.epoch() > e2);
+        let e3 = sb.epoch();
+        // Reads leave the epoch alone.
+        let _ = sb.visible().count();
+        let _ = sb.get(1);
+        assert_eq!(sb.epoch(), e3);
     }
 
     #[test]

@@ -14,28 +14,35 @@
 //! decision points.  Admission happens at iteration boundaries, exactly
 //! as inflight batching allows.
 //!
-//! Fleet topology ([`serve_fleet`]): N replicas, each owning its own
-//! [`EngineSim`], [`Scoreboard`], DVFS state and §IV-E frequency
-//! controller, fronted by an admission router ([`RouterPolicy`]) that
-//! picks a replica per arrival and re-routes a request on universal
-//! rejection before ever dropping it.  Autoscaling is two-axis: every
-//! replica right-sizes its own tensor parallelism through
-//! [`Autoscaler`] (shadow instancing per replica), while a
-//! [`FleetScaler`] activates/drains whole replicas against the
-//! aggregate arrival rate.  `serve_trace` (== a fleet of one) is the
-//! unchanged single-engine semantics: with `replicas == 1` every code
-//! path below degenerates to the original event loop, so the results
-//! are bit-identical — `tests/fleet_equivalence.rs` pins this.
+//! Fleet topology ([`serve_fleet`] / [`serve_fleet_plan`]): N
+//! replicas, each owning its own [`EngineSim`], [`Scoreboard`], DVFS
+//! state and §IV-E frequency controller, fronted by an admission
+//! router ([`RouterPolicy`]) that picks a replica per arrival and
+//! re-routes a request on universal rejection before ever dropping it.
+//! Replicas need not be identical: a [`FleetPlan`] carries one
+//! [`ReplicaSpec`] per replica (mixed TP sizes, mixed model families,
+//! per-replica TP ladders and SLO overrides), and the router scores
+//! each replica against its OWN capacity grid.  Autoscaling is
+//! two-axis: every replica right-sizes its own tensor parallelism
+//! through [`Autoscaler`] over ITS OWN ladder (shadow instancing per
+//! replica), while a [`FleetScaler`] activates/drains whole replicas
+//! against the aggregate arrival rate — scale-in picks its victim by
+//! projected energy-per-token, not just queue depth.  `serve_trace`
+//! (== a fleet of one) is the unchanged single-engine semantics: with
+//! `replicas == 1` every code path below degenerates to the original
+//! event loop, so the results are bit-identical —
+//! `tests/fleet_equivalence.rs` pins this.
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::config::{EngineSpec, ServingConfig};
+use crate::config::fleet::ReplicaSpec;
+use crate::config::{EngineSpec, ModelFamily, ServingConfig, SloSpec};
 use crate::coordinator::autoscaler::{
     Autoscaler, FleetDecision, FleetScaler, ScaleDecision,
 };
 use crate::coordinator::perf_model::PerfModel;
 use crate::coordinator::projection::project;
-use crate::coordinator::router::{headroom_score, RouterPolicy};
+use crate::coordinator::router::{headroom_score, HeadroomCache, RouterPolicy};
 use crate::coordinator::scheduler::{entry_for, AdmissionDecision, Scheduler};
 use crate::coordinator::scoreboard::Scoreboard;
 use crate::coordinator::throttle::min_slo_frequency;
@@ -43,7 +50,8 @@ use crate::engine::kv_cache::blocks_for;
 use crate::engine::request::{Request, RequestId, RequestOutcome};
 use crate::engine::sim::EngineSim;
 use crate::gpusim::dvfs::FREQ_MAX_MHZ;
-use crate::gpusim::power::idle_power_w;
+use crate::gpusim::latency::{decode_latency_s, GpuState};
+use crate::gpusim::power::{idle_power_w, power_w};
 use crate::metrics::ServingStats;
 use crate::workload::predictor::conservative_adjust;
 
@@ -149,6 +157,13 @@ impl FleetSpec {
     }
 
     pub fn new(replicas: usize, router: RouterPolicy) -> Self {
+        Self::homogeneous(replicas, router)
+    }
+
+    /// `n` identical replicas behind `router` (replica-count
+    /// autoscaling enabled) — every `FleetSpec` fleet is homogeneous;
+    /// mixed fleets are described by a [`FleetPlan`].
+    pub fn homogeneous(replicas: usize, router: RouterPolicy) -> Self {
         assert!(replicas >= 1, "a fleet needs at least one replica");
         Self {
             replicas,
@@ -164,6 +179,89 @@ impl Default for FleetSpec {
     }
 }
 
+/// Full fleet description with PER-REPLICA engine specs — the
+/// heterogeneous generalization of [`FleetSpec`].  One fleet can mix
+/// TP sizes and model families; each replica autoscales over its own
+/// TP ladder and may enforce its own SLO.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    /// One deployment description per replica.
+    pub replicas: Vec<ReplicaSpec>,
+    /// Admission-router policy picking a replica per arrival.
+    pub router: RouterPolicy,
+    /// Enable the replica-count autoscaling axis.
+    pub autoscale_replicas: bool,
+}
+
+impl FleetPlan {
+    /// A fleet of explicitly-described (typically mixed) replicas.
+    /// Replica-count autoscaling defaults off: draining a replica of a
+    /// hand-picked heterogeneous set silently changes the fleet's
+    /// capacity mix (enable it explicitly when that is intended).
+    pub fn heterogeneous(replicas: Vec<ReplicaSpec>, router: RouterPolicy) -> Self {
+        assert!(!replicas.is_empty(), "a fleet needs at least one replica");
+        Self {
+            replicas,
+            router,
+            autoscale_replicas: false,
+        }
+    }
+
+    /// `n` identical replicas derived from `cfg` exactly as
+    /// [`serve_fleet`] deploys them — bit-identical to the
+    /// `FleetSpec::homogeneous(n)` path (`tests/hetero_fleet.rs` pins
+    /// this).  `autoscale_replicas` enables the fleet (replica-count)
+    /// autoscaling axis.
+    pub fn homogeneous(
+        n: usize,
+        router: RouterPolicy,
+        cfg: &ServingConfig,
+        policy: Policy,
+        autoscale_replicas: bool,
+    ) -> Self {
+        assert!(n >= 1, "a fleet needs at least one replica");
+        Self {
+            replicas: vec![ReplicaSpec::from_config(cfg, policy.autoscaling); n],
+            router,
+            autoscale_replicas,
+        }
+    }
+
+    fn from_fleet_spec(fleet: &FleetSpec, cfg: &ServingConfig, policy: Policy) -> Self {
+        Self::homogeneous(
+            fleet.replicas,
+            fleet.router,
+            cfg,
+            policy,
+            fleet.autoscale_replicas,
+        )
+    }
+
+    /// Whether any replica differs from the first.
+    pub fn is_heterogeneous(&self) -> bool {
+        self.replicas.windows(2).any(|w| w[0] != w[1])
+    }
+
+    /// Unique engines across every replica's boot spec and TP ladder —
+    /// the performance-model training set for this fleet.
+    pub fn engines(&self) -> Vec<EngineSpec> {
+        let mut out: Vec<EngineSpec> = Vec::new();
+        for r in &self.replicas {
+            for e in r.engines() {
+                if !out.iter().any(|x| x.name == e.name) {
+                    out.push(e);
+                }
+            }
+        }
+        out
+    }
+
+    /// Sum of the replicas' rated max loads (trace right-scaling).
+    pub fn rated_rps(&self) -> f64 {
+        self.replicas.iter().map(|r| r.engine.max_load_rps).sum()
+    }
+}
+
 /// Per-replica slice of a fleet run.
 #[derive(Debug, Clone)]
 pub struct ReplicaOutcome {
@@ -172,6 +270,21 @@ pub struct ReplicaOutcome {
     pub engine_switches: u32,
     /// Arrivals the router assigned to this replica.
     pub routed: u64,
+    /// Name of the engine the replica ended the run on.
+    pub engine: String,
+}
+
+/// Aggregate serving stats for every replica of one model family
+/// (the heterogeneous-fleet breakdown).
+#[derive(Debug, Clone)]
+pub struct FamilyStats {
+    pub family: ModelFamily,
+    /// Replicas of this family in the fleet.
+    pub replicas: usize,
+    /// Effective SLO those replicas enforce (the family's first
+    /// replica's — per-replica overrides within a family can differ).
+    pub slo: SloSpec,
+    pub stats: ServingStats,
 }
 
 /// Everything a fleet run produces: the aggregate view plus the
@@ -182,6 +295,9 @@ pub struct FleetOutcome {
     /// when `replicas == 1`).
     pub total: ServeOutcome,
     pub replicas: Vec<ReplicaOutcome>,
+    /// Per-model-family aggregation (one entry per family, first-seen
+    /// order; a single entry for homogeneous fleets).
+    pub families: Vec<FamilyStats>,
     /// Requests moved between replicas on universal rejection.
     pub rerouted: u64,
     /// Fleet-axis scale events.
@@ -259,9 +375,14 @@ impl EngineRt {
 
 /// One fleet replica: its engines (more than one only while an old
 /// engine drains after a shadow-instancing switch), its FIFO queue,
-/// its TP-axis autoscaler, and its telemetry.
+/// its TP-axis autoscaler over ITS OWN ladder, its SLO scheduler, and
+/// its telemetry.
 struct Replica {
     id: usize,
+    /// This replica's own deployment description.
+    rspec: ReplicaSpec,
+    /// Admission control against this replica's effective SLO.
+    sched: Scheduler,
     engines: Vec<EngineRt>,
     queue: VecDeque<Request>,
     scaler: Option<Autoscaler>,
@@ -285,22 +406,30 @@ struct Replica {
     /// accounting while powered on, engine retirement) — the end of
     /// ITS serving window, unlike the fleet-global clock.
     last_event_s: f64,
+    /// Bumps on routing-relevant events outside the scoreboard: queue
+    /// mutations, engine switches, (de)activations.  Third component
+    /// of the headroom-cache key.
+    route_epoch: u64,
+    /// Memoized §IV-B projection summary for router scoring.
+    headroom: HeadroomCache,
 }
 
 impl Replica {
-    fn new(id: usize, cfg: &ServingConfig, policy: Policy) -> Self {
-        let scaler = if policy.autoscaling {
-            Some(Autoscaler::new(cfg.scale_set.clone(), 0))
+    fn new(id: usize, rspec: &ReplicaSpec, fleet_slo: SloSpec, policy: Policy) -> Self {
+        let scaler = if policy.autoscaling && !rspec.scale_set.is_empty() {
+            Some(Autoscaler::new(rspec.scale_set.clone(), 0))
         } else {
             None
         };
         let spec = scaler
             .as_ref()
             .map(|s| s.current_spec().clone())
-            .unwrap_or_else(|| cfg.engine.clone());
+            .unwrap_or_else(|| rspec.engine.clone());
         let next_tick = scaler.as_ref().map(|s| s.interval_s);
         Replica {
             id,
+            sched: Scheduler::new(rspec.slo.unwrap_or(fleet_slo)),
+            rspec: rspec.clone(),
             engines: vec![EngineRt::new(spec, 0.0)],
             queue: VecDeque::new(),
             scaler,
@@ -316,6 +445,8 @@ impl Replica {
             active: true,
             activation_ready: None,
             last_event_s: 0.0,
+            route_epoch: 0,
+            headroom: HeadroomCache::new(),
         }
     }
 
@@ -327,12 +458,13 @@ impl Replica {
         self.queue.is_empty() && self.all_idle()
     }
 
-    /// Spec a (re)activated replica boots with.
-    fn respec(&self, cfg: &ServingConfig) -> EngineSpec {
+    /// Spec a (re)activated replica boots with: its own autoscaler's
+    /// current rung, or its own fixed engine.
+    fn respec(&self) -> EngineSpec {
         self.scaler
             .as_ref()
             .map(|s| s.current_spec().clone())
-            .unwrap_or_else(|| cfg.engine.clone())
+            .unwrap_or_else(|| self.rspec.engine.clone())
     }
 
     /// Router signal: outstanding work (resident rows + queued).
@@ -341,27 +473,111 @@ impl Replica {
         resident + self.queue.len() as u64
     }
 
+    /// Batch slots of the accepting engine (least-loaded's normalizer:
+    /// 10 outstanding on a 64-slot engine is lighter load than 5 on an
+    /// 8-slot one).
+    fn batch_capacity(&self) -> u32 {
+        self.engines
+            .iter()
+            .find(|e| e.accepting)
+            .map(|e| e.sim.spec().max_batch)
+            .unwrap_or(0)
+    }
+
     /// Router signal: projected KV/batch headroom of the accepting
-    /// engine (§IV-B projection), minus what the queue will demand.
-    fn projected_headroom(&self) -> f64 {
-        let Some(e) = self.engines.iter().find(|e| e.accepting) else {
+    /// engine (§IV-B projection) for an arriving request of
+    /// `prompt_tokens`, normalized by THIS replica's own capacity grid
+    /// — heterogeneous replicas compare capacity fractions, and a
+    /// prompt that could never fit here scores `NEG_INFINITY`.
+    ///
+    /// The projection summary is memoized ([`HeadroomCache`]) and
+    /// invalidated on admission/completion (scoreboard epoch),
+    /// iteration boundaries, and queue/topology changes
+    /// (`route_epoch`); rebuilding it per arrival was
+    /// O(arrivals × replicas) projection builds on the hot path.
+    fn headroom_for(&mut self, prompt_tokens: u32) -> f64 {
+        let Some(idx) = self.engines.iter().position(|e| e.accepting) else {
             return f64::NEG_INFINITY;
         };
+        let e = &self.engines[idx];
         let spec = e.sim.spec();
-        let proj = project(&e.sb, e.sim.iter_index(), spec.block_tokens);
-        let queued_blocks: u32 = self
-            .queue
-            .iter()
-            .map(|r| blocks_for(r.prompt_tokens, spec.block_tokens))
-            .sum();
-        headroom_score(
+        let req_blocks = blocks_for(prompt_tokens, spec.block_tokens);
+        if req_blocks > spec.kv_blocks {
+            return f64::NEG_INFINITY; // could never fit, even empty
+        }
+        let key = (e.sim.iter_index(), e.sb.epoch(), self.route_epoch);
+        let queue = &self.queue;
+        let (peak_kv, queued_blocks, queued_requests) = self.headroom.fetch(key, || {
+            let proj = project(&e.sb, e.sim.iter_index(), spec.block_tokens);
+            let qb: u32 = queue
+                .iter()
+                .map(|r| blocks_for(r.prompt_tokens, spec.block_tokens))
+                .sum();
+            (proj.peak_kv(), qb, queue.len())
+        });
+        let score = headroom_score(
             spec.kv_blocks,
-            proj.peak_kv(),
-            queued_blocks,
+            peak_kv,
+            queued_blocks.saturating_add(req_blocks),
             spec.max_batch,
             e.sim.batch(),
-            self.queue.len(),
-        )
+            queued_requests + 1,
+        );
+        #[cfg(debug_assertions)]
+        {
+            // The cache must be unobservable: recompute from scratch
+            // and require bit equality (every debug-mode fleet run
+            // cross-checks cached against uncached scores).
+            let proj = project(&e.sb, e.sim.iter_index(), spec.block_tokens);
+            let qb: u32 = self
+                .queue
+                .iter()
+                .map(|r| blocks_for(r.prompt_tokens, spec.block_tokens))
+                .sum();
+            let fresh = headroom_score(
+                spec.kv_blocks,
+                proj.peak_kv(),
+                qb.saturating_add(req_blocks),
+                spec.max_batch,
+                e.sim.batch(),
+                self.queue.len() + 1,
+            );
+            debug_assert!(
+                score.to_bits() == fresh.to_bits(),
+                "cached projected-headroom diverged from uncached: {score} vs {fresh}"
+            );
+        }
+        score
+    }
+
+    /// Projected energy-per-token (J/token) at the replica's current
+    /// operating point: total power at the engines' applied
+    /// frequencies over total decode throughput.  An idle replica
+    /// produces nothing and scores infinity — it burns idle power for
+    /// zero tokens, the least efficient state a replica can be in.
+    fn energy_per_token(&self) -> f64 {
+        let mut power = 0.0f64;
+        let mut tps = 0.0f64;
+        for e in &self.engines {
+            let spec = e.sim.spec();
+            let freq = e.sim.dvfs.target();
+            let batch = e.sim.batch();
+            let kv = e.sim.kv_blocks_used();
+            power += power_w(spec, batch, kv, freq);
+            if batch > 0 {
+                let st = GpuState {
+                    batch,
+                    kv_blocks: kv,
+                    freq_mhz: freq,
+                };
+                tps += batch as f64 / decode_latency_s(spec, &st);
+            }
+        }
+        if tps > 0.0 {
+            power / tps
+        } else {
+            f64::INFINITY
+        }
     }
 
     /// Run this replica's engines up to the decision point, then retire
@@ -373,7 +589,6 @@ impl Replica {
         cfg: &ServingConfig,
         policy: Policy,
         model: &PerfModel,
-        sched: &Scheduler,
     ) -> bool {
         let mut progressed = false;
         for idx in 0..self.engines.len() {
@@ -389,7 +604,7 @@ impl Replica {
                         cfg,
                         policy,
                         model,
-                        sched,
+                        &self.sched,
                         &mut self.stats,
                     );
                 }
@@ -427,6 +642,12 @@ impl Replica {
                     e.sb.strike(req.id);
                     self.queue.push_front(req.clone());
                     e.blocked_head = Some((req.id, e.completions));
+                    // The eviction may come from a DRAINING engine,
+                    // whose scoreboard epoch is not in the headroom
+                    // cache key (the key tracks the ACCEPTING
+                    // engine): invalidate via route_epoch so the
+                    // router sees the re-queued request.
+                    self.route_epoch += 1;
                 }
                 let had_completions =
                     !report.completed.is_empty() || !report.evicted.is_empty();
@@ -450,7 +671,7 @@ impl Replica {
                 // batch (§IV-E is admission-triggered; completions are
                 // the other composition-change event).
                 if policy.throttling && (had_completions || !bumped.is_empty()) {
-                    rethrottle(e, !self.queue.is_empty(), model, sched);
+                    rethrottle(e, !self.queue.is_empty(), model, &self.sched);
                 }
             }
         }
@@ -480,7 +701,6 @@ impl Replica {
         cfg: &ServingConfig,
         policy: Policy,
         model: &PerfModel,
-        sched: &Scheduler,
     ) {
         let mut powered_on = false;
         for e in self.engines.iter_mut().filter(|e| e.accepting) {
@@ -490,7 +710,15 @@ impl Replica {
                 e.cursor = now;
             }
             if e.sim.is_idle() {
-                try_admissions(e, &mut self.queue, cfg, policy, model, sched, &mut self.stats);
+                try_admissions(
+                    e,
+                    &mut self.queue,
+                    cfg,
+                    policy,
+                    model,
+                    &self.sched,
+                    &mut self.stats,
+                );
             }
         }
         // A powered-on replica is live (burning at least idle power)
@@ -543,6 +771,9 @@ impl Replica {
                     }
                     self.engines.push(EngineRt::new(spec, now));
                     self.switches += 1;
+                    // The accepting engine changed: invalidate the
+                    // router's cached projection summary.
+                    self.route_epoch += 1;
                 }
             }
         }
@@ -568,6 +799,7 @@ impl Replica {
         }
         self.next_tick = None;
         self.window_arrivals = 0;
+        self.route_epoch += 1;
     }
 }
 
@@ -583,8 +815,10 @@ pub fn serve_trace(
     serve_fleet(cfg, policy, model, requests, &FleetSpec::single()).total
 }
 
-/// Serve `requests` (sorted by arrival) on `fleet.replicas` replicas
-/// under `policy`; returns per-replica and aggregate outcomes.
+/// Serve `requests` (sorted by arrival) on `fleet.replicas` identical
+/// replicas under `policy`; returns per-replica and aggregate
+/// outcomes.  Equivalent to [`serve_fleet_plan`] with
+/// [`FleetPlan::homogeneous`] semantics.
 pub fn serve_fleet(
     cfg: &ServingConfig,
     policy: Policy,
@@ -592,15 +826,39 @@ pub fn serve_fleet(
     requests: &[Request],
     fleet: &FleetSpec,
 ) -> FleetOutcome {
+    serve_fleet_plan(
+        cfg,
+        policy,
+        model,
+        requests,
+        &FleetPlan::from_fleet_spec(fleet, cfg, policy),
+    )
+}
+
+/// Serve `requests` (sorted by arrival) on the fleet `plan` describes
+/// — one [`ReplicaSpec`] per replica, mixed TP sizes / model families
+/// allowed — under `policy`; returns per-replica, per-family and
+/// aggregate outcomes.  `cfg` supplies the fleet-wide policy knobs
+/// (SLO default, predictor error, `max_tokens`).
+pub fn serve_fleet_plan(
+    cfg: &ServingConfig,
+    policy: Policy,
+    model: &PerfModel,
+    requests: &[Request],
+    plan: &FleetPlan,
+) -> FleetOutcome {
     debug_assert!(requests.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
-    assert!(fleet.replicas >= 1, "a fleet needs at least one replica");
-    let sched = Scheduler::new(cfg.slo);
-    let n = fleet.replicas;
+    assert!(!plan.replicas.is_empty(), "a fleet needs at least one replica");
+    let n = plan.replicas.len();
 
-    let mut replicas: Vec<Replica> =
-        (0..n).map(|id| Replica::new(id, cfg, policy)).collect();
+    let mut replicas: Vec<Replica> = plan
+        .replicas
+        .iter()
+        .enumerate()
+        .map(|(id, rs)| Replica::new(id, rs, cfg.slo, policy))
+        .collect();
 
-    let fleet_scaling = fleet.autoscale_replicas && policy.autoscaling && n > 1;
+    let fleet_scaling = plan.autoscale_replicas && policy.autoscaling && n > 1;
     let mut fleet_scaler = fleet_scaling.then(|| FleetScaler::new(n));
     let mut fleet_tick = fleet_scaler.as_ref().map(|s| s.interval_s);
     let mut fleet_window = 0u64;
@@ -646,7 +904,7 @@ pub fn serve_fleet(
         // ---- run engine iterations up to the decision point ----------
         let mut progressed = false;
         for rp in replicas.iter_mut() {
-            progressed |= rp.run_until(decision, cfg, policy, model, &sched);
+            progressed |= rp.run_until(decision, cfg, policy, model);
         }
 
         if decision.is_infinite() {
@@ -658,7 +916,6 @@ pub fn serve_fleet(
                         idx,
                         cfg,
                         model,
-                        &sched,
                         now,
                         &mut reroutes,
                         &mut rerouted,
@@ -676,7 +933,8 @@ pub fn serve_fleet(
             if r.arrival_s > now {
                 break;
             }
-            let target = route_arrival(fleet, &mut rr_cursor, &replicas);
+            let target =
+                route_arrival(plan.router, &mut rr_cursor, &mut replicas, r.prompt_tokens);
             let rp = &mut replicas[target];
             // Feed the accepting engine's load estimator.
             if let Some(e) = rp.engines.iter_mut().find(|e| e.accepting) {
@@ -688,6 +946,7 @@ pub fn serve_fleet(
                 };
             }
             rp.queue.push_back(r.clone());
+            rp.route_epoch += 1;
             rp.window_arrivals += 1;
             rp.routed += 1;
             fleet_window += 1;
@@ -695,7 +954,7 @@ pub fn serve_fleet(
         }
         // Wake idle accepting engines for immediate admission.
         for rp in replicas.iter_mut() {
-            rp.wake_and_admit(now, cfg, policy, model, &sched);
+            rp.wake_and_admit(now, cfg, policy, model);
         }
 
         // TP-axis autoscaler ticks (active replicas only).
@@ -724,7 +983,7 @@ pub fn serve_fleet(
                     replicas
                         .iter()
                         .filter(|r| r.active)
-                        .map(|r| r.respec(cfg).max_load_rps)
+                        .map(|r| r.respec().max_load_rps)
                         .sum::<f64>()
                         / active_count as f64
                 };
@@ -756,7 +1015,7 @@ pub fn serve_fleet(
                             if let Some(at) = rp.activation_ready {
                                 let warmed =
                                     (now - (at - fs.spawn_time_s)).max(0.0);
-                                let spec = rp.respec(cfg);
+                                let spec = rp.respec();
                                 rp.shadow_energy +=
                                     idle_power_w(&spec, FREQ_MAX_MHZ) * warmed;
                                 rp.activation_ready = None;
@@ -769,16 +1028,9 @@ pub fn serve_fleet(
                             if actives <= 1 {
                                 break;
                             }
-                            // Drain the active replica with the least
-                            // outstanding work (ties -> highest index).
-                            let Some(j) = replicas
-                                .iter()
-                                .enumerate()
-                                .filter(|(_, r)| r.active)
-                                .min_by_key(|(i, r)| {
-                                    (r.outstanding(), usize::MAX - *i)
-                                })
-                                .map(|(i, _)| i)
+                            // Energy-aware victim selection (ROADMAP
+                            // "Fleet-axis energy policy").
+                            let Some(j) = select_scale_in_victim(&replicas)
                             else {
                                 break;
                             };
@@ -788,9 +1040,14 @@ pub fn serve_fleet(
                             let moved: Vec<Request> =
                                 replicas[j].queue.drain(..).collect();
                             for req in moved {
-                                let tgt =
-                                    route_arrival(fleet, &mut rr_cursor, &replicas);
+                                let tgt = route_arrival(
+                                    plan.router,
+                                    &mut rr_cursor,
+                                    &mut replicas,
+                                    req.prompt_tokens,
+                                );
                                 replicas[tgt].catch_up_tick(now);
+                                replicas[tgt].route_epoch += 1;
                                 replicas[tgt].queue.push_back(req);
                             }
                         }
@@ -806,7 +1063,7 @@ pub fn serve_fleet(
                 if let Some(at) = rp.activation_ready {
                     if now >= at {
                         rp.activation_ready = None;
-                        let spec = rp.respec(cfg);
+                        let spec = rp.respec();
                         // Warm-up energy, same accounting as a shadow.
                         rp.shadow_energy +=
                             idle_power_w(&spec, FREQ_MAX_MHZ) * fs.spawn_time_s;
@@ -814,6 +1071,7 @@ pub fn serve_fleet(
                         rp.active = true;
                         rp.next_tick =
                             rp.scaler.as_ref().map(|s| now + s.interval_s);
+                        rp.route_epoch += 1;
                         activations += 1;
                     }
                 }
@@ -828,7 +1086,6 @@ pub fn serve_fleet(
                     idx,
                     cfg,
                     model,
-                    &sched,
                     now,
                     &mut reroutes,
                     &mut rerouted,
@@ -867,6 +1124,7 @@ pub fn serve_fleet(
             shadow_energy_j: rp.shadow_energy,
             engine_switches: rp.switches,
             routed: rp.routed,
+            engine: rp.respec().name,
         });
         parts.push(ServeOutcome {
             stats: rp.stats,
@@ -905,17 +1163,43 @@ pub fn serve_fleet(
             engine_switches: switches,
         }
     };
+    // Per-model-family aggregation (heterogeneous fleets: the CLI and
+    // demos break attainment and energy out per family).
+    let mut families: Vec<FamilyStats> = Vec::new();
+    for (ro, rs) in replica_outcomes.iter().zip(&plan.replicas) {
+        match families.iter_mut().find(|f| f.family == rs.engine.family) {
+            Some(f) => {
+                f.replicas += 1;
+                f.stats.merge_from(&ro.stats);
+            }
+            None => families.push(FamilyStats {
+                family: rs.engine.family,
+                replicas: 1,
+                slo: rs.slo.unwrap_or(cfg.slo),
+                stats: ro.stats.clone(),
+            }),
+        }
+    }
     FleetOutcome {
         total,
         replicas: replica_outcomes,
+        families,
         rerouted,
         replica_activations: activations,
         replica_deactivations: deactivations,
     }
 }
 
-/// Pick the replica an arrival is routed to.
-fn route_arrival(fleet: &FleetSpec, rr_cursor: &mut usize, replicas: &[Replica]) -> usize {
+/// Pick the replica an arrival (of `prompt_tokens`) is routed to.  The
+/// capacity-aware policies score the request against each replica's
+/// OWN grid, so a prompt that can never fit a small replica is not
+/// parked there while a larger one exists.
+fn route_arrival(
+    router: RouterPolicy,
+    rr_cursor: &mut usize,
+    replicas: &mut [Replica],
+    prompt_tokens: u32,
+) -> usize {
     let active: Vec<usize> = replicas
         .iter()
         .enumerate()
@@ -925,22 +1209,33 @@ fn route_arrival(fleet: &FleetSpec, rr_cursor: &mut usize, replicas: &[Replica])
     match active.len() {
         0 => 0, // unreachable: the fleet axis keeps >= 1 active
         1 => active[0],
-        _ => match fleet.router {
+        _ => match router {
             RouterPolicy::RoundRobin => {
                 let i = active[*rr_cursor % active.len()];
                 *rr_cursor += 1;
                 i
             }
-            RouterPolicy::LeastLoaded => active
-                .iter()
-                .copied()
-                .min_by_key(|&i| replicas[i].outstanding())
-                .unwrap(),
+            RouterPolicy::LeastLoaded => {
+                // Outstanding work normalized by each replica's own
+                // batch capacity (ties keep the lowest index, matching
+                // the unnormalized homogeneous behavior exactly).
+                let mut best = active[0];
+                let mut best_load = f64::INFINITY;
+                for &i in &active {
+                    let cap = replicas[i].batch_capacity().max(1) as f64;
+                    let load = replicas[i].outstanding() as f64 / cap;
+                    if load < best_load {
+                        best_load = load;
+                        best = i;
+                    }
+                }
+                best
+            }
             RouterPolicy::ProjectedHeadroom => {
                 let mut best = active[0];
                 let mut best_score = f64::NEG_INFINITY;
                 for &i in &active {
-                    let score = replicas[i].projected_headroom();
+                    let score = replicas[i].headroom_for(prompt_tokens);
                     if score > best_score {
                         best_score = score;
                         best = i;
@@ -952,15 +1247,55 @@ fn route_arrival(fleet: &FleetSpec, rr_cursor: &mut usize, replicas: &[Replica])
     }
 }
 
+/// Energy-aware scale-in victim: the ACTIVE replica that is least
+/// energy-efficient at its current operating point — highest projected
+/// J/token, with idle replicas infinitely inefficient (idle power for
+/// zero tokens).  Exact ties (e.g. several idle replicas) fall back to
+/// the least outstanding work, then to the highest index — the
+/// pre-energy-policy drain order.
+fn select_scale_in_victim(replicas: &[Replica]) -> Option<usize> {
+    let mut victim: Option<(f64, u64, usize)> = None;
+    for (i, r) in replicas.iter().enumerate() {
+        if !r.active {
+            continue;
+        }
+        let ept = r.energy_per_token();
+        let out = r.outstanding();
+        let better = match victim {
+            None => true,
+            Some((best_ept, best_out, best_i)) => {
+                if ept != best_ept {
+                    ept > best_ept
+                } else if out != best_out {
+                    out < best_out
+                } else {
+                    i > best_i
+                }
+            }
+        };
+        if better {
+            victim = Some((ept, out, i));
+        }
+    }
+    victim.map(|(_, _, i)| i)
+}
+
 /// Replica (other than `from`) best suited to take a request no engine
 /// at `from` can ever hold: must be active, accepting, and have the
-/// total KV capacity for the prompt; prefer the most free KV.
+/// total KV capacity for the prompt.  Candidates are ranked by
+/// normalized headroom AFTER taking the request — free KV minus queued
+/// demand minus the request's own blocks, over the replica's OWN
+/// capacity, min'd with the equivalent batch-slot slack — so a large
+/// half-busy replica can outrank a small empty one the prompt would
+/// choke.  (The previous raw free-block comparison systematically
+/// favored big-grid replicas for every reroute, even short prompts a
+/// lightly-loaded small replica should absorb.)
 fn best_reroute_target(
     replicas: &[Replica],
     from: usize,
     prompt_tokens: u32,
 ) -> Option<usize> {
-    let mut best: Option<(u32, usize)> = None;
+    let mut best: Option<(f64, usize)> = None;
     for (j, rp) in replicas.iter().enumerate() {
         if j == from || !rp.active {
             continue;
@@ -969,12 +1304,31 @@ fn best_reroute_target(
             continue;
         };
         let spec = e.sim.spec();
-        if blocks_for(prompt_tokens, spec.block_tokens) > spec.kv_blocks {
+        if spec.kv_blocks == 0 || spec.max_batch == 0 {
+            continue; // degenerate replica: can never serve anything
+        }
+        let need = blocks_for(prompt_tokens, spec.block_tokens);
+        if need > spec.kv_blocks {
             continue; // could never fit even empty
         }
-        let free = e.sim.kv_blocks_free();
-        if best.map(|(bf, _)| free > bf).unwrap_or(true) {
-            best = Some((free, j));
+        let queued_blocks: u32 = rp
+            .queue
+            .iter()
+            .map(|r| blocks_for(r.prompt_tokens, spec.block_tokens))
+            .sum();
+        // Same normalized slack formula the router scores with, fed
+        // with instantaneous KV usage instead of the projection (this
+        // is the cold rescue path; the queue head is already stuck).
+        let score = headroom_score(
+            spec.kv_blocks,
+            e.sim.kv_blocks_used(),
+            queued_blocks.saturating_add(need),
+            spec.max_batch,
+            e.sim.batch(),
+            rp.queue.len() + 1,
+        );
+        if best.map(|(bs, _)| score > bs).unwrap_or(true) {
+            best = Some((score, j));
         }
     }
     best.map(|(_, j)| j)
@@ -1105,7 +1459,6 @@ fn resolve_blocked(
     idx: usize,
     cfg: &ServingConfig,
     model: &PerfModel,
-    sched: &Scheduler,
     now: f64,
     reroutes: &mut HashMap<RequestId, usize>,
     rerouted: &mut u64,
@@ -1132,7 +1485,7 @@ fn resolve_blocked(
                     adjusted,
                     req.arrival_s,
                     e.sim.iter_index(),
-                    &sched.slo,
+                    &rp.sched.slo,
                 );
                 e.sb.insert(entry);
                 e.sb.mark_lost(req.id);
@@ -1145,17 +1498,19 @@ fn resolve_blocked(
                     let spec = e.sim.spec().clone();
                     let proj = project(&e.sb, e.sim.iter_index(), spec.block_tokens);
                     let f = min_slo_frequency(
-                        model, &spec, &sched.slo, &e.sb, &proj, now, 1.0,
+                        model, &spec, &rp.sched.slo, &e.sb, &proj, now, 1.0,
                     );
                     e.sim.dvfs.set(now, f);
                 }
                 None
             } else {
+                rp.route_epoch += 1;
                 rp.queue.pop_front()
             }
         } else {
             // No accepting engine (a deactivated replica still holding
             // re-queued evictions): hand the head to the fleet.
+            rp.route_epoch += 1;
             rp.queue.pop_front()
         }
     };
@@ -1172,6 +1527,7 @@ fn resolve_blocked(
             *hops += 1;
             *rerouted += 1;
             replicas[j].catch_up_tick(now);
+            replicas[j].route_epoch += 1;
             replicas[j].queue.push_back(req);
         }
         None => {
@@ -1376,12 +1732,13 @@ mod tests {
     #[test]
     fn reroute_targets_prefer_capacity() {
         let policy = Policy::throttle_only();
-        let cfg_small = ServingConfig::throttllem(llama2_13b(1)); // 120 blocks
-        let cfg_big = ServingConfig::throttllem(llama2_13b(2)); // 439 blocks
+        let slo = SloSpec::new(0.2, 30.2);
+        let small = ReplicaSpec::fixed(llama2_13b(1)); // 120 blocks
+        let big = ReplicaSpec::fixed(llama2_13b(2)); // 439 blocks
         let replicas = vec![
-            Replica::new(0, &cfg_small, policy),
-            Replica::new(1, &cfg_big, policy),
-            Replica::new(2, &cfg_small, policy),
+            Replica::new(0, &small, slo, policy),
+            Replica::new(1, &big, slo, policy),
+            Replica::new(2, &small, slo, policy),
         ];
         // 20k-token prompt: 313 blocks; only the TP2 replica can ever
         // hold it.
@@ -1389,7 +1746,157 @@ mod tests {
         // 64k tokens: 1000 blocks; nobody can.
         assert_eq!(best_reroute_target(&replicas, 0, 64_000), None);
         // From the big replica itself: the small ones can hold a small
-        // prompt; ties prefer the most free KV (equal here -> first).
+        // prompt; ties (equal normalized slack) prefer the first.
         assert_eq!(best_reroute_target(&replicas, 1, 64), Some(0));
+    }
+
+    fn test_replica(id: usize, spec: crate::config::EngineSpec) -> Replica {
+        Replica::new(
+            id,
+            &ReplicaSpec::fixed(spec),
+            SloSpec::new(0.2, 30.2),
+            Policy::throttle_only(),
+        )
+    }
+
+    fn test_request(id: u64, prompt: u32) -> Request {
+        Request {
+            id,
+            prompt_tokens: prompt,
+            gen_tokens: 200,
+            predicted_gen: 200,
+            arrival_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn headroom_cache_matches_uncached_and_tracks_mutations() {
+        // The cached projected-headroom score must equal the uncached
+        // one bit-for-bit (headroom_for also cross-checks internally
+        // in debug builds on EVERY routing decision).
+        let mut rp = test_replica(0, llama2_13b(2));
+        rp.engines[0]
+            .sim
+            .admit(test_request(0, 640), 0.0, false)
+            .unwrap();
+        rp.engines[0]
+            .sb
+            .insert(entry_for(0, 640, 200, 0.0, 0, &SloSpec::new(0.2, 30.2)));
+        let s1 = rp.headroom_for(64);
+        let s2 = rp.headroom_for(64); // cache hit
+        assert_eq!(s1.to_bits(), s2.to_bits());
+        // A different request size against the same cached projection
+        // still scores per-request.
+        let s3 = rp.headroom_for(6400);
+        assert!(s3 < s1);
+        // Scoreboard mutation (an admission) invalidates: the score
+        // must track the new projection.
+        rp.engines[0]
+            .sb
+            .insert(entry_for(1, 1280, 300, 0.0, 0, &SloSpec::new(0.2, 30.2)));
+        let s4 = rp.headroom_for(64);
+        assert!(s4 < s1, "admission must lower headroom: {s4} vs {s1}");
+        // Queue mutation invalidates via route_epoch.
+        rp.queue.push_back(test_request(2, 640));
+        rp.route_epoch += 1;
+        let s5 = rp.headroom_for(64);
+        assert!(s5 < s4, "queued work must lower headroom: {s5} vs {s4}");
+    }
+
+    #[test]
+    fn headroom_rejects_prompts_that_can_never_fit() {
+        let mut small = test_replica(0, llama2_13b(1)); // 120 blocks
+        // 10k tokens -> 157 blocks: impossible on TP1, fine on TP2.
+        assert_eq!(small.headroom_for(10_000), f64::NEG_INFINITY);
+        let mut big = test_replica(1, llama2_13b(2));
+        assert!(big.headroom_for(10_000) > f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn scale_in_victim_prefers_energy_inefficient_replica() {
+        // Replica 0: efficient operating point (1050 MHz sweet spot,
+        // Fig. 2e), ONE resident row.  Replica 1: max frequency (high
+        // J/token), one resident row plus one queued -> MORE
+        // outstanding work.  The old least-loaded rule drained replica
+        // 0; energy-aware selection must drain replica 1.
+        let mut a = test_replica(0, llama2_13b(2));
+        a.engines[0].sim.dvfs.set(0.0, 1050);
+        a.engines[0]
+            .sim
+            .admit(test_request(0, 64), 0.0, false)
+            .unwrap();
+        let mut b = test_replica(1, llama2_13b(2));
+        b.engines[0].sim.dvfs.set(0.0, FREQ_MAX_MHZ);
+        b.engines[0]
+            .sim
+            .admit(test_request(1, 64), 0.0, false)
+            .unwrap();
+        b.queue.push_back(test_request(2, 64));
+        assert!(b.energy_per_token() > a.energy_per_token());
+        assert!(a.outstanding() < b.outstanding());
+        let replicas = vec![a, b];
+        assert_eq!(select_scale_in_victim(&replicas), Some(1));
+    }
+
+    #[test]
+    fn scale_in_victim_idle_replica_is_infinitely_inefficient() {
+        let mut busy = test_replica(0, llama2_13b(2));
+        busy.engines[0].sim.dvfs.set(0.0, 1050);
+        busy.engines[0]
+            .sim
+            .admit(test_request(0, 64), 0.0, false)
+            .unwrap();
+        let idle = test_replica(1, llama2_13b(2));
+        assert_eq!(idle.energy_per_token(), f64::INFINITY);
+        assert!(busy.energy_per_token().is_finite());
+        // Idle burns power for zero tokens: always the first victim.
+        let replicas = vec![busy, idle];
+        assert_eq!(select_scale_in_victim(&replicas), Some(1));
+        // Several idle replicas tie at infinity: fall back to the
+        // least-loaded order (highest index on full ties).
+        let replicas = vec![
+            test_replica(0, llama2_13b(2)),
+            test_replica(1, llama2_13b(2)),
+        ];
+        assert_eq!(select_scale_in_victim(&replicas), Some(1));
+        // Inactive replicas are never victims.
+        let mut replicas = vec![
+            test_replica(0, llama2_13b(2)),
+            test_replica(1, llama2_13b(2)),
+        ];
+        replicas[1].active = false;
+        assert_eq!(select_scale_in_victim(&replicas), Some(0));
+    }
+
+    #[test]
+    fn heterogeneous_fleet_reports_per_family_stats() {
+        let spec8b = crate::config::models::llama3_8b(1);
+        let spec13b = llama2_13b(2);
+        let cfg = ServingConfig::throttllem(spec13b.clone());
+        let plan = FleetPlan::heterogeneous(
+            vec![
+                ReplicaSpec::fixed(spec8b.clone()).with_engine_slo(),
+                ReplicaSpec::fixed(spec13b.clone()),
+            ],
+            RouterPolicy::LeastLoaded,
+        );
+        let m = PerfModel::train(&plan.engines(), 40, 0);
+        let reqs = quick_trace(3.0, 60.0, 8);
+        let out = serve_fleet_plan(&cfg, Policy::throttle_only(), &m, &reqs, &plan);
+        assert_eq!(
+            out.total.stats.completed + out.total.stats.dropped,
+            reqs.len() as u64
+        );
+        assert_eq!(out.families.len(), 2);
+        let completed: u64 = out.families.iter().map(|f| f.stats.completed).sum();
+        assert_eq!(completed, out.total.stats.completed);
+        // Family entries carry their effective SLOs.
+        assert_eq!(out.families[0].family, spec8b.family);
+        assert!((out.families[0].slo.e2e_p99 - spec8b.e2e_slo_p99).abs() < 1e-9);
+        assert!((out.families[1].slo.e2e_p99 - cfg.slo.e2e_p99).abs() < 1e-9);
+        // Replica outcomes name their engines.
+        assert_eq!(out.replicas[0].engine, spec8b.name);
+        assert_eq!(out.replicas[1].engine, spec13b.name);
+        assert!(plan.is_heterogeneous());
     }
 }

@@ -17,27 +17,17 @@
 //!   throttllem real-serve --artifacts artifacts --batch 4 --steps 32
 
 use throttllem::cli::Args;
-use throttllem::config::models::{
-    llama2_13b, llama3_70b, llama3_8b, table2_engines, tiny_llama_sim,
+use throttllem::config::models::{engine_by_name, llama2_13b, table2_engines};
+use throttllem::config::{
+    parse_fleet_jsonl, parse_replica_spec, ReplicaSpec, ServingConfig,
 };
-use throttllem::config::{EngineSpec, ServingConfig};
-use throttllem::coordinator::{serve_fleet, FleetSpec, PerfModel, Policy, RouterPolicy};
+use throttllem::coordinator::{
+    serve_fleet_plan, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
+};
 use throttllem::mlmodel::{mae, mape, r2_score};
 use throttllem::sim::Pcg64;
 use throttllem::workload::trace::{synth_trace, synth_trace_rps_range, TraceParams};
 use throttllem::workload::{collect_training_data, LengthPredictor};
-
-fn engine_by_name(name: &str) -> anyhow::Result<EngineSpec> {
-    Ok(match name {
-        "llama3-8b-tp1" => llama3_8b(1),
-        "llama2-13b-tp1" => llama2_13b(1),
-        "llama2-13b-tp2" => llama2_13b(2),
-        "llama2-13b-tp4" => llama2_13b(4),
-        "llama3-70b-tp8" => llama3_70b(8),
-        "tiny-llama-sim" => tiny_llama_sim(),
-        other => anyhow::bail!("unknown engine {other:?}; see `throttllem engines`"),
-    })
-}
 
 fn policy_by_name(name: &str) -> anyhow::Result<Policy> {
     Ok(match name {
@@ -78,6 +68,13 @@ usage: throttllem <serve|profile|train-model|engines|real-serve> [--options]
                --duration <s> --error <p95 frac> --seed <n> [--autoscale]
                --replicas <n> --router <round-robin|least-loaded|projected-headroom>
                --peak <rps>   (default: rated max load x replicas)
+               heterogeneous fleets (mixed TP / model families):
+               --replica-spec tp=2[,model=<m>][,count=<n>][,slo=engine]  (repeatable;
+                 tp=1+2+4 declares a per-replica TP autoscale ladder)
+               --fleet <file.jsonl>  (one replica group per line, e.g.
+                 {\"model\":\"llama2-13b\",\"tp\":2,\"count\":2})
+               --autoscale-replicas  (opt in to fleet-axis scale in/out on an
+                 explicit fleet; off by default to keep the capacity mix)
   profile:     --engine <name> --samples <n>
   train-model: --engine <name> [--samples <n>]
   real-serve:  --artifacts <dir> --batch <n> --steps <n>";
@@ -101,9 +98,45 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let duration = args.get_f64("duration", 600.0)?;
     let error = args.get_f64("error", 0.0)?;
     let seed = args.get_u64("seed", 0)?;
+    let router = RouterPolicy::parse(args.get_or("router", "round-robin"))?;
+
+    // Heterogeneous fleet: repeatable --replica-spec and/or a --fleet
+    // JSONL file (mixed TP sizes / model families, per-replica TP
+    // ladders and SLO overrides).
+    let mut replica_specs: Vec<ReplicaSpec> = Vec::new();
+    for s in args.get_all("replica-spec") {
+        replica_specs.extend(parse_replica_spec(s)?);
+    }
+    if let Some(path) = args.get("fleet") {
+        anyhow::ensure!(
+            replica_specs.is_empty(),
+            "--fleet and --replica-spec are mutually exclusive"
+        );
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("--fleet {path:?}: {e}"))?;
+        replica_specs = parse_fleet_jsonl(&text)?;
+    }
+    if !replica_specs.is_empty() {
+        anyhow::ensure!(
+            args.get("replicas").is_none(),
+            "--replicas conflicts with an explicit fleet description"
+        );
+        anyhow::ensure!(
+            args.get("engine").is_none(),
+            "--engine conflicts with an explicit fleet description \
+             (name engines inside --replica-spec / --fleet instead)"
+        );
+        anyhow::ensure!(
+            !args.flag("autoscale"),
+            "--autoscale conflicts with an explicit fleet description \
+             (give replicas a tp ladder, e.g. --replica-spec tp=1+2+4, \
+             and an autoscaling --policy instead)"
+        );
+        return cmd_serve_hetero(args, policy, router, replica_specs, duration, error, seed);
+    }
+
     let replicas = args.get_u64("replicas", 1)? as usize;
     anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
-    let router = RouterPolicy::parse(args.get_or("router", "round-robin"))?;
 
     let autoscale = policy.autoscaling || args.flag("autoscale");
     let (mut cfg, engines) = if autoscale {
@@ -148,12 +181,99 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         router.name()
     );
 
-    let fleet = FleetSpec {
+    let plan = FleetPlan::homogeneous(
         replicas,
         router,
-        autoscale_replicas: policy.autoscaling && replicas > 1,
+        &cfg,
+        policy,
+        policy.autoscaling && replicas > 1,
+    );
+    let fleet_out = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
+    print_serve_report(&cfg, policy, router, replicas, &fleet_out);
+    Ok(())
+}
+
+/// Serve on an explicitly-described (typically mixed) fleet.
+fn cmd_serve_hetero(
+    args: &Args,
+    policy: Policy,
+    router: RouterPolicy,
+    specs: Vec<ReplicaSpec>,
+    duration: f64,
+    error: f64,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let n = specs.len();
+    // A TP ladder only does anything under an autoscaling policy —
+    // reject the combination instead of silently pinning the replica
+    // to the ladder's largest rung.
+    if !policy.autoscaling {
+        anyhow::ensure!(
+            specs.iter().all(|r| r.scale_set.is_empty()),
+            "a per-replica tp ladder (tp=a+b+...) requires an autoscaling \
+             policy; use --policy throttllem or --policy triton-autoscale"
+        );
+    }
+    // Fleet-axis autoscaling stays OFF for hand-picked fleets unless
+    // explicitly requested: draining a replica of a heterogeneous set
+    // silently changes the fleet's capacity mix (a scale-in could
+    // power off the only replica a long prompt fits on).
+    let plan = FleetPlan {
+        replicas: specs,
+        router,
+        autoscale_replicas: policy.autoscaling
+            && n > 1
+            && args.flag("autoscale-replicas"),
     };
-    let fleet_out = serve_fleet(&cfg, policy, &model, &reqs, &fleet);
+    let engines = plan.engines();
+    // Fleet-wide knobs anchor on the highest-capacity engine; replicas
+    // with slo=engine overrides enforce their own Table II SLOs.
+    let anchor = engines
+        .iter()
+        .max_by(|a, b| a.max_load_rps.partial_cmp(&b.max_load_rps).unwrap())
+        .unwrap()
+        .clone();
+    let mut cfg = if policy.throttling {
+        ServingConfig::throttllem(anchor)
+    } else {
+        ServingConfig::triton(anchor)
+    };
+    cfg.predictor_p95_error = error;
+
+    eprintln!("training performance model on {} engine(s)...", engines.len());
+    let model = PerfModel::train(&engines, 120, seed);
+
+    // Right-scale to the fleet's aggregate rated load by default.
+    let peak = args.get_f64("peak", plan.rated_rps())?;
+    let mut reqs = synth_trace(&TraceParams::short(duration, peak, seed));
+    let predictor = if error > 0.0 {
+        LengthPredictor::noisy(error, seed)
+    } else {
+        LengthPredictor::oracle()
+    };
+    predictor.apply(&mut reqs, cfg.max_tokens);
+    eprintln!(
+        "replaying {} requests over {:.0} s under policy {} on {} heterogeneous \
+         replica(s) ({})...",
+        reqs.len(),
+        duration,
+        policy.name(),
+        n,
+        router.name()
+    );
+
+    let fleet_out = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
+    print_serve_report(&cfg, policy, router, n, &fleet_out);
+    Ok(())
+}
+
+fn print_serve_report(
+    cfg: &ServingConfig,
+    policy: Policy,
+    router: RouterPolicy,
+    replicas: usize,
+    fleet_out: &FleetOutcome,
+) {
     let out = &fleet_out.total;
     let s = &out.stats;
     println!("policy             : {}", policy.name());
@@ -191,13 +311,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             fleet_out.replica_deactivations
         );
         println!(
-            "{:<8} {:>8} {:>10} {:>8} {:>10} {:>10} {:>9}",
-            "replica", "routed", "completed", "dropped", "freq[MHz]", "energy[kJ]", "switches"
+            "{:<8} {:<16} {:>8} {:>10} {:>8} {:>10} {:>10} {:>9}",
+            "replica",
+            "engine",
+            "routed",
+            "completed",
+            "dropped",
+            "freq[MHz]",
+            "energy[kJ]",
+            "switches"
         );
         for (i, r) in fleet_out.replicas.iter().enumerate() {
             println!(
-                "{:<8} {:>8} {:>10} {:>8} {:>10.0} {:>10.1} {:>9}",
+                "{:<8} {:<16} {:>8} {:>10} {:>8} {:>10.0} {:>10.1} {:>9}",
                 i,
+                r.engine,
                 r.routed,
                 r.stats.completed,
                 r.stats.dropped,
@@ -207,7 +335,25 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
-    Ok(())
+    // Heterogeneous fleets: break attainment and energy out per model
+    // family against each family's effective SLO.
+    if fleet_out.families.len() > 1 {
+        println!(
+            "{:<14} {:>8} {:>10} {:>12} {:>10} {:>8}",
+            "family", "replicas", "completed", "E2E att.[%]", "energy[kJ]", "TPJ"
+        );
+        for f in &fleet_out.families {
+            println!(
+                "{:<14} {:>8} {:>10} {:>12.1} {:>10.1} {:>8.3}",
+                f.family.name(),
+                f.replicas,
+                f.stats.completed,
+                f.stats.e2e_slo_attainment(f.slo.e2e_p99) * 100.0,
+                f.stats.total_energy_j / 1e3,
+                f.stats.tokens_per_joule()
+            );
+        }
+    }
 }
 
 fn cmd_profile(args: &Args) -> anyhow::Result<()> {

@@ -165,6 +165,51 @@ pub fn synth_trace_rps_range(p: &TraceParams, lo_rps: f64, hi_rps: f64) -> Vec<R
     synth_trace(&amplified)
 }
 
+/// Inject a periodic out-of-distribution long-prompt request (one
+/// every `every_s` seconds, starting at `every_s`) into a synthesized
+/// trace and re-sort by arrival.  Injected ids start past both
+/// 1_000_000 and the trace's current maximum id, so they stay unique
+/// on traces of any size.  `predicted_gen` is set to `gen_tokens`
+/// (oracle); a later [`super::predictor::LengthPredictor`]
+/// application overwrites it like any other request.
+///
+/// The heterogeneous-fleet demo/bench/tests use this to create
+/// requests only the large replicas of a mixed fleet can hold (e.g. a
+/// 10k-token prompt is 157 KV blocks: impossible on llama2-13b TP1's
+/// 120, comfortable on TP2's 439).
+pub fn inject_long_prompts(
+    reqs: &mut Vec<Request>,
+    duration_s: f64,
+    every_s: f64,
+    prompt_tokens: u32,
+    gen_tokens: u32,
+) {
+    assert!(every_s > 0.0, "injection period must be positive");
+    let mut id = reqs
+        .iter()
+        .map(|r| r.id + 1)
+        .max()
+        .unwrap_or(0)
+        .max(1_000_000);
+    let mut t = every_s;
+    while t < duration_s {
+        reqs.push(Request {
+            id,
+            prompt_tokens,
+            gen_tokens,
+            predicted_gen: gen_tokens,
+            arrival_s: t,
+        });
+        id += 1;
+        t += every_s;
+    }
+    reqs.sort_by(|a, b| {
+        a.arrival_s
+            .partial_cmp(&b.arrival_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+}
+
 /// Observed requests/s in `bin_s`-second bins (Fig. 5b evaluation).
 pub fn rps_bins(reqs: &[Request], duration_s: f64, bin_s: f64) -> Vec<f64> {
     let n = (duration_s / bin_s).ceil() as usize;
@@ -182,6 +227,23 @@ mod tests {
 
     fn default_trace() -> Vec<Request> {
         synth_trace(&TraceParams::default())
+    }
+
+    #[test]
+    fn injected_long_prompts_stay_sorted_and_unique() {
+        let mut reqs = synth_trace(&TraceParams::short(120.0, 2.0, 0));
+        let base = reqs.len();
+        inject_long_prompts(&mut reqs, 120.0, 20.0, 10_000, 64);
+        assert_eq!(reqs.len(), base + 5); // t = 20, 40, 60, 80, 100
+        assert!(reqs.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        let longs: Vec<&Request> =
+            reqs.iter().filter(|r| r.prompt_tokens == 10_000).collect();
+        assert_eq!(longs.len(), 5);
+        assert!(longs.iter().all(|r| r.id >= 1_000_000));
+        let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), reqs.len(), "ids must stay unique");
     }
 
     #[test]
