@@ -12,7 +12,11 @@
 //! Run with: cargo bench --bench fleet
 //! (THROTTLLEM_BENCH_SECS overrides the trace length.)
 
-use throttllem::bench_util::{print_table, section};
+use std::time::Instant;
+
+use throttllem::bench_util::{
+    print_table, section, single_run_result, write_bench_json, BenchResult,
+};
 use throttllem::config::models::llama2_13b;
 use throttllem::config::{ReplicaSpec, ServingConfig};
 use throttllem::coordinator::{
@@ -64,6 +68,11 @@ fn main() {
     let triton_cfg = ServingConfig::triton(spec.clone());
     let ours_cfg = ServingConfig::throttllem(spec.clone());
 
+    // Wall-clock per scenario feeds the machine-readable report: the
+    // serve loop's own speed is the fleet-scale view of the hot-path
+    // work perf_hotpath measures in isolation.
+    let mut report: Vec<BenchResult> = Vec::new();
+    let t0 = Instant::now();
     let single = serve_fleet(
         &triton_cfg,
         Policy::triton(),
@@ -75,6 +84,8 @@ fn main() {
             autoscale_replicas: false,
         },
     );
+    report.push(single_run_result("serve triton x1", t0.elapsed()));
+    let t0 = Instant::now();
     let triton_fleet = serve_fleet(
         &triton_cfg,
         Policy::triton(),
@@ -86,6 +97,8 @@ fn main() {
             autoscale_replicas: false,
         },
     );
+    report.push(single_run_result("serve triton x4 (rr)", t0.elapsed()));
+    let t0 = Instant::now();
     let ours_fleet = serve_fleet(
         &ours_cfg,
         Policy::throttle_only(),
@@ -97,6 +110,7 @@ fn main() {
             autoscale_replicas: false,
         },
     );
+    report.push(single_run_result("serve throttllem x4 (ll)", t0.elapsed()));
 
     section(&format!(
         "Fleet comparison: {n} x {} vs 1 x (same {peak:.1}-RPS-peak trace)",
@@ -182,7 +196,8 @@ fn main() {
     );
     println!("rerouted on universal rejection: {}", ours_fleet.rerouted);
 
-    hetero_bench(secs, seed);
+    hetero_bench(secs, seed, &mut report);
+    write_bench_json("fleet", &report);
 }
 
 /// Heterogeneous fleet: mixed TP sizes with occasional long prompts
@@ -191,7 +206,7 @@ fn main() {
 /// lower energy than round-robin on the same trace — round-robin parks
 /// long prompts on TP1 replicas (120 KV blocks < the prompt), blocking
 /// their queue heads until the replica drains and the request reroutes.
-fn hetero_bench(secs: f64, seed: u64) {
+fn hetero_bench(secs: f64, seed: u64, report: &mut Vec<BenchResult>) {
     let specs = vec![
         ReplicaSpec::fixed(llama2_13b(1)),
         ReplicaSpec::fixed(llama2_13b(2)),
@@ -228,8 +243,13 @@ fn hetero_bench(secs: f64, seed: u64) {
             router,
             ..base.clone()
         };
+        let t0 = Instant::now();
         let out =
             serve_fleet_plan(&cfg, Policy::throttle_only(), &model, &reqs, &plan);
+        report.push(single_run_result(
+            &format!("serve mixed ({})", router.name()),
+            t0.elapsed(),
+        ));
         rows.push(row(
             &format!("mixed ({})", router.name()),
             &out.total.stats,

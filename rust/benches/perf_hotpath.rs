@@ -3,18 +3,29 @@
 //! Paper budgets: projection < 2 ms; M inference ~3 ms; scheduler +
 //! throttling combined 35 ms under heavy load. Our targets (DESIGN.md
 //! §8): well under those budgets at batch 64 / 1024-iteration horizon.
+//!
+//! The admission / throttle / projection benches come in two variants:
+//! "from-scratch" is the pre-tracker hot path (rebuild the projection
+//! per use, allocate throughput / remaining-time vectors per probe),
+//! the plain name is the serving loop's actual path (incremental
+//! `ProjectionTracker` + reusable `EvalScratch`).  Results are also
+//! emitted to `BENCH_perf.json` (suite `perf_hotpath`) so CI tracks
+//! the trajectory.
 
-use throttllem::bench_util::{bench, black_box, section};
+use throttllem::bench_util::{bench, black_box, section, write_bench_json, BenchResult};
 use throttllem::config::models::llama2_13b;
 use throttllem::config::SloSpec;
-use throttllem::coordinator::projection::project;
+use throttllem::coordinator::projection::{project, project_entries, ProjectionTracker};
 use throttllem::coordinator::router::{headroom_score, HeadroomCache};
-use throttllem::coordinator::scheduler::{entry_for, Scheduler};
+use throttllem::coordinator::scheduler::{
+    entry_for, evaluate_slo, evaluate_slo_entries, EvalScratch, Scheduler,
+};
 use throttllem::coordinator::scoreboard::{Entry, Scoreboard};
-use throttllem::coordinator::throttle::min_slo_frequency;
+use throttllem::coordinator::throttle::{min_slo_frequency, min_slo_frequency_with};
 use throttllem::coordinator::PerfModel;
 use throttllem::engine::request::Request;
 use throttllem::engine::sim::EngineSim;
+use throttllem::gpusim::dvfs::{frequency_grid, FREQ_MAX_MHZ};
 use throttllem::sim::Pcg64;
 
 fn scoreboard(n: u32, rng: &mut Pcg64) -> Scoreboard {
@@ -38,21 +49,57 @@ fn main() {
     eprintln!("training model...");
     let model = PerfModel::train(&[spec.clone()], 100, 0);
     let mut rng = Pcg64::new(0);
+    let mut report: Vec<BenchResult> = Vec::new();
 
     section("L3 hot-path microbenchmarks (budgets: paper §IV)");
 
     for n in [8u32, 32, 64] {
         let sb = scoreboard(n, &mut rng);
-        let r = bench(&format!("projection (Eq.1-2), {n} queries"), 300, || {
-            black_box(project(&sb, 60, spec.block_tokens));
+        let r = bench(
+            &format!("projection from-scratch (Eq.1-2), {n} queries"),
+            300,
+            || {
+                black_box(project(&sb, 60, spec.block_tokens));
+            },
+        );
+        println!("{r}");
+        report.push(r);
+    }
+
+    // Incremental tracker: steady-state materialization (the serving
+    // loop's per-use cost once deltas are applied) and with per-use
+    // scoreboard churn (one strike + one insert between projections).
+    {
+        let sb = scoreboard(64, &mut rng);
+        let mut tracker = ProjectionTracker::new(spec.block_tokens);
+        let r = bench("projection via tracker, 64 queries", 300, || {
+            black_box(tracker.project(&sb, 60, None).peak_kv());
         });
         println!("{r}");
+        report.push(r);
+
+        let mut sb = scoreboard(64, &mut rng);
+        let mut tracker = ProjectionTracker::new(spec.block_tokens);
+        let mut flip = false;
+        let churn = *sb.committed().first().unwrap();
+        let r = bench("projection via tracker + churn, 64 queries", 300, || {
+            if flip {
+                sb.insert(churn);
+            } else {
+                sb.strike(churn.id);
+            }
+            flip = !flip;
+            black_box(tracker.project(&sb, 60, None).peak_kv());
+        });
+        println!("{r}");
+        report.push(r);
     }
 
     let r = bench("M single inference (GBDT)", 300, || {
         black_box(model.predict_ips(&spec, 32, 500, 1050));
     });
     println!("{r}");
+    report.push(r);
 
     let sb = scoreboard(64, &mut rng);
     let proj = project(&sb, 60, spec.block_tokens);
@@ -61,17 +108,42 @@ fn main() {
         black_box(model.throughput_vector(&spec, &proj, 1410));
     });
     println!("{r}");
+    report.push(r);
     let mut exact = model.clone();
     exact.stride = 1;
     let r = bench("throughput vector T (stride 1)", 300, || {
         black_box(exact.throughput_vector(&spec, &proj, 1410));
     });
     println!("{r}");
+    report.push(r);
 
-    let r = bench("throttle binary search (§IV-E)", 500, || {
+    // §IV-E frequency search: from-scratch allocates entry/throughput/
+    // remaining-time vectors per probe and re-runs GBDT inference; the
+    // serving path reuses EvalScratch buffers and memoizes inferences
+    // per (freq, batch, kv-bucket) for as long as the committed entry
+    // set and iteration stay put.
+    let grid = frequency_grid();
+    let r = bench("throttle binary search (§IV-E), from-scratch", 500, || {
         black_box(min_slo_frequency(&model, &spec, &slo, &sb, &proj, 0.0, 1.0));
     });
     println!("{r}");
+    report.push(r);
+    let mut scratch = EvalScratch::new();
+    let r = bench("throttle binary search (§IV-E)", 500, || {
+        black_box(min_slo_frequency_with(
+            &grid,
+            &model,
+            &spec,
+            &slo,
+            &sb,
+            &proj,
+            0.0,
+            1.0,
+            &mut scratch,
+        ));
+    });
+    println!("{r}");
+    report.push(r);
 
     // Fleet router scoring: the projected-headroom signal per arrival.
     // Uncached rebuilds the §IV-B projection every time (the pre-cache
@@ -92,6 +164,7 @@ fn main() {
         ));
     });
     println!("{r}");
+    report.push(r);
     let mut cache = HeadroomCache::new();
     let r = bench("router headroom score, cached", 300, || {
         let (peak, qb, qr) = cache.fetch((60, 7, 9), || {
@@ -108,15 +181,69 @@ fn main() {
         ));
     });
     println!("{r}");
+    report.push(r);
 
+    // §IV-C2 admission: from-scratch replicates the pre-tracker
+    // algorithm (projection rebuild + entry collection per world); the
+    // plain variant is Scheduler::admission_check on the serving
+    // loop's per-engine tracker + scratch.
     let sched = Scheduler::new(slo);
-    let r = bench("full admission check (§IV-C2)", 500, || {
-        let mut sb2 = sb.clone();
+    let mut sb2 = sb.clone();
+    let r = bench("full admission check (§IV-C2), from-scratch", 500, || {
         sb2.virtual_append(entry_for(999, 500, 300, 60.0, 60, &slo));
-        black_box(sched.admission_check(&model, &spec, &sb2, 60, 60.0, 999));
+        let proj = project(&sb2, 60, spec.block_tokens);
+        let decision = if proj.peak_kv() > spec.kv_blocks {
+            0
+        } else {
+            let eval =
+                evaluate_slo(&model, &spec, &slo, &sb2, &proj, FREQ_MAX_MHZ, 60.0);
+            let blamed: Vec<u64> = eval
+                .e2e_violators
+                .iter()
+                .copied()
+                .filter(|&id| id != 999)
+                .collect();
+            if !blamed.is_empty() {
+                let committed: Vec<Entry> = sb2.committed().to_vec();
+                let proj_wo = project_entries(&committed, 60, spec.block_tokens);
+                let eval_wo = evaluate_slo_entries(
+                    &model,
+                    &spec,
+                    &slo,
+                    &committed,
+                    &proj_wo,
+                    FREQ_MAX_MHZ,
+                    60.0,
+                    1.0,
+                );
+                eval_wo.e2e_violators.len()
+            } else {
+                1
+            }
+        };
+        black_box(decision);
         sb2.rollback_virtual();
     });
     println!("{r}");
+    report.push(r);
+    let mut tracker = ProjectionTracker::new(spec.block_tokens);
+    let mut scratch = EvalScratch::new();
+    let r = bench("full admission check (§IV-C2)", 500, || {
+        sb2.virtual_append(entry_for(999, 500, 300, 60.0, 60, &slo));
+        black_box(sched.admission_check(
+            &model,
+            &spec,
+            &sb2,
+            &mut tracker,
+            &mut scratch,
+            60,
+            60.0,
+            999,
+        ));
+        sb2.rollback_virtual();
+    });
+    println!("{r}");
+    report.push(r);
 
     // Engine iteration cost (simulation substrate, not the paper's
     // system — bounds trace-replay wall time). Rows are re-admitted on
@@ -149,8 +276,24 @@ fn main() {
         t += engine.run_iteration(t).duration_s;
     });
     println!("{r}");
+    report.push(r);
 
     println!(
         "\nbudget check: admission+throttle mean must be << 35 ms; projection << 2 ms."
     );
+    let speedup = |new_name: &str, old_name: &str| {
+        let get = |n: &str| report.iter().find(|r| r.name == n).map(|r| r.mean_ns);
+        if let (Some(new), Some(old)) = (get(new_name), get(old_name)) {
+            println!("{new_name}: {:.1}x vs from-scratch", old / new);
+        }
+    };
+    speedup(
+        "full admission check (§IV-C2)",
+        "full admission check (§IV-C2), from-scratch",
+    );
+    speedup(
+        "throttle binary search (§IV-E)",
+        "throttle binary search (§IV-E), from-scratch",
+    );
+    write_bench_json("perf_hotpath", &report);
 }

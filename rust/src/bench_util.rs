@@ -83,6 +83,71 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Write this suite's results into a machine-readable JSON report at
+/// `path` (`{"benches":[{suite,name,ns_per_op,p50_ns,p95_ns,iters}]}`).
+/// Entries from OTHER suites already present in the file are
+/// preserved, so one report accumulates across bench binaries (the CI
+/// smoke job runs `fleet` then `perf_hotpath` into the same file).
+pub fn write_bench_json_to(path: &str, suite: &str, results: &[BenchResult]) {
+    use crate::jsonl::Json;
+    let mut entries: Vec<Json> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        match crate::jsonl::parse(&text) {
+            Ok(doc) => {
+                if let Some(arr) = doc.get("benches").and_then(|b| b.as_arr()) {
+                    for e in arr {
+                        if e.get("suite").and_then(|s| s.as_str()) != Some(suite) {
+                            entries.push(e.clone());
+                        }
+                    }
+                }
+            }
+            Err(e) => eprintln!(
+                "warning: existing {path} is unreadable ({e}); \
+                 previously accumulated suites will be dropped"
+            ),
+        }
+    }
+    for r in results {
+        entries.push(Json::obj(vec![
+            ("suite", Json::Str(suite.to_string())),
+            ("name", Json::Str(r.name.clone())),
+            ("ns_per_op", Json::Num(r.mean_ns)),
+            ("p50_ns", Json::Num(r.p50_ns)),
+            ("p95_ns", Json::Num(r.p95_ns)),
+            ("iters", Json::Num(r.iters as f64)),
+        ]));
+    }
+    let doc = Json::obj(vec![("benches", Json::Arr(entries))]);
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => eprintln!("bench report: {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}
+
+/// [`write_bench_json_to`] at `$THROTTLLEM_BENCH_JSON` (default
+/// `BENCH_perf.json` in the working directory).
+pub fn write_bench_json(suite: &str, results: &[BenchResult]) {
+    let path = std::env::var("THROTTLLEM_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_perf.json".to_string());
+    write_bench_json_to(&path, suite, results);
+}
+
+/// A [`BenchResult`] from a single timed run (fleet-scale scenarios
+/// are too slow to repeat; one wall-clock sample is the datum).
+pub fn single_run_result(name: &str, elapsed: std::time::Duration) -> BenchResult {
+    let ns = elapsed.as_nanos() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: 1,
+        mean_ns: ns,
+        p50_ns: ns,
+        p95_ns: ns,
+        min_ns: ns,
+        max_ns: ns,
+    }
+}
+
 /// Print a section header for a paper figure/table reproduction.
 pub fn section(title: &str) {
     println!();
@@ -145,5 +210,42 @@ mod tests {
     #[test]
     fn fixed_precision_format() {
         assert_eq!(f(1.23456, 2), "1.23");
+    }
+
+    #[test]
+    fn bench_json_merges_suites_and_replaces_own() {
+        let dir = std::env::temp_dir().join("throttllem_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_perf.json");
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+        let r = |name: &str, ns: f64| BenchResult {
+            name: name.to_string(),
+            iters: 10,
+            mean_ns: ns,
+            p50_ns: ns,
+            p95_ns: ns,
+            min_ns: ns,
+            max_ns: ns,
+        };
+        write_bench_json_to(path, "alpha", &[r("a1", 100.0)]);
+        write_bench_json_to(path, "beta", &[r("b1", 200.0)]);
+        // Re-running a suite replaces its entries, keeps the other's.
+        write_bench_json_to(path, "alpha", &[r("a1", 150.0), r("a2", 50.0)]);
+        let doc = crate::jsonl::parse(&std::fs::read_to_string(path).unwrap())
+            .unwrap();
+        let arr = doc.get("benches").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        let find = |suite: &str, name: &str| {
+            arr.iter().find(|e| {
+                e.get("suite").and_then(|s| s.as_str()) == Some(suite)
+                    && e.get("name").and_then(|s| s.as_str()) == Some(name)
+            })
+        };
+        assert!(find("beta", "b1").is_some());
+        let a1 = find("alpha", "a1").unwrap();
+        assert_eq!(a1.get("ns_per_op").and_then(|v| v.as_f64()), Some(150.0));
+        assert!(find("alpha", "a2").is_some());
+        let _ = std::fs::remove_file(path);
     }
 }

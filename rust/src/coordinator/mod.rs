@@ -31,10 +31,10 @@ pub mod scoreboard;
 pub mod server;
 pub mod throttle;
 
-pub use perf_model::PerfModel;
-pub use projection::Projection;
+pub use perf_model::{PerfModel, PredMemo};
+pub use projection::{Projection, ProjectionTracker};
 pub use router::{HeadroomCache, RouterPolicy};
-pub use scheduler::{AdmissionDecision, Scheduler};
+pub use scheduler::{AdmissionDecision, EvalScratch, Scheduler};
 pub use scoreboard::Scoreboard;
 pub use server::{
     serve_fleet, serve_fleet_plan, serve_trace, FamilyStats, FleetOutcome,

@@ -12,7 +12,9 @@
 //! measures 0.19% batch and 2.26% KV mean absolute error under real
 //! inflight conditions (Fig. 7), dominated by prefill-stall effects.
 
-use crate::coordinator::scoreboard::Scoreboard;
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::coordinator::scoreboard::{Delta, Entry, Scoreboard};
 
 /// Projected engine state per future iteration.
 #[derive(Debug, Clone, PartialEq, Default)]
@@ -69,10 +71,281 @@ impl Projection {
 
 /// Compute the projection at current iteration `k` (vectors start at
 /// k+1). `block_tokens` is the engine's N.
+///
+/// This is the from-scratch build; the serving hot path maintains the
+/// same result incrementally through a [`ProjectionTracker`].
 pub fn project(sb: &Scoreboard, k: u64, block_tokens: u32) -> Projection {
-    let visible: Vec<crate::coordinator::scoreboard::Entry> =
-        sb.visible().copied().collect();
+    let visible: Vec<Entry> = sb.visible().copied().collect();
     project_entries(&visible, k, block_tokens)
+}
+
+/// Incrementally-maintained §IV-B projection (closes the ROADMAP
+/// "incremental projection update" item).
+///
+/// [`project_entries`] rebuilds the difference arrays from every
+/// visible entry on every call — O(entries × range/N) per build, with
+/// 1-2 builds per admission attempt plus one per throttle
+/// re-evaluation and router probe.  The tracker keeps the difference
+/// arrays LIVE across calls instead:
+///
+///   * admit / strike / prediction-bump apply one entry's contribution
+///     with sign ±1 — O(range/N);
+///   * advancing the window to a later iteration consumes one
+///     difference slot per iteration — O(1) amortized;
+///   * materializing the [`Projection`] is the single prefix-sum pass
+///     `project_entries` ends with, over the remaining horizon only;
+///     the admission candidate (`extra`) is applied and exactly undone
+///     around the pass, so the with- and without-candidate worlds of
+///     §IV-C2 come from ONE maintained structure.
+///
+/// Synchronization is journal-based: the tracker replays the
+/// scoreboard's committed-entry [`Delta`] stream
+/// ([`Scoreboard::journal`]) and falls back to a full rebuild when it
+/// is further behind than the journal retains.  All arithmetic is
+/// integer, so the result is bit-identical to a from-scratch
+/// [`project_entries`] build — debug builds assert exactly that on
+/// EVERY materialization.
+///
+/// The window only moves forward: `project` must be called with
+/// non-decreasing `k` (per-engine iteration indices are monotone).
+#[derive(Debug, Clone)]
+pub struct ProjectionTracker {
+    block_tokens: u32,
+    /// Absolute iteration index of difference slot 0; also the start
+    /// of the next materialized window.
+    head: u64,
+    /// Prefix sums of all difference mass at indices < `head`.
+    acc_batch: i64,
+    acc_kv: i64,
+    batch_d: VecDeque<i64>,
+    kv_d: VecDeque<i64>,
+    /// Multiset of tracked entries' `end_iter`s (horizon = max), kept
+    /// exact so the materialized vectors have the same length a
+    /// from-scratch build would.
+    ends: BTreeMap<u64, u32>,
+    /// Next scoreboard delta sequence number to apply.
+    synced_seq: u64,
+    /// Reusable materialization target (no allocation in steady state).
+    buf: Projection,
+}
+
+impl ProjectionTracker {
+    pub fn new(block_tokens: u32) -> Self {
+        Self {
+            block_tokens,
+            head: 0,
+            acc_batch: 0,
+            acc_kv: 0,
+            batch_d: VecDeque::new(),
+            kv_d: VecDeque::new(),
+            ends: BTreeMap::new(),
+            synced_seq: 0,
+            buf: Projection::default(),
+        }
+    }
+
+    fn ensure_slot(&mut self, rel: usize) {
+        if self.batch_d.len() <= rel {
+            self.batch_d.resize(rel + 1, 0);
+            self.kv_d.resize(rel + 1, 0);
+        }
+    }
+
+    /// Add difference mass at absolute index `idx`; mass behind the
+    /// window head folds directly into the accumulators (that is
+    /// exactly the truncation `project_entries` applies at its window
+    /// start — prefix sums commute with it).
+    fn add_at(&mut self, idx: u64, batch: i64, kv: i64) {
+        if idx < self.head {
+            self.acc_batch += batch;
+            self.acc_kv += kv;
+        } else {
+            let rel = (idx - self.head) as usize;
+            self.ensure_slot(rel);
+            self.batch_d[rel] += batch;
+            self.kv_d[rel] += kv;
+        }
+    }
+
+    /// One entry's difference-array contribution with sign ±1 —
+    /// mirrors the loop body of [`project_entries`] anchored at s_i.
+    fn apply(&mut self, e: &Entry, sign: i64) {
+        let bt = self.block_tokens as u64;
+        let lo = e.scheduled_iter;
+        let hi = e.end_iter();
+        if hi <= lo {
+            return;
+        }
+        self.add_at(lo, sign, 0);
+        self.add_at(hi, -sign, 0);
+        // Blocks at iteration j: ceil((j - s + prompt)/N); at j = lo
+        // tokens = prompt, then +1 block per N-token boundary crossed.
+        let tokens_lo = e.prompt_tokens as u64;
+        let blocks_lo = tokens_lo.div_ceil(bt) as i64;
+        self.add_at(lo, 0, sign * blocks_lo);
+        self.add_at(hi, 0, -sign * blocks_lo);
+        // First boundary crossing: tokens hits blocks_lo*N + 1 (the
+        // ceil guarantees blocks_lo*N + 1 > tokens_lo, so no further
+        // adjustment is needed when anchored at s_i).
+        let boundary_tokens = blocks_lo as u64 * bt + 1;
+        let mut j = lo + (boundary_tokens - tokens_lo);
+        while j < hi {
+            self.add_at(j, 0, sign);
+            self.add_at(hi, 0, -sign);
+            j += bt;
+        }
+    }
+
+    fn add_entry(&mut self, e: &Entry) {
+        *self.ends.entry(e.end_iter()).or_insert(0) += 1;
+        self.apply(e, 1);
+    }
+
+    fn remove_entry(&mut self, e: &Entry) {
+        let end = e.end_iter();
+        match self.ends.get_mut(&end) {
+            Some(c) if *c > 1 => *c -= 1,
+            Some(_) => {
+                self.ends.remove(&end);
+            }
+            None => debug_assert!(false, "removing untracked end_iter {end}"),
+        }
+        self.apply(e, -1);
+    }
+
+    /// Rebuild from the scoreboard's committed set (journal history
+    /// lost, or first sync after falling behind).
+    fn rebuild(&mut self, sb: &Scoreboard, k: u64) {
+        self.batch_d.clear();
+        self.kv_d.clear();
+        self.ends.clear();
+        self.acc_batch = 0;
+        self.acc_kv = 0;
+        let mut head = k + 1;
+        for e in sb.committed() {
+            head = head.min(e.scheduled_iter);
+        }
+        self.head = head;
+        for e in sb.committed() {
+            self.add_entry(e);
+        }
+        let (_, _, next_seq) = sb.journal();
+        self.synced_seq = next_seq;
+    }
+
+    /// Replay any scoreboard deltas the tracker has not seen yet.
+    fn sync(&mut self, sb: &Scoreboard, k: u64) {
+        let (start_seq, deltas, next_seq) = sb.journal();
+        if self.synced_seq == next_seq {
+            return;
+        }
+        if self.synced_seq > next_seq || self.synced_seq < start_seq {
+            // Ahead of this scoreboard (tracker paired with a different
+            // lineage) or behind the retained history: start over.
+            debug_assert!(
+                self.synced_seq <= next_seq,
+                "tracker synced past its scoreboard: {} > {}",
+                self.synced_seq,
+                next_seq
+            );
+            self.rebuild(sb, k);
+            return;
+        }
+        for d in &deltas[(self.synced_seq - start_seq) as usize..] {
+            match d {
+                Delta::Add(e) => self.add_entry(e),
+                Delta::Remove(e) => self.remove_entry(e),
+            }
+        }
+        self.synced_seq = next_seq;
+    }
+
+    /// Consume difference slots up to the new window start (O(1) per
+    /// elapsed iteration; jumps past the horizon are O(remaining)).
+    fn advance_to(&mut self, start: u64) {
+        debug_assert!(
+            start >= self.head,
+            "projection window moved backwards: head {} -> start {}",
+            self.head,
+            start
+        );
+        while self.head < start {
+            match (self.batch_d.pop_front(), self.kv_d.pop_front()) {
+                (Some(b), Some(kv)) => {
+                    self.acc_batch += b;
+                    self.acc_kv += kv;
+                    self.head += 1;
+                }
+                _ => {
+                    // No difference mass beyond this point.
+                    self.head = start;
+                }
+            }
+        }
+    }
+
+    /// Materialize the projection at iteration `k` (window `k+1..`),
+    /// optionally with `extra` (the §IV-C2 admission candidate)
+    /// applied on top.  `extra` is added and exactly undone (integer
+    /// adds), so the tracker state is unchanged by it.  Returns a
+    /// reference into the tracker's reusable buffer.
+    ///
+    /// Debug builds bit-compare the result against a from-scratch
+    /// [`project_entries`] build on every call.
+    pub fn project(
+        &mut self,
+        sb: &Scoreboard,
+        k: u64,
+        extra: Option<&Entry>,
+    ) -> &Projection {
+        self.sync(sb, k);
+        let start = k + 1;
+        self.advance_to(start);
+        if let Some(x) = extra {
+            self.apply(x, 1);
+        }
+        let mut max_end = self.ends.keys().next_back().copied().unwrap_or(start);
+        if let Some(x) = extra {
+            max_end = max_end.max(x.end_iter());
+        }
+        let n = max_end.saturating_sub(start) as usize;
+        {
+            let buf = &mut self.buf;
+            buf.start_iter = start;
+            buf.batch.clear();
+            buf.kv_blocks.clear();
+            buf.batch.reserve(n);
+            buf.kv_blocks.reserve(n);
+            let (mut acc_b, mut acc_kv) = (self.acc_batch, self.acc_kv);
+            for off in 0..n {
+                acc_b += self.batch_d.get(off).copied().unwrap_or(0);
+                acc_kv += self.kv_d.get(off).copied().unwrap_or(0);
+                buf.batch.push(acc_b as u32);
+                buf.kv_blocks.push(acc_kv as u32);
+            }
+        }
+        if let Some(x) = extra {
+            self.apply(x, -1);
+        }
+        #[cfg(debug_assertions)]
+        self.debug_check(sb, k, extra);
+        &self.buf
+    }
+
+    /// Pin the incremental result to the from-scratch build: the
+    /// correctness contract of the whole subsystem.
+    #[cfg(debug_assertions)]
+    fn debug_check(&self, sb: &Scoreboard, k: u64, extra: Option<&Entry>) {
+        let mut v: Vec<Entry> = sb.committed().to_vec();
+        if let Some(x) = extra {
+            v.push(*x);
+        }
+        let fresh = project_entries(&v, k, self.block_tokens);
+        assert_eq!(
+            fresh, self.buf,
+            "incremental projection diverged from project_entries at k={k}"
+        );
+    }
 }
 
 /// Projection over an explicit entry set (used by admission control to
@@ -256,6 +529,38 @@ mod tests {
         // Empty projection: no index at all.
         let empty = project(&Scoreboard::new(), 0, 64);
         assert_eq!(empty.completion_index(0, 10), None);
+    }
+
+    #[test]
+    fn tracker_matches_from_scratch_across_ops() {
+        let mut sb = Scoreboard::new();
+        let mut tr = ProjectionTracker::new(64);
+        sb.insert(entry(1, 0, 100, 40));
+        assert_eq!(tr.project(&sb, 0, None), &project(&sb, 0, 64));
+        sb.insert(entry(2, 3, 500, 80));
+        assert_eq!(tr.project(&sb, 3, None), &project(&sb, 3, 64));
+        sb.strike(1);
+        assert_eq!(tr.project(&sb, 10, None), &project(&sb, 10, 64));
+        sb.bump_overrun(2, 500);
+        assert_eq!(tr.project(&sb, 30, None), &project(&sb, 30, 64));
+    }
+
+    #[test]
+    fn tracker_extra_entry_is_applied_and_undone() {
+        let mut sb = Scoreboard::new();
+        let mut tr = ProjectionTracker::new(64);
+        sb.insert(entry(1, 0, 100, 40));
+        let cand = entry(9, 5, 2000, 200);
+        // With the candidate: equals a from-scratch build over both.
+        let with = tr.project(&sb, 5, Some(&cand)).clone();
+        let mut v: Vec<Entry> = sb.committed().to_vec();
+        v.push(cand);
+        assert_eq!(with, project_entries(&v, 5, 64));
+        // The candidate extended the horizon past the resident's end.
+        assert_eq!(with.horizon() as u64, cand.end_iter() - 6);
+        // Without: the tracker state is unchanged by the what-if.
+        let without = tr.project(&sb, 5, None);
+        assert_eq!(without, &project(&sb, 5, 64));
     }
 
     #[test]

@@ -106,6 +106,23 @@ impl HeadroomCache {
         self.key = None;
     }
 
+    /// The cached summary for `key`, if current.
+    pub fn get(&self, key: (u64, u64, u64)) -> Option<(u32, u32, usize)> {
+        if self.key == Some(key) {
+            Some((self.peak_kv, self.queued_blocks, self.queued_requests))
+        } else {
+            None
+        }
+    }
+
+    /// Install the summary for `key`.
+    pub fn store(&mut self, key: (u64, u64, u64), summary: (u32, u32, usize)) {
+        self.key = Some(key);
+        self.peak_kv = summary.0;
+        self.queued_blocks = summary.1;
+        self.queued_requests = summary.2;
+    }
+
     /// The `(projected peak KV, queued blocks, queued requests)`
     /// summary for `key`, recomputing via `compute` on a miss.
     pub fn fetch(
@@ -113,14 +130,12 @@ impl HeadroomCache {
         key: (u64, u64, u64),
         compute: impl FnOnce() -> (u32, u32, usize),
     ) -> (u32, u32, usize) {
-        if self.key != Some(key) {
-            let (peak_kv, queued_blocks, queued_requests) = compute();
-            self.peak_kv = peak_kv;
-            self.queued_blocks = queued_blocks;
-            self.queued_requests = queued_requests;
-            self.key = Some(key);
+        if let Some(s) = self.get(key) {
+            return s;
         }
-        (self.peak_kv, self.queued_blocks, self.queued_requests)
+        let s = compute();
+        self.store(key, s);
+        s
     }
 }
 

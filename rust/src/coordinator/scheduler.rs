@@ -11,10 +11,17 @@
 //! If only the NEW query's own E2E fails, it is admitted but marked
 //! "lost" (ignored by future validations); if it would break others,
 //! it is queued and the virtual entry rolled back.
+//!
+//! The hot path is allocation-free: projections come from the
+//! per-engine [`ProjectionTracker`] (both the with- and
+//! without-candidate worlds materialize from one incrementally
+//! maintained structure), and throughput / remaining-time vectors,
+//! violator lists and GBDT inferences live in a reusable
+//! [`EvalScratch`].
 
 use crate::config::{EngineSpec, SloSpec};
-use crate::coordinator::perf_model::PerfModel;
-use crate::coordinator::projection::{project, Projection};
+use crate::coordinator::perf_model::{PerfModel, PredMemo};
+use crate::coordinator::projection::{Projection, ProjectionTracker};
 use crate::coordinator::scoreboard::{Entry, Scoreboard};
 use crate::engine::request::RequestId;
 use crate::gpusim::dvfs::FREQ_MAX_MHZ;
@@ -35,8 +42,71 @@ pub enum QueueReason {
     E2eSlo,
 }
 
+/// Reusable evaluation buffers: one per engine.  Holds the throughput
+/// / remaining-time vectors, the violator scratch lists, and the GBDT
+/// prediction memo with its validity stamp `(delta_seq, iteration)` —
+/// the memo is cleared whenever the committed entry set or the
+/// iteration index moves, because predictions are a function of the
+/// projection those determine.
+#[derive(Debug, Clone, Default)]
+pub struct EvalScratch {
+    t: Vec<f64>,
+    t_r: Vec<f64>,
+    violators: Vec<RequestId>,
+    blamed: Vec<RequestId>,
+    memo: PredMemo,
+    /// Separate memo namespace for admission control's
+    /// WITHOUT-candidate world: the two §IV-C2 worlds project
+    /// different KV trajectories, and sharing one memo would let a
+    /// with-candidate prediction (same (freq, batch, kv-bucket) key,
+    /// different exact kv) answer a without-candidate query — the
+    /// worlds must stay as independent as they were when each built
+    /// its vectors from scratch.  `admission_check` swaps this in
+    /// around its second evaluation.
+    memo_without: PredMemo,
+    stamp: Option<(u64, u64, u64)>,
+}
+
+impl EvalScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Invalidate the prediction memos if the projection identity
+    /// moved.  Identity is (committed entry set via `delta_seq`,
+    /// iteration, world): `world` is 0 for committed-only evaluations
+    /// (§IV-E throttle search) and candidate-id + 1 for admission
+    /// control's with-candidate world — a throttle evaluation and an
+    /// admission evaluation at the same (seq, iter) project DIFFERENT
+    /// KV trajectories, so their predictions must not answer each
+    /// other's queries.
+    pub fn ensure_stamp(&mut self, delta_seq: u64, iter: u64, world: u64) {
+        if self.stamp != Some((delta_seq, iter, world)) {
+            self.memo.clear();
+            self.memo_without.clear();
+            self.stamp = Some((delta_seq, iter, world));
+        }
+    }
+}
+
+/// Summary of one SLO evaluation; the violator ids live in the
+/// [`EvalScratch`] the evaluation ran in.
+#[derive(Debug, Clone, Copy)]
+pub struct SloSummary {
+    pub tbt_ok: bool,
+    pub mean_tbt_s: f64,
+    /// Number of E2E violators found (ids in `EvalScratch`).
+    pub violations: usize,
+}
+
+impl SloSummary {
+    pub fn all_ok(&self) -> bool {
+        self.tbt_ok && self.violations == 0
+    }
+}
+
 /// SLO evaluation detail shared by the scheduler and the throttling
-/// controller.
+/// controller (allocating convenience form of [`SloSummary`]).
 #[derive(Debug, Clone)]
 pub struct SloEval {
     pub tbt_ok: bool,
@@ -62,19 +132,27 @@ pub fn evaluate_slo(
     freq_mhz: u32,
     now: f64,
 ) -> SloEval {
-    let visible: Vec<Entry> = sb.visible().copied().collect();
-    evaluate_slo_entries(model, spec, slo, &visible, proj, freq_mhz, now, 1.0)
+    let mut scratch = EvalScratch::new();
+    let s = evaluate_slo_scratch(
+        model,
+        spec,
+        slo,
+        sb.visible(),
+        proj,
+        freq_mhz,
+        now,
+        1.0,
+        &mut scratch,
+    );
+    SloEval {
+        tbt_ok: s.tbt_ok,
+        mean_tbt_s: s.mean_tbt_s,
+        e2e_violators: scratch.violators,
+    }
 }
 
-/// `evaluate_slo` over an explicit entry set.
-///
-/// `t_r_scale` inflates the predicted remaining times: the projection
-/// assumes no new arrivals (§IV-B), but every future admission fuses a
-/// prefill into an iteration and stalls decoding, so under sustained
-/// load realized progress is systematically slower than T_R predicts.
-/// The throttling controller passes `1 + λ·t_prefill` (expected
-/// prefill-stall fraction); admission control keeps the paper's
-/// optimistic 1.0.
+/// `evaluate_slo` over an explicit entry set (allocating convenience
+/// wrapper around [`evaluate_slo_scratch`]).
 #[allow(clippy::too_many_arguments)]
 pub fn evaluate_slo_entries(
     model: &PerfModel,
@@ -86,12 +164,64 @@ pub fn evaluate_slo_entries(
     now: f64,
     t_r_scale: f64,
 ) -> SloEval {
-    let t = model.throughput_vector(spec, proj, freq_mhz);
-    let mean_tbt = PerfModel::mean_tbt(&t);
-    let tbt_ok = mean_tbt <= slo.tbt_avg || t.is_empty();
-    let t_r = PerfModel::remaining_time_vector(&t);
-    let mut violators = vec![];
-    if !t_r.is_empty() {
+    let mut scratch = EvalScratch::new();
+    let s = evaluate_slo_scratch(
+        model,
+        spec,
+        slo,
+        entries.iter(),
+        proj,
+        freq_mhz,
+        now,
+        t_r_scale,
+        &mut scratch,
+    );
+    SloEval {
+        tbt_ok: s.tbt_ok,
+        mean_tbt_s: s.mean_tbt_s,
+        e2e_violators: scratch.violators,
+    }
+}
+
+/// The allocation-free SLO evaluation core (§IV-C2 checks 2-3).
+///
+/// `t_r_scale` inflates the predicted remaining times: the projection
+/// assumes no new arrivals (§IV-B), but every future admission fuses a
+/// prefill into an iteration and stalls decoding, so under sustained
+/// load realized progress is systematically slower than T_R predicts.
+/// The throttling controller passes `1 + λ·t_prefill` (expected
+/// prefill-stall fraction); admission control keeps the paper's
+/// optimistic 1.0.
+///
+/// Violator ids are left in `scratch.violators`; `scratch.blamed` is
+/// never touched, so callers may stash a prior evaluation's verdict
+/// there across a second evaluation.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_slo_scratch<'a>(
+    model: &PerfModel,
+    spec: &EngineSpec,
+    slo: &SloSpec,
+    entries: impl Iterator<Item = &'a Entry>,
+    proj: &Projection,
+    freq_mhz: u32,
+    now: f64,
+    t_r_scale: f64,
+    scratch: &mut EvalScratch,
+) -> SloSummary {
+    model.throughput_vector_into(spec, proj, freq_mhz, &mut scratch.memo, &mut scratch.t);
+    PerfModel::remaining_time_into(&scratch.t, &mut scratch.t_r);
+    let n = scratch.t.len();
+    // T_R's last element is sum(1/ips) in the same order mean_tbt
+    // sums it, so the mean falls out of the cumulative pass for free.
+    let mean_tbt = if n == 0 {
+        0.0
+    } else {
+        scratch.t_r[n - 1] / n as f64
+    };
+    let tbt_ok = mean_tbt <= slo.tbt_avg || n == 0;
+    scratch.violators.clear();
+    if n > 0 {
+        let t_r = &scratch.t_r;
         for e in entries {
             if e.lost {
                 continue;
@@ -106,14 +236,14 @@ pub fn evaluate_slo_entries(
             };
             debug_assert!(idx < t_r.len(), "completion index out of horizon");
             if now + t_r[idx] * t_r_scale >= e.deadline_s {
-                violators.push(e.id);
+                scratch.violators.push(e.id);
             }
         }
     }
-    SloEval {
+    SloSummary {
         tbt_ok,
         mean_tbt_s: mean_tbt,
-        e2e_violators: violators,
+        violations: scratch.violators.len(),
     }
 }
 
@@ -132,68 +262,84 @@ impl Scheduler {
     ///
     /// The caller must have `virtual_append`ed the candidate entry (id
     /// `new_id`) to `sb`; this function neither commits nor rolls back
-    /// — it only decides.
+    /// — it only decides.  Both the with-candidate world (committed +
+    /// virtual) and, when needed, the without-candidate world come
+    /// from `tracker`'s incrementally maintained projection; all
+    /// evaluation buffers live in `scratch`, so the steady admit path
+    /// performs no allocation.
     ///
-    /// The third returned value lists RESIDENT queries whose deadlines
-    /// are unmeetable even *without* the candidate: they are de-facto
-    /// lost (the continuous extension of the paper's "lost" marking)
-    /// and the caller should mark them so; they do not block the
-    /// candidate, which is only blamed for violations it newly causes.
+    /// The second returned value lists RESIDENT queries whose
+    /// deadlines are unmeetable even *without* the candidate: they are
+    /// de-facto lost (the continuous extension of the paper's "lost"
+    /// marking) and the caller should mark them so; they do not block
+    /// the candidate, which is only blamed for violations it newly
+    /// causes.
+    #[allow(clippy::too_many_arguments)]
     pub fn admission_check(
         &self,
         model: &PerfModel,
         spec: &EngineSpec,
         sb: &Scoreboard,
+        tracker: &mut ProjectionTracker,
+        scratch: &mut EvalScratch,
         current_iter: u64,
         now: f64,
         new_id: RequestId,
-    ) -> (AdmissionDecision, Projection, Vec<RequestId>) {
-        let proj = project(sb, current_iter, spec.block_tokens);
+    ) -> (AdmissionDecision, Vec<RequestId>) {
+        scratch.ensure_stamp(sb.delta_seq(), current_iter, new_id.wrapping_add(1));
+        let proj = tracker.project(sb, current_iter, sb.virtual_entry());
 
         // Check 1: KV cache capacity.
         if proj.peak_kv() > spec.kv_blocks {
-            return (
-                AdmissionDecision::Queue(QueueReason::KvCapacity),
-                proj,
-                vec![],
-            );
+            return (AdmissionDecision::Queue(QueueReason::KvCapacity), vec![]);
         }
 
         // Checks 2-3 at maximum frequency (peak theoretical perf).
-        let eval = evaluate_slo(model, spec, &self.slo, sb, &proj, FREQ_MAX_MHZ, now);
+        let eval = evaluate_slo_scratch(
+            model,
+            spec,
+            &self.slo,
+            sb.visible(),
+            proj,
+            FREQ_MAX_MHZ,
+            now,
+            1.0,
+            scratch,
+        );
         if !eval.tbt_ok {
-            return (AdmissionDecision::Queue(QueueReason::TbtSlo), proj, vec![]);
+            return (AdmissionDecision::Queue(QueueReason::TbtSlo), vec![]);
         }
 
         // Residents predicted to violate with the candidate on board.
-        let mut blamed: Vec<RequestId> = eval
-            .e2e_violators
-            .iter()
-            .copied()
-            .filter(|&id| id != new_id)
-            .collect();
+        // `blamed` is moved out of the scratch for the duration (the
+        // second evaluation below refills `violators` but never
+        // touches `blamed`), then returned so its capacity is reused.
+        let own_violates = scratch.violators.contains(&new_id);
+        let mut blamed = std::mem::take(&mut scratch.blamed);
+        blamed.clear();
+        blamed.extend(scratch.violators.iter().copied().filter(|&id| id != new_id));
         let mut already_lost: Vec<RequestId> = vec![];
         if !blamed.is_empty() {
-            // Which of them violate even WITHOUT the candidate?
-            let committed: Vec<Entry> = sb.committed().to_vec();
-            let proj_wo =
-                crate::coordinator::projection::project_entries(
-                    &committed,
-                    current_iter,
-                    spec.block_tokens,
-                );
-            let eval_wo = evaluate_slo_entries(
+            // Which of them violate even WITHOUT the candidate?  The
+            // without-world evaluates under its OWN memo namespace so
+            // its GBDT predictions are computed from its own KV
+            // trajectory, never borrowed from the with-world's.
+            let proj_wo = tracker.project(sb, current_iter, None);
+            std::mem::swap(&mut scratch.memo, &mut scratch.memo_without);
+            evaluate_slo_scratch(
                 model,
                 spec,
                 &self.slo,
-                &committed,
-                &proj_wo,
+                sb.committed().iter(),
+                proj_wo,
                 FREQ_MAX_MHZ,
                 now,
                 1.0,
+                scratch,
             );
+            std::mem::swap(&mut scratch.memo, &mut scratch.memo_without);
             blamed.retain(|id| {
-                if eval_wo.e2e_violators.contains(id) {
+                if scratch.violators.contains(id) {
                     already_lost.push(*id);
                     false
                 } else {
@@ -202,15 +348,17 @@ impl Scheduler {
             });
         }
 
-        let decision = if !blamed.is_empty() {
+        let any_blamed = !blamed.is_empty();
+        scratch.blamed = blamed;
+        let decision = if any_blamed {
             AdmissionDecision::Queue(QueueReason::E2eSlo)
-        } else if eval.e2e_violators.contains(&new_id) {
+        } else if own_violates {
             // Only its own SLO unmeetable: schedule but mark lost.
             AdmissionDecision::AdmitLost
         } else {
             AdmissionDecision::Admit
         };
-        (decision, proj, already_lost)
+        (decision, already_lost)
     }
 }
 
@@ -237,6 +385,7 @@ pub fn entry_for(
 mod tests {
     use super::*;
     use crate::config::models::llama2_13b;
+    use crate::coordinator::projection::project;
 
     fn setup() -> (PerfModel, EngineSpec, Scheduler) {
         let e = llama2_13b(2);
@@ -256,12 +405,26 @@ mod tests {
         }
     }
 
+    fn check(
+        sched: &Scheduler,
+        m: &PerfModel,
+        e: &EngineSpec,
+        sb: &Scoreboard,
+        k: u64,
+        now: f64,
+        new_id: u64,
+    ) -> (AdmissionDecision, Vec<u64>) {
+        let mut tracker = ProjectionTracker::new(e.block_tokens);
+        let mut scratch = EvalScratch::new();
+        sched.admission_check(m, e, sb, &mut tracker, &mut scratch, k, now, new_id)
+    }
+
     #[test]
     fn admits_easy_query() {
         let (m, e, sched) = setup();
         let mut sb = Scoreboard::new();
         sb.virtual_append(entry(1, 0, 100, 50, 30.2));
-        let (d, _, _) = sched.admission_check(&m, &e, &sb, 0, 0.0, 1);
+        let (d, _) = check(&sched, &m, &e, &sb, 0, 0.0, 1);
         assert_eq!(d, AdmissionDecision::Admit);
     }
 
@@ -273,8 +436,9 @@ mod tests {
         sb.insert(entry(1, 0, 24_000, 900, 1e9));
         // Candidate whose projection overflows 439 blocks * 64 tokens.
         sb.virtual_append(entry(2, 0, 6_000, 900, 1e9));
-        let (d, proj, _) = sched.admission_check(&m, &e, &sb, 0, 0.0, 2);
+        let (d, _) = check(&sched, &m, &e, &sb, 0, 0.0, 2);
         assert_eq!(d, AdmissionDecision::Queue(QueueReason::KvCapacity));
+        let proj = project(&sb, 0, e.block_tokens);
         assert!(proj.peak_kv() > e.kv_blocks);
     }
 
@@ -286,7 +450,7 @@ mod tests {
         let mut cand = entry(7, 0, 100, 400, 0.001);
         cand.deadline_s = 0.001;
         sb.virtual_append(cand);
-        let (d, _, _) = sched.admission_check(&m, &e, &sb, 0, 1.0, 7);
+        let (d, _) = check(&sched, &m, &e, &sb, 0, 1.0, 7);
         assert_eq!(d, AdmissionDecision::AdmitLost);
     }
 
@@ -314,7 +478,7 @@ mod tests {
             sb.insert(entry(id, 0, 1000, 600, deadline));
         }
         sb.virtual_append(entry(99, 0, 4000, 1024, now + 30.2));
-        let (d, _, lost) = sched.admission_check(&m, &e, &sb, 0, now, 99);
+        let (d, lost) = check(&sched, &m, &e, &sb, 0, now, 99);
         assert_eq!(d, AdmissionDecision::Queue(QueueReason::E2eSlo));
         assert!(lost.is_empty(), "residents were fine without candidate");
     }
@@ -329,7 +493,7 @@ mod tests {
         let mut sb = Scoreboard::new();
         sb.insert(entry(1, 0, 500, 600, 0.5)); // deadline long gone
         sb.virtual_append(entry(2, 0, 100, 100, 1000.0));
-        let (d, _, lost) = sched.admission_check(&m, &e, &sb, 0, 5.0, 2);
+        let (d, lost) = check(&sched, &m, &e, &sb, 0, 5.0, 2);
         assert_eq!(d, AdmissionDecision::Admit);
         assert_eq!(lost, vec![1]);
     }
@@ -342,8 +506,53 @@ mod tests {
         hopeless.lost = true;
         sb.insert(hopeless);
         sb.virtual_append(entry(2, 0, 100, 100, 1000.0));
-        let (d, _, _) = sched.admission_check(&m, &e, &sb, 0, 1.0, 2);
+        let (d, _) = check(&sched, &m, &e, &sb, 0, 1.0, 2);
         assert_eq!(d, AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn repeated_checks_reuse_tracker_and_scratch() {
+        // The serving loop keeps ONE tracker + scratch per engine and
+        // runs every admission through them; decisions must be
+        // identical to fresh-state checks (the tracker's debug
+        // cross-check also pins the projections bit-for-bit).
+        let (m, e, sched) = setup();
+        let mut tracker = ProjectionTracker::new(e.block_tokens);
+        let mut scratch = EvalScratch::new();
+        let mut sb = Scoreboard::new();
+        for round in 0..5u64 {
+            let id = 100 + round;
+            sb.virtual_append(entry(id, round, 400, 200, 1e9));
+            let (d, _) = sched.admission_check(
+                &m,
+                &e,
+                &sb,
+                &mut tracker,
+                &mut scratch,
+                round,
+                round as f64,
+                id,
+            );
+            let (d_fresh, _) = check(&sched, &m, &e, &sb, round, round as f64, id);
+            assert_eq!(d, d_fresh, "round {round}");
+            assert_eq!(d, AdmissionDecision::Admit);
+            sb.commit_virtual();
+        }
+        // A completion invalidates; the next check still agrees.
+        sb.strike(100);
+        sb.virtual_append(entry(990, 5, 400, 200, 1e9));
+        let (d, _) = sched.admission_check(
+            &m,
+            &e,
+            &sb,
+            &mut tracker,
+            &mut scratch,
+            5,
+            5.0,
+            990,
+        );
+        let (d_fresh, _) = check(&sched, &m, &e, &sb, 5, 5.0, 990);
+        assert_eq!(d, d_fresh);
     }
 
     #[test]
@@ -365,5 +574,41 @@ mod tests {
         assert!(eval.tbt_ok);
         assert!(eval.mean_tbt_s > 0.005 && eval.mean_tbt_s < 0.05);
         assert!(eval.all_ok());
+    }
+
+    #[test]
+    fn scratch_matches_allocating_eval() {
+        let (m, e, _s) = setup();
+        let slo = SloSpec::new(0.2, 30.2);
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 100, 300, 4.0)); // likely violator
+        sb.insert(entry(2, 0, 200, 100, 1e9));
+        let proj = project(&sb, 0, e.block_tokens);
+        let alloc = evaluate_slo_entries(
+            &m,
+            &e,
+            &slo,
+            sb.committed(),
+            &proj,
+            800,
+            0.0,
+            1.0,
+        );
+        let mut scratch = EvalScratch::new();
+        let s = evaluate_slo_scratch(
+            &m,
+            &e,
+            &slo,
+            sb.committed().iter(),
+            &proj,
+            800,
+            0.0,
+            1.0,
+            &mut scratch,
+        );
+        assert_eq!(alloc.tbt_ok, s.tbt_ok);
+        assert_eq!(alloc.mean_tbt_s.to_bits(), s.mean_tbt_s.to_bits());
+        assert_eq!(alloc.e2e_violators, scratch.violators);
+        assert_eq!(alloc.e2e_violators.len(), s.violations);
     }
 }

@@ -7,6 +7,16 @@
 //! marked "lost".  When a query outlives its prediction, its entry is
 //! bumped to `max_tokens` (§IV-F); when it terminates, the entry is
 //! struck.
+//!
+//! Lookups are O(1) through an id→index map (strike/bump/get used to
+//! be linear scans on the per-iteration hot path), and every committed
+//! entry-set mutation is appended to a bounded delta journal so a
+//! [`crate::coordinator::projection::ProjectionTracker`] can maintain
+//! its incremental projection without diffing the entry set.  The
+//! journal is capped: if a tracker falls further behind than
+//! [`JOURNAL_CAP`] deltas, it rebuilds from scratch instead.
+
+use std::collections::HashMap;
 
 use crate::engine::request::RequestId;
 
@@ -35,16 +45,45 @@ impl Entry {
     }
 }
 
+/// One committed-entry-set mutation, as seen by projection consumers.
+/// `lost`-flag changes are NOT journaled: projection (Eq. 1-2) does not
+/// depend on the flag.  A prediction bump is `Remove(old)` + `Add(new)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Delta {
+    Add(Entry),
+    Remove(Entry),
+}
+
+/// Maximum journal length retained for incremental consumers.  When
+/// exceeded, the OLDEST half is dropped (sliding window): a consumer
+/// synced within the last `JOURNAL_CAP/2` deltas always replays
+/// incrementally; one that fell further behind rebuilds from the
+/// entry set.
+pub const JOURNAL_CAP: usize = 256;
+
 /// The scoreboard: committed entries + at most one virtual entry.
 #[derive(Debug, Clone, Default)]
 pub struct Scoreboard {
     entries: Vec<Entry>,
+    /// id → position in `entries` (kept in sync via swap-remove on
+    /// strike; `committed()` order is therefore arbitrary — everything
+    /// downstream is order-independent sums / per-entry checks).
+    index: HashMap<RequestId, usize>,
     virtual_entry: Option<Entry>,
+    /// Committed entries currently marked lost (O(1) `any_lost`).
+    lost_count: u32,
     /// Mutation counter: bumps on every entry-set change.  Consumers
     /// caching projection-derived state (the fleet router's headroom
     /// cache) key on it to invalidate on admission/completion without
     /// diffing the entries themselves.
     epoch: u64,
+    /// Delta journal of committed-entry mutations (projection inputs
+    /// only).  `journal[i]` carries sequence number
+    /// `journal_start_seq + i`; `next_seq` is the sequence number the
+    /// NEXT delta will get.
+    journal: Vec<Delta>,
+    journal_start_seq: u64,
+    next_seq: u64,
 }
 
 impl Scoreboard {
@@ -58,7 +97,39 @@ impl Scoreboard {
         self.epoch
     }
 
-    /// Committed entries (excludes the virtual one).
+    /// Sequence number of the next committed-entry delta.  Unlike
+    /// [`Self::epoch`], this moves only on mutations that change the
+    /// PROJECTION inputs (not on virtual append/rollback or lost
+    /// marking), so it identifies the committed entry set exactly.
+    pub fn delta_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// The journal window available for incremental replay:
+    /// `(start_seq, deltas, next_seq)` — `deltas[i]` has sequence
+    /// number `start_seq + i`.  A consumer synced to `s < start_seq`
+    /// missed dropped deltas and must rebuild from [`Self::committed`].
+    pub fn journal(&self) -> (u64, &[Delta], u64) {
+        (self.journal_start_seq, &self.journal, self.next_seq)
+    }
+
+    fn record(&mut self, d: Delta) {
+        self.journal.push(d);
+        self.next_seq += 1;
+        if self.journal.len() > JOURNAL_CAP {
+            // Slide the window: drop the OLDEST half in one batch
+            // (amortized O(1) per record), keeping the most recent
+            // JOURNAL_CAP/2 deltas so a tracker that syncs regularly
+            // never falls off the window — only one that went
+            // genuinely stale is forced to rebuild.
+            let drop = JOURNAL_CAP / 2;
+            self.journal.drain(..drop);
+            self.journal_start_seq += drop as u64;
+        }
+    }
+
+    /// Committed entries (excludes the virtual one).  Order is
+    /// arbitrary (strike uses swap-remove).
     pub fn committed(&self) -> &[Entry] {
         &self.entries
     }
@@ -66,6 +137,11 @@ impl Scoreboard {
     /// All entries visible to projection: committed + virtual.
     pub fn visible(&self) -> impl Iterator<Item = &Entry> {
         self.entries.iter().chain(self.virtual_entry.iter())
+    }
+
+    /// The outstanding virtual entry, if any.
+    pub fn virtual_entry(&self) -> Option<&Entry> {
+        self.virtual_entry.as_ref()
     }
 
     pub fn len(&self) -> usize {
@@ -78,18 +154,27 @@ impl Scoreboard {
 
     /// Whether any live (non-virtual) entry is marked lost.
     pub fn any_lost(&self) -> bool {
-        self.entries.iter().any(|e| e.lost)
+        self.lost_count > 0
+    }
+
+    fn push_committed(&mut self, e: Entry) {
+        debug_assert!(
+            !self.index.contains_key(&e.id),
+            "duplicate scoreboard entry {}",
+            e.id
+        );
+        self.index.insert(e.id, self.entries.len());
+        if e.lost {
+            self.lost_count += 1;
+        }
+        self.entries.push(e);
+        self.record(Delta::Add(e));
+        self.epoch += 1;
     }
 
     /// Add a committed entry directly (engine-side admission).
     pub fn insert(&mut self, e: Entry) {
-        debug_assert!(
-            !self.entries.iter().any(|x| x.id == e.id),
-            "duplicate scoreboard entry {}",
-            e.id
-        );
-        self.entries.push(e);
-        self.epoch += 1;
+        self.push_committed(e);
     }
 
     /// "Virtually" append a new query (paper: assess how future KV and
@@ -110,8 +195,7 @@ impl Scoreboard {
             .virtual_entry
             .take()
             .expect("no virtual entry to commit");
-        self.entries.push(e);
-        self.epoch += 1;
+        self.push_committed(e);
         e
     }
 
@@ -126,15 +210,27 @@ impl Scoreboard {
 
     /// Mark the committed entry as lost.
     pub fn mark_lost(&mut self, id: RequestId) {
-        if let Some(e) = self.entries.iter_mut().find(|e| e.id == id) {
-            e.lost = true;
+        if let Some(&i) = self.index.get(&id) {
+            if !self.entries[i].lost {
+                self.lost_count += 1;
+            }
+            self.entries[i].lost = true;
             self.epoch += 1;
         }
     }
 
     /// Strike a terminated query (§IV-B: signals block deallocation).
     pub fn strike(&mut self, id: RequestId) {
-        self.entries.retain(|e| e.id != id);
+        if let Some(i) = self.index.remove(&id) {
+            let e = self.entries.swap_remove(i);
+            if i < self.entries.len() {
+                self.index.insert(self.entries[i].id, i);
+            }
+            if e.lost {
+                self.lost_count -= 1;
+            }
+            self.record(Delta::Remove(e));
+        }
         self.epoch += 1;
     }
 
@@ -142,8 +238,12 @@ impl Scoreboard {
     /// bump its predicted length. The paper bumps straight to the
     /// model's `max_tokens` limit.
     pub fn bump_overrun(&mut self, id: RequestId, max_tokens: u32) {
-        if let Some(e) = self.entries.iter_mut().find(|e| e.id == id) {
-            e.predicted_gen = max_tokens;
+        if let Some(&i) = self.index.get(&id) {
+            let old = self.entries[i];
+            self.entries[i].predicted_gen = max_tokens;
+            self.record(Delta::Remove(old));
+            let new = self.entries[i];
+            self.record(Delta::Add(new));
             self.epoch += 1;
         }
     }
@@ -151,7 +251,34 @@ impl Scoreboard {
     /// Keep predictions consistent with reality: any live query that
     /// has already generated `generated` tokens must have
     /// |r̂_i| > generated (otherwise projection would claim it
-    /// finished). Returns ids that were bumped.
+    /// finished).  Allocation-free: takes the live view as an iterator
+    /// and returns the number of bumped entries.
+    pub fn sync_overruns_iter(
+        &mut self,
+        live: impl IntoIterator<Item = (RequestId, u32)>,
+        max_tokens: u32,
+    ) -> u32 {
+        let mut bumped = 0u32;
+        for (id, generated) in live {
+            if let Some(&i) = self.index.get(&id) {
+                if self.entries[i].predicted_gen <= generated {
+                    let old = self.entries[i];
+                    self.entries[i].predicted_gen = max_tokens.max(generated + 1);
+                    self.record(Delta::Remove(old));
+                    let new = self.entries[i];
+                    self.record(Delta::Add(new));
+                    bumped += 1;
+                }
+            }
+        }
+        if bumped > 0 {
+            self.epoch += 1;
+        }
+        bumped
+    }
+
+    /// [`Self::sync_overruns_iter`] returning the bumped ids (test /
+    /// diagnostic convenience; allocates).
     pub fn sync_overruns(
         &mut self,
         live: &[(RequestId, u32)],
@@ -159,21 +286,16 @@ impl Scoreboard {
     ) -> Vec<RequestId> {
         let mut bumped = vec![];
         for &(id, generated) in live {
-            if let Some(e) = self.entries.iter_mut().find(|e| e.id == id) {
-                if e.predicted_gen <= generated {
-                    e.predicted_gen = max_tokens.max(generated + 1);
-                    bumped.push(id);
-                }
+            if self.sync_overruns_iter(std::iter::once((id, generated)), max_tokens) > 0
+            {
+                bumped.push(id);
             }
-        }
-        if !bumped.is_empty() {
-            self.epoch += 1;
         }
         bumped
     }
 
     pub fn get(&self, id: RequestId) -> Option<&Entry> {
-        self.entries.iter().find(|e| e.id == id)
+        self.index.get(&id).map(|&i| &self.entries[i])
     }
 }
 
@@ -203,8 +325,10 @@ mod tests {
         sb.virtual_append(entry(1, 0, 10, 5));
         assert_eq!(sb.len(), 1);
         assert_eq!(sb.committed().len(), 0);
+        assert_eq!(sb.virtual_entry().unwrap().id, 1);
         sb.commit_virtual();
         assert_eq!(sb.committed().len(), 1);
+        assert!(sb.virtual_entry().is_none());
     }
 
     #[test]
@@ -234,6 +358,24 @@ mod tests {
         sb.strike(1);
         assert_eq!(sb.committed().len(), 1);
         assert!(sb.get(1).is_none());
+        assert_eq!(sb.get(2).unwrap().id, 2);
+    }
+
+    #[test]
+    fn index_survives_swap_remove() {
+        let mut sb = Scoreboard::new();
+        for id in 0..8 {
+            sb.insert(entry(id, 0, 10 + id as u32, 5));
+        }
+        // Strike from the middle: the swapped-in tail entry must stay
+        // reachable through the id→index map.
+        sb.strike(2);
+        sb.strike(5);
+        for id in [0u64, 1, 3, 4, 6, 7] {
+            assert_eq!(sb.get(id).unwrap().id, id, "lost id {id}");
+        }
+        assert!(sb.get(2).is_none() && sb.get(5).is_none());
+        assert_eq!(sb.committed().len(), 6);
     }
 
     #[test]
@@ -246,6 +388,23 @@ mod tests {
         // No bump while under prediction.
         let bumped = sb.sync_overruns(&[(1, 900)], 1024);
         assert!(bumped.is_empty());
+    }
+
+    #[test]
+    fn sync_overruns_iter_counts_without_alloc() {
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 10, 5));
+        sb.insert(entry(2, 0, 10, 500));
+        let e0 = sb.epoch();
+        let n = sb.sync_overruns_iter([(1u64, 7u32), (2, 3)].into_iter(), 1024);
+        assert_eq!(n, 1);
+        assert_eq!(sb.get(1).unwrap().predicted_gen, 1024);
+        assert_eq!(sb.get(2).unwrap().predicted_gen, 500);
+        assert!(sb.epoch() > e0);
+        // Nothing to bump: epoch untouched.
+        let e1 = sb.epoch();
+        assert_eq!(sb.sync_overruns_iter(std::iter::empty(), 1024), 0);
+        assert_eq!(sb.epoch(), e1);
     }
 
     #[test]
@@ -274,5 +433,71 @@ mod tests {
         assert!(!sb.any_lost());
         sb.mark_lost(1);
         assert!(sb.any_lost());
+        sb.mark_lost(1); // idempotent on the counter
+        assert!(sb.any_lost());
+        sb.strike(1);
+        assert!(!sb.any_lost());
+    }
+
+    #[test]
+    fn journal_replays_committed_mutations() {
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 10, 5));
+        sb.virtual_append(entry(2, 0, 10, 5)); // not journaled
+        sb.rollback_virtual(); // not journaled
+        sb.virtual_append(entry(2, 0, 10, 5));
+        sb.commit_virtual(); // journaled as Add
+        sb.bump_overrun(2, 99); // Remove(old) + Add(new)
+        sb.strike(1);
+        let (start, deltas, next) = sb.journal();
+        assert_eq!(start, 0);
+        assert_eq!(next, deltas.len() as u64);
+        assert_eq!(
+            deltas.len(),
+            5, // add, add, remove+add (bump), remove (strike)
+        );
+        // Replaying the journal over an empty set reproduces committed.
+        let mut replay: Vec<Entry> = vec![];
+        for d in deltas {
+            match d {
+                Delta::Add(e) => replay.push(*e),
+                Delta::Remove(e) => {
+                    let i = replay.iter().position(|x| x.id == e.id).unwrap();
+                    replay.swap_remove(i);
+                }
+            }
+        }
+        let mut got: Vec<u64> = replay.iter().map(|e| e.id).collect();
+        let mut want: Vec<u64> = sb.committed().iter().map(|e| e.id).collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
+        assert_eq!(replay.iter().find(|e| e.id == 2).unwrap().predicted_gen, 99);
+    }
+
+    #[test]
+    fn journal_caps_and_advances_start_seq() {
+        let mut sb = Scoreboard::new();
+        for id in 0..(JOURNAL_CAP as u64 + 10) {
+            sb.insert(entry(id, 0, 10, 5));
+        }
+        let (start, deltas, next) = sb.journal();
+        assert!(deltas.len() <= JOURNAL_CAP);
+        assert_eq!(next, JOURNAL_CAP as u64 + 10);
+        assert!(start > 0, "cap must have dropped old history");
+        assert_eq!(start + deltas.len() as u64, next);
+    }
+
+    #[test]
+    fn delta_seq_ignores_virtual_and_lost_churn() {
+        let mut sb = Scoreboard::new();
+        sb.insert(entry(1, 0, 10, 5));
+        let s = sb.delta_seq();
+        sb.virtual_append(entry(2, 0, 10, 5));
+        sb.rollback_virtual();
+        sb.mark_lost(1);
+        assert_eq!(sb.delta_seq(), s, "projection inputs unchanged");
+        sb.strike(1);
+        assert!(sb.delta_seq() > s);
     }
 }

@@ -41,15 +41,17 @@ use crate::coordinator::autoscaler::{
     Autoscaler, FleetDecision, FleetScaler, ScaleDecision,
 };
 use crate::coordinator::perf_model::PerfModel;
-use crate::coordinator::projection::project;
+use crate::coordinator::projection::ProjectionTracker;
 use crate::coordinator::router::{headroom_score, HeadroomCache, RouterPolicy};
-use crate::coordinator::scheduler::{entry_for, AdmissionDecision, Scheduler};
+use crate::coordinator::scheduler::{
+    entry_for, AdmissionDecision, EvalScratch, Scheduler,
+};
 use crate::coordinator::scoreboard::Scoreboard;
-use crate::coordinator::throttle::min_slo_frequency;
+use crate::coordinator::throttle::min_slo_frequency_with;
 use crate::engine::kv_cache::blocks_for;
 use crate::engine::request::{Request, RequestId, RequestOutcome};
 use crate::engine::sim::EngineSim;
-use crate::gpusim::dvfs::FREQ_MAX_MHZ;
+use crate::gpusim::dvfs::{frequency_grid, FREQ_MAX_MHZ};
 use crate::gpusim::latency::{decode_latency_s, GpuState};
 use crate::gpusim::power::{idle_power_w, power_w};
 use crate::metrics::ServingStats;
@@ -308,6 +310,15 @@ pub struct FleetOutcome {
 struct EngineRt {
     sim: EngineSim,
     sb: Scoreboard,
+    /// Incrementally maintained §IV-B projection over `sb` (synced
+    /// from the scoreboard's delta journal; debug builds bit-compare
+    /// it against a from-scratch build on every use).
+    tracker: ProjectionTracker,
+    /// Reusable SLO-evaluation buffers + GBDT prediction memo.
+    scratch: EvalScratch,
+    /// The DVFS grid the §IV-E search runs over (built once; the
+    /// per-rethrottle rebuild was an allocation on the hot path).
+    grid: Vec<u32>,
     /// Time its next iteration may start.
     cursor: f64,
     accepting: bool,
@@ -327,11 +338,15 @@ struct EngineRt {
 
 impl EngineRt {
     fn new(spec: EngineSpec, at: f64) -> Self {
+        let block_tokens = spec.block_tokens;
         let mut sim = EngineSim::new(spec, FREQ_MAX_MHZ);
         sim.account_idle(at.max(0.0)); // zero-cost: marks accounting start
         Self {
             sim,
             sb: Scoreboard::new(),
+            tracker: ProjectionTracker::new(block_tokens),
+            scratch: EvalScratch::new(),
+            grid: frequency_grid(),
             cursor: at,
             accepting: true,
             completions: 0,
@@ -499,46 +514,57 @@ impl Replica {
         let Some(idx) = self.engines.iter().position(|e| e.accepting) else {
             return f64::NEG_INFINITY;
         };
-        let e = &self.engines[idx];
+        let e = &mut self.engines[idx];
         let spec = e.sim.spec();
-        let req_blocks = blocks_for(prompt_tokens, spec.block_tokens);
-        if req_blocks > spec.kv_blocks {
+        let block_tokens = spec.block_tokens;
+        let kv_capacity = spec.kv_blocks;
+        let max_batch = spec.max_batch;
+        let req_blocks = blocks_for(prompt_tokens, block_tokens);
+        if req_blocks > kv_capacity {
             return f64::NEG_INFINITY; // could never fit, even empty
         }
         let key = (e.sim.iter_index(), e.sb.epoch(), self.route_epoch);
-        let queue = &self.queue;
-        let (peak_kv, queued_blocks, queued_requests) = self.headroom.fetch(key, || {
-            let proj = project(&e.sb, e.sim.iter_index(), spec.block_tokens);
-            let qb: u32 = queue
-                .iter()
-                .map(|r| blocks_for(r.prompt_tokens, spec.block_tokens))
-                .sum();
-            (proj.peak_kv(), qb, queue.len())
-        });
+        let (peak_kv, queued_blocks, queued_requests) = match self.headroom.get(key) {
+            Some(s) => s,
+            None => {
+                // Cache miss: peak projected KV comes from the
+                // engine's incrementally maintained tracker instead of
+                // a from-scratch projection build.
+                let proj = e.tracker.project(&e.sb, e.sim.iter_index(), None);
+                let s = (
+                    proj.peak_kv(),
+                    queued_blocks_sum(&self.queue, block_tokens),
+                    self.queue.len(),
+                );
+                self.headroom.store(key, s);
+                s
+            }
+        };
         let score = headroom_score(
-            spec.kv_blocks,
+            kv_capacity,
             peak_kv,
             queued_blocks.saturating_add(req_blocks),
-            spec.max_batch,
+            max_batch,
             e.sim.batch(),
             queued_requests + 1,
         );
         #[cfg(debug_assertions)]
         {
-            // The cache must be unobservable: recompute from scratch
-            // and require bit equality (every debug-mode fleet run
-            // cross-checks cached against uncached scores).
-            let proj = project(&e.sb, e.sim.iter_index(), spec.block_tokens);
-            let qb: u32 = self
-                .queue
-                .iter()
-                .map(|r| blocks_for(r.prompt_tokens, spec.block_tokens))
-                .sum();
+            // The cache AND the tracker must be unobservable: recompute
+            // from an uncached, from-scratch projection and require bit
+            // equality (every debug-mode fleet run cross-checks this on
+            // every routing decision).
+            let proj = crate::coordinator::projection::project(
+                &e.sb,
+                e.sim.iter_index(),
+                block_tokens,
+            );
             let fresh = headroom_score(
-                spec.kv_blocks,
+                kv_capacity,
                 proj.peak_kv(),
-                qb.saturating_add(req_blocks),
-                spec.max_batch,
+                queued_blocks_sum(&self.queue, block_tokens)
+                    .saturating_add(req_blocks),
+                max_batch,
                 e.sim.batch(),
                 self.queue.len() + 1,
             );
@@ -657,20 +683,21 @@ impl Replica {
                     self.outcomes.push(o.clone());
                 }
                 // §IV-F: bump predictions the reality has outrun.
-                let live: Vec<(u64, u32)> = e
-                    .sim
-                    .active_info()
-                    .iter()
-                    .map(|a| (a.id, a.generated))
-                    .collect();
-                let bumped = e.sb.sync_overruns(&live, cfg.max_tokens);
+                // Allocation-free: the engine's live view streams
+                // straight into the scoreboard sync (the old path
+                // collected an `active_info` Vec plus a `bumped` Vec
+                // EVERY iteration, almost always to conclude nothing
+                // changed).
+                let bumped = e
+                    .sb
+                    .sync_overruns_iter(e.sim.active_overruns(), cfg.max_tokens);
                 // Re-evaluate the throttling controller when the batch
                 // composition changed (completion or prediction bump):
                 // without this, a frequency chosen under light load
                 // would persist while a queue builds behind a full
                 // batch (§IV-E is admission-triggered; completions are
                 // the other composition-change event).
-                if policy.throttling && (had_completions || !bumped.is_empty()) {
+                if policy.throttling && (had_completions || bumped > 0) {
                     rethrottle(e, !self.queue.is_empty(), model, &self.sched);
                 }
             }
@@ -1334,6 +1361,16 @@ fn best_reroute_target(
     best.map(|(_, j)| j)
 }
 
+/// Sum of KV blocks the queued prompts will demand — shared by the
+/// cached router-scoring path and its debug cross-check (previously
+/// duplicated inline in both).
+fn queued_blocks_sum(queue: &VecDeque<Request>, block_tokens: u32) -> u32 {
+    queue
+        .iter()
+        .map(|r| blocks_for(r.prompt_tokens, block_tokens))
+        .sum()
+}
+
 fn shadow_power(scaler: Option<&Autoscaler>, t: f64) -> f64 {
     match scaler.and_then(|s| s.shadow().map(|sh| (s, sh))) {
         Some((s, sh)) if t >= sh.started_at && t < sh.ready_at => {
@@ -1375,8 +1412,16 @@ fn try_admissions(
 
         let lost = if policy.slo_admission {
             e.sb.virtual_append(entry);
-            let (decision, _, already_lost) =
-                sched.admission_check(model, &spec, &e.sb, k, now, req.id);
+            let (decision, already_lost) = sched.admission_check(
+                model,
+                &spec,
+                &e.sb,
+                &mut e.tracker,
+                &mut e.scratch,
+                k,
+                now,
+                req.id,
+            );
             // De-facto-lost residents stop blocking future admissions.
             for id in already_lost {
                 e.sb.mark_lost(id);
@@ -1437,13 +1482,23 @@ fn try_admissions(
 /// equal to that of Triton when under high system pressure").
 fn rethrottle(e: &mut EngineRt, queue_pressure: bool, model: &PerfModel, sched: &Scheduler) {
     let now = e.cursor;
-    let spec = e.sim.spec().clone();
     let f = if queue_pressure {
         FREQ_MAX_MHZ
     } else {
         let scale = e.load_inflation(now);
-        let proj = project(&e.sb, e.sim.iter_index(), spec.block_tokens);
-        min_slo_frequency(model, &spec, &sched.slo, &e.sb, &proj, now, scale)
+        let k = e.sim.iter_index();
+        let proj = e.tracker.project(&e.sb, k, None);
+        min_slo_frequency_with(
+            &e.grid,
+            model,
+            e.sim.spec(),
+            &sched.slo,
+            &e.sb,
+            proj,
+            now,
+            scale,
+            &mut e.scratch,
+        )
     };
     e.sim.dvfs.set(now, f);
 }
@@ -1495,10 +1550,18 @@ fn resolve_blocked(
                     e.sb.strike(id);
                     rp.stats.dropped += 1;
                 } else {
-                    let spec = e.sim.spec().clone();
-                    let proj = project(&e.sb, e.sim.iter_index(), spec.block_tokens);
-                    let f = min_slo_frequency(
-                        model, &spec, &rp.sched.slo, &e.sb, &proj, now, 1.0,
+                    let k = e.sim.iter_index();
+                    let proj = e.tracker.project(&e.sb, k, None);
+                    let f = min_slo_frequency_with(
+                        &e.grid,
+                        model,
+                        e.sim.spec(),
+                        &rp.sched.slo,
+                        &e.sb,
+                        proj,
+                        now,
+                        1.0,
+                        &mut e.scratch,
                     );
                     e.sim.dvfs.set(now, f);
                 }

@@ -9,6 +9,7 @@
 use crate::config::{EngineSpec, SloSpec};
 use crate::coordinator::perf_model::PerfModel;
 use crate::coordinator::projection::Projection;
+use crate::coordinator::scheduler::{evaluate_slo_scratch, EvalScratch};
 use crate::coordinator::scoreboard::Scoreboard;
 use crate::gpusim::dvfs::{frequency_grid, FREQ_MAX_MHZ};
 
@@ -54,6 +55,31 @@ pub fn min_slo_frequency_on_grid(
     now: f64,
     t_r_scale: f64,
 ) -> u32 {
+    let mut scratch = EvalScratch::new();
+    min_slo_frequency_with(
+        grid, model, spec, slo, sb, proj, now, t_r_scale, &mut scratch,
+    )
+}
+
+/// [`min_slo_frequency_on_grid`] with caller-owned evaluation buffers:
+/// the allocation-free serving-loop form.  Every probe of the
+/// bisection evaluates the SAME projection, so GBDT inferences are
+/// memoized per (freq, batch, kv-bucket) in the scratch across the
+/// ~log₂(grid) probes — and across consecutive searches for as long as
+/// the committed entry set and iteration stay put (the scratch stamp
+/// clears the memo the moment either moves).
+#[allow(clippy::too_many_arguments)]
+pub fn min_slo_frequency_with(
+    grid: &[u32],
+    model: &PerfModel,
+    spec: &EngineSpec,
+    slo: &SloSpec,
+    sb: &Scoreboard,
+    proj: &Projection,
+    now: f64,
+    t_r_scale: f64,
+    scratch: &mut EvalScratch,
+) -> u32 {
     let Some(&fallback) = grid.last() else {
         // Empty grid: nothing to search; run flat out.
         return FREQ_MAX_MHZ;
@@ -65,41 +91,47 @@ pub fn min_slo_frequency_on_grid(
     if proj.horizon() == 0 {
         return fallback;
     }
-    let entries: Vec<crate::coordinator::scoreboard::Entry> =
-        sb.visible().copied().collect();
+    // Stamp with the window's iteration k (= start_iter - 1, the same
+    // convention admission_check uses) and world 0 (committed-only):
+    // consecutive searches over the same state reuse the memo, while
+    // an admission evaluation at the same (seq, k) — which projects a
+    // DIFFERENT trajectory (its candidate included) — clears it.
+    scratch.ensure_stamp(sb.delta_seq(), proj.start_iter.saturating_sub(1), 0);
     // Deadlines are tightened by the safety slack (evaluate_slo
     // compares `now + T_R` against them) and remaining times inflated
-    // by the load factor.
-    let ok = |f: u32| {
-        crate::coordinator::scheduler::evaluate_slo_entries(
+    // by the load factor.  The entry set is iterated in place — no
+    // per-probe collection.
+    let ok = |scratch: &mut EvalScratch, f: u32| {
+        evaluate_slo_scratch(
             model,
             spec,
             slo,
-            &entries,
+            sb.visible(),
             proj,
             f,
             now + SAFETY_SLACK_S,
             t_r_scale,
+            scratch,
         )
         .all_ok()
     };
 
     // Monotone predicate (higher f => faster => SLOs easier):
     // binary search for the first passing grid index.
-    if ok(grid[0]) {
+    if ok(scratch, grid[0]) {
         return grid[0];
     }
     // invariant: grid[lo] fails, grid[hi] passes (guaranteed by the
     // scheduler's max-frequency validation; re-check defensively).
     // Single-entry grids land here directly: grid[0] failed, so the
     // only setting doubles as the fallback.
-    if grid.len() == 1 || !ok(fallback) {
+    if grid.len() == 1 || !ok(scratch, fallback) {
         return fallback;
     }
     let (mut lo, mut hi) = (0usize, grid.len() - 1);
     while hi - lo > 1 {
         let mid = lo + (hi - lo) / 2;
-        if ok(grid[mid]) {
+        if ok(scratch, grid[mid]) {
             hi = mid;
         } else {
             lo = mid;

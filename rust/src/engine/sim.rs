@@ -145,6 +145,14 @@ impl EngineSim {
             .collect()
     }
 
+    /// Allocation-free `(id, generated)` view of resident requests —
+    /// the §IV-F overrun-sync input (`active_info` clones the full
+    /// per-request records; the per-iteration sync only needs these
+    /// two fields).
+    pub fn active_overruns(&self) -> impl Iterator<Item = (RequestId, u32)> + '_ {
+        self.active.iter().map(|a| (a.req.id, a.generated))
+    }
+
     /// Whether a prompt of `prompt_tokens` currently fits in free KV.
     pub fn kv_fits(&self, prompt_tokens: u32) -> bool {
         let need =

@@ -5,7 +5,7 @@
 
 use throttllem::config::models::llama2_13b;
 use throttllem::config::SloSpec;
-use throttllem::coordinator::projection::project;
+use throttllem::coordinator::projection::{project, project_entries, ProjectionTracker};
 use throttllem::coordinator::scheduler::evaluate_slo;
 use throttllem::coordinator::scoreboard::{Entry, Scoreboard};
 use throttllem::coordinator::throttle::min_slo_frequency;
@@ -135,6 +135,169 @@ fn throttle_choice_is_consistent_with_slo_eval() {
             );
         }
     });
+}
+
+/// The tracker contract: after ANY sequence of scoreboard operations
+/// and window advances, the incrementally maintained projection is
+/// bit-identical to a from-scratch `project_entries` build over the
+/// visible entry set.  Ops: insert / virtual_append / commit /
+/// rollback / strike / bump_overrun / advance-iteration, seeded PCG.
+#[test]
+fn tracker_matches_from_scratch_under_random_op_sequences() {
+    proptest_lite(PropConfig { cases: 60, seed: 7 }, |rng| {
+        let bt = 64u32;
+        let mut sb = Scoreboard::new();
+        let mut tracker = ProjectionTracker::new(bt);
+        let mut k = rng.uniform_u64(0, 20);
+        let mut next_id = 0u64;
+        let mut live_ids: Vec<u64> = vec![];
+        let mut virtual_live = false;
+        let steps = rng.uniform_u64(20, 80);
+        for _ in 0..steps {
+            match rng.uniform_u64(0, 7) {
+                0 | 1 => {
+                    let e = Entry {
+                        id: next_id,
+                        scheduled_iter: rng.uniform_u64(0, k + 30),
+                        prompt_tokens: rng.uniform_u64(1, 3000) as u32,
+                        predicted_gen: rng.uniform_u64(1, 700) as u32,
+                        deadline_s: 30.0,
+                        lost: false,
+                    };
+                    sb.insert(e);
+                    live_ids.push(next_id);
+                    next_id += 1;
+                }
+                2 => {
+                    if !virtual_live {
+                        let vid = 1_000_000 + next_id;
+                        next_id += 1;
+                        sb.virtual_append(Entry {
+                            id: vid,
+                            scheduled_iter: k,
+                            prompt_tokens: rng.uniform_u64(1, 3000) as u32,
+                            predicted_gen: rng.uniform_u64(1, 700) as u32,
+                            deadline_s: 30.0,
+                            lost: false,
+                        });
+                        virtual_live = true;
+                    }
+                }
+                3 => {
+                    if virtual_live {
+                        if rng.next_f64() < 0.5 {
+                            let e = sb.commit_virtual();
+                            live_ids.push(e.id);
+                        } else {
+                            sb.rollback_virtual();
+                        }
+                        virtual_live = false;
+                    }
+                }
+                4 => {
+                    if !live_ids.is_empty() {
+                        let i = rng.uniform_usize(0, live_ids.len() - 1);
+                        let id = live_ids.swap_remove(i);
+                        sb.strike(id);
+                    }
+                }
+                5 => {
+                    if !live_ids.is_empty() {
+                        let i = rng.uniform_usize(0, live_ids.len() - 1);
+                        sb.bump_overrun(
+                            live_ids[i],
+                            rng.uniform_u64(1, 1024) as u32,
+                        );
+                    }
+                }
+                _ => {
+                    k += rng.uniform_u64(1, 25);
+                }
+            }
+            let visible: Vec<Entry> = sb.visible().copied().collect();
+            let fresh = project_entries(&visible, k, bt);
+            let incr = tracker.project(&sb, k, sb.virtual_entry());
+            assert_eq!(incr, &fresh, "tracker diverged at k={k}");
+        }
+    });
+}
+
+/// Journal-overflow path: a tracker that falls further behind than the
+/// scoreboard journal retains must rebuild — and still match.
+#[test]
+fn tracker_rebuilds_after_journal_overflow() {
+    let bt = 64u32;
+    let mut sb = Scoreboard::new();
+    let mut tracker = ProjectionTracker::new(bt);
+    // Sync once at k=0 on a small set.
+    for id in 0..4u64 {
+        sb.insert(Entry {
+            id,
+            scheduled_iter: 0,
+            prompt_tokens: 100 * (id as u32 + 1),
+            predicted_gen: 50 + 10 * id as u32,
+            deadline_s: 30.0,
+            lost: false,
+        });
+    }
+    let fresh = project(&sb, 0, bt);
+    assert_eq!(tracker.project(&sb, 0, None), &fresh);
+    // Now churn far past the journal cap without syncing.
+    for round in 0..400u64 {
+        let id = 1000 + round;
+        sb.insert(Entry {
+            id,
+            scheduled_iter: 5,
+            prompt_tokens: 64,
+            predicted_gen: 100,
+            deadline_s: 30.0,
+            lost: false,
+        });
+        if round % 2 == 0 {
+            sb.strike(id);
+        }
+    }
+    let fresh = project(&sb, 6, bt);
+    assert_eq!(tracker.project(&sb, 6, None), &fresh);
+}
+
+/// Window-advance past the horizon: every tracked entry ends before
+/// the new iteration, so the projection is empty — and a later insert
+/// at the advanced iteration starts a fresh horizon correctly.
+#[test]
+fn tracker_window_advance_past_horizon() {
+    let bt = 64u32;
+    let mut sb = Scoreboard::new();
+    let mut tracker = ProjectionTracker::new(bt);
+    sb.insert(Entry {
+        id: 1,
+        scheduled_iter: 0,
+        prompt_tokens: 500,
+        predicted_gen: 10, // ends at iteration 10
+        deadline_s: 30.0,
+        lost: false,
+    });
+    assert!(tracker.project(&sb, 0, None).horizon() > 0);
+    // Advance far past the entry's end while it is still tracked.
+    let p = tracker.project(&sb, 50, None);
+    assert_eq!(p.start_iter, 51);
+    assert_eq!(p.horizon(), 0);
+    assert_eq!(p.peak_kv(), 0);
+    // Strike it and admit a new entry at the advanced iteration.
+    sb.strike(1);
+    sb.insert(Entry {
+        id: 2,
+        scheduled_iter: 60,
+        prompt_tokens: 200,
+        predicted_gen: 20,
+        deadline_s: 60.0,
+        lost: false,
+    });
+    let fresh = project(&sb, 60, bt);
+    let p = tracker.project(&sb, 60, None);
+    assert_eq!(p, &fresh);
+    assert_eq!(p.horizon(), 19); // iterations 61..=79
+    assert!(p.batch.iter().all(|&b| b == 1));
 }
 
 #[test]
