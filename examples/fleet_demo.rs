@@ -2,7 +2,7 @@
 //! frequency control (the GreenLLM/AGFT-style fleet extension of the
 //! paper's single-engine throttLL'eM).
 //!
-//! Two modes:
+//! Three modes:
 //!   * default — N identical llama2-13b TP2 replicas, served under
 //!     every admission-router policy against a Triton fleet at max
 //!     frequency;
@@ -10,17 +10,31 @@
 //!     occasional long prompts only the large replicas can hold, where
 //!     capacity-aware `projected-headroom` routing visibly beats
 //!     round-robin on SLO attainment (the §IV-B projection signal is
-//!     load-bearing on the main path).
+//!     load-bearing on the main path);
+//!   * `--scenario <steady|burst|flash|diurnal|replay:<file>>` — the
+//!     fleet-level workload engine: ONE shared arrival stream with
+//!     correlated bursts / flash crowds / diurnal idle, served under
+//!     every router policy (combinable with `--mixed`).  `--record
+//!     <file>` writes the generated trace as replayable JSONL;
+//!     `--replay <file>` (= `--scenario replay:<file>`) replays one
+//!     bit-exactly; `--min-attainment <frac>` exits non-zero when the
+//!     best router misses the E2E-attainment bar (the CI scenario
+//!     matrix gate).
 //!
 //! Run with:
 //!   cargo run --release --example fleet_demo [-- --replicas 4 --duration 600]
 //!   cargo run --release --example fleet_demo -- --mixed [--duration 600]
+//!   cargo run --release --example fleet_demo -- --scenario burst --record t.jsonl
+//!   cargo run --release --example fleet_demo -- --replay t.jsonl
 
 use throttllem::cli::Args;
 use throttllem::config::models::llama2_13b;
 use throttllem::config::{ReplicaSpec, ServingConfig};
 use throttllem::coordinator::{
     serve_fleet_plan, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
+};
+use throttllem::workload::fleet_trace::{
+    record_fleet_trace, scenario_requests, Scenario,
 };
 use throttllem::workload::trace::{inject_long_prompts, synth_trace, TraceParams};
 use throttllem::workload::LengthPredictor;
@@ -29,11 +43,128 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let duration = args.get_f64("duration", 600.0)?;
     let seed = args.get_u64("seed", 0)?;
-    if args.flag("mixed") {
+    if args.get("scenario").is_some() || args.get("replay").is_some() {
+        scenario_mode(&args)
+    } else if args.flag("mixed") {
         mixed_demo(duration, seed)
     } else {
         homogeneous_demo(args.get_u64("replicas", 4)? as usize, duration, seed)
     }
+}
+
+/// The scenario matrix entry point: one shared fleet trace (generated
+/// or replayed) served under every router policy.
+fn scenario_mode(args: &Args) -> anyhow::Result<()> {
+    let duration = args.get_f64("duration", 600.0)?;
+    let seed = args.get_u64("seed", 0)?;
+    let scenario = match (args.get("scenario"), args.get("replay")) {
+        (Some(s), None) => Scenario::parse(s)?,
+        (None, Some(f)) => Scenario::Replay(f.to_string()),
+        (Some(_), Some(_)) => {
+            anyhow::bail!("--scenario and --replay are mutually exclusive")
+        }
+        (None, None) => unreachable!("scenario_mode needs --scenario/--replay"),
+    };
+    let policy = Policy::throttle_only();
+    let (plan, cfg, label) = if args.flag("mixed") {
+        let specs = vec![
+            ReplicaSpec::fixed(llama2_13b(4)),
+            ReplicaSpec::fixed(llama2_13b(2)),
+            ReplicaSpec::fixed(llama2_13b(1)),
+            ReplicaSpec::fixed(llama2_13b(1)),
+        ];
+        (
+            FleetPlan::heterogeneous(specs, RouterPolicy::RoundRobin),
+            ServingConfig::throttllem(llama2_13b(4)),
+            "mixed fleet (1xTP4 + 1xTP2 + 2xTP1)".to_string(),
+        )
+    } else {
+        let replicas = args.get_u64("replicas", 4)? as usize;
+        let cfg = ServingConfig::throttllem(llama2_13b(2));
+        let plan =
+            FleetPlan::homogeneous(replicas, RouterPolicy::RoundRobin, &cfg, policy, false);
+        (plan, cfg, format!("{replicas} x llama2-13b-tp2"))
+    };
+    let model = PerfModel::train(&plan.engines(), 100, seed);
+    // Right-scale to 60% of the fleet's aggregate rated load: bursts
+    // and flash crowds then push PAST rated capacity, which is the
+    // point of the exercise.
+    let peak = args.get_f64("peak", 0.6 * plan.rated_rps())?;
+    let (meta, mut reqs) =
+        scenario_requests(&scenario, plan.replicas.len(), peak, duration, seed)?;
+    if let Some(path) = args.get("record") {
+        record_fleet_trace(path, &meta, &reqs)?;
+        eprintln!("recorded fleet trace: {path}");
+    }
+    println!(
+        "scenario {} on {label}: {} requests (peak ~{:.1} RPS over {:.0} s)\n",
+        meta.scenario,
+        reqs.len(),
+        meta.peak_rps,
+        meta.duration_s
+    );
+    LengthPredictor::oracle().apply(&mut reqs, cfg.max_tokens);
+
+    print_header();
+    let mut best_att = f64::NEG_INFINITY;
+    let mut rr = None;
+    let mut ph = None;
+    for router in [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastLoaded,
+        RouterPolicy::ProjectedHeadroom,
+    ] {
+        let plan = FleetPlan {
+            router,
+            ..plan.clone()
+        };
+        let out = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
+        print_row(&format!("{} ({})", meta.scenario, router.name()), &cfg, &out);
+        let s = &out.total.stats;
+        let att = s.e2e_slo_attainment(cfg.slo.e2e_p99);
+        let att = if att.is_nan() { 0.0 } else { att };
+        let jpt = if s.total_tokens > 0 {
+            s.total_energy_j / s.total_tokens as f64
+        } else {
+            f64::INFINITY
+        };
+        best_att = best_att.max(att);
+        match router {
+            RouterPolicy::RoundRobin => rr = Some((att, jpt)),
+            RouterPolicy::ProjectedHeadroom => ph = Some((att, jpt)),
+            _ => {}
+        }
+    }
+    if let (Some((rra, rrj)), Some((pha, phj))) = (rr, ph) {
+        println!(
+            "\nprojected-headroom vs round-robin: attainment {:.1}% vs {:.1}%, \
+             J/token {:.3} vs {:.3} ({})",
+            pha * 100.0,
+            rra * 100.0,
+            phj,
+            rrj,
+            if pha >= rra || phj <= rrj {
+                "ok"
+            } else {
+                "REGRESSION"
+            }
+        );
+    }
+    if args.get("min-attainment").is_some() {
+        let min = args.get_f64("min-attainment", 0.0)?;
+        anyhow::ensure!(
+            best_att >= min,
+            "SLO attainment gate: best router reached {:.1}% < required {:.1}%",
+            best_att * 100.0,
+            min * 100.0
+        );
+        println!(
+            "attainment gate: best {:.1}% >= required {:.1}%",
+            best_att * 100.0,
+            min * 100.0
+        );
+    }
+    Ok(())
 }
 
 fn print_header() {

@@ -295,5 +295,10 @@ fn main() {
         "throttle binary search (§IV-E)",
         "throttle binary search (§IV-E), from-scratch",
     );
+    // Machine-speed yardstick: the perf-regression gate (bench_gate)
+    // normalizes cross-machine ns/op ratios by this bench's ratio.
+    let r = throttllem::bench_util::calibration_result();
+    println!("{r}");
+    report.push(r);
     write_bench_json("perf_hotpath", &report);
 }

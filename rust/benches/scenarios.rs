@@ -1,0 +1,71 @@
+//! Fleet scenario matrix: every generated scenario (steady / burst /
+//! flash / diurnal) served under every router policy on the same
+//! shared arrival stream, reporting SLO attainment and J/token per
+//! cell.  This is the workload the ROADMAP's "Trace realism" item
+//! asked for: correlated bursts hit every replica at once, so the
+//! router and admission control face fleet-wide pressure instead of
+//! conveniently decorrelated per-replica load.
+//!
+//! Acceptance (ISSUE 4): projected-headroom must match or beat
+//! round-robin on E2E attainment OR J/token in EVERY scenario — the
+//! process exits non-zero otherwise, so the CI smoke run enforces it.
+//!
+//! Run with: cargo bench --bench scenarios
+//! (THROTTLLEM_BENCH_SECS overrides the per-scenario trace length.)
+
+use throttllem::bench_util::{
+    headroom_regressions, print_scenario_table, section, write_bench_json,
+    BenchResult, ScenarioSuite,
+};
+use throttllem::config::models::llama2_13b;
+use throttllem::config::ServingConfig;
+use throttllem::coordinator::{FleetPlan, PerfModel, Policy, RouterPolicy};
+
+fn main() {
+    let secs: f64 = std::env::var("THROTTLLEM_BENCH_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(600.0);
+    let seed = 0u64;
+    let replicas = 4usize;
+    let spec = llama2_13b(2);
+    let cfg = ServingConfig::throttllem(spec.clone());
+    let policy = Policy::throttle_only();
+
+    eprintln!("training performance model...");
+    let model = PerfModel::train(&[spec.clone()], 120, seed);
+    let plan =
+        FleetPlan::homogeneous(replicas, RouterPolicy::RoundRobin, &cfg, policy, false);
+
+    let suite = ScenarioSuite::full(secs, seed);
+    eprintln!(
+        "running {} scenarios x {} routers on {replicas} x {} ({secs:.0} s each)...",
+        suite.scenarios.len(),
+        suite.routers.len(),
+        spec.name
+    );
+    let runs = suite.run(&cfg, policy, &model, &plan);
+
+    section(&format!(
+        "Scenario matrix: {replicas} x {} at {:.0}% of rated fleet load",
+        spec.name,
+        suite.utilization * 100.0
+    ));
+    print_scenario_table(&runs);
+
+    let report: Vec<BenchResult> = runs.iter().map(|r| r.wall.clone()).collect();
+    write_bench_json("scenarios", &report);
+
+    let regressions = headroom_regressions(&runs);
+    if regressions.is_empty() {
+        println!(
+            "\nprojected-headroom matches or beats round-robin on attainment \
+             or J/token in every scenario"
+        );
+    } else {
+        for r in &regressions {
+            println!("ROUTER REGRESSION: {r}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -2,9 +2,29 @@
 //!
 //! Provides wall-clock timing loops with warm-up, robust summary
 //! statistics, and table/series printers shared by the per-figure
-//! bench binaries under `rust/benches/`.
+//! bench binaries under `rust/benches/`, plus:
+//!
+//!   * [`ScenarioSuite`] — the fleet scenario matrix (steady / burst /
+//!     flash / diurnal x router policy) reporting SLO attainment and
+//!     J/token per scenario (`cargo bench --bench scenarios`, the CI
+//!     scenario jobs, and `tests/fleet_trace_determinism.rs`);
+//!   * the perf-regression gate ([`gate_bench_report`]) that diffs a
+//!     `BENCH_perf.json` run against the committed
+//!     `BENCH_baseline.json` (driven by the `bench_gate` binary in
+//!     CI: fail > 25% ns/op regression on tracked hot-path benches,
+//!     warn > 10%, cross-machine ratios normalized by the
+//!     [`CALIBRATION_BENCH`] fixed-work loop).
 
 use std::time::Instant;
+
+use crate::config::ServingConfig;
+use crate::coordinator::{
+    scenario_params, serve_fleet_plan, FleetPlan, PerfModel, Policy,
+    RouterPolicy,
+};
+use crate::jsonl::Json;
+use crate::workload::fleet_trace::{synth_fleet_trace, ScenarioKind};
+use crate::workload::LengthPredictor;
 
 /// Timing summary of a benchmarked closure.
 #[derive(Debug, Clone)]
@@ -89,7 +109,6 @@ pub fn black_box<T>(x: T) -> T {
 /// preserved, so one report accumulates across bench binaries (the CI
 /// smoke job runs `fleet` then `perf_hotpath` into the same file).
 pub fn write_bench_json_to(path: &str, suite: &str, results: &[BenchResult]) {
-    use crate::jsonl::Json;
     let mut entries: Vec<Json> = Vec::new();
     if let Ok(text) = std::fs::read_to_string(path) {
         match crate::jsonl::parse(&text) {
@@ -185,6 +204,406 @@ pub fn f(x: f64, prec: usize) -> String {
     format!("{x:.prec$}")
 }
 
+// ---- fleet scenario suite -------------------------------------------
+
+/// One (scenario, router) cell of the scenario matrix.
+#[derive(Debug, Clone)]
+pub struct ScenarioRun {
+    pub scenario: String,
+    pub router: RouterPolicy,
+    pub requests: usize,
+    pub completed: u64,
+    pub dropped: u64,
+    pub rerouted: u64,
+    /// E2E SLO attainment (0 when nothing completed).
+    pub e2e_attainment: f64,
+    pub tbt_attainment: f64,
+    pub energy_kj: f64,
+    /// Joules per generated token (lower is better; infinity when no
+    /// tokens were produced).
+    pub j_per_token: f64,
+    /// Serve-loop wall clock (feeds `BENCH_perf.json`, suite
+    /// `scenarios`).
+    pub wall: BenchResult,
+}
+
+/// The fleet scenario matrix: each scenario's shared arrival stream is
+/// generated ONCE and served under every router policy, so router
+/// comparisons are on identical traces.
+#[derive(Debug, Clone)]
+pub struct ScenarioSuite {
+    pub duration_s: f64,
+    /// Trace peak as a fraction of the fleet's aggregate rated load.
+    pub utilization: f64,
+    pub seed: u64,
+    pub scenarios: Vec<ScenarioKind>,
+    pub routers: Vec<RouterPolicy>,
+}
+
+impl ScenarioSuite {
+    /// CI smoke configuration: short traces, the round-robin vs
+    /// projected-headroom comparison the acceptance gate checks.
+    pub fn smoke(seed: u64) -> Self {
+        Self {
+            duration_s: 120.0,
+            utilization: 0.6,
+            seed,
+            scenarios: vec![
+                ScenarioKind::Steady,
+                ScenarioKind::Burst,
+                ScenarioKind::Flash,
+            ],
+            routers: vec![RouterPolicy::RoundRobin, RouterPolicy::ProjectedHeadroom],
+        }
+    }
+
+    /// Full matrix: every scenario under every router policy.
+    pub fn full(duration_s: f64, seed: u64) -> Self {
+        Self {
+            duration_s,
+            utilization: 0.6,
+            seed,
+            scenarios: ScenarioKind::all().to_vec(),
+            routers: vec![
+                RouterPolicy::RoundRobin,
+                RouterPolicy::LeastLoaded,
+                RouterPolicy::ProjectedHeadroom,
+            ],
+        }
+    }
+
+    /// Run the matrix on `base_plan` (its router field is overridden
+    /// per cell).
+    pub fn run(
+        &self,
+        cfg: &ServingConfig,
+        policy: Policy,
+        model: &PerfModel,
+        base_plan: &FleetPlan,
+    ) -> Vec<ScenarioRun> {
+        let mut out = Vec::new();
+        for &kind in &self.scenarios {
+            let params = scenario_params(
+                base_plan,
+                kind,
+                self.duration_s,
+                self.utilization,
+                self.seed,
+            );
+            let mut reqs = synth_fleet_trace(&params);
+            LengthPredictor::oracle().apply(&mut reqs, cfg.max_tokens);
+            for &router in &self.routers {
+                let plan = FleetPlan {
+                    router,
+                    ..base_plan.clone()
+                };
+                let t0 = Instant::now();
+                let fo = serve_fleet_plan(cfg, policy, model, &reqs, &plan);
+                let wall = single_run_result(
+                    &format!("scenario {} ({})", kind.name(), router.name()),
+                    t0.elapsed(),
+                );
+                let s = &fo.total.stats;
+                let att = |x: f64| if x.is_nan() { 0.0 } else { x };
+                out.push(ScenarioRun {
+                    scenario: kind.name().to_string(),
+                    router,
+                    requests: reqs.len(),
+                    completed: s.completed,
+                    dropped: s.dropped,
+                    rerouted: fo.rerouted,
+                    e2e_attainment: att(s.e2e_slo_attainment(cfg.slo.e2e_p99)),
+                    tbt_attainment: att(s.tbt_slo_attainment(cfg.slo.tbt_avg)),
+                    energy_kj: s.total_energy_j / 1e3,
+                    j_per_token: if s.total_tokens > 0 {
+                        s.total_energy_j / s.total_tokens as f64
+                    } else {
+                        f64::INFINITY
+                    },
+                    wall,
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Print the matrix as an aligned table.
+pub fn print_scenario_table(runs: &[ScenarioRun]) {
+    let rows: Vec<Vec<String>> = runs
+        .iter()
+        .map(|r| {
+            vec![
+                r.scenario.clone(),
+                r.router.name().to_string(),
+                format!("{}", r.requests),
+                format!("{}", r.completed),
+                format!("{}", r.dropped),
+                format!("{}", r.rerouted),
+                format!("{:.1}", r.e2e_attainment * 100.0),
+                format!("{:.1}", r.tbt_attainment * 100.0),
+                format!("{:.1}", r.energy_kj),
+                format!("{:.3}", r.j_per_token),
+            ]
+        })
+        .collect();
+    print_table(
+        &[
+            "scenario", "router", "requests", "completed", "dropped", "rerouted",
+            "E2Eatt[%]", "TBTatt[%]", "energy[kJ]", "J/token",
+        ],
+        &rows,
+    );
+}
+
+/// Scenarios where projected-headroom fails to match-or-beat
+/// round-robin on E2E attainment OR J/token (the acceptance bar:
+/// `ph >= rr` on at least one of the two, per scenario).  Empty means
+/// the suite passes.  A 1-percentage-point attainment / 2% J/token
+/// measurement-noise band keeps statistical ties from flaking the
+/// gate: a real routing regression moves both metrics far past it.
+pub fn headroom_regressions(runs: &[ScenarioRun]) -> Vec<String> {
+    let mut bad = Vec::new();
+    for rr in runs.iter().filter(|r| r.router == RouterPolicy::RoundRobin) {
+        let Some(ph) = runs.iter().find(|r| {
+            r.router == RouterPolicy::ProjectedHeadroom && r.scenario == rr.scenario
+        }) else {
+            continue;
+        };
+        let att_ok = ph.e2e_attainment >= rr.e2e_attainment - 0.01;
+        let jpt_ok = ph.j_per_token <= rr.j_per_token * 1.02 + 1e-12;
+        if !(att_ok || jpt_ok) {
+            bad.push(format!(
+                "{}: headroom att {:.1}% vs rr {:.1}%, J/token {:.3} vs {:.3}",
+                rr.scenario,
+                ph.e2e_attainment * 100.0,
+                rr.e2e_attainment * 100.0,
+                ph.j_per_token,
+                rr.j_per_token
+            ));
+        }
+    }
+    bad
+}
+
+// ---- perf-regression gate -------------------------------------------
+
+/// The fixed-work bench whose ns/op measures machine speed; the gate
+/// normalizes cross-machine ns/op ratios by its ratio.
+pub const CALIBRATION_BENCH: &str = "calibration fixed-work";
+
+/// The suite whose benches the gate enforces (micro-benchmarks with
+/// averaged samples; the single-run `fleet`/`scenarios` wall clocks
+/// are informational only).
+pub const TRACKED_SUITE: &str = "perf_hotpath";
+
+/// Measure the calibration workload (FNV over 4096 words) — emitted
+/// into every `perf_hotpath` report so the gate can normalize.
+pub fn calibration_result() -> BenchResult {
+    let mut x = 0u64;
+    bench(CALIBRATION_BENCH, 200, || {
+        let mut h = 0xcbf29ce484222325u64;
+        for i in 0u64..4096 {
+            h ^= i.wrapping_add(x);
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        x = black_box(h);
+    })
+}
+
+/// Gate thresholds (percent regression over baseline, after
+/// calibration normalization).
+#[derive(Debug, Clone, Copy)]
+pub struct GateConfig {
+    pub fail_pct: f64,
+    pub warn_pct: f64,
+}
+
+impl Default for GateConfig {
+    fn default() -> Self {
+        Self {
+            fail_pct: 25.0,
+            warn_pct: 10.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateLevel {
+    Ok,
+    Warn,
+    Fail,
+    /// Tracked in the baseline but absent from the current report
+    /// (renamed or dropped bench) — warn, never silently pass.
+    MissingCurrent,
+}
+
+/// One tracked bench's verdict.
+#[derive(Debug, Clone)]
+pub struct GateFinding {
+    pub name: String,
+    pub base_ns: f64,
+    pub cur_ns: f64,
+    /// Normalized cur/base ns ratio (1.0 = unchanged; NaN when
+    /// missing).
+    pub ratio: f64,
+    pub level: GateLevel,
+}
+
+/// Full gate verdict for one baseline/current pair.
+#[derive(Debug, Clone)]
+pub struct GateReport {
+    pub findings: Vec<GateFinding>,
+    /// cur/base calibration ratio the bench ratios were divided by
+    /// (None: calibration bench missing from either file, raw ratios
+    /// used).
+    pub calibration: Option<f64>,
+    /// The baseline declares itself a bootstrap placeholder (padded
+    /// values committed before the first measured refresh).
+    pub bootstrap: bool,
+}
+
+impl GateReport {
+    pub fn failed(&self) -> bool {
+        self.findings.iter().any(|f| f.level == GateLevel::Fail)
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| matches!(f.level, GateLevel::Warn | GateLevel::MissingCurrent))
+            .count()
+    }
+}
+
+fn bench_entries(doc: &Json) -> Vec<(String, String, f64)> {
+    let mut out = Vec::new();
+    if let Some(arr) = doc.get("benches").and_then(|b| b.as_arr()) {
+        for e in arr {
+            if let (Some(suite), Some(name), Some(ns)) = (
+                e.get("suite").and_then(|s| s.as_str()),
+                e.get("name").and_then(|s| s.as_str()),
+                e.get("ns_per_op").and_then(|v| v.as_f64()),
+            ) {
+                out.push((suite.to_string(), name.to_string(), ns));
+            }
+        }
+    }
+    out
+}
+
+fn find_ns(entries: &[(String, String, f64)], suite: &str, name: &str) -> Option<f64> {
+    entries
+        .iter()
+        .find(|(s, n, _)| s == suite && n == name)
+        .map(|&(_, _, ns)| ns)
+}
+
+/// Diff `current` against `baseline` (both parsed `BENCH_perf.json`
+/// documents): every tracked hot-path bench in the baseline must stay
+/// within `cfg.fail_pct` of its baseline ns/op, with ratios normalized
+/// by the [`CALIBRATION_BENCH`] ratio when both files carry it.
+pub fn gate_bench_report(
+    baseline: &Json,
+    current: &Json,
+    cfg: &GateConfig,
+) -> anyhow::Result<GateReport> {
+    let base = bench_entries(baseline);
+    let cur = bench_entries(current);
+    anyhow::ensure!(!base.is_empty(), "baseline has no bench entries");
+    anyhow::ensure!(!cur.is_empty(), "current report has no bench entries");
+    let calibration = match (
+        find_ns(&base, TRACKED_SUITE, CALIBRATION_BENCH),
+        find_ns(&cur, TRACKED_SUITE, CALIBRATION_BENCH),
+    ) {
+        (Some(b), Some(c)) if b > 0.0 && c > 0.0 => Some(c / b),
+        _ => None,
+    };
+    let bootstrap = baseline
+        .get("meta")
+        .and_then(|m| m.get("mode"))
+        .and_then(|m| m.as_str())
+        == Some("bootstrap");
+    let mut findings = Vec::new();
+    for (suite, name, base_ns) in &base {
+        if suite != TRACKED_SUITE || name == CALIBRATION_BENCH || *base_ns <= 0.0 {
+            continue;
+        }
+        match find_ns(&cur, suite, name) {
+            None => findings.push(GateFinding {
+                name: name.clone(),
+                base_ns: *base_ns,
+                cur_ns: f64::NAN,
+                ratio: f64::NAN,
+                level: GateLevel::MissingCurrent,
+            }),
+            Some(cur_ns) => {
+                let ratio = (cur_ns / base_ns) / calibration.unwrap_or(1.0);
+                let level = if ratio > 1.0 + cfg.fail_pct / 100.0 {
+                    GateLevel::Fail
+                } else if ratio > 1.0 + cfg.warn_pct / 100.0 {
+                    GateLevel::Warn
+                } else {
+                    GateLevel::Ok
+                };
+                findings.push(GateFinding {
+                    name: name.clone(),
+                    base_ns: *base_ns,
+                    cur_ns,
+                    ratio,
+                    level,
+                });
+            }
+        }
+    }
+    anyhow::ensure!(
+        !findings.is_empty(),
+        "baseline tracks no {TRACKED_SUITE} benches"
+    );
+    Ok(GateReport {
+        findings,
+        calibration,
+        bootstrap,
+    })
+}
+
+/// Clone a report document with one tracked bench slowed by `factor`
+/// (the gate's self-test injects a >25% slowdown and asserts the gate
+/// trips — run by CI on every build, so the failure path is
+/// demonstrated continuously, not just once in a PR description).
+pub fn inject_slowdown(doc: &Json, factor: f64) -> anyhow::Result<Json> {
+    let arr = doc
+        .get("benches")
+        .and_then(|b| b.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("report has no benches array"))?;
+    let mut injected = false;
+    let mut out = Vec::with_capacity(arr.len());
+    for e in arr {
+        let is_tracked = e.get("suite").and_then(|s| s.as_str())
+            == Some(TRACKED_SUITE)
+            && e.get("name").and_then(|s| s.as_str()) != Some(CALIBRATION_BENCH);
+        if !injected && is_tracked {
+            if let (Json::Obj(m), Some(ns)) =
+                (e, e.get("ns_per_op").and_then(|v| v.as_f64()))
+            {
+                let mut m = m.clone();
+                m.insert("ns_per_op".to_string(), Json::Num(ns * factor));
+                out.push(Json::Obj(m));
+                injected = true;
+                continue;
+            }
+        }
+        out.push(e.clone());
+    }
+    anyhow::ensure!(injected, "no tracked bench to inject a slowdown into");
+    let mut root = match doc {
+        Json::Obj(m) => m.clone(),
+        _ => anyhow::bail!("report is not a JSON object"),
+    };
+    root.insert("benches".to_string(), Json::Arr(out));
+    Ok(Json::Obj(root))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,5 +666,128 @@ mod tests {
         assert_eq!(a1.get("ns_per_op").and_then(|v| v.as_f64()), Some(150.0));
         assert!(find("alpha", "a2").is_some());
         let _ = std::fs::remove_file(path);
+    }
+
+    fn report(entries: &[(&str, &str, f64)], meta_mode: Option<&str>) -> Json {
+        let benches: Vec<Json> = entries
+            .iter()
+            .map(|(s, n, ns)| {
+                Json::obj(vec![
+                    ("suite", Json::Str(s.to_string())),
+                    ("name", Json::Str(n.to_string())),
+                    ("ns_per_op", Json::Num(*ns)),
+                ])
+            })
+            .collect();
+        let mut pairs = vec![("benches", Json::Arr(benches))];
+        if let Some(m) = meta_mode {
+            pairs.push(("meta", Json::obj(vec![("mode", Json::Str(m.to_string()))])));
+        }
+        Json::obj(pairs)
+    }
+
+    #[test]
+    fn gate_passes_on_identical_reports() {
+        let doc = report(
+            &[
+                (TRACKED_SUITE, CALIBRATION_BENCH, 1000.0),
+                (TRACKED_SUITE, "admission", 5000.0),
+                ("fleet", "serve x4", 9e9), // untracked, ignored
+            ],
+            None,
+        );
+        let r = gate_bench_report(&doc, &doc, &GateConfig::default()).unwrap();
+        assert!(!r.failed());
+        assert_eq!(r.warnings(), 0);
+        assert_eq!(r.findings.len(), 1);
+        assert!((r.findings[0].ratio - 1.0).abs() < 1e-12);
+        assert_eq!(r.calibration, Some(1.0));
+        assert!(!r.bootstrap);
+    }
+
+    #[test]
+    fn gate_fails_on_injected_25pct_slowdown() {
+        // The acceptance demonstration: a >25% slowdown of a tracked
+        // hot-path bench MUST trip the gate (CI re-runs this through
+        // `bench_gate selftest` on the real report every build).
+        let base = report(
+            &[
+                (TRACKED_SUITE, CALIBRATION_BENCH, 1000.0),
+                (TRACKED_SUITE, "admission", 5000.0),
+                (TRACKED_SUITE, "throttle", 3000.0),
+            ],
+            None,
+        );
+        let slowed = inject_slowdown(&base, 1.30).unwrap();
+        let r = gate_bench_report(&base, &slowed, &GateConfig::default()).unwrap();
+        assert!(r.failed(), "30% slowdown must fail: {:?}", r.findings);
+        // 15%: warn, not fail.
+        let warned = inject_slowdown(&base, 1.15).unwrap();
+        let r = gate_bench_report(&base, &warned, &GateConfig::default()).unwrap();
+        assert!(!r.failed());
+        assert_eq!(r.warnings(), 1);
+        // 5%: clean.
+        let ok = inject_slowdown(&base, 1.05).unwrap();
+        let r = gate_bench_report(&base, &ok, &GateConfig::default()).unwrap();
+        assert!(!r.failed());
+        assert_eq!(r.warnings(), 0);
+    }
+
+    #[test]
+    fn gate_normalizes_by_calibration_ratio() {
+        let base = report(
+            &[
+                (TRACKED_SUITE, CALIBRATION_BENCH, 1000.0),
+                (TRACKED_SUITE, "admission", 5000.0),
+            ],
+            Some("bootstrap"),
+        );
+        // A uniformly 2x slower machine: every bench doubles, the
+        // calibration ratio absorbs it.
+        let cur = report(
+            &[
+                (TRACKED_SUITE, CALIBRATION_BENCH, 2000.0),
+                (TRACKED_SUITE, "admission", 10000.0),
+            ],
+            None,
+        );
+        let r = gate_bench_report(&base, &cur, &GateConfig::default()).unwrap();
+        assert!(!r.failed());
+        assert_eq!(r.calibration, Some(2.0));
+        assert!((r.findings[0].ratio - 1.0).abs() < 1e-12);
+        assert!(r.bootstrap);
+        // Without the calibration bench the raw 2x ratio fails.
+        let base_nocal = report(&[(TRACKED_SUITE, "admission", 5000.0)], None);
+        let cur_nocal = report(&[(TRACKED_SUITE, "admission", 10000.0)], None);
+        let r = gate_bench_report(&base_nocal, &cur_nocal, &GateConfig::default())
+            .unwrap();
+        assert!(r.failed());
+        assert_eq!(r.calibration, None);
+    }
+
+    #[test]
+    fn gate_warns_on_missing_tracked_bench() {
+        let base = report(
+            &[
+                (TRACKED_SUITE, "admission", 5000.0),
+                (TRACKED_SUITE, "renamed-away", 2000.0),
+            ],
+            None,
+        );
+        let cur = report(&[(TRACKED_SUITE, "admission", 5000.0)], None);
+        let r = gate_bench_report(&base, &cur, &GateConfig::default()).unwrap();
+        assert!(!r.failed());
+        assert_eq!(r.warnings(), 1);
+        assert!(r
+            .findings
+            .iter()
+            .any(|f| f.level == GateLevel::MissingCurrent));
+        // Empty inputs are an error, not a silent pass.
+        let empty = report(&[], None);
+        assert!(gate_bench_report(&empty, &cur, &GateConfig::default()).is_err());
+        assert!(gate_bench_report(&base, &empty, &GateConfig::default()).is_err());
+        // A baseline tracking nothing is an error too.
+        let untracked = report(&[("fleet", "serve x4", 1.0)], None);
+        assert!(gate_bench_report(&untracked, &cur, &GateConfig::default()).is_err());
     }
 }

@@ -1,0 +1,188 @@
+//! `bench_gate` — the CI perf-regression comparator.
+//!
+//! Diffs a freshly produced `BENCH_perf.json` against the committed
+//! `BENCH_baseline.json`: tracked hot-path benches (suite
+//! `perf_hotpath`) must stay within 25% of their baseline ns/op (warn
+//! at 10%), with cross-machine speed differences normalized by the
+//! `calibration fixed-work` bench's ratio.
+//!
+//! Subcommands:
+//!   check     — gate the current report against the baseline
+//!               (non-zero exit on any >fail-pct regression)
+//!   promote   — refresh the baseline from a measured report
+//!               (the one-command baseline refresh; see README)
+//!   selftest  — prove the gate trips: clone the current report as its
+//!               own baseline, inject a 30% slowdown into one tracked
+//!               bench, and assert `check` fails on it (and passes on
+//!               the unmodified clone).  CI runs this on every build,
+//!               so the failure path is demonstrated continuously.
+//!
+//! Usage:
+//!   bench_gate check   [--baseline BENCH_baseline.json] [--current BENCH_perf.json]
+//!                      [--fail-pct 25] [--warn-pct 10]
+//!   bench_gate promote [--current BENCH_perf.json] [--out BENCH_baseline.json]
+//!   bench_gate selftest [--current BENCH_perf.json]
+
+use throttllem::bench_util::{
+    gate_bench_report, inject_slowdown, GateConfig, GateLevel, GateReport,
+};
+use throttllem::cli::Args;
+use throttllem::jsonl::{self, Json};
+
+const USAGE: &str = "bench_gate <check|promote|selftest> [--options]
+  check:    --baseline <file> --current <file> [--fail-pct 25] [--warn-pct 10]
+  promote:  --current <file> --out <file>
+  selftest: --current <file>";
+
+fn main() {
+    match run() {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("bench_gate: error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run() -> anyhow::Result<i32> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("check") => cmd_check(&args),
+        Some("promote") => cmd_promote(&args),
+        Some("selftest") => cmd_selftest(&args),
+        Some(other) => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+    }
+}
+
+fn load(path: &str) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    jsonl::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e:#}"))
+}
+
+fn print_report(r: &GateReport, cfg: &GateConfig) {
+    match r.calibration {
+        Some(c) => println!(
+            "calibration ratio (current/baseline machine speed): {c:.3}"
+        ),
+        None => println!(
+            "calibration bench missing from one side: raw ns/op ratios \
+             (cross-machine noise NOT normalized)"
+        ),
+    }
+    if r.bootstrap {
+        println!(
+            "note: baseline is a BOOTSTRAP placeholder (padded values); \
+             refresh it from a measured run: see README \"Refreshing the \
+             perf baseline\""
+        );
+    }
+    for f in &r.findings {
+        let tag = match f.level {
+            GateLevel::Ok => "ok  ",
+            GateLevel::Warn => "WARN",
+            GateLevel::Fail => "FAIL",
+            GateLevel::MissingCurrent => "GONE",
+        };
+        if f.level == GateLevel::MissingCurrent {
+            println!(
+                "[{tag}] {:<44} baseline {:>12.1} ns/op, missing from current report",
+                f.name, f.base_ns
+            );
+        } else {
+            println!(
+                "[{tag}] {:<44} {:>12.1} -> {:>12.1} ns/op  (x{:.3}, fail >x{:.2}, warn >x{:.2})",
+                f.name,
+                f.base_ns,
+                f.cur_ns,
+                f.ratio,
+                1.0 + cfg.fail_pct / 100.0,
+                1.0 + cfg.warn_pct / 100.0
+            );
+        }
+    }
+}
+
+fn cmd_check(args: &Args) -> anyhow::Result<i32> {
+    let baseline = load(args.get_or("baseline", "BENCH_baseline.json"))?;
+    let current = load(args.get_or("current", "BENCH_perf.json"))?;
+    let cfg = GateConfig {
+        fail_pct: args.get_f64("fail-pct", 25.0)?,
+        warn_pct: args.get_f64("warn-pct", 10.0)?,
+    };
+    let report = gate_bench_report(&baseline, &current, &cfg)?;
+    print_report(&report, &cfg);
+    if report.failed() {
+        println!(
+            "bench gate: FAILED — hot-path regression above {}% \
+             (refresh the baseline only for intentional changes)",
+            cfg.fail_pct
+        );
+        Ok(1)
+    } else {
+        println!(
+            "bench gate: passed ({} tracked, {} warnings)",
+            report.findings.len(),
+            report.warnings()
+        );
+        Ok(0)
+    }
+}
+
+fn cmd_promote(args: &Args) -> anyhow::Result<i32> {
+    let current_path = args.get_or("current", "BENCH_perf.json");
+    let out_path = args.get_or("out", "BENCH_baseline.json");
+    let current = load(current_path)?;
+    let benches = current
+        .get("benches")
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("{current_path}: no benches array"))?;
+    let doc = Json::obj(vec![
+        ("benches", benches),
+        (
+            "meta",
+            Json::obj(vec![
+                ("mode", Json::Str("measured".to_string())),
+                ("source", Json::Str(current_path.to_string())),
+            ]),
+        ),
+    ]);
+    std::fs::write(out_path, doc.to_string())
+        .map_err(|e| anyhow::anyhow!("{out_path}: {e}"))?;
+    println!("baseline refreshed: {current_path} -> {out_path}");
+    Ok(0)
+}
+
+fn cmd_selftest(args: &Args) -> anyhow::Result<i32> {
+    let current = load(args.get_or("current", "BENCH_perf.json"))?;
+    let cfg = GateConfig::default();
+    // 1. A report gates cleanly against itself.
+    let clean = gate_bench_report(&current, &current, &cfg)?;
+    anyhow::ensure!(
+        !clean.failed() && clean.warnings() == 0,
+        "selftest: report does not gate cleanly against itself"
+    );
+    // 2. A 30% slowdown of one tracked bench MUST trip the gate.
+    let slowed = inject_slowdown(&current, 1.30)?;
+    let tripped = gate_bench_report(&current, &slowed, &cfg)?;
+    anyhow::ensure!(
+        tripped.failed(),
+        "selftest: injected 30% slowdown did not trip the gate"
+    );
+    // 3. A 15% slowdown warns without failing.
+    let warned = gate_bench_report(&current, &inject_slowdown(&current, 1.15)?, &cfg)?;
+    anyhow::ensure!(
+        !warned.failed() && warned.warnings() >= 1,
+        "selftest: 15% slowdown should warn, not fail"
+    );
+    println!(
+        "bench gate selftest: ok ({} tracked benches; injected 30% slowdown \
+         trips, 15% warns)",
+        clean.findings.len()
+    );
+    Ok(0)
+}

@@ -37,6 +37,7 @@ pub use router::{HeadroomCache, RouterPolicy};
 pub use scheduler::{AdmissionDecision, EvalScratch, Scheduler};
 pub use scoreboard::Scoreboard;
 pub use server::{
-    serve_fleet, serve_fleet_plan, serve_trace, FamilyStats, FleetOutcome,
-    FleetPlan, FleetSpec, Policy, ReplicaOutcome, ServeOutcome,
+    scenario_params, serve_fleet, serve_fleet_plan, serve_scenario,
+    serve_trace, FamilyStats, FleetOutcome, FleetPlan, FleetSpec, Policy,
+    ReplicaOutcome, ServeOutcome,
 };

@@ -1217,6 +1217,55 @@ pub fn serve_fleet_plan(
     }
 }
 
+/// Fleet-trace parameters for running `plan` under a generated
+/// scenario: the shared arrival stream is right-scaled to
+/// `utilization x` the fleet's aggregate rated load, with one burst
+/// channel per replica.
+pub fn scenario_params(
+    plan: &FleetPlan,
+    kind: crate::workload::fleet_trace::ScenarioKind,
+    duration_s: f64,
+    utilization: f64,
+    seed: u64,
+) -> crate::workload::fleet_trace::FleetTraceParams {
+    assert!(utilization > 0.0, "utilization must be positive");
+    crate::workload::fleet_trace::FleetTraceParams::scenario(
+        kind,
+        plan.replicas.len(),
+        utilization * plan.rated_rps(),
+        duration_s,
+        seed,
+    )
+}
+
+/// Serve a generated fleet scenario on `plan`: synthesize the fleet's
+/// ONE shared arrival stream (correlated bursts land on every replica
+/// at once — the per-replica synthesizer decorrelated them by
+/// construction), apply the oracle length predictor, and run
+/// [`serve_fleet_plan`].  Returns the trace parameters and requests so
+/// callers can record the scenario for bit-exact JSONL replay.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_scenario(
+    cfg: &ServingConfig,
+    policy: Policy,
+    model: &PerfModel,
+    plan: &FleetPlan,
+    kind: crate::workload::fleet_trace::ScenarioKind,
+    duration_s: f64,
+    utilization: f64,
+    seed: u64,
+) -> (
+    crate::workload::fleet_trace::FleetTraceParams,
+    Vec<Request>,
+    FleetOutcome,
+) {
+    let params = scenario_params(plan, kind, duration_s, utilization, seed);
+    let mut reqs = crate::workload::fleet_trace::synth_fleet_trace(&params);
+    crate::workload::LengthPredictor::oracle().apply(&mut reqs, cfg.max_tokens);
+    let out = serve_fleet_plan(cfg, policy, model, &reqs, plan);
+    (params, reqs, out)
+}
+
 /// Pick the replica an arrival (of `prompt_tokens`) is routed to.  The
 /// capacity-aware policies score the request against each replica's
 /// OWN grid, so a prompt that can never fit a small replica is not

@@ -24,10 +24,63 @@ use throttllem::config::{
 use throttllem::coordinator::{
     serve_fleet_plan, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
 };
+use throttllem::engine::request::Request;
 use throttllem::mlmodel::{mae, mape, r2_score};
 use throttllem::sim::Pcg64;
+use throttllem::workload::fleet_trace::{
+    record_fleet_trace, scenario_requests, FleetTraceMeta, Scenario,
+};
 use throttllem::workload::trace::{synth_trace, synth_trace_rps_range, TraceParams};
 use throttllem::workload::{collect_training_data, LengthPredictor};
+
+/// `--record <file>`: write the (pre-predictor) trace as replayable
+/// JSONL.  Recording a replayed trace re-serializes it byte-identically.
+fn maybe_record(
+    args: &Args,
+    meta: &FleetTraceMeta,
+    reqs: &[Request],
+) -> anyhow::Result<()> {
+    if let Some(path) = args.get("record") {
+        record_fleet_trace(path, meta, reqs)?;
+        eprintln!("recorded fleet trace: {path}");
+    }
+    Ok(())
+}
+
+/// The `--scenario`/`--record` dispatch shared by the homogeneous and
+/// heterogeneous serve paths: build or replay the scenario's shared
+/// stream (recording it when asked), falling back to `legacy` trace
+/// synthesis when no scenario is requested.
+fn cli_scenario_requests(
+    args: &Args,
+    replicas: usize,
+    peak: f64,
+    duration: f64,
+    seed: u64,
+    legacy: impl FnOnce() -> Vec<Request>,
+) -> anyhow::Result<Vec<Request>> {
+    match args.get("scenario").map(Scenario::parse).transpose()? {
+        Some(sc) => {
+            let (meta, reqs) = scenario_requests(&sc, replicas, peak, duration, seed)?;
+            maybe_record(args, &meta, &reqs)?;
+            eprintln!(
+                "scenario {}: {} requests (peak ~{:.1} RPS over {:.0} s)",
+                meta.scenario,
+                reqs.len(),
+                meta.peak_rps,
+                meta.duration_s
+            );
+            Ok(reqs)
+        }
+        None => {
+            anyhow::ensure!(
+                args.get("record").is_none(),
+                "--record requires --scenario"
+            );
+            Ok(legacy())
+        }
+    }
+}
 
 fn policy_by_name(name: &str) -> anyhow::Result<Policy> {
     Ok(match name {
@@ -68,6 +121,11 @@ usage: throttllem <serve|profile|train-model|engines|real-serve> [--options]
                --duration <s> --error <p95 frac> --seed <n> [--autoscale]
                --replicas <n> --router <round-robin|least-loaded|projected-headroom>
                --peak <rps>   (default: rated max load x replicas)
+               --scenario <steady|burst|flash|diurnal|replay:<file>>
+                 (fleet-level trace: correlated bursts / flash crowds /
+                  diurnal idle; replay:<file> replays a recorded trace
+                  bit-exactly)
+               --record <file>  (write the generated trace as replayable JSONL)
                heterogeneous fleets (mixed TP / model families):
                --replica-spec tp=2[,model=<m>][,count=<n>][,slo=engine]  (repeatable;
                  tp=1+2+4 declares a per-replica TP autoscale ladder)
@@ -160,12 +218,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // for the autoscaled set) times the fleet size, unless overridden.
     let base_peak = if autoscale { 7.5 } else { cfg.engine.max_load_rps };
     let peak = args.get_f64("peak", base_peak * replicas as f64)?;
-    let params = TraceParams::short(duration, peak, seed);
-    let mut reqs = if autoscale {
-        synth_trace_rps_range(&params, 0.75, peak)
-    } else {
-        synth_trace(&params)
-    };
+    let mut reqs = cli_scenario_requests(args, replicas, peak, duration, seed, || {
+        let params = TraceParams::short(duration, peak, seed);
+        if autoscale {
+            synth_trace_rps_range(&params, 0.75, peak)
+        } else {
+            synth_trace(&params)
+        }
+    })?;
     let predictor = if error > 0.0 {
         LengthPredictor::noisy(error, seed)
     } else {
@@ -245,7 +305,9 @@ fn cmd_serve_hetero(
 
     // Right-scale to the fleet's aggregate rated load by default.
     let peak = args.get_f64("peak", plan.rated_rps())?;
-    let mut reqs = synth_trace(&TraceParams::short(duration, peak, seed));
+    let mut reqs = cli_scenario_requests(args, n, peak, duration, seed, || {
+        synth_trace(&TraceParams::short(duration, peak, seed))
+    })?;
     let predictor = if error > 0.0 {
         LengthPredictor::noisy(error, seed)
     } else {

@@ -1,0 +1,259 @@
+//! Deterministic transcendental functions (platform-stable math).
+//!
+//! `f64::exp` / `ln` / `sin` / `cos` call the platform libm, whose
+//! results may differ in the last ulps between OSes and libc versions.
+//! That is fine for simulation statistics but fatal for the fleet-trace
+//! record/replay contract: CI asserts that a generated trace's JSONL is
+//! *byte-identical* for a given (seed, params) on every platform
+//! (`tests/fleet_trace_determinism.rs`).  These implementations use
+//! only IEEE-754 basic operations (+ − × ÷, sqrt, rounding, bit
+//! manipulation), which are exactly specified, so every platform
+//! produces the same bits.
+//!
+//! Accuracy is ~1e-12 relative — far beyond what a synthetic workload
+//! needs — but the point is *stability*, not precision: the same input
+//! always yields the same output everywhere.
+
+const LN2: f64 = std::f64::consts::LN_2;
+const TAU: f64 = std::f64::consts::TAU;
+
+/// 2^k for integer k, via exponent-bit construction (exact).
+fn pow2i(k: i32) -> f64 {
+    if k > 1023 {
+        f64::INFINITY
+    } else if k < -1074 {
+        0.0
+    } else if k < -1022 {
+        // Subnormal range: build 2^-1022 and scale down exactly.
+        f64::from_bits(1u64 << (52 - (-1022 - k) as u64))
+    } else {
+        f64::from_bits(((k + 1023) as u64) << 52)
+    }
+}
+
+/// Deterministic e^x (|relative error| ~1e-13 over the finite range).
+pub fn exp_det(x: f64) -> f64 {
+    if x.is_nan() {
+        return f64::NAN;
+    }
+    if x > 709.8 {
+        return f64::INFINITY;
+    }
+    if x < -745.0 {
+        return 0.0;
+    }
+    // Range reduction: x = k*ln2 + r, |r| <= ln2/2.
+    let k = (x / LN2).round();
+    let r = x - k * LN2;
+    // Taylor with fixed term count (Horner), deterministic order.
+    // |r| <= 0.347: 14 terms give ~1e-16 truncation error.
+    let mut acc = 1.0f64;
+    let mut n = 14.0f64;
+    while n >= 1.0 {
+        acc = 1.0 + acc * r / n;
+        n -= 1.0;
+    }
+    // Split the 2^k scale at the exponent-range edges: k can be 1024
+    // (x in ~[709.44, 709.78], exp finite but pow2i(1024) = inf) or
+    // below -1074 pre-multiplication (subnormal results); two finite
+    // factors keep the product correct at both boundaries.
+    let k = k as i32;
+    if k > 1023 {
+        acc * pow2i(1023) * pow2i(k - 1023)
+    } else if k < -1022 {
+        acc * pow2i(-1022) * pow2i(k + 1022)
+    } else {
+        acc * pow2i(k)
+    }
+}
+
+/// Deterministic natural log (x > 0; returns -inf at 0, NaN below).
+pub fn ln_det(x: f64) -> f64 {
+    if x.is_nan() || x < 0.0 {
+        return f64::NAN;
+    }
+    if x == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if x.is_infinite() {
+        return f64::INFINITY;
+    }
+    // Normalize subnormals exactly (2^54 is a power of two).
+    let (x, sub_adj) = if x < f64::MIN_POSITIVE {
+        (x * pow2i(54), -54.0f64)
+    } else {
+        (x, 0.0)
+    };
+    let bits = x.to_bits();
+    let mut e = ((bits >> 52) & 0x7ff) as i32 - 1023;
+    // Mantissa m in [1, 2).
+    let mut m = f64::from_bits((bits & 0x000f_ffff_ffff_ffff) | (1023u64 << 52));
+    // Keep m in [sqrt(1/2), sqrt(2)) so |s| stays small.
+    if m > std::f64::consts::SQRT_2 {
+        m *= 0.5;
+        e += 1;
+    }
+    // ln m via the atanh series: s = (m-1)/(m+1), |s| <= 0.1716.
+    let s = (m - 1.0) / (m + 1.0);
+    let s2 = s * s;
+    // 2 * (s + s^3/3 + s^5/5 + ... + s^17/17): truncation ~1e-16.
+    let mut acc = 0.0f64;
+    let mut k = 17.0f64;
+    while k >= 1.0 {
+        acc = acc * s2 + 1.0 / k;
+        k -= 2.0;
+    }
+    2.0 * s * acc + (e as f64 + sub_adj) * LN2
+}
+
+/// Reduce to r in [-pi, pi) deterministically (adequate for the
+/// bounded arguments the workload generator uses; not a full Payne-
+/// Hanek reduction for astronomically large inputs).
+fn reduce_tau(x: f64) -> f64 {
+    x - TAU * ((x + std::f64::consts::PI) / TAU).floor()
+}
+
+/// Deterministic sin(x) (absolute error ~1e-11 on [-pi, pi]).
+pub fn sin_det(x: f64) -> f64 {
+    if !x.is_finite() {
+        return f64::NAN;
+    }
+    let r = reduce_tau(x);
+    let r2 = r * r;
+    // Taylor to r^23/23!, fixed term count and evaluation order.
+    let mut term = r;
+    let mut sum = r;
+    let mut k = 1.0f64;
+    while k <= 11.0 {
+        term = -term * r2 / ((2.0 * k) * (2.0 * k + 1.0));
+        sum += term;
+        k += 1.0;
+    }
+    sum
+}
+
+/// Deterministic cos(x) (absolute error ~1e-11 on [-pi, pi]).
+pub fn cos_det(x: f64) -> f64 {
+    if !x.is_finite() {
+        return f64::NAN;
+    }
+    let r = reduce_tau(x);
+    let r2 = r * r;
+    let mut term = 1.0f64;
+    let mut sum = 1.0f64;
+    let mut k = 1.0f64;
+    while k <= 12.0 {
+        term = -term * r2 / ((2.0 * k - 1.0) * (2.0 * k));
+        sum += term;
+        k += 1.0;
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        if b == 0.0 {
+            a.abs() < tol
+        } else {
+            ((a - b) / b).abs() < tol || (a - b).abs() < tol
+        }
+    }
+
+    #[test]
+    fn exp_matches_std() {
+        for i in -200..=200 {
+            let x = i as f64 * 0.173;
+            assert!(
+                close(exp_det(x), x.exp(), 1e-11),
+                "exp({x}) = {} vs {}",
+                exp_det(x),
+                x.exp()
+            );
+        }
+        assert_eq!(exp_det(0.0), 1.0);
+        assert_eq!(exp_det(f64::NEG_INFINITY), 0.0);
+        assert_eq!(exp_det(800.0), f64::INFINITY);
+        // Exponent-range edges: finite just inside, inf/0 just outside.
+        assert!(close(exp_det(709.5), 709.5f64.exp(), 1e-11));
+        assert!(exp_det(709.5).is_finite());
+        assert_eq!(exp_det(709.79), f64::INFINITY);
+        assert!(exp_det(-740.0) > 0.0, "deep negative exp stays nonzero");
+        // Subnormal result: one rounding step costs up to ~2^-11
+        // relative, so only a coarse agreement check is meaningful.
+        assert!(close(exp_det(-740.0), (-740.0f64).exp(), 1e-2));
+    }
+
+    #[test]
+    fn ln_matches_std() {
+        for i in 1..=400 {
+            let x = i as f64 * 0.37;
+            assert!(
+                close(ln_det(x), x.ln(), 1e-11),
+                "ln({x}) = {} vs {}",
+                ln_det(x),
+                x.ln()
+            );
+        }
+        // Small magnitudes (the exponential sampler feeds uniforms).
+        for i in 1..=60 {
+            let x = (2.0f64).powi(-i);
+            assert!(close(ln_det(x), x.ln(), 1e-11), "ln(2^-{i})");
+        }
+        assert_eq!(ln_det(1.0), 0.0);
+        assert_eq!(ln_det(0.0), f64::NEG_INFINITY);
+        assert!(ln_det(-1.0).is_nan());
+    }
+
+    #[test]
+    fn ln_exp_roundtrip() {
+        for i in -40..=40 {
+            let x = i as f64 * 0.25;
+            assert!(close(ln_det(exp_det(x)), x, 1e-10), "roundtrip {x}");
+        }
+    }
+
+    #[test]
+    fn sin_cos_match_std() {
+        for i in -300..=300 {
+            let x = i as f64 * 0.217;
+            assert!(
+                close(sin_det(x), x.sin(), 1e-9),
+                "sin({x}) = {} vs {}",
+                sin_det(x),
+                x.sin()
+            );
+            assert!(
+                close(cos_det(x), x.cos(), 1e-9),
+                "cos({x}) = {} vs {}",
+                cos_det(x),
+                x.cos()
+            );
+        }
+        assert_eq!(sin_det(0.0), 0.0);
+        assert_eq!(cos_det(0.0), 1.0);
+    }
+
+    #[test]
+    fn pythagorean_identity() {
+        for i in 0..100 {
+            let x = i as f64 * 0.63 - 31.5;
+            let s = sin_det(x);
+            let c = cos_det(x);
+            assert!((s * s + c * c - 1.0).abs() < 1e-9, "x={x}");
+        }
+    }
+
+    #[test]
+    fn deterministic_bits() {
+        // Same input, same bits — trivially true in one process, but
+        // pins the API contract the fleet-trace golden test relies on.
+        for i in 0..50 {
+            let x = 0.31 * i as f64;
+            assert_eq!(exp_det(x).to_bits(), exp_det(x).to_bits());
+            assert_eq!(sin_det(x).to_bits(), sin_det(x).to_bits());
+        }
+    }
+}

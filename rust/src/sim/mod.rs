@@ -8,6 +8,7 @@
 //! wall-clock mode (`runtime`).
 
 pub mod clock;
+pub mod detmath;
 pub mod dist;
 pub mod rng;
 

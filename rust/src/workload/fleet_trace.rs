@@ -1,0 +1,803 @@
+//! Fleet-level workload engine: correlated bursts, flash crowds,
+//! diurnal load and cold-start idle across a multi-replica fleet.
+//!
+//! The paper evaluates on a single Azure-derived trace right-scaled to
+//! ONE engine's rated load (§III-D, §V-A).  The fleet coordinator
+//! routes across heterogeneous replicas, whose hardest failure mode —
+//! a correlated arrival burst hitting every replica at once — the
+//! per-engine synthesizer cannot produce: running [`super::trace`]
+//! once per replica (or right-scaling one trace and splitting it
+//! round-robin) decorrelates bursts by construction (ROADMAP "Trace
+//! realism"; GreenLLM and AGFT both stress that frequency controllers
+//! are only credible under bursty, shifting load).
+//!
+//! This module composes the existing [`TraceParams`] *marginals*
+//! (prompt/generation length distributions) with a shared fleet-wide
+//! intensity process:
+//!
+//!   * a scenario **baseline envelope** (mid-trace peak, or a diurnal
+//!     cosine with a long-idle / cold-start window);
+//!   * a **Markov-modulated burst state per replica channel** with
+//!     configurable cross-replica correlation: each channel copies a
+//!     shared fleet burst chain with probability `sqrt(rho)` per slot
+//!     and follows its own independent chain otherwise, which makes
+//!     the pairwise indicator correlation exactly `rho`
+//!     (`tests/fleet_trace_determinism.rs` pins the estimate);
+//!   * **flash-crowd spikes**: a sudden multiplicative surge hitting
+//!     the whole fleet simultaneously;
+//!   * the fleet consumes ONE merged arrival stream (the router
+//!     spreads it), so a correlated burst lands on every replica at
+//!     the same instant.
+//!
+//! Generation uses only [`crate::sim::Pcg64`] and
+//! [`crate::sim::detmath`] (IEEE-exact arithmetic, no platform libm),
+//! so a generated trace — and its JSONL serialization
+//! ([`fleet_trace_to_jsonl`]) — is **byte-identical across platforms**
+//! for the same seed and parameters.  Scenarios recorded to JSONL
+//! replay exactly ([`parse_fleet_trace_jsonl`]), which is what the CI
+//! scenario matrix runs against.
+
+use crate::engine::request::Request;
+use crate::sim::detmath::{cos_det, exp_det, ln_det};
+use crate::sim::Pcg64;
+use crate::workload::trace::TraceParams;
+
+/// Intensity-process time resolution.  One-second slots: burst dwell
+/// times are tens of seconds and arrival rates are single-digit RPS,
+/// so finer slotting buys nothing.
+pub const SLOT_S: f64 = 1.0;
+
+/// A generated fleet scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// The paper-shaped envelope at fleet scale: mid-trace peak over a
+    /// wandering baseline, min-RPS floor, no correlated bursts.
+    Steady,
+    /// Markov-modulated burst state per replica channel with
+    /// cross-replica correlation: bursts hit most of the fleet at
+    /// once instead of averaging out.
+    Burst,
+    /// Flash crowd: a sudden fleet-wide surge (multiplicative spike)
+    /// over an otherwise moderate envelope.
+    Flash,
+    /// Diurnal cosine baseline with a long-idle window — the
+    /// cold-start phase where the fleet should scale to (near) zero
+    /// and pay spawn time when load returns.
+    Diurnal,
+}
+
+impl ScenarioKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioKind::Steady => "steady",
+            ScenarioKind::Burst => "burst",
+            ScenarioKind::Flash => "flash",
+            ScenarioKind::Diurnal => "diurnal",
+        }
+    }
+
+    /// Parse a CLI spelling (`steady | burst | flash | diurnal`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "steady" => ScenarioKind::Steady,
+            "burst" => ScenarioKind::Burst,
+            "flash" => ScenarioKind::Flash,
+            "diurnal" => ScenarioKind::Diurnal,
+            other => anyhow::bail!(
+                "unknown scenario {other:?} \
+                 (expected steady | burst | flash | diurnal | replay:<file>)"
+            ),
+        })
+    }
+
+    /// Every generated scenario, in matrix order.
+    pub fn all() -> [ScenarioKind; 4] {
+        [
+            ScenarioKind::Steady,
+            ScenarioKind::Burst,
+            ScenarioKind::Flash,
+            ScenarioKind::Diurnal,
+        ]
+    }
+}
+
+/// A scenario request: either generate `Kind`, or replay a recorded
+/// JSONL trace bit-exactly.  This is what the CLI's
+/// `--scenario steady|burst|flash|diurnal|replay:<file>` parses into.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Scenario {
+    Generate(ScenarioKind),
+    Replay(String),
+}
+
+impl Scenario {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        if let Some(path) = s.strip_prefix("replay:") {
+            anyhow::ensure!(!path.is_empty(), "replay: needs a file path");
+            return Ok(Scenario::Replay(path.to_string()));
+        }
+        Ok(Scenario::Generate(ScenarioKind::parse(s)?))
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            Scenario::Generate(k) => k.name(),
+            Scenario::Replay(_) => "replay",
+        }
+    }
+}
+
+/// Fleet-trace synthesis parameters: the shared intensity process plus
+/// the composed per-request marginals.
+#[derive(Debug, Clone)]
+pub struct FleetTraceParams {
+    pub kind: ScenarioKind,
+    /// Replica channels of the intensity process (usually the fleet
+    /// size; more channels smooth uncorrelated bursts further).
+    pub replicas: usize,
+    /// Fleet-aggregate BASELINE peak RPS the envelope is right-scaled
+    /// to (typically `utilization x plan.rated_rps()`).  Burst and
+    /// flash multipliers apply ON TOP of the scaled baseline, so the
+    /// realized rate exceeds this — a flash crowd at `utilization
+    /// 0.6` and `flash_boost 5` pushes the fleet to ~3x its rated
+    /// load, which is the point of the exercise.
+    pub peak_rps: f64,
+    /// Fleet-aggregate floor RPS (0 allowed: the diurnal scenario's
+    /// idle window really goes quiet).
+    pub min_rps: f64,
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Multiplier a bursting channel applies to its share of the load.
+    pub burst_boost: f64,
+    /// Target pairwise correlation of the per-replica burst indicators
+    /// in [0, 1] (1 = every burst hits the whole fleet).
+    pub burst_correlation: f64,
+    /// Mean burst dwell time, seconds.
+    pub burst_on_s: f64,
+    /// Mean calm dwell time, seconds.
+    pub burst_off_s: f64,
+    /// Flash-crowd start, as a fraction of the duration.
+    pub flash_at: f64,
+    /// Flash-crowd length, seconds.
+    pub flash_dur_s: f64,
+    /// Fleet-wide multiplier during the flash window.
+    pub flash_boost: f64,
+    /// Long-idle (cold-start) window as fractions of the duration
+    /// (`idle_from >= idle_to` disables it).
+    pub idle_from: f64,
+    pub idle_to: f64,
+    /// Per-request length marginals, composed from the single-engine
+    /// synthesizer.  Only the prompt/generation fields are read; the
+    /// rate fields (`peak_rps`, `min_rps`, `duration_s`, `seed`) are
+    /// superseded by the fleet-level process above.
+    pub marginals: TraceParams,
+}
+
+impl FleetTraceParams {
+    /// Scenario defaults for a fleet of `replicas` right-scaled to
+    /// `peak_rps` aggregate.
+    pub fn scenario(
+        kind: ScenarioKind,
+        replicas: usize,
+        peak_rps: f64,
+        duration_s: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(replicas >= 1, "a fleet trace needs at least one channel");
+        assert!(peak_rps > 0.0 && duration_s > 0.0);
+        let mut p = Self {
+            kind,
+            replicas,
+            peak_rps,
+            min_rps: 1.0f64.min(peak_rps),
+            duration_s,
+            seed,
+            burst_boost: 1.0,
+            burst_correlation: 0.0,
+            burst_on_s: 45.0,
+            burst_off_s: 150.0,
+            flash_at: 0.55,
+            flash_dur_s: 0.0,
+            flash_boost: 1.0,
+            idle_from: 0.0,
+            idle_to: 0.0,
+            marginals: TraceParams::default(),
+        };
+        match kind {
+            ScenarioKind::Steady => {}
+            ScenarioKind::Burst => {
+                p.burst_boost = 3.5;
+                p.burst_correlation = 0.85;
+            }
+            ScenarioKind::Flash => {
+                p.flash_dur_s = (0.06 * duration_s).max(20.0).min(duration_s);
+                p.flash_boost = 5.0;
+            }
+            ScenarioKind::Diurnal => {
+                p.min_rps = 0.0;
+                p.idle_from = 0.05;
+                p.idle_to = 0.22;
+            }
+        }
+        p
+    }
+
+    /// Serialization / replay metadata for this parameter set.
+    pub fn meta(&self) -> FleetTraceMeta {
+        FleetTraceMeta {
+            scenario: self.kind.name().to_string(),
+            replicas: self.replicas,
+            peak_rps: self.peak_rps,
+            min_rps: self.min_rps,
+            duration_s: self.duration_s,
+            seed: self.seed,
+        }
+    }
+
+    fn slots(&self) -> usize {
+        ((self.duration_s / SLOT_S).ceil() as usize).max(1)
+    }
+}
+
+// ---- deterministic samplers (detmath-backed, no platform libm) ------
+
+fn exponential_det(rng: &mut Pcg64, lambda: f64) -> f64 {
+    debug_assert!(lambda > 0.0);
+    -ln_det(rng.next_f64().max(1e-300)) / lambda
+}
+
+fn normal_det(rng: &mut Pcg64) -> f64 {
+    // Box-Muller; cos branch only, like `Pcg64::normal`, so the state
+    // advance per draw is identical (two uniforms).
+    loop {
+        let u1 = rng.next_f64();
+        if u1 > 1e-300 {
+            let u2 = rng.next_f64();
+            return (-2.0 * ln_det(u1)).sqrt()
+                * cos_det(2.0 * std::f64::consts::PI * u2);
+        }
+    }
+}
+
+fn lognormal_det(rng: &mut Pcg64, mu: f64, sigma: f64) -> f64 {
+    exp_det(mu + sigma * normal_det(rng))
+}
+
+fn draw_lengths_det(m: &TraceParams, rng: &mut Pcg64) -> (u32, u32) {
+    let prompt = lognormal_det(rng, m.prompt_mu, m.prompt_sigma)
+        .clamp(1.0, m.prompt_max as f64)
+        .round() as u32;
+    let gen = lognormal_det(rng, m.gen_mu, m.gen_sigma)
+        .clamp(m.gen_min as f64, m.gen_max as f64)
+        .round() as u32;
+    (prompt.max(1), gen.max(1))
+}
+
+// ---- the shared intensity process -----------------------------------
+
+/// One two-state Markov chain, stationary-initialized, one state per
+/// slot.  `p_on` = P(calm -> burst), `p_off` = P(burst -> calm).
+fn markov_series(
+    rng: &mut Pcg64,
+    slots: usize,
+    p_on: f64,
+    p_off: f64,
+    pi: f64,
+) -> Vec<bool> {
+    let mut s = rng.next_f64() < pi;
+    let mut out = Vec::with_capacity(slots);
+    for _ in 0..slots {
+        out.push(s);
+        let u = rng.next_f64();
+        s = if s { u >= p_off } else { u < p_on };
+    }
+    out
+}
+
+/// Per-replica burst states, `replicas x slots`.  Channel `r` copies
+/// the shared fleet chain with probability `sqrt(rho)` per slot and
+/// its own independent chain otherwise; all chains share the same
+/// stationary distribution, so pairwise indicator correlation is
+/// exactly `rho` in expectation.
+fn burst_states(p: &FleetTraceParams) -> Vec<Vec<bool>> {
+    let n = p.slots();
+    let mut rng = Pcg64::with_stream(p.seed, 0xb425);
+    let p_on = (SLOT_S / p.burst_off_s).min(1.0);
+    let p_off = (SLOT_S / p.burst_on_s).min(1.0);
+    let pi = p_on / (p_on + p_off);
+    let fleet = markov_series(&mut rng, n, p_on, p_off, pi);
+    let c = p.burst_correlation.clamp(0.0, 1.0).sqrt();
+    (0..p.replicas)
+        .map(|_| {
+            let idio = markov_series(&mut rng, n, p_on, p_off, pi);
+            (0..n)
+                .map(|t| if rng.next_f64() < c { fleet[t] } else { idio[t] })
+                .collect()
+        })
+        .collect()
+}
+
+/// The per-replica burst indicator series (0.0/1.0 per slot) the
+/// statistics tests pin the configured correlation against.  Empty
+/// when the scenario has no burst process (`burst_boost <= 1`).
+pub fn burst_indicator_series(p: &FleetTraceParams) -> Vec<Vec<f64>> {
+    if p.burst_boost <= 1.0 {
+        return Vec::new();
+    }
+    burst_states(p)
+        .into_iter()
+        .map(|ch| ch.into_iter().map(|b| if b { 1.0 } else { 0.0 }).collect())
+        .collect()
+}
+
+/// Scenario baseline envelope at normalized time `t` in [0, 1]
+/// (before wobble, bursts, flash and idle).
+fn baseline(kind: ScenarioKind, t: f64) -> f64 {
+    // Mid-trace Gaussian bump, the paper's Fig. 5b silhouette.
+    let bump = exp_det(-((t - 0.5) * (t - 0.5)) / (2.0 * 0.18 * 0.18));
+    match kind {
+        ScenarioKind::Steady => 0.30 + 0.70 * bump,
+        ScenarioKind::Burst => 0.45 + 0.25 * bump,
+        ScenarioKind::Flash => 0.40 + 0.20 * bump,
+        ScenarioKind::Diurnal => {
+            // One compressed day: trough at the ends, peak mid-trace.
+            0.10 + 0.90 * 0.5 * (1.0 - cos_det(std::f64::consts::TAU * t))
+        }
+    }
+}
+
+/// Per-slot intensity multipliers.  The BASELINE component (scenario
+/// envelope x wobble) is normalized to a max of 1, so `peak_rps`
+/// right-scales the baseline; burst and flash multipliers then apply
+/// ON TOP, producing values above 1 — the fleet is genuinely pushed
+/// past the configured peak, not a renormalized silhouette of it.
+pub fn intensity_series(p: &FleetTraceParams) -> Vec<f64> {
+    let n = p.slots();
+    let mut wobble_rng = Pcg64::with_stream(p.seed, 0x0b1e);
+    let wobble: Vec<f64> = (0..15).map(|_| wobble_rng.uniform_f64(0.85, 1.12)).collect();
+    // Baseline envelope, normalized to max 1 BEFORE the multipliers.
+    let mut base = Vec::with_capacity(n);
+    for t in 0..n {
+        let mid_s = (t as f64 + 0.5) * SLOT_S;
+        let t_norm = (mid_s / p.duration_s).clamp(0.0, 1.0);
+        let bin = ((t_norm * wobble.len() as f64) as usize).min(wobble.len() - 1);
+        base.push((baseline(p.kind, t_norm) * wobble[bin]).max(0.0));
+    }
+    let base_max = base.iter().cloned().fold(0.0f64, f64::max);
+    if base_max > 0.0 {
+        for v in base.iter_mut() {
+            *v /= base_max;
+        }
+    }
+    let bursts = if p.burst_boost > 1.0 {
+        Some(burst_states(p))
+    } else {
+        None
+    };
+    let flash_from = p.flash_at * p.duration_s;
+    let flash_to = flash_from + p.flash_dur_s;
+    let idle_from = p.idle_from * p.duration_s;
+    let idle_to = p.idle_to * p.duration_s;
+    let mut m = Vec::with_capacity(n);
+    for (t, &b0) in base.iter().enumerate() {
+        let slot_start = t as f64 * SLOT_S;
+        let mid_s = slot_start + 0.5 * SLOT_S;
+        let mut v = b0;
+        if let Some(b) = &bursts {
+            // Mean channel factor: with correlation ~1 all channels
+            // burst together and the fleet rate jumps by ~burst_boost;
+            // uncorrelated bursts average toward a mild lift.
+            let mut sum = 0.0f64;
+            for ch in b {
+                sum += if ch[t] { p.burst_boost } else { 1.0 };
+            }
+            v *= sum / b.len() as f64;
+        }
+        if p.flash_boost > 1.0 && mid_s >= flash_from && mid_s < flash_to {
+            v *= p.flash_boost;
+        }
+        // The cold-start invariant is "NO arrivals inside the window",
+        // so a slot is zeroed when ANY part of it overlaps — midpoint
+        // testing would leave boundary slots partially active when the
+        // window edges fall inside a slot.
+        if idle_to > idle_from && slot_start < idle_to && slot_start + SLOT_S > idle_from
+        {
+            v = 0.0;
+        }
+        m.push(v);
+    }
+    m
+}
+
+/// The fleet-aggregate arrival-rate envelope (RPS per slot).  Peaks
+/// above `peak_rps` whenever bursts or a flash crowd are active.
+pub fn fleet_rate_series(p: &FleetTraceParams) -> Vec<f64> {
+    assert!(
+        p.peak_rps >= p.min_rps,
+        "fleet trace peak ({}) below floor ({})",
+        p.peak_rps,
+        p.min_rps
+    );
+    intensity_series(p)
+        .into_iter()
+        .map(|v| p.min_rps + (p.peak_rps - p.min_rps) * v)
+        .collect()
+}
+
+/// Synthesize the fleet's ONE shared arrival stream: requests sorted
+/// by arrival, ids dense from 0, `predicted_gen` initialized to the
+/// actual length (apply a [`super::predictor::LengthPredictor`] to
+/// overwrite).  Byte-deterministic for (seed, params) on every
+/// platform — see the module docs.
+pub fn synth_fleet_trace(p: &FleetTraceParams) -> Vec<Request> {
+    let rate = fleet_rate_series(p);
+    // Thinning dominates with the envelope's TRUE maximum (bursts and
+    // flash push past peak_rps, so peak_rps alone would under-sample
+    // exactly the overload moments the scenarios exist to produce).
+    let lambda_max = rate.iter().cloned().fold(0.0f64, f64::max);
+    if lambda_max <= 0.0 {
+        return Vec::new();
+    }
+    let mut rng = Pcg64::with_stream(p.seed, 0xf1ee);
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    let mut id = 0u64;
+    // Lewis-Shedler thinning against the envelope's exact peak.
+    loop {
+        t += exponential_det(&mut rng, lambda_max);
+        if t >= p.duration_s {
+            break;
+        }
+        let slot = ((t / SLOT_S) as usize).min(rate.len() - 1);
+        if rng.next_f64() * lambda_max <= rate[slot] {
+            let (prompt, gen) = draw_lengths_det(&p.marginals, &mut rng);
+            out.push(Request {
+                id,
+                prompt_tokens: prompt,
+                gen_tokens: gen,
+                predicted_gen: gen,
+                arrival_s: t,
+            });
+            id += 1;
+        }
+    }
+    out
+}
+
+// ---- JSONL record / replay ------------------------------------------
+
+/// Replay header: everything needed to label a recorded trace (and to
+/// re-record it byte-identically).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetTraceMeta {
+    pub scenario: String,
+    pub replicas: usize,
+    pub peak_rps: f64,
+    pub min_rps: f64,
+    pub duration_s: f64,
+    pub seed: u64,
+}
+
+/// Serialize a fleet trace as JSONL: one header line, then one request
+/// per line.  The writer is canonical (sorted keys, shortest
+/// round-trip float formatting), so serialize(parse(x)) == x byte for
+/// byte, and the same (seed, params) produce the same bytes on every
+/// platform.
+pub fn fleet_trace_to_jsonl(meta: &FleetTraceMeta, reqs: &[Request]) -> String {
+    use crate::jsonl::Json;
+    let mut out = String::new();
+    let header = Json::obj(vec![
+        ("kind", Json::Str("fleet-trace".to_string())),
+        ("v", Json::Num(1.0)),
+        ("scenario", Json::Str(meta.scenario.clone())),
+        ("replicas", Json::Num(meta.replicas as f64)),
+        ("peak_rps", Json::Num(meta.peak_rps)),
+        ("min_rps", Json::Num(meta.min_rps)),
+        ("duration_s", Json::Num(meta.duration_s)),
+        // As a string: a u64 seed above 2^53 would silently lose bits
+        // through an f64 JSON number.
+        ("seed", Json::Str(meta.seed.to_string())),
+        ("requests", Json::Num(reqs.len() as f64)),
+    ]);
+    out.push_str(&header.to_string());
+    out.push('\n');
+    for r in reqs {
+        let line = Json::obj(vec![
+            ("id", Json::Num(r.id as f64)),
+            ("arrival_s", Json::Num(r.arrival_s)),
+            ("prompt", Json::Num(r.prompt_tokens as f64)),
+            ("gen", Json::Num(r.gen_tokens as f64)),
+            ("pred", Json::Num(r.predicted_gen as f64)),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a recorded fleet trace; validates the header, the request
+/// count and arrival ordering.
+pub fn parse_fleet_trace_jsonl(
+    text: &str,
+) -> anyhow::Result<(FleetTraceMeta, Vec<Request>)> {
+    let mut lines = text.lines();
+    let header_line = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty fleet-trace file"))?;
+    let header = crate::jsonl::parse(header_line)
+        .map_err(|e| anyhow::anyhow!("fleet-trace header: {e:#}"))?;
+    anyhow::ensure!(
+        header.get("kind").and_then(|k| k.as_str()) == Some("fleet-trace"),
+        "not a fleet-trace file (missing kind: fleet-trace header)"
+    );
+    anyhow::ensure!(
+        header.get("v").and_then(|v| v.as_u64()) == Some(1),
+        "unsupported fleet-trace version"
+    );
+    let get_f = |k: &str| -> anyhow::Result<f64> {
+        header
+            .get(k)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("fleet-trace header missing {k:?}"))
+    };
+    let seed: u64 = header
+        .get("seed")
+        .and_then(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("fleet-trace header missing \"seed\""))?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("fleet-trace header seed: {e}"))?;
+    let meta = FleetTraceMeta {
+        scenario: header
+            .get("scenario")
+            .and_then(|s| s.as_str())
+            .unwrap_or("unknown")
+            .to_string(),
+        replicas: get_f("replicas")? as usize,
+        peak_rps: get_f("peak_rps")?,
+        min_rps: get_f("min_rps")?,
+        duration_s: get_f("duration_s")?,
+        seed,
+    };
+    let expected = get_f("requests")? as usize;
+    let mut reqs = Vec::with_capacity(expected);
+    for (i, line) in lines.enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = crate::jsonl::parse(line)
+            .map_err(|e| anyhow::anyhow!("fleet-trace line {}: {e:#}", i + 2))?;
+        let get = |k: &str| -> anyhow::Result<f64> {
+            v.get(k)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("fleet-trace line {}: missing {k:?}", i + 2)
+                })
+        };
+        reqs.push(Request {
+            id: get("id")? as u64,
+            prompt_tokens: get("prompt")? as u32,
+            gen_tokens: get("gen")? as u32,
+            predicted_gen: get("pred")? as u32,
+            arrival_s: get("arrival_s")?,
+        });
+    }
+    anyhow::ensure!(
+        reqs.len() == expected,
+        "fleet-trace: header says {expected} requests, file has {}",
+        reqs.len()
+    );
+    anyhow::ensure!(
+        reqs.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s),
+        "fleet-trace: arrivals not sorted"
+    );
+    Ok((meta, reqs))
+}
+
+/// Build (or replay) a scenario's shared fleet arrival stream — the
+/// one dispatch behind every `--scenario` surface (CLI serve,
+/// fleet_demo).  Generated scenarios are right-scaled to `peak_rps`
+/// with one burst channel per replica; [`Scenario::Replay`] loads a
+/// recorded trace bit-exactly.
+pub fn scenario_requests(
+    scenario: &Scenario,
+    replicas: usize,
+    peak_rps: f64,
+    duration_s: f64,
+    seed: u64,
+) -> anyhow::Result<(FleetTraceMeta, Vec<Request>)> {
+    match scenario {
+        Scenario::Generate(kind) => {
+            let p = FleetTraceParams::scenario(*kind, replicas, peak_rps, duration_s, seed);
+            let reqs = synth_fleet_trace(&p);
+            Ok((p.meta(), reqs))
+        }
+        Scenario::Replay(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("replay {path:?}: {e}"))?;
+            parse_fleet_trace_jsonl(&text)
+        }
+    }
+}
+
+/// Write a replayable JSONL recording (the `--record <file>` surface).
+/// Record BEFORE applying a length predictor: replay re-applies it, so
+/// record(replay(x)) stays byte-identical to x.
+pub fn record_fleet_trace(
+    path: &str,
+    meta: &FleetTraceMeta,
+    reqs: &[Request],
+) -> anyhow::Result<()> {
+    std::fs::write(path, fleet_trace_to_jsonl(meta, reqs))
+        .map_err(|e| anyhow::anyhow!("record {path:?}: {e}"))
+}
+
+/// FNV-1a 64-bit hash — the golden-trace fingerprint
+/// (`tests/fleet_trace_determinism.rs`).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::trace::rps_bins;
+
+    fn quick(kind: ScenarioKind, seed: u64) -> FleetTraceParams {
+        FleetTraceParams::scenario(kind, 4, 12.0, 600.0, seed)
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_seed_sensitive() {
+        let a = synth_fleet_trace(&quick(ScenarioKind::Burst, 0));
+        let b = synth_fleet_trace(&quick(ScenarioKind::Burst, 0));
+        assert_eq!(a, b);
+        let c = synth_fleet_trace(&quick(ScenarioKind::Burst, 1));
+        assert_ne!(a, c);
+        assert!(a.len() > 500, "n={}", a.len());
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        // Dense ids from zero.
+        assert!(a.iter().enumerate().all(|(i, r)| r.id == i as u64));
+    }
+
+    #[test]
+    fn lengths_respect_composed_marginals() {
+        let p = quick(ScenarioKind::Steady, 2);
+        let reqs = synth_fleet_trace(&p);
+        for r in &reqs {
+            assert!((1..=p.marginals.prompt_max).contains(&r.prompt_tokens));
+            assert!(
+                (p.marginals.gen_min..=p.marginals.gen_max).contains(&r.gen_tokens)
+            );
+            assert_eq!(r.predicted_gen, r.gen_tokens);
+        }
+    }
+
+    #[test]
+    fn envelope_scales_baseline_and_exceeds_peak_under_stress() {
+        for kind in ScenarioKind::all() {
+            let p = quick(kind, 3);
+            let rate = fleet_rate_series(&p);
+            let max = rate.iter().cloned().fold(0.0, f64::max);
+            match kind {
+                // No multipliers: the baseline peak IS the envelope max.
+                ScenarioKind::Steady | ScenarioKind::Diurnal => assert!(
+                    (max - p.peak_rps).abs() < 1e-9,
+                    "{}: envelope max {max} vs peak {}",
+                    kind.name(),
+                    p.peak_rps
+                ),
+                // Bursts / flash crowds push PAST the configured peak —
+                // overload is the point of these scenarios.
+                ScenarioKind::Burst | ScenarioKind::Flash => assert!(
+                    max > p.peak_rps * 1.5,
+                    "{}: envelope max {max} should exceed peak {}",
+                    kind.name(),
+                    p.peak_rps
+                ),
+            }
+            assert!(rate.iter().all(|&r| r >= p.min_rps - 1e-12));
+        }
+    }
+
+    #[test]
+    fn diurnal_idle_window_goes_quiet() {
+        let p = quick(ScenarioKind::Diurnal, 4);
+        let reqs = synth_fleet_trace(&p);
+        let idle = reqs
+            .iter()
+            .filter(|r| {
+                let t = r.arrival_s / p.duration_s;
+                t >= p.idle_from && t < p.idle_to
+            })
+            .count();
+        assert_eq!(idle, 0, "cold-start window must have no arrivals");
+        assert!(reqs.len() > 100);
+    }
+
+    #[test]
+    fn burst_scenario_is_burstier_than_steady() {
+        let steady = synth_fleet_trace(&quick(ScenarioKind::Steady, 5));
+        let burst = synth_fleet_trace(&quick(ScenarioKind::Burst, 5));
+        let cv = |reqs: &[Request]| {
+            let bins = rps_bins(reqs, 600.0, 10.0);
+            let n = bins.len() as f64;
+            let mean = bins.iter().sum::<f64>() / n;
+            let var =
+                bins.iter().map(|b| (b - mean) * (b - mean)).sum::<f64>() / n;
+            var.sqrt() / mean
+        };
+        assert!(
+            cv(&burst) > cv(&steady),
+            "burst CV {} <= steady CV {}",
+            cv(&burst),
+            cv(&steady)
+        );
+    }
+
+    #[test]
+    fn flash_window_spikes() {
+        let p = quick(ScenarioKind::Flash, 6);
+        let reqs = synth_fleet_trace(&p);
+        let bins = rps_bins(&reqs, p.duration_s, 10.0);
+        let flash_bin = (p.flash_at * p.duration_s / 10.0) as usize;
+        let in_flash = bins[flash_bin.min(bins.len() - 1)];
+        let before = bins[flash_bin.saturating_sub(6)];
+        assert!(
+            in_flash > 2.0 * before,
+            "flash bin {in_flash} vs before {before}"
+        );
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_byte_identical() {
+        let p = quick(ScenarioKind::Burst, 7);
+        let reqs = synth_fleet_trace(&p);
+        let text = fleet_trace_to_jsonl(&p.meta(), &reqs);
+        let (meta, back) = parse_fleet_trace_jsonl(&text).unwrap();
+        assert_eq!(meta, p.meta());
+        assert_eq!(back, reqs);
+        let again = fleet_trace_to_jsonl(&meta, &back);
+        assert_eq!(text, again, "serialize(parse(x)) must equal x");
+    }
+
+    #[test]
+    fn jsonl_rejects_garbage() {
+        assert!(parse_fleet_trace_jsonl("").is_err());
+        assert!(parse_fleet_trace_jsonl("{\"kind\": \"other\"}").is_err());
+        // Count mismatch.
+        let p = quick(ScenarioKind::Steady, 8);
+        let reqs = synth_fleet_trace(&p);
+        let text = fleet_trace_to_jsonl(&p.meta(), &reqs);
+        let truncated: String = text
+            .lines()
+            .take(10)
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert!(parse_fleet_trace_jsonl(&truncated).is_err());
+    }
+
+    #[test]
+    fn burst_indicators_present_only_for_burst_process() {
+        let p = quick(ScenarioKind::Burst, 9);
+        let series = burst_indicator_series(&p);
+        assert_eq!(series.len(), p.replicas);
+        assert_eq!(series[0].len(), p.slots());
+        assert!(series
+            .iter()
+            .all(|ch| ch.iter().all(|&x| x == 0.0 || x == 1.0)));
+        assert!(burst_indicator_series(&quick(ScenarioKind::Steady, 9)).is_empty());
+    }
+
+    #[test]
+    fn fnv_hash_stable() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(fnv1a64(b"fleet"), fnv1a64(b"flees"));
+    }
+}

@@ -61,21 +61,32 @@ impl Default for TraceParams {
 
 impl TraceParams {
     /// Right-scale the peak to an engine's rated max load (§V-A).
+    ///
+    /// The floor is clamped to the rescaled peak: right-scaling to a
+    /// sub-1-RPS target (fleet per-replica shares, §V-D2 `lo < 1`)
+    /// used to leave the default 1-RPS floor ABOVE the requested
+    /// envelope, pinning `rate_at` to the floor and emitting ~2x the
+    /// requested load (`right_scaling_below_default_floor_clamps`).
     pub fn scaled_to_peak(peak_rps: f64, seed: u64) -> Self {
+        let d = Self::default();
         Self {
             peak_rps,
+            min_rps: d.min_rps.min(peak_rps),
             seed,
-            ..Default::default()
+            ..d
         }
     }
 
-    /// Short trace for tests/CI.
+    /// Short trace for tests/CI (same floor clamp as
+    /// [`Self::scaled_to_peak`]).
     pub fn short(duration_s: f64, peak_rps: f64, seed: u64) -> Self {
+        let d = Self::default();
         Self {
             duration_s,
             peak_rps,
+            min_rps: d.min_rps.min(peak_rps),
             seed,
-            ..Default::default()
+            ..d
         }
     }
 }
@@ -157,9 +168,13 @@ pub fn synth_trace(p: &TraceParams) -> Vec<Request> {
 /// low-activity regions toward `lo`.
 pub fn synth_trace_rps_range(p: &TraceParams, lo_rps: f64, hi_rps: f64) -> Vec<Request> {
     assert!(hi_rps > lo_rps && lo_rps > 0.0);
+    // Clamp AFTER the rescale: the floor must never exceed the
+    // rescaled peak (lo < 1 with a small hi used to invert the
+    // envelope).  `lo <= hi` holds by the assert; the min keeps the
+    // invariant explicit against future param plumbing.
     let amplified = TraceParams {
         peak_rps: hi_rps,
-        min_rps: lo_rps,
+        min_rps: lo_rps.min(hi_rps),
         ..p.clone()
     };
     synth_trace(&amplified)
@@ -329,6 +344,36 @@ mod tests {
             ..Default::default()
         });
         assert_ne!(a.len(), c.len());
+    }
+
+    #[test]
+    fn right_scaling_below_default_floor_clamps() {
+        // Regression: right-scaling to a peak below the default 1-RPS
+        // floor used to leave min_rps = 1.0 > peak, so rate_at() was
+        // pinned to the floor and the trace emitted ~2x the requested
+        // load with a flat envelope.
+        let p = TraceParams::scaled_to_peak(0.5, 11);
+        assert!(p.min_rps <= p.peak_rps, "floor above rescaled peak");
+        let wobble = vec![1.0; 15];
+        for i in 0..=20 {
+            let t = p.duration_s * i as f64 / 20.0;
+            let r = rate_at(&p, &wobble, t);
+            assert!(
+                r <= p.peak_rps + 1e-12,
+                "rate {r} above rescaled peak {}",
+                p.peak_rps
+            );
+        }
+        let reqs = synth_trace(&p);
+        let bins = rps_bins(&reqs, p.duration_s, 240.0);
+        let max = bins.iter().cloned().fold(0.0, f64::max);
+        assert!(max <= 0.8, "observed peak {max} for requested 0.5");
+        // The same clamp holds on the short/test constructor and the
+        // §V-D2 range rescale.
+        assert!(TraceParams::short(60.0, 0.25, 0).min_rps <= 0.25);
+        let reqs = synth_trace_rps_range(&TraceParams::default(), 0.4, 2.0);
+        let bins = rps_bins(&reqs, 3600.0, 240.0);
+        assert!(bins.iter().cloned().fold(0.0, f64::max) <= 3.0);
     }
 
     #[test]

@@ -1,0 +1,271 @@
+//! Fleet-trace determinism, replay fidelity, burst-correlation
+//! statistics, and the scenario-suite acceptance gate.
+//!
+//! The determinism contract: fleet traces are generated with PCG64 +
+//! `sim::detmath` only (no platform libm), so the same (seed, params)
+//! produce byte-identical JSONL on every platform.  The golden hash
+//! pins that across machines and toolchains; regenerate it after an
+//! INTENTIONAL generator change with:
+//!
+//! ```sh
+//! THROTTLLEM_BLESS=1 cargo test --test fleet_trace_determinism
+//! ```
+
+use throttllem::bench_util::{headroom_regressions, ScenarioSuite};
+use throttllem::config::models::llama2_13b;
+use throttllem::config::ServingConfig;
+use throttllem::coordinator::{
+    serve_scenario, FleetPlan, PerfModel, Policy, RouterPolicy,
+};
+use throttllem::sim::dist::pearson;
+use throttllem::workload::fleet_trace::{
+    burst_indicator_series, fleet_trace_to_jsonl, fnv1a64,
+    parse_fleet_trace_jsonl, synth_fleet_trace, FleetTraceParams, Scenario,
+    ScenarioKind,
+};
+
+/// The pinned golden configuration: change it and the hash together.
+fn golden_params() -> FleetTraceParams {
+    FleetTraceParams::scenario(ScenarioKind::Burst, 4, 12.0, 600.0, 0)
+}
+
+const GOLDEN_PATH: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/rust/tests/golden/fleet_trace_burst.hash"
+);
+
+#[test]
+fn golden_hash_byte_identical_across_platforms() {
+    let p = golden_params();
+    let jsonl = fleet_trace_to_jsonl(&p.meta(), &synth_fleet_trace(&p));
+    // Regenerating must be byte-identical in-process...
+    let again = fleet_trace_to_jsonl(&p.meta(), &synth_fleet_trace(&p));
+    assert_eq!(jsonl, again, "same seed+params must regenerate identically");
+    let hash = format!("{:016x}", fnv1a64(jsonl.as_bytes()));
+    // ...and across platforms, pinned by the committed golden hash.
+    if std::env::var("THROTTLLEM_BLESS").is_ok() {
+        std::fs::write(GOLDEN_PATH, format!("{hash}\n")).unwrap();
+        eprintln!("blessed golden fleet-trace hash: {hash}");
+        return;
+    }
+    let golden = std::fs::read_to_string(GOLDEN_PATH)
+        .unwrap_or_else(|e| panic!("missing golden file {GOLDEN_PATH}: {e}"));
+    let golden = golden.trim();
+    if golden == "UNSET" {
+        // Bootstrap state: the mechanism is active but the constant has
+        // not been measured yet (this workspace has no Rust toolchain).
+        // The first toolchain run prints the value; bless it in.
+        eprintln!(
+            "golden fleet-trace hash not yet blessed; computed {hash} — \
+             run THROTTLLEM_BLESS=1 cargo test --test fleet_trace_determinism"
+        );
+        return;
+    }
+    assert_eq!(
+        golden, hash,
+        "fleet-trace bytes changed: if intentional, re-bless the golden hash"
+    );
+}
+
+#[test]
+fn different_seeds_and_scenarios_produce_different_traces() {
+    let a = synth_fleet_trace(&golden_params());
+    let b = synth_fleet_trace(&FleetTraceParams::scenario(
+        ScenarioKind::Burst,
+        4,
+        12.0,
+        600.0,
+        1,
+    ));
+    assert_ne!(a, b, "seed must matter");
+    let c = synth_fleet_trace(&FleetTraceParams::scenario(
+        ScenarioKind::Flash,
+        4,
+        12.0,
+        600.0,
+        0,
+    ));
+    assert_ne!(a, c, "scenario must matter");
+}
+
+#[test]
+fn recorded_traces_replay_bit_identically() {
+    // The CLI record/replay contract: record -> replay -> record is
+    // byte-identical (what the CI replay-identity job checks through
+    // the fleet_demo binary).
+    let p = golden_params();
+    let reqs = synth_fleet_trace(&p);
+    let recorded = fleet_trace_to_jsonl(&p.meta(), &reqs);
+    let (meta, replayed) = parse_fleet_trace_jsonl(&recorded).unwrap();
+    assert_eq!(replayed, reqs, "replayed requests must match generated");
+    assert_eq!(meta, p.meta());
+    let re_recorded = fleet_trace_to_jsonl(&meta, &replayed);
+    assert_eq!(recorded, re_recorded, "record(replay(x)) != x");
+}
+
+#[test]
+fn scenario_parse_roundtrip() {
+    assert_eq!(
+        Scenario::parse("burst").unwrap(),
+        Scenario::Generate(ScenarioKind::Burst)
+    );
+    assert_eq!(
+        Scenario::parse("replay:traces/a.jsonl").unwrap(),
+        Scenario::Replay("traces/a.jsonl".to_string())
+    );
+    assert!(Scenario::parse("replay:").is_err());
+    assert!(Scenario::parse("tsunami").is_err());
+    for k in ScenarioKind::all() {
+        assert_eq!(ScenarioKind::parse(k.name()).unwrap(), k);
+    }
+}
+
+/// Mean pairwise Pearson correlation of the per-replica burst
+/// indicator series.
+fn mean_pairwise_corr(p: &FleetTraceParams) -> f64 {
+    let series = burst_indicator_series(p);
+    assert!(series.len() >= 2);
+    let mut sum = 0.0;
+    let mut pairs = 0usize;
+    for a in 0..series.len() {
+        for b in (a + 1)..series.len() {
+            sum += pearson(&series[a], &series[b]);
+            pairs += 1;
+        }
+    }
+    sum / pairs as f64
+}
+
+#[test]
+fn burst_correlation_is_pinned_to_configuration() {
+    // 4 hours of 1 s slots: the estimator's s.e. is well under the
+    // tolerance even with ~35 s burst autocorrelation time.
+    let base = FleetTraceParams::scenario(ScenarioKind::Burst, 4, 12.0, 14_400.0, 0);
+
+    let mut high = base.clone();
+    high.burst_correlation = 0.6;
+    let est_high = mean_pairwise_corr(&high);
+    assert!(
+        (est_high - 0.6).abs() < 0.2,
+        "configured 0.6, estimated {est_high}"
+    );
+
+    let mut zero = base.clone();
+    zero.burst_correlation = 0.0;
+    let est_zero = mean_pairwise_corr(&zero);
+    assert!(est_zero.abs() < 0.15, "configured 0.0, estimated {est_zero}");
+
+    let mut full = base.clone();
+    full.burst_correlation = 1.0;
+    let est_full = mean_pairwise_corr(&full);
+    assert!(est_full > 0.99, "configured 1.0, estimated {est_full}");
+
+    assert!(
+        est_full > est_high && est_high > est_zero,
+        "correlation must be monotone in the configuration: \
+         {est_full} > {est_high} > {est_zero}"
+    );
+}
+
+#[test]
+fn serve_scenario_runs_the_shared_stream_end_to_end() {
+    let spec = llama2_13b(2);
+    let cfg = ServingConfig::throttllem(spec.clone());
+    let policy = Policy::throttle_only();
+    let model = PerfModel::train(&[spec], 40, 0);
+    let plan =
+        FleetPlan::homogeneous(2, RouterPolicy::ProjectedHeadroom, &cfg, policy, false);
+    let (params, reqs, out) =
+        serve_scenario(&cfg, policy, &model, &plan, ScenarioKind::Burst, 90.0, 0.6, 0);
+    assert_eq!(params.replicas, 2);
+    assert!((params.peak_rps - 0.6 * plan.rated_rps()).abs() < 1e-9);
+    assert!(!reqs.is_empty());
+    assert_eq!(
+        out.total.stats.completed + out.total.stats.dropped,
+        reqs.len() as u64,
+        "every request of the shared stream must be accounted for"
+    );
+    // Both replicas see work: the burst hits the whole fleet.
+    assert!(out.replicas.iter().all(|r| r.routed > 0));
+}
+
+#[test]
+fn diurnal_cold_start_scales_the_replica_axis_in_and_out() {
+    // The cold-start promise: during the diurnal idle window the fleet
+    // scales in (near zero), then pays spawn time to scale back out
+    // when load returns.  Replica-axis autoscaling ON (the rest of the
+    // scenario infrastructure runs with a fixed fleet).
+    let spec = llama2_13b(2);
+    let cfg = ServingConfig::throttllem(spec.clone());
+    let policy = Policy::throttllem();
+    let model = PerfModel::train(&[spec], 40, 0);
+    let plan =
+        FleetPlan::homogeneous(3, RouterPolicy::LeastLoaded, &cfg, policy, true);
+    let (params, reqs, out) = serve_scenario(
+        &cfg,
+        policy,
+        &model,
+        &plan,
+        ScenarioKind::Diurnal,
+        300.0,
+        0.6,
+        0,
+    );
+    // The idle window really is quiet...
+    assert!(reqs
+        .iter()
+        .all(|r| {
+            let t = r.arrival_s / params.duration_s;
+            !(params.idle_from..params.idle_to).contains(&t)
+        }));
+    // ...so the fleet axis drains replicas during it, and reactivates
+    // when the diurnal peak returns.
+    assert!(
+        out.replica_deactivations >= 1,
+        "expected cold-start scale-in, got {} deactivations",
+        out.replica_deactivations
+    );
+    assert!(
+        out.replica_activations >= 1,
+        "expected scale-out when load returns, got {} activations",
+        out.replica_activations
+    );
+    assert_eq!(
+        out.total.stats.completed + out.total.stats.dropped,
+        reqs.len() as u64
+    );
+}
+
+#[test]
+fn scenario_suite_headroom_matches_or_beats_round_robin() {
+    // The ISSUE acceptance bar, at smoke scale: in EVERY scenario of
+    // the matrix, projected-headroom >= round-robin on E2E attainment
+    // or J/token (`cargo bench --bench scenarios` enforces the same at
+    // full scale, and CI runs it in smoke mode).
+    let seed = 0u64;
+    let spec = llama2_13b(2);
+    let cfg = ServingConfig::throttllem(spec.clone());
+    let policy = Policy::throttle_only();
+    let model = PerfModel::train(&[spec], 40, seed);
+    let plan =
+        FleetPlan::homogeneous(3, RouterPolicy::RoundRobin, &cfg, policy, false);
+    let runs = ScenarioSuite::smoke(seed).run(&cfg, policy, &model, &plan);
+    assert_eq!(runs.len(), 6, "3 scenarios x 2 routers");
+    // Every cell actually served load.
+    for r in &runs {
+        assert!(r.requests > 50, "{}: empty trace", r.scenario);
+        assert!(
+            r.completed + r.dropped == r.requests as u64,
+            "{} ({}): conservation",
+            r.scenario,
+            r.router.name()
+        );
+        assert!(r.energy_kj > 0.0);
+        assert!(r.j_per_token.is_finite());
+    }
+    let regressions = headroom_regressions(&runs);
+    assert!(
+        regressions.is_empty(),
+        "projected-headroom regressed vs round-robin: {regressions:?}"
+    );
+}
