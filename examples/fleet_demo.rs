@@ -19,17 +19,23 @@
 //!     `--replay <file>` (= `--scenario replay:<file>`) replays one
 //!     bit-exactly; `--min-attainment <frac>` exits non-zero when the
 //!     best router misses the E2E-attainment bar (the CI scenario
-//!     matrix gate).
+//!     matrix gate);
+//!   * `--migrate-compare` — the CI migration gate: the same scenario
+//!     trace (diurnal by default) served with `--migration off` vs
+//!     `on` on a fleet-autoscaled deployment, asserting migrations
+//!     happen, scale-in completes earlier (fewer engine iterations)
+//!     and SLO attainment is no worse.
 //!
 //! Run with:
 //!   cargo run --release --example fleet_demo [-- --replicas 4 --duration 600]
 //!   cargo run --release --example fleet_demo -- --mixed [--duration 600]
 //!   cargo run --release --example fleet_demo -- --scenario burst --record t.jsonl
 //!   cargo run --release --example fleet_demo -- --replay t.jsonl
+//!   cargo run --release --example fleet_demo -- --migrate-compare --duration 600
 
 use throttllem::cli::Args;
 use throttllem::config::models::llama2_13b;
-use throttllem::config::{ReplicaSpec, ServingConfig};
+use throttllem::config::{MigrationSpec, ReplicaSpec, ServingConfig};
 use throttllem::coordinator::{
     serve_fleet_plan, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
 };
@@ -43,13 +49,136 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let duration = args.get_f64("duration", 600.0)?;
     let seed = args.get_u64("seed", 0)?;
-    if args.get("scenario").is_some() || args.get("replay").is_some() {
+    if args.flag("migrate-compare") {
+        migrate_compare(&args)
+    } else if args.get("scenario").is_some() || args.get("replay").is_some() {
         scenario_mode(&args)
     } else if args.flag("mixed") {
         mixed_demo(duration, seed)
     } else {
         homogeneous_demo(args.get_u64("replicas", 4)? as usize, duration, seed)
     }
+}
+
+/// The CI migration gate (`--migrate-compare`): serve the SAME
+/// scenario trace (diurnal cold-start by default) on the same
+/// fleet-autoscaled deployment twice — drain-based scale-in
+/// (`--migration off`) vs live migration (`--migration on`) — and
+/// enforce the migration contract:
+///
+///   1. live migrations actually happened on this trace,
+///   2. scale-in completed earlier: strictly fewer engine iterations
+///      executed across the fleet (drained victims stop iterating
+///      instead of serving out their residents), and
+///   3. E2E SLO attainment with migration is no worse than without
+///      (the destination-side SLO guard's whole point).
+///
+/// Exits non-zero when any leg of the contract fails.
+fn migrate_compare(args: &Args) -> anyhow::Result<()> {
+    let duration = args.get_f64("duration", 600.0)?;
+    let seed = args.get_u64("seed", 0)?;
+    let replicas = args.get_u64("replicas", 4)? as usize;
+    let scenario = Scenario::parse(args.get_or("scenario", "diurnal"))?;
+    // An autoscaling policy activates the fleet (replica-count) axis;
+    // cfg.scale_set stays empty, so replicas are fixed-TP and ONLY the
+    // axis migration serves is in play.
+    let policy = Policy::throttllem();
+    let cfg = ServingConfig::throttllem(llama2_13b(2));
+    let base =
+        FleetPlan::homogeneous(replicas, RouterPolicy::RoundRobin, &cfg, policy, true);
+    let model = PerfModel::train(&base.engines(), 100, seed);
+    let peak = args.get_f64("peak", 0.55 * base.rated_rps())?;
+    let (meta, mut reqs) =
+        scenario_requests(&scenario, replicas, peak, duration, seed)?;
+    LengthPredictor::oracle().apply(&mut reqs, cfg.max_tokens);
+    println!(
+        "migration gate: scenario {} on {replicas} x {} | {} requests \
+         (peak ~{:.1} RPS over {:.0} s)\n",
+        meta.scenario,
+        cfg.engine.name,
+        reqs.len(),
+        meta.peak_rps,
+        meta.duration_s
+    );
+
+    let run = |migration: MigrationSpec| {
+        let plan = base.clone().with_migration(migration);
+        serve_fleet_plan(&cfg, policy, &model, &reqs, &plan)
+    };
+    let off = run(MigrationSpec::disabled());
+    let on = run(MigrationSpec::enabled_default());
+
+    let att = |o: &FleetOutcome| {
+        let a = o.total.stats.e2e_slo_attainment(cfg.slo.e2e_p99);
+        if a.is_nan() {
+            0.0
+        } else {
+            a
+        }
+    };
+    let (att_off, att_on) = (att(&off), att(&on));
+    let (it_off, it_on) = (off.total.timeline.len(), on.total.timeline.len());
+    // Sum of per-replica serving windows: a scale-in victim's window
+    // ends at deactivation once its residents are migrated away,
+    // instead of stretching through its drain.
+    let walls = |o: &FleetOutcome| -> f64 {
+        o.replicas.iter().map(|r| r.stats.wall_s).sum()
+    };
+    let (wall_off, wall_on) = (walls(&off), walls(&on));
+    print_header();
+    print_row("scale-in by drain (--migration off)", &cfg, &off);
+    print_row("live migration    (--migration on)", &cfg, &on);
+    println!(
+        "\nmigrations {} ok / {} slo-refused / {} capacity-refused | \
+         engine iterations {} -> {} | summed replica windows {:.1} -> {:.1} s",
+        on.migrations.migrations,
+        on.migrations.refused_slo,
+        on.migrations.refused_capacity,
+        it_off,
+        it_on,
+        wall_off,
+        wall_on,
+    );
+    anyhow::ensure!(
+        off.migrations.migrations == 0,
+        "migration gate: --migration off must never migrate"
+    );
+    anyhow::ensure!(
+        on.migrations.migrations > 0,
+        "migration gate: scenario produced no live migrations \
+         (scale-in victims were all idle — retune peak/duration)"
+    );
+    // "Scale-in completes earlier" must show up as a strict win in at
+    // least one of the two observable forms: fewer engine iterations
+    // across the fleet (victims stop serving out residents), or a
+    // strictly shorter summed per-replica serving window (victims
+    // power off at deactivation).  Requiring one specific metric to
+    // be strict would let a tie on that metric mask a real win on the
+    // other (e.g. transfer-stall spin on an idle destination).
+    anyhow::ensure!(
+        it_on < it_off || wall_on < wall_off - 1e-9,
+        "migration gate: scale-in did not complete earlier \
+         (iterations {it_on} vs {it_off}, summed windows \
+         {wall_on:.2} vs {wall_off:.2} s)"
+    );
+    anyhow::ensure!(
+        att_on >= att_off - 1e-9,
+        "migration gate: attainment regressed ({:.3}% with migration \
+         vs {:.3}% without)",
+        att_on * 100.0,
+        att_off * 100.0
+    );
+    println!(
+        "migration gate: OK (attainment {:.1}% >= {:.1}%, iterations {} vs {}, \
+         windows {:.1} vs {:.1} s)",
+        att_on * 100.0,
+        att_off * 100.0,
+        it_on,
+        it_off,
+        wall_on,
+        wall_off,
+    );
+    Ok(())
 }
 
 /// The scenario matrix entry point: one shared fleet trace (generated

@@ -1,0 +1,443 @@
+#!/usr/bin/env python3
+"""Cross-language oracle for the fleet-trace golden hash.
+
+Bit-exact Python port of the Rust deterministic generation chain
+(`sim/rng.rs` PCG-64 XSL-RR, `sim/detmath.rs` IEEE-basic-ops
+transcendentals, `workload/fleet_trace.rs` scenario synthesis, and
+`jsonl.rs`'s canonical writer), used to bless
+`rust/tests/golden/fleet_trace_burst.hash` from a workspace that has no
+Rust toolchain.  Python floats are IEEE-754 doubles and every operation
+used here (+ - * / sqrt, bit manipulation) is exactly specified, so a
+faithful transcription produces the same bits as the Rust code on any
+platform.
+
+The only non-arithmetic dependency is float formatting: Rust's
+`Display` and Python's `repr` both emit the shortest decimal string
+that round-trips to the same double (Ryu and David Gay's algorithm
+agree on this output); Python's scientific-notation spelling for
+|x| < 1e-4 is reformatted positionally to match Rust.
+
+Usage:
+    python3 python/bless_golden.py           # self-check + print hash
+    python3 python/bless_golden.py --write   # also write the golden file
+
+CI's golden-guard job independently verifies the committed hash against
+the real Rust generator; a mismatch there (with both values in the job
+log) means this port drifted and the Rust value wins.
+"""
+
+import math
+import os
+import struct
+import sys
+
+M64 = (1 << 64) - 1
+M128 = (1 << 128) - 1
+PCG_MULT = 0x2360ED051FC65DA44385DF649FCCF645
+LN2 = 0.6931471805599453  # std::f64::consts::LN_2
+PI = math.pi
+TAU = 2.0 * PI
+SQRT_2 = math.sqrt(2.0)
+MIN_POSITIVE = 2.2250738585072014e-308
+INV_2P53 = 1.0 / 9007199254740992.0  # 1 / 2^53 (exact power of two)
+
+
+def f64_to_bits(x: float) -> int:
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def bits_to_f64(b: int) -> float:
+    return struct.unpack("<d", struct.pack("<Q", b))[0]
+
+
+# ---- sim/rng.rs: PCG-64 XSL-RR ---------------------------------------
+
+
+class Pcg64:
+    def __init__(self, seed: int, stream: int = 0xDA3E39CB94B95BDB):
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & M128
+        self.next_u64()
+        self.state = (self.state + seed) & M128
+        self.next_u64()
+
+    def next_u64(self) -> int:
+        self.state = (self.state * PCG_MULT + self.inc) & M128
+        rot = self.state >> 122
+        xored = ((self.state >> 64) ^ self.state) & M64
+        return ((xored >> rot) | (xored << ((64 - rot) % 64))) & M64
+
+    def next_f64(self) -> float:
+        return float(self.next_u64() >> 11) * INV_2P53
+
+    def uniform_f64(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * self.next_f64()
+
+
+# ---- sim/detmath.rs ---------------------------------------------------
+
+
+def rust_round(x: float) -> float:
+    """f64::round — round half AWAY from zero, exactly."""
+    f = math.floor(x)
+    d = x - f  # exact: f <= x < f+1 and Sterbenz / small-range cases
+    if d > 0.5:
+        return float(f + 1)
+    if d < 0.5:
+        return float(f)
+    return float(f + 1) if x > 0.0 else float(f)
+
+
+def pow2i(k: int) -> float:
+    if k > 1023:
+        return math.inf
+    if k < -1074:
+        return 0.0
+    if k < -1022:
+        return bits_to_f64(1 << (52 - (-1022 - k)))
+    return bits_to_f64((k + 1023) << 52)
+
+
+def exp_det(x: float) -> float:
+    if math.isnan(x):
+        return math.nan
+    if x > 709.8:
+        return math.inf
+    if x < -745.0:
+        return 0.0
+    k = rust_round(x / LN2)
+    r = x - k * LN2
+    acc = 1.0
+    n = 14.0
+    while n >= 1.0:
+        acc = 1.0 + acc * r / n
+        n -= 1.0
+    ki = int(k)
+    if ki > 1023:
+        return acc * pow2i(1023) * pow2i(ki - 1023)
+    if ki < -1022:
+        return acc * pow2i(-1022) * pow2i(ki + 1022)
+    return acc * pow2i(ki)
+
+
+def ln_det(x: float) -> float:
+    if math.isnan(x) or x < 0.0:
+        return math.nan
+    if x == 0.0:
+        return -math.inf
+    if math.isinf(x):
+        return math.inf
+    sub_adj = 0.0
+    if x < MIN_POSITIVE:
+        x = x * pow2i(54)
+        sub_adj = -54.0
+    bits = f64_to_bits(x)
+    e = ((bits >> 52) & 0x7FF) - 1023
+    m = bits_to_f64((bits & 0x000F_FFFF_FFFF_FFFF) | (1023 << 52))
+    if m > SQRT_2:
+        m *= 0.5
+        e += 1
+    s = (m - 1.0) / (m + 1.0)
+    s2 = s * s
+    acc = 0.0
+    k = 17.0
+    while k >= 1.0:
+        acc = acc * s2 + 1.0 / k
+        k -= 2.0
+    return 2.0 * s * acc + (float(e) + sub_adj) * LN2
+
+
+def reduce_tau(x: float) -> float:
+    return x - TAU * float(math.floor((x + PI) / TAU))
+
+
+def cos_det(x: float) -> float:
+    if not math.isfinite(x):
+        return math.nan
+    r = reduce_tau(x)
+    r2 = r * r
+    term = 1.0
+    total = 1.0
+    k = 1.0
+    while k <= 12.0:
+        term = -term * r2 / ((2.0 * k - 1.0) * (2.0 * k))
+        total += term
+        k += 1.0
+    return total
+
+
+# ---- workload/fleet_trace.rs samplers --------------------------------
+
+
+def exponential_det(rng: Pcg64, lam: float) -> float:
+    return -ln_det(max(rng.next_f64(), 1e-300)) / lam
+
+
+def normal_det(rng: Pcg64) -> float:
+    while True:
+        u1 = rng.next_f64()
+        if u1 > 1e-300:
+            u2 = rng.next_f64()
+            return math.sqrt(-2.0 * ln_det(u1)) * cos_det(2.0 * PI * u2)
+
+
+def lognormal_det(rng: Pcg64, mu: float, sigma: float) -> float:
+    return exp_det(mu + sigma * normal_det(rng))
+
+
+def rust_clamp(x: float, lo: float, hi: float) -> float:
+    if x < lo:
+        return lo
+    if x > hi:
+        return hi
+    return x
+
+
+def draw_lengths_det(rng: Pcg64):
+    # TraceParams::default() marginals (workload/trace.rs).
+    prompt = rust_round(rust_clamp(lognormal_det(rng, 5.9, 0.95), 1.0, 4000.0))
+    gen = rust_round(rust_clamp(lognormal_det(rng, 5.35, 0.55), 10.0, 700.0))
+    return max(int(prompt), 1), max(int(gen), 1)
+
+
+# ---- the golden scenario: FleetTraceParams::scenario(Burst, 4, 12, 600, 0)
+
+
+SLOT_S = 1.0
+REPLICAS = 4
+PEAK_RPS = 12.0
+MIN_RPS = 1.0  # 1.0f64.min(peak_rps)
+DURATION_S = 600.0
+SEED = 0
+BURST_BOOST = 3.5
+BURST_CORRELATION = 0.85
+BURST_ON_S = 45.0
+BURST_OFF_S = 150.0
+SLOTS = max(int(math.ceil(DURATION_S / SLOT_S)), 1)
+
+
+def markov_series(rng: Pcg64, slots: int, p_on: float, p_off: float, pi: float):
+    s = rng.next_f64() < pi
+    out = []
+    for _ in range(slots):
+        out.append(s)
+        u = rng.next_f64()
+        s = (u >= p_off) if s else (u < p_on)
+    return out
+
+
+def burst_states():
+    n = SLOTS
+    rng = Pcg64(SEED, 0xB425)
+    p_on = min(SLOT_S / BURST_OFF_S, 1.0)
+    p_off = min(SLOT_S / BURST_ON_S, 1.0)
+    pi = p_on / (p_on + p_off)
+    fleet = markov_series(rng, n, p_on, p_off, pi)
+    c = math.sqrt(rust_clamp(BURST_CORRELATION, 0.0, 1.0))
+    chans = []
+    for _ in range(REPLICAS):
+        idio = markov_series(rng, n, p_on, p_off, pi)
+        chans.append([fleet[t] if rng.next_f64() < c else idio[t] for t in range(n)])
+    return chans
+
+
+def baseline_burst(t_norm: float) -> float:
+    bump = exp_det(-((t_norm - 0.5) * (t_norm - 0.5)) / (2.0 * 0.18 * 0.18))
+    return 0.45 + 0.25 * bump
+
+
+def intensity_series():
+    n = SLOTS
+    wobble_rng = Pcg64(SEED, 0x0B1E)
+    wobble = [wobble_rng.uniform_f64(0.85, 1.12) for _ in range(15)]
+    base = []
+    for t in range(n):
+        mid_s = (float(t) + 0.5) * SLOT_S
+        t_norm = rust_clamp(mid_s / DURATION_S, 0.0, 1.0)
+        bin_i = min(int(t_norm * float(len(wobble))), len(wobble) - 1)
+        v = baseline_burst(t_norm) * wobble[bin_i]
+        base.append(v if v > 0.0 else 0.0)  # .max(0.0); v >= 0 here
+    base_max = 0.0
+    for v in base:
+        base_max = v if v > base_max else base_max
+    if base_max > 0.0:
+        base = [v / base_max for v in base]
+    bursts = burst_states()  # burst_boost > 1 for the Burst scenario
+    out = []
+    for t in range(n):
+        v = base[t]
+        ssum = 0.0
+        for ch in bursts:
+            ssum += BURST_BOOST if ch[t] else 1.0
+        v *= ssum / float(len(bursts))
+        # flash_boost == 1.0 and idle window disabled for Burst.
+        out.append(v)
+    return out
+
+
+def fleet_rate_series():
+    return [MIN_RPS + (PEAK_RPS - MIN_RPS) * v for v in intensity_series()]
+
+
+def synth_fleet_trace():
+    rate = fleet_rate_series()
+    lambda_max = 0.0
+    for v in rate:
+        lambda_max = v if v > lambda_max else lambda_max
+    assert lambda_max > 0.0
+    rng = Pcg64(SEED, 0xF1EE)
+    out = []
+    t = 0.0
+    rid = 0
+    while True:
+        t += exponential_det(rng, lambda_max)
+        if t >= DURATION_S:
+            break
+        slot = min(int(t / SLOT_S), len(rate) - 1)
+        if rng.next_f64() * lambda_max <= rate[slot]:
+            prompt, gen = draw_lengths_det(rng)
+            out.append((rid, t, prompt, gen, gen))
+            rid += 1
+    return out
+
+
+# ---- jsonl.rs canonical writer ---------------------------------------
+
+
+def sci_to_positional(s: str) -> str:
+    mant, exp = s.split("e")
+    neg = mant.startswith("-")
+    if neg:
+        mant = mant[1:]
+    ip, _, fp = mant.partition(".")
+    digits = ip + fp
+    point = len(ip) + int(exp)
+    if point <= 0:
+        out = "0." + "0" * (-point) + digits
+    elif point >= len(digits):
+        out = digits + "0" * (point - len(digits))
+    else:
+        out = digits[:point] + "." + digits[point:]
+    return ("-" + out) if neg else out
+
+
+def fmt_num(x: float) -> str:
+    # Json::Num writer: integral |x| < 1e15 prints as i64, everything
+    # else through Rust f64 Display (shortest round-trip, positional).
+    if x == math.floor(x) and abs(x) < 1e15:
+        return str(int(x))
+    s = repr(x)
+    if "e" in s or "E" in s:
+        s = sci_to_positional(s.lower())
+    assert float(s) == x, f"formatter does not round-trip: {s!r}"
+    return s
+
+
+def golden_jsonl(reqs) -> str:
+    # BTreeMap order: keys sorted lexicographically.
+    header = (
+        "{"
+        + f'"duration_s":{fmt_num(DURATION_S)},'
+        + '"kind":"fleet-trace",'
+        + f'"min_rps":{fmt_num(MIN_RPS)},'
+        + f'"peak_rps":{fmt_num(PEAK_RPS)},'
+        + f'"replicas":{REPLICAS},'
+        + f'"requests":{len(reqs)},'
+        + '"scenario":"burst",'
+        + f'"seed":"{SEED}",'
+        + '"v":1'
+        + "}"
+    )
+    lines = [header]
+    for rid, arrival, prompt, gen, pred in reqs:
+        lines.append(
+            "{"
+            + f'"arrival_s":{fmt_num(arrival)},'
+            + f'"gen":{gen},'
+            + f'"id":{rid},'
+            + f'"pred":{pred},'
+            + f'"prompt":{prompt}'
+            + "}"
+        )
+    return "\n".join(lines) + "\n"
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & M64
+    return h
+
+
+# ---- self-checks ------------------------------------------------------
+
+
+def close(a: float, b: float, tol: float) -> bool:
+    if b == 0.0:
+        return abs(a) < tol
+    return abs((a - b) / b) < tol or abs(a - b) < tol
+
+
+def self_check():
+    # FNV vectors pinned by the Rust unit tests.
+    assert fnv1a64(b"") == 0xCBF29CE484222325
+    assert fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+    # detmath vs the platform libm, at the Rust tests' tolerances.
+    for i in range(-200, 201):
+        x = float(i) * 0.173
+        assert close(exp_det(x), math.exp(x), 1e-11), f"exp({x})"
+    assert exp_det(0.0) == 1.0
+    for i in range(1, 401):
+        x = float(i) * 0.37
+        assert close(ln_det(x), math.log(x), 1e-11), f"ln({x})"
+    for i in range(1, 61):
+        x = 2.0 ** (-i)
+        assert close(ln_det(x), math.log(x), 1e-11), f"ln(2^-{i})"
+    assert ln_det(1.0) == 0.0
+    for i in range(-300, 301):
+        x = float(i) * 0.217
+        assert close(cos_det(x), math.cos(x), 1e-9), f"cos({x})"
+    assert cos_det(0.0) == 1.0
+    # PCG sanity: deterministic, uniform in [0, 1).
+    a, b = Pcg64(42), Pcg64(42)
+    for _ in range(100):
+        assert a.next_u64() == b.next_u64()
+    r = Pcg64(7)
+    for _ in range(10_000):
+        v = r.next_f64()
+        assert 0.0 <= v < 1.0
+    # Formatter: positional conversion of scientific spellings.
+    assert sci_to_positional("9.23e-05") == "0.0000923"
+    assert sci_to_positional("1.5e-07") == "0.00000015"
+    assert fmt_num(600.0) == "600"
+    assert fmt_num(0.5) == "0.5"
+
+
+def main():
+    self_check()
+    reqs = synth_fleet_trace()
+    # The Rust test suite pins these invariants for this exact config.
+    assert len(reqs) > 500, f"suspicious request count {len(reqs)}"
+    assert all(reqs[i][1] <= reqs[i + 1][1] for i in range(len(reqs) - 1))
+    assert all(r[0] == i for i, r in enumerate(reqs))
+    assert all(1 <= r[2] <= 4000 and 10 <= r[3] <= 700 for r in reqs)
+    text = golden_jsonl(reqs)
+    h = f"{fnv1a64(text.encode('utf-8')):016x}"
+    print(f"requests: {len(reqs)}")
+    print(f"fleet-trace golden hash: {h}")
+    if "--write" in sys.argv:
+        path = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "rust",
+            "tests",
+            "golden",
+            "fleet_trace_burst.hash",
+        )
+        with open(path, "w") as f:
+            f.write(h + "\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

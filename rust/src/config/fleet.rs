@@ -99,6 +99,76 @@ impl ReplicaSpec {
     }
 }
 
+/// Live KV-migration policy + modeled transfer costs (the
+/// `--migration on|off` surface).  When enabled, fleet-axis scale-in
+/// live-migrates the victim's resident requests to other replicas
+/// instead of waiting for them to drain; the move pays a modeled
+/// latency (base orchestration cost plus KV bytes over the link
+/// bandwidth) during which the migrated request holds KV on the
+/// destination but produces no tokens, and a modeled link/host energy
+/// cost.  Disabled is the default and leaves the serving loop
+/// byte-identical to drain-based scale-in.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationSpec {
+    pub enabled: bool,
+    /// Fixed per-migration orchestration latency, seconds (checkpoint
+    /// metadata exchange, destination block reservation).
+    pub base_latency_s: f64,
+    /// Effective KV transfer bandwidth, GB/s (NVLink/PCIe-class).
+    pub gb_per_s: f64,
+    /// KV footprint per block, MB (13B-class: ~40 layers x 5120 dim x
+    /// 2 (K,V) x 2 B x 64 tokens ≈ 52 MB).
+    pub mb_per_block: f64,
+    /// Link + host power drawn while a transfer is in flight, W.
+    pub link_power_w: f64,
+}
+
+impl MigrationSpec {
+    /// Migration off: scale-in drains (pre-migration behavior).
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            ..Self::enabled_default()
+        }
+    }
+
+    /// Migration on with the default modeled costs.
+    pub fn enabled_default() -> Self {
+        Self {
+            enabled: true,
+            base_latency_s: 0.05,
+            gb_per_s: 16.0,
+            mb_per_block: 52.0,
+            link_power_w: 60.0,
+        }
+    }
+
+    /// Parse the `--migration` CLI value.
+    pub fn parse_enabled(s: &str) -> anyhow::Result<bool> {
+        match s {
+            "on" | "true" | "1" => Ok(true),
+            "off" | "false" | "0" => Ok(false),
+            other => anyhow::bail!("--migration {other:?} (expected on | off)"),
+        }
+    }
+
+    /// Modeled wall-clock cost of moving `blocks` KV blocks.
+    pub fn transfer_seconds(&self, blocks: u32) -> f64 {
+        self.base_latency_s + blocks as f64 * self.mb_per_block * 1e6 / (self.gb_per_s * 1e9)
+    }
+
+    /// Modeled link/host energy of a transfer that took `transfer_s`.
+    pub fn transfer_energy_j(&self, transfer_s: f64) -> f64 {
+        self.link_power_w * transfer_s
+    }
+}
+
+impl Default for MigrationSpec {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
 /// A strictly-integral JSON number in u32 range (`Json::as_u64` would
 /// silently truncate 2.5 to 2 and wrap out-of-range values).
 fn json_u32(j: &Json) -> Option<u32> {
@@ -318,6 +388,22 @@ pub fn parse_fleet_jsonl(text: &str) -> anyhow::Result<Vec<ReplicaSpec>> {
 mod tests {
     use super::*;
     use crate::config::models::{llama2_13b, llama3_8b};
+
+    #[test]
+    fn migration_spec_costs_and_parse() {
+        let m = MigrationSpec::enabled_default();
+        assert!(m.enabled);
+        // 10 blocks at 52 MB over 16 GB/s: 32.5 ms + 50 ms base.
+        let t = m.transfer_seconds(10);
+        assert!((t - (0.05 + 10.0 * 52e6 / 16e9)).abs() < 1e-12);
+        assert!(m.transfer_seconds(100) > t);
+        assert!((m.transfer_energy_j(1.0) - m.link_power_w).abs() < 1e-12);
+        assert!(!MigrationSpec::disabled().enabled);
+        assert_eq!(MigrationSpec::default(), MigrationSpec::disabled());
+        assert!(MigrationSpec::parse_enabled("on").unwrap());
+        assert!(!MigrationSpec::parse_enabled("off").unwrap());
+        assert!(MigrationSpec::parse_enabled("maybe").is_err());
+    }
 
     #[test]
     fn parse_single_tp() {

@@ -1,0 +1,352 @@
+//! Live KV migration of resident requests (fleet-axis scale-in).
+//!
+//! Drain-based scale-in keeps the victim replica powered (and often at
+//! high frequency — lost residents pin it to the peak setting) until
+//! its last resident finishes, burning the energy the instance-scaling
+//! axis was supposed to save.  With migration enabled, the victim's
+//! residents are checkpointed ([`crate::engine::KvCheckpoint`]: KV
+//! block ownership + generation progress) and restored onto the
+//! best-fit surviving replica, paying a modeled transfer latency and
+//! link energy ([`crate::config::MigrationSpec`]); the victim goes
+//! idle immediately and powers off.
+//!
+//! Every move is gated by an **SLO guard**: the request is migrated
+//! only if the destination's §IV-B projection — with the migrated
+//! entry applied as a candidate — predicts (at maximum frequency, the
+//! same optimistic bound admission control uses) that
+//!
+//!   1. the destination's KV capacity is never exceeded,
+//!   2. the destination's mean-TBT SLO still holds,
+//!   3. the migrated request still meets its own E2E deadline AFTER
+//!      the modeled transfer stall, and
+//!   4. no destination resident that was previously on track is newly
+//!      pushed past its deadline (residents already doomed without the
+//!      candidate do not block the move, mirroring §IV-C2's
+//!      blame-the-candidate rule).
+//!
+//! A modeled transfer stall at or beyond the destination's whole E2E
+//! budget additionally refuses unconditionally — this also bounds
+//! "lost" candidates, whose own deadline check is waived.
+//!
+//! A refused request simply stays on the victim and drains — migration
+//! is an optimization, never a correctness requirement.  The scoreboard
+//! moves ride the existing strike/insert paths, so the delta journal
+//! and [`crate::coordinator::projection::ProjectionTracker`] stay
+//! coherent on both ends without special cases.
+
+use crate::config::{EngineSpec, SloSpec};
+use crate::coordinator::perf_model::PerfModel;
+use crate::coordinator::projection::ProjectionTracker;
+use crate::coordinator::scoreboard::{Entry, Scoreboard};
+use crate::gpusim::dvfs::FREQ_MAX_MHZ;
+
+/// Fleet-level migration telemetry (one per `serve_fleet_plan` run).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MigrationCounters {
+    /// Requests successfully live-migrated.
+    pub migrations: u64,
+    /// Moves refused by the destination-side SLO guard.
+    pub refused_slo: u64,
+    /// Moves refused for lack of destination KV blocks / batch slots
+    /// (or no eligible destination at all).
+    pub refused_capacity: u64,
+}
+
+/// The scoreboard entry a migrated request carries on its destination.
+///
+/// Anchoring `scheduled_iter` at `dest_iter - generated` keeps the
+/// entry in the same TOTAL-progress coordinates the engine reports
+/// (`ceil((j - s_i + |q_i|)/N)` then matches the physical occupancy
+/// `prompt + generated + (j - k)`, and §IV-F overrun syncs compare
+/// like with like).  When the destination engine is younger than the
+/// request's age in iterations the anchor saturates at 0 and the
+/// projection under-counts the first `generated - dest_iter` tokens —
+/// a bounded, conservative-in-batch corner documented here rather than
+/// special-cased.
+pub fn migration_entry(src: &Entry, generated: u32, dest_iter: u64) -> Entry {
+    Entry {
+        id: src.id,
+        scheduled_iter: dest_iter.saturating_sub(generated as u64),
+        prompt_tokens: src.prompt_tokens,
+        // Keep the source's (conservatively adjusted, possibly bumped)
+        // prediction, floored above the tokens already generated so the
+        // entry still projects remaining work.
+        predicted_gen: src.predicted_gen.max(generated.saturating_add(1)),
+        deadline_s: src.deadline_s,
+        lost: src.lost,
+    }
+}
+
+/// The destination-side SLO guard (checks 1-4 of the module docs).
+///
+/// `cand` must be a [`migration_entry`] for the destination's current
+/// iteration `k`; `stall_s` is the modeled transfer latency during
+/// which the migrated request produces no tokens.  Runs off the
+/// destination's incrementally maintained tracker (the candidate is
+/// applied and exactly undone), so the guard itself leaves no state
+/// behind.  This is the cold scale-in path — allocations here are
+/// fine.
+#[allow(clippy::too_many_arguments)]
+pub fn migration_slo_guard(
+    model: &PerfModel,
+    spec: &EngineSpec,
+    slo: &SloSpec,
+    sb: &Scoreboard,
+    tracker: &mut ProjectionTracker,
+    k: u64,
+    now: f64,
+    cand: &Entry,
+    stall_s: f64,
+) -> bool {
+    // A transfer stall longer than the destination's whole E2E budget
+    // can never pay off — by then the victim could have drained the
+    // request.  This also bounds "lost" candidates, whose own
+    // deadline check below is waived.
+    if stall_s >= slo.e2e_p99 {
+        return false;
+    }
+    let proj = tracker.project(sb, k, Some(cand)).clone();
+    // Check 1: projected KV never exceeds the destination pool.
+    if proj.peak_kv() > spec.kv_blocks {
+        return false;
+    }
+    if proj.horizon() == 0 {
+        // Nothing projected to run (e.g. the candidate is all but
+        // finished): nothing can be violated.
+        return true;
+    }
+    let t = model.throughput_vector(spec, &proj, FREQ_MAX_MHZ);
+    let t_r = PerfModel::remaining_time_vector(&t);
+    // Check 2: mean TBT over the with-candidate horizon.
+    let mean_tbt = t_r[t_r.len() - 1] / t_r.len() as f64;
+    if mean_tbt > slo.tbt_avg {
+        return false;
+    }
+    // Check 3: the migrated request's own deadline, transfer stall
+    // included ("lost" requests have already waived it).
+    if !cand.lost {
+        if let Some(idx) = proj.completion_index(cand.scheduled_iter, cand.predicted_gen)
+        {
+            if now + stall_s + t_r[idx] >= cand.deadline_s {
+                return false;
+            }
+        }
+    }
+    // Check 4: destination residents newly pushed past their deadlines.
+    let broken: Vec<&Entry> = sb
+        .committed()
+        .iter()
+        .filter(|e| !e.lost)
+        .filter(|e| match proj.completion_index(e.scheduled_iter, e.predicted_gen) {
+            Some(idx) => now + t_r[idx] >= e.deadline_s,
+            None => false,
+        })
+        .collect();
+    if broken.is_empty() {
+        return true;
+    }
+    // Were they already doomed WITHOUT the candidate?  Only newly
+    // caused violations block the move (§IV-C2 blame rule).
+    let proj_wo = tracker.project(sb, k, None).clone();
+    if proj_wo.horizon() == 0 {
+        return false; // they ran fine alone: the candidate broke them
+    }
+    let t_wo = model.throughput_vector(spec, &proj_wo, FREQ_MAX_MHZ);
+    let t_r_wo = PerfModel::remaining_time_vector(&t_wo);
+    broken.into_iter().all(|e| {
+        match proj_wo.completion_index(e.scheduled_iter, e.predicted_gen) {
+            Some(idx) => now + t_r_wo[idx] >= e.deadline_s, // doomed anyway
+            None => true,
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::llama2_13b;
+
+    fn entry(id: u64, s: u64, prompt: u32, pred: u32, deadline: f64) -> Entry {
+        Entry {
+            id,
+            scheduled_iter: s,
+            prompt_tokens: prompt,
+            predicted_gen: pred,
+            deadline_s: deadline,
+            lost: false,
+        }
+    }
+
+    fn setup() -> (PerfModel, EngineSpec, SloSpec) {
+        let e = llama2_13b(2);
+        (
+            PerfModel::train(&[e.clone()], 40, 0),
+            e,
+            SloSpec::new(0.2, 30.2),
+        )
+    }
+
+    #[test]
+    fn migration_entry_anchors_total_progress() {
+        let src = entry(7, 100, 640, 200, 25.0);
+        // 80 tokens generated, destination at iteration 500.
+        let m = migration_entry(&src, 80, 500);
+        assert_eq!(m.id, 7);
+        assert_eq!(m.scheduled_iter, 420);
+        assert_eq!(m.prompt_tokens, 640);
+        assert_eq!(m.predicted_gen, 200);
+        assert_eq!(m.end_iter(), 420 + 200); // 120 iterations remain
+        assert_eq!(m.deadline_s, 25.0);
+        // Prediction already outrun: floored above `generated`.
+        let m = migration_entry(&entry(8, 0, 64, 50, 25.0), 90, 500);
+        assert_eq!(m.predicted_gen, 91);
+        // Young destination engine: anchor saturates at zero.
+        let m = migration_entry(&src, 80, 10);
+        assert_eq!(m.scheduled_iter, 0);
+    }
+
+    #[test]
+    fn guard_accepts_easy_move_and_refuses_tight_deadline() {
+        let (model, spec, slo) = setup();
+        let mut sb = Scoreboard::new();
+        let mut tracker = ProjectionTracker::new(spec.block_tokens);
+        sb.insert(entry(1, 0, 200, 100, 1e9));
+        // Comfortable deadline: the move passes even with a stall.
+        let cand = migration_entry(&entry(9, 0, 400, 150, 1000.0), 40, 0);
+        assert!(migration_slo_guard(
+            &model, &spec, &slo, &sb, &mut tracker, 0, 0.0, &cand, 0.5,
+        ));
+        // Same request, deadline only just ahead: a 10 s transfer
+        // stall pushes it past -> refused.
+        let cand = migration_entry(&entry(9, 0, 400, 150, 8.0), 40, 0);
+        assert!(!migration_slo_guard(
+            &model, &spec, &slo, &sb, &mut tracker, 0, 0.0, &cand, 10.0,
+        ));
+        // The guard left no state behind: an unrelated easy candidate
+        // still passes, and the tracker still matches from-scratch.
+        let cand = migration_entry(&entry(10, 0, 100, 50, 1e9), 10, 0);
+        assert!(migration_slo_guard(
+            &model, &spec, &slo, &sb, &mut tracker, 0, 0.0, &cand, 0.1,
+        ));
+    }
+
+    #[test]
+    fn guard_refuses_kv_overflow() {
+        let (model, spec, slo) = setup();
+        let mut sb = Scoreboard::new();
+        let mut tracker = ProjectionTracker::new(spec.block_tokens);
+        // Destination already holds a large resident; the candidate's
+        // projected KV would overflow the 439-block pool.
+        sb.insert(entry(1, 0, 20_000, 900, 1e9));
+        let cand = migration_entry(&entry(9, 0, 8_000, 900, 1e9), 10, 0);
+        assert!(!migration_slo_guard(
+            &model, &spec, &slo, &sb, &mut tracker, 0, 0.0, &cand, 0.1,
+        ));
+    }
+
+    #[test]
+    fn guard_protects_on_track_residents_but_not_doomed_ones() {
+        let (model, spec, slo) = setup();
+        // Eight residents finishing just inside their deadlines; a
+        // large migrated batch-mate pushes them over -> refused.
+        let mut sb = Scoreboard::new();
+        for id in 0..8 {
+            sb.insert(entry(id, 0, 1000, 600, 1e9));
+        }
+        let mut tracker = ProjectionTracker::new(spec.block_tokens);
+        let proj = tracker.project(&sb, 0, None).clone();
+        let t = model.throughput_vector(&spec, &proj, FREQ_MAX_MHZ);
+        let t_r = PerfModel::remaining_time_vector(&t);
+        let alone = *t_r.last().unwrap();
+        let deadline = alone * 1.025;
+        let mut sb = Scoreboard::new();
+        for id in 0..8 {
+            sb.insert(entry(id, 0, 1000, 600, deadline));
+        }
+        let mut tracker = ProjectionTracker::new(spec.block_tokens);
+        let cand = migration_entry(&entry(99, 0, 4000, 1024, 1e9), 100, 0);
+        assert!(!migration_slo_guard(
+            &model, &spec, &slo, &sb, &mut tracker, 0, 0.0, &cand, 0.1,
+        ));
+        // The same residents with deadlines ALREADY hopeless do not
+        // block the move (they are doomed with or without it).
+        let mut sb = Scoreboard::new();
+        for id in 0..8 {
+            sb.insert(entry(id, 0, 1000, 600, 0.001));
+        }
+        let mut tracker = ProjectionTracker::new(spec.block_tokens);
+        assert!(migration_slo_guard(
+            &model, &spec, &slo, &sb, &mut tracker, 0, 5.0, &cand, 0.1,
+        ));
+    }
+
+    #[test]
+    fn lost_candidate_skips_own_deadline_check() {
+        let (model, spec, slo) = setup();
+        let mut sb = Scoreboard::new();
+        let mut tracker = ProjectionTracker::new(spec.block_tokens);
+        sb.insert(entry(1, 0, 200, 100, 1e9));
+        // Deadline long gone, but the request is lost (SLO waived):
+        // moving it off the victim is still allowed.
+        let mut src = entry(9, 0, 400, 150, 0.001);
+        src.lost = true;
+        let cand = migration_entry(&src, 40, 0);
+        assert!(cand.lost);
+        assert!(migration_slo_guard(
+            &model, &spec, &slo, &sb, &mut tracker, 0, 5.0, &cand, 1.0,
+        ));
+    }
+
+    #[test]
+    fn stall_beyond_e2e_budget_refuses_even_lost_candidates() {
+        let (model, spec, slo) = setup();
+        let sb = Scoreboard::new();
+        let mut tracker = ProjectionTracker::new(spec.block_tokens);
+        let mut src = entry(9, 0, 400, 150, 1e9);
+        src.lost = true;
+        let cand = migration_entry(&src, 40, 0);
+        // At the budget (30.2 s): refused regardless of lost status.
+        assert!(!migration_slo_guard(
+            &model,
+            &spec,
+            &slo,
+            &sb,
+            &mut tracker,
+            0,
+            0.0,
+            &cand,
+            slo.e2e_p99,
+        ));
+        // Just under it: the lost candidate moves.
+        assert!(migration_slo_guard(
+            &model,
+            &spec,
+            &slo,
+            &sb,
+            &mut tracker,
+            0,
+            0.0,
+            &cand,
+            slo.e2e_p99 * 0.5,
+        ));
+    }
+
+    #[test]
+    fn empty_destination_accepts() {
+        let (model, spec, slo) = setup();
+        let sb = Scoreboard::new();
+        let mut tracker = ProjectionTracker::new(spec.block_tokens);
+        let cand = migration_entry(&entry(9, 0, 400, 150, 1000.0), 40, 0);
+        assert!(migration_slo_guard(
+            &model,
+            &spec,
+            &slo,
+            &sb,
+            &mut tracker,
+            0,
+            0.0,
+            &cand,
+            0.5,
+        ));
+    }
+}

@@ -18,11 +18,15 @@
 //!     axis of the two-axis autoscaler;
 //!   * [`router`]: the fleet admission router (round-robin /
 //!     least-loaded / projected-headroom);
+//!   * [`migration`]: live KV migration of resident requests on
+//!     fleet-axis scale-in (checkpoint/restore semantics with a
+//!     destination-side SLO guard and modeled transfer costs);
 //!   * [`server`]: the event loop wiring everything to the engine —
 //!     generalized to an N-replica fleet coordinator — and the
 //!     Triton-like baseline policies the paper compares against.
 
 pub mod autoscaler;
+pub mod migration;
 pub mod perf_model;
 pub mod projection;
 pub mod router;
@@ -31,6 +35,7 @@ pub mod scoreboard;
 pub mod server;
 pub mod throttle;
 
+pub use migration::MigrationCounters;
 pub use perf_model::{PerfModel, PredMemo};
 pub use projection::{Projection, ProjectionTracker};
 pub use router::{HeadroomCache, RouterPolicy};

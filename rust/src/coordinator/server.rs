@@ -33,12 +33,15 @@
 //! event loop, so the results are bit-identical —
 //! `tests/fleet_equivalence.rs` pins this.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
-use crate::config::fleet::ReplicaSpec;
+use crate::config::fleet::{MigrationSpec, ReplicaSpec};
 use crate::config::{EngineSpec, ModelFamily, ServingConfig, SloSpec};
 use crate::coordinator::autoscaler::{
     Autoscaler, FleetDecision, FleetScaler, ScaleDecision,
+};
+use crate::coordinator::migration::{
+    migration_entry, migration_slo_guard, MigrationCounters,
 };
 use crate::coordinator::perf_model::PerfModel;
 use crate::coordinator::projection::ProjectionTracker;
@@ -193,6 +196,11 @@ pub struct FleetPlan {
     pub router: RouterPolicy,
     /// Enable the replica-count autoscaling axis.
     pub autoscale_replicas: bool,
+    /// Live KV migration of resident requests on fleet-axis scale-in
+    /// (`--migration on|off` + modeled transfer costs).  Disabled by
+    /// default: scale-in then drains, byte-identical to the
+    /// pre-migration serving loop.
+    pub migration: MigrationSpec,
 }
 
 impl FleetPlan {
@@ -206,7 +214,14 @@ impl FleetPlan {
             replicas,
             router,
             autoscale_replicas: false,
+            migration: MigrationSpec::disabled(),
         }
+    }
+
+    /// Replace the live-migration policy (builder style).
+    pub fn with_migration(mut self, migration: MigrationSpec) -> Self {
+        self.migration = migration;
+        self
     }
 
     /// `n` identical replicas derived from `cfg` exactly as
@@ -226,6 +241,7 @@ impl FleetPlan {
             replicas: vec![ReplicaSpec::from_config(cfg, policy.autoscaling); n],
             router,
             autoscale_replicas,
+            migration: MigrationSpec::disabled(),
         }
     }
 
@@ -305,6 +321,8 @@ pub struct FleetOutcome {
     /// Fleet-axis scale events.
     pub replica_activations: u32,
     pub replica_deactivations: u32,
+    /// Live-migration telemetry (all zero with `--migration off`).
+    pub migrations: MigrationCounters,
 }
 
 struct EngineRt {
@@ -427,6 +445,12 @@ struct Replica {
     route_epoch: u64,
     /// Memoized §IV-B projection summary for router scoring.
     headroom: HeadroomCache,
+    /// Resident requests that arrived here via live migration and have
+    /// not completed yet (their completions feed the migrated-request
+    /// attainment series).
+    migrated_ids: HashSet<RequestId>,
+    /// Modeled link/host energy of migrations INTO this replica, J.
+    migration_energy: f64,
 }
 
 impl Replica {
@@ -462,6 +486,8 @@ impl Replica {
             last_event_s: 0.0,
             route_epoch: 0,
             headroom: HeadroomCache::new(),
+            migrated_ids: HashSet::new(),
+            migration_energy: 0.0,
         }
     }
 
@@ -680,6 +706,12 @@ impl Replica {
                 for o in &report.completed {
                     e.sb.strike(o.id);
                     self.stats.record_outcome(o);
+                    // Migrated-request attainment: completions that
+                    // arrived via live migration feed their own series
+                    // (empty set lookup when migration is off).
+                    if self.migrated_ids.remove(&o.id) {
+                        self.stats.migrated_e2e.push(o.e2e_s);
+                    }
                     self.outcomes.push(o.clone());
                 }
                 // §IV-F: bump predictions the reality has outrun.
@@ -895,6 +927,11 @@ pub fn serve_fleet_plan(
     let mut rerouted = 0u64;
     let mut activations = 0u32;
     let mut deactivations = 0u32;
+    let mut migrations = MigrationCounters::default();
+    // Recent prompt lengths (sliding window) — the prompt-length mix
+    // the heterogeneity-aware scale-out scoring fits candidates
+    // against.  Only maintained when the fleet axis is active.
+    let mut recent_prompts: VecDeque<(f64, u32)> = VecDeque::new();
 
     let mut next_arrival = 0usize;
     let mut now = 0.0f64;
@@ -977,6 +1014,16 @@ pub fn serve_fleet_plan(
             rp.window_arrivals += 1;
             rp.routed += 1;
             fleet_window += 1;
+            if fleet_scaler.is_some() {
+                recent_prompts.push_back((r.arrival_s, r.prompt_tokens));
+                while recent_prompts
+                    .front()
+                    .map(|&(t, _)| t < r.arrival_s - PROMPT_MIX_WINDOW_S)
+                    .unwrap_or(false)
+                {
+                    recent_prompts.pop_front();
+                }
+            }
             next_arrival += 1;
         }
         // Wake idle accepting engines for immediate admission.
@@ -1018,15 +1065,24 @@ pub fn serve_fleet_plan(
                 match fs.tick(now, rps, per_replica_rps, provisioned) {
                     FleetDecision::Hold => {}
                     FleetDecision::Activate { count } => {
+                        // Heterogeneity-aware scale-out: activate the
+                        // inactive replicas that best fit the current
+                        // prompt-length mix by capacity and projected
+                        // J/token — not whichever is inactive first
+                        // (ties keep index order, so homogeneous
+                        // fleets behave exactly as before).
+                        let order = select_scale_out_order(
+                            &replicas,
+                            p95_prompt(&recent_prompts),
+                        );
                         let mut remaining = count;
-                        for rp in replicas.iter_mut() {
+                        for i in order {
                             if remaining == 0 {
                                 break;
                             }
-                            if !rp.active && rp.activation_ready.is_none() {
-                                rp.activation_ready = Some(now + fs.spawn_time_s);
-                                remaining -= 1;
-                            }
+                            replicas[i].activation_ready =
+                                Some(now + fs.spawn_time_s);
+                            remaining -= 1;
                         }
                     }
                     FleetDecision::Deactivate { count } => {
@@ -1076,6 +1132,20 @@ pub fn serve_fleet_plan(
                                 replicas[tgt].catch_up_tick(now);
                                 replicas[tgt].route_epoch += 1;
                                 replicas[tgt].queue.push_back(req);
+                            }
+                            // Live-migrate the RESIDENT requests too
+                            // (instead of waiting for drain), each
+                            // behind the destination-side SLO guard.
+                            if plan.migration.enabled {
+                                migrate_residents(
+                                    &mut replicas,
+                                    j,
+                                    now,
+                                    policy,
+                                    model,
+                                    &plan.migration,
+                                    &mut migrations,
+                                );
                             }
                         }
                     }
@@ -1134,7 +1204,9 @@ pub fn serve_fleet_plan(
             .map(|e| e.sim.total_energy_j())
             .sum::<f64>()
             + rp.retired_energy
-            + rp.shadow_energy;
+            + rp.shadow_energy
+            + rp.migration_energy;
+        rp.stats.migration_energy_j = rp.migration_energy;
         rp.outcomes.sort_by(|a, b| a.id.cmp(&b.id));
         // The per-replica view gets the replica's OWN serving-window
         // end, not the fleet's: a replica drained and powered off at
@@ -1214,6 +1286,7 @@ pub fn serve_fleet_plan(
         rerouted,
         replica_activations: activations,
         replica_deactivations: deactivations,
+        migrations,
     }
 }
 
@@ -1356,20 +1429,22 @@ fn select_scale_in_victim(replicas: &[Replica]) -> Option<usize> {
     victim.map(|(_, _, i)| i)
 }
 
-/// Replica (other than `from`) best suited to take a request no engine
-/// at `from` can ever hold: must be active, accepting, and have the
-/// total KV capacity for the prompt.  Candidates are ranked by
-/// normalized headroom AFTER taking the request — free KV minus queued
-/// demand minus the request's own blocks, over the replica's OWN
-/// capacity, min'd with the equivalent batch-slot slack — so a large
-/// half-busy replica can outrank a small empty one the prompt would
-/// choke.  (The previous raw free-block comparison systematically
-/// favored big-grid replicas for every reroute, even short prompts a
+/// Replica (other than `from`) best suited to take a token footprint
+/// no engine at `from` can hold (a queued prompt on universal
+/// rejection, or a resident request's KV checkpoint on live
+/// migration): must be active, accepting, and have the total KV
+/// capacity for `tokens`.  Candidates are ranked by normalized
+/// headroom AFTER taking the request — free KV minus queued demand
+/// minus the request's own blocks, over the replica's OWN capacity,
+/// min'd with the equivalent batch-slot slack — so a large half-busy
+/// replica can outrank a small empty one the footprint would choke.
+/// (The previous raw free-block comparison systematically favored
+/// big-grid replicas for every reroute, even short prompts a
 /// lightly-loaded small replica should absorb.)
 fn best_reroute_target(
     replicas: &[Replica],
     from: usize,
-    prompt_tokens: u32,
+    tokens: u32,
 ) -> Option<usize> {
     let mut best: Option<(f64, usize)> = None;
     for (j, rp) in replicas.iter().enumerate() {
@@ -1383,7 +1458,7 @@ fn best_reroute_target(
         if spec.kv_blocks == 0 || spec.max_batch == 0 {
             continue; // degenerate replica: can never serve anything
         }
-        let need = blocks_for(prompt_tokens, spec.block_tokens);
+        let need = blocks_for(tokens, spec.block_tokens);
         if need > spec.kv_blocks {
             continue; // could never fit even empty
         }
@@ -1408,6 +1483,218 @@ fn best_reroute_target(
         }
     }
     best.map(|(_, j)| j)
+}
+
+/// Sliding window over arriving prompt lengths feeding the scale-out
+/// capacity fit, seconds.
+const PROMPT_MIX_WINDOW_S: f64 = 60.0;
+
+/// p95 prompt length of the recent arrival window (the scale-out
+/// scoring's capacity-fit input); 1 when the window is empty, making
+/// every candidate feasible.
+fn p95_prompt(recent: &VecDeque<(f64, u32)>) -> u32 {
+    if recent.is_empty() {
+        return 1;
+    }
+    let mut v: Vec<u32> = recent.iter().map(|&(_, p)| p).collect();
+    v.sort_unstable();
+    v[((v.len() - 1) as f64 * 0.95) as usize]
+}
+
+/// Rank the inactive replicas a fleet-axis Activate should boot, best
+/// fit first (ROADMAP "heterogeneity-aware scale-out"; previously the
+/// activation order was whichever replica was inactive first).
+/// Candidates are scored against the CURRENT prompt-length mix:
+///
+///   1. specs whose KV pool cannot hold the mix's p95 prompt rank
+///      strictly last (feasibility);
+///   2. then by projected J/token at a representative half-full
+///      operating point, ascending (energy fit);
+///   3. then by normalized KV headroom beyond the mix, descending;
+///   4. then by index — identical specs therefore keep the old
+///      first-inactive order exactly, so homogeneous fleets are
+///      byte-identical to the previous behavior.
+///
+/// Returns only replicas that are inactive with no pending spawn.
+fn select_scale_out_order(replicas: &[Replica], mix_p95_prompt: u32) -> Vec<usize> {
+    let mut cands: Vec<(bool, f64, f64, usize)> = replicas
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| !r.active && r.activation_ready.is_none())
+        .map(|(i, r)| {
+            let (feasible, ept, headroom) = scale_out_fit(&r.respec(), mix_p95_prompt);
+            (feasible, ept, headroom, i)
+        })
+        .collect();
+    cands.sort_by(|a, b| {
+        b.0.cmp(&a.0)
+            .then(a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .then(b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal))
+            .then(a.3.cmp(&b.3))
+    });
+    cands.into_iter().map(|(_, _, _, i)| i).collect()
+}
+
+/// `(fits-the-mix, projected J/token, normalized KV headroom)` for one
+/// scale-out candidate spec.  The J/token estimate prices the spec at
+/// a half-full operating point at maximum frequency — the state a
+/// freshly activated replica serves ramp load in before its own §IV-E
+/// controller throttles down.
+fn scale_out_fit(spec: &EngineSpec, mix_p95_prompt: u32) -> (bool, f64, f64) {
+    if spec.kv_blocks == 0 || spec.max_batch == 0 {
+        return (false, f64::INFINITY, f64::NEG_INFINITY);
+    }
+    let need = blocks_for(mix_p95_prompt.max(1), spec.block_tokens);
+    let feasible = need <= spec.kv_blocks;
+    let headroom = (spec.kv_blocks as f64 - need as f64) / spec.kv_blocks as f64;
+    let batch = (spec.max_batch / 2).max(1);
+    let kv = (spec.kv_blocks / 2).max(1);
+    let st = GpuState {
+        batch,
+        kv_blocks: kv,
+        freq_mhz: FREQ_MAX_MHZ,
+    };
+    let ept =
+        power_w(spec, batch, kv, FREQ_MAX_MHZ) * decode_latency_s(spec, &st) / batch as f64;
+    (feasible, ept, headroom)
+}
+
+/// Disjoint mutable borrows of two replicas (migration source and
+/// destination).
+fn two_replicas(
+    replicas: &mut [Replica],
+    a: usize,
+    b: usize,
+) -> (&mut Replica, &mut Replica) {
+    assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = replicas.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = replicas.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
+    }
+}
+
+/// Live-migrate the deactivated replica `from`'s resident requests to
+/// the best-fit surviving replicas (`--migration on`).  Each move is
+/// gated by destination capacity and the [`migration_slo_guard`]; a
+/// refused request stays on the victim and drains exactly as
+/// drain-based scale-in would have it.
+fn migrate_residents(
+    replicas: &mut [Replica],
+    from: usize,
+    now: f64,
+    policy: Policy,
+    model: &PerfModel,
+    mig: &MigrationSpec,
+    counters: &mut MigrationCounters,
+) {
+    // Index-based iteration: the body needs disjoint &mut access to
+    // the source and destination replicas per move.
+    let n_engines = replicas[from].engines.len();
+    for eng_idx in 0..n_engines {
+        for ri in replicas[from].engines[eng_idx].sim.residents() {
+            // The source-side scoreboard entry travels with the move
+            // (it carries the conservatively adjusted, possibly bumped
+            // prediction and the absolute deadline).
+            let src_entry = match replicas[from].engines[eng_idx].sb.get(ri.id) {
+                Some(e) => *e,
+                None => continue,
+            };
+            let footprint = ri.kv_tokens.max(ri.prompt_tokens);
+            let Some(to) = best_reroute_target(replicas, from, footprint) else {
+                counters.refused_capacity += 1;
+                continue;
+            };
+            let (src, dst) = two_replicas(replicas, from, to);
+            // A drained destination's frozen TP-scaler tick must
+            // fast-forward before migrated work can make it non-idle,
+            // or the stale timestamp re-enters the decision min and
+            // drags the fleet event clock backwards (same hazard as
+            // handing rerouted queue work to a drained replica).
+            // No-op for busy replicas, whose ticks are never stale.
+            dst.catch_up_tick(now);
+            let Some(d_idx) = dst.engines.iter().position(|e| e.accepting) else {
+                counters.refused_capacity += 1;
+                continue;
+            };
+            let de = &mut dst.engines[d_idx];
+            let need = blocks_for(footprint, de.sim.spec().block_tokens);
+            let full = de.sim.batch() >= de.sim.spec().max_batch;
+            if full || need > de.sim.kv_blocks_free() {
+                counters.refused_capacity += 1;
+                continue;
+            }
+            // A pending prefill has no KV to stream (only the prompt
+            // text moves); everything else pays the block transfer.
+            let stall = if ri.prefill_pending {
+                mig.base_latency_s
+            } else {
+                mig.transfer_seconds(need)
+            };
+            let k = de.sim.iter_index();
+            let entry = migration_entry(&src_entry, ri.generated, k);
+            if !migration_slo_guard(
+                model,
+                de.sim.spec(),
+                &dst.sched.slo,
+                &de.sb,
+                &mut de.tracker,
+                k,
+                now,
+                &entry,
+                stall,
+            ) {
+                counters.refused_slo += 1;
+                continue;
+            }
+            // An idle destination's clock is parked at its last event:
+            // charge the idle gap and advance it to the migration
+            // instant, or the restored row would replay the past.
+            // (Non-idle engines were already driven to `now` by
+            // run_until before this decision point.)
+            if de.sim.is_idle() {
+                de.sim.account_idle(now);
+                de.cursor = de.cursor.max(now);
+            }
+            let se = &mut src.engines[eng_idx];
+            let Some(ckpt) = se.sim.checkpoint(ri.id) else {
+                continue;
+            };
+            match de.sim.restore(ckpt, now + stall) {
+                Ok(()) => {
+                    // Scoreboard strike/insert ride the existing delta
+                    // journal, keeping both projection trackers
+                    // coherent without special cases.
+                    se.sb.strike(ri.id);
+                    de.sb.insert(entry);
+                    src.route_epoch += 1;
+                    dst.route_epoch += 1;
+                    dst.migrated_ids.insert(ri.id);
+                    dst.migration_energy += mig.transfer_energy_j(stall);
+                    dst.stats.migrated_in += 1;
+                    src.stats.migrated_out += 1;
+                    counters.migrations += 1;
+                    // The destination's batch composition changed:
+                    // re-run the §IV-E controller, exactly as a
+                    // completion or admission would.
+                    if policy.throttling {
+                        rethrottle(de, !dst.queue.is_empty(), model, &dst.sched);
+                    }
+                }
+                Err(ckpt) => {
+                    // Raced with the capacity pre-check (defensive):
+                    // roll back onto the source, whose blocks the
+                    // checkpoint just freed.
+                    se.sim
+                        .restore(ckpt, now)
+                        .expect("rollback restore onto the migration source");
+                    counters.refused_capacity += 1;
+                }
+            }
+        }
+    }
 }
 
 /// Sum of KV blocks the queued prompts will demand — shared by the
@@ -1978,6 +2265,191 @@ mod tests {
         ];
         replicas[1].active = false;
         assert_eq!(select_scale_in_victim(&replicas), Some(0));
+    }
+
+    #[test]
+    fn scale_out_order_is_capacity_and_energy_aware() {
+        // Mixed inactive pool: TP1 (120 blocks), TP2 (439), TP4 (1050).
+        let mut replicas = vec![
+            test_replica(0, llama2_13b(4)),
+            test_replica(1, llama2_13b(2)),
+            test_replica(2, llama2_13b(1)),
+        ];
+        for r in replicas.iter_mut() {
+            r.active = false;
+        }
+        // Long-prompt mix (10k tokens -> 157 blocks): TP1 is
+        // infeasible and must rank strictly last, whatever its J/token.
+        let order = select_scale_out_order(&replicas, 10_000);
+        assert_eq!(order.len(), 3);
+        assert_eq!(*order.last().unwrap(), 2, "infeasible TP1 ranks last");
+        // Short mix: every spec is feasible; the order must follow the
+        // projected J/token ranking of the fit function itself.
+        let order = select_scale_out_order(&replicas, 64);
+        let ept = |i: usize| scale_out_fit(&replicas[i].respec(), 64).1;
+        assert!(
+            ept(order[0]) <= ept(order[1]) && ept(order[1]) <= ept(order[2]),
+            "order {order:?} not sorted by J/token"
+        );
+        // Identical specs tie -> index order (the pre-scoring
+        // first-inactive behavior, byte-identical for homogeneous
+        // fleets).
+        let mut homo = vec![
+            test_replica(0, llama2_13b(2)),
+            test_replica(1, llama2_13b(2)),
+            test_replica(2, llama2_13b(2)),
+        ];
+        for r in homo.iter_mut() {
+            r.active = false;
+        }
+        assert_eq!(select_scale_out_order(&homo, 64), vec![0, 1, 2]);
+        // Active replicas and pending spawns are not candidates.
+        homo[0].active = true;
+        homo[1].activation_ready = Some(5.0);
+        assert_eq!(select_scale_out_order(&homo, 64), vec![2]);
+    }
+
+    #[test]
+    fn p95_prompt_of_window() {
+        let mut w: VecDeque<(f64, u32)> = VecDeque::new();
+        assert_eq!(p95_prompt(&w), 1);
+        for i in 1..=100u32 {
+            w.push_back((i as f64, i * 10));
+        }
+        let p = p95_prompt(&w);
+        assert!((900..=1000).contains(&p), "p95 {p}");
+    }
+
+    fn migration_test_pair() -> (Vec<Replica>, PerfModel) {
+        let spec = llama2_13b(2);
+        let model = PerfModel::train(&[spec.clone()], 40, 0);
+        let replicas = vec![
+            test_replica(0, spec.clone()),
+            test_replica(1, spec.clone()),
+        ];
+        (replicas, model)
+    }
+
+    /// Admit a resident mid-generation onto replica `i`'s engine with a
+    /// matching scoreboard entry (the state scale-in migration sees).
+    fn seed_resident(rp: &mut Replica, id: u64, prompt: u32, deadline: f64) {
+        rp.engines[0]
+            .sim
+            .admit(test_request(id, prompt), 0.0, false)
+            .unwrap();
+        rp.engines[0].sim.run_iteration(0.0); // prefill done
+        rp.engines[0].sb.insert(Entry {
+            id,
+            scheduled_iter: 0,
+            prompt_tokens: prompt,
+            predicted_gen: 200,
+            deadline_s: deadline,
+            lost: false,
+        });
+    }
+
+    use crate::coordinator::scoreboard::Entry;
+
+    #[test]
+    fn migrate_residents_moves_request_to_survivor() {
+        let (mut replicas, model) = migration_test_pair();
+        seed_resident(&mut replicas[0], 7, 640, 1e9);
+        replicas[0].deactivate(1.0);
+        let mig = MigrationSpec::enabled_default();
+        let mut counters = MigrationCounters::default();
+        migrate_residents(
+            &mut replicas,
+            0,
+            1.0,
+            Policy::throttle_only(),
+            &model,
+            &mig,
+            &mut counters,
+        );
+        assert_eq!(counters.migrations, 1);
+        assert_eq!(counters.refused_slo + counters.refused_capacity, 0);
+        assert!(replicas[0].engines[0].sim.is_idle(), "victim freed");
+        assert!(replicas[0].engines[0].sb.get(7).is_none());
+        assert_eq!(replicas[1].engines[0].sim.batch(), 1);
+        let e = replicas[1].engines[0].sb.get(7).expect("entry moved");
+        assert!(e.predicted_gen >= 2);
+        assert!(replicas[1].migrated_ids.contains(&7));
+        assert!(replicas[1].migration_energy > 0.0);
+        assert_eq!(replicas[0].stats.migrated_out, 1);
+        assert_eq!(replicas[1].stats.migrated_in, 1);
+        // The destination can run the request to completion.
+        let mut now = 1.0;
+        for _ in 0..500 {
+            if replicas[1].engines[0].sim.is_idle() {
+                break;
+            }
+            let r = replicas[1].engines[0].sim.run_iteration(now);
+            now += r.duration_s;
+        }
+        assert!(replicas[1].engines[0].sim.is_idle());
+    }
+
+    #[test]
+    fn migration_refused_without_destination_capacity() {
+        // Destination pool (5 blocks) cannot hold the 640-token
+        // resident: the request stays on the victim and drains.
+        let spec = llama2_13b(2);
+        let model = PerfModel::train(&[spec.clone()], 40, 0);
+        let tiny = crate::config::EngineSpec {
+            kv_blocks: 5,
+            ..spec.clone()
+        };
+        let mut replicas = vec![test_replica(0, spec), test_replica(1, tiny)];
+        seed_resident(&mut replicas[0], 7, 640, 1e9);
+        replicas[0].deactivate(1.0);
+        let mut counters = MigrationCounters::default();
+        migrate_residents(
+            &mut replicas,
+            0,
+            1.0,
+            Policy::throttle_only(),
+            &model,
+            &MigrationSpec::enabled_default(),
+            &mut counters,
+        );
+        assert_eq!(counters.migrations, 0);
+        assert!(counters.refused_capacity >= 1);
+        assert_eq!(replicas[0].engines[0].sim.batch(), 1, "stays and drains");
+        assert!(replicas[0].engines[0].sb.get(7).is_some());
+        assert_eq!(replicas[1].engines[0].sim.batch(), 0);
+    }
+
+    #[test]
+    fn migration_refused_by_slo_guard() {
+        // A transfer stall that pushes the request past its deadline:
+        // the guard refuses and the request drains on the victim
+        // instead.  The stall (≈25 s) stays BELOW the destination's
+        // 30.2 s E2E budget, so the refusal flows through the
+        // projection-based deadline check, not the stall-bound
+        // short-circuit — exercising the tracker-reading guard path
+        // (whose debug cross-checks also pin that it leaves the
+        // destination's incremental projection intact).
+        let (mut replicas, model) = migration_test_pair();
+        seed_resident(&mut replicas[0], 7, 640, 20.0);
+        replicas[0].deactivate(1.0);
+        let mig = MigrationSpec {
+            base_latency_s: 25.0,
+            ..MigrationSpec::enabled_default()
+        };
+        let mut counters = MigrationCounters::default();
+        migrate_residents(
+            &mut replicas,
+            0,
+            1.0,
+            Policy::throttle_only(),
+            &model,
+            &mig,
+            &mut counters,
+        );
+        assert_eq!(counters.migrations, 0);
+        assert_eq!(counters.refused_slo, 1);
+        assert_eq!(replicas[0].engines[0].sim.batch(), 1, "stays and drains");
+        assert_eq!(replicas[1].engines[0].sim.batch(), 0);
     }
 
     #[test]

@@ -78,6 +78,13 @@ impl KvAllocator {
         self.held.get(&id).map(|(_, b)| b.len() as u32).unwrap_or(0)
     }
 
+    /// Token occupancy registered for one request (the checkpoint /
+    /// restore unit: restoring at this count re-allocates exactly the
+    /// blocks the request held).
+    pub fn tokens_of(&self, id: RequestId) -> Option<u32> {
+        self.held.get(&id).map(|(t, _)| *t)
+    }
+
     /// Register a request at `tokens` occupancy (prompt after prefill).
     pub fn allocate(&mut self, id: RequestId, tokens: u32) -> Result<(), KvExhausted> {
         assert!(
@@ -161,6 +168,18 @@ mod tests {
         assert_eq!(blocks_for(1, 64), 1);
         assert_eq!(blocks_for(64, 64), 1);
         assert_eq!(blocks_for(65, 64), 2);
+    }
+
+    #[test]
+    fn tokens_of_tracks_occupancy() {
+        let mut kv = KvAllocator::new(10, 64);
+        assert_eq!(kv.tokens_of(1), None);
+        kv.allocate(1, 100).unwrap();
+        assert_eq!(kv.tokens_of(1), Some(100));
+        kv.grow_to(1, 130).unwrap();
+        assert_eq!(kv.tokens_of(1), Some(130));
+        kv.release(1);
+        assert_eq!(kv.tokens_of(1), None);
     }
 
     #[test]

@@ -20,4 +20,4 @@ pub mod sim;
 
 pub use kv_cache::KvAllocator;
 pub use request::{Request, RequestId, RequestOutcome};
-pub use sim::{EngineSim, IterationReport};
+pub use sim::{EngineSim, IterationReport, KvCheckpoint, ResidentInfo};

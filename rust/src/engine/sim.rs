@@ -35,6 +35,11 @@ struct Active {
     lost: bool,
     /// Stalled by KV exhaustion in the previous iteration.
     stalled: bool,
+    /// Live-migration transfer stall: until this instant the row holds
+    /// its KV blocks (and counts in the batch) but produces no token —
+    /// the KV pages are still streaming in from the source replica.
+    /// 0.0 for every non-migrated request.
+    resume_at_s: f64,
 }
 
 /// Public per-request view for the coordinator's scoreboard sync.
@@ -46,6 +51,52 @@ pub struct ActiveInfo {
     pub generated: u32,
     pub predicted_gen: u32,
     pub lost: bool,
+}
+
+/// Serialized state of one resident request: its KV block ownership
+/// (as a token occupancy — restoring re-allocates exactly the blocks
+/// held) plus generation progress.  The unit of live migration: a
+/// checkpoint taken on one [`EngineSim`] restores onto another with
+/// re-allocation, preserving every latency-relevant timestamp so the
+/// request's outcome metrics (TTFT, E2E, queue time) stay continuous
+/// across the move.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvCheckpoint {
+    pub req: Request,
+    /// When the scheduler originally admitted the request.
+    pub scheduled_s: f64,
+    /// Tokens generated so far.
+    pub generated: u32,
+    /// Prefill had not run yet (the prompt KV does not exist; a
+    /// restore re-runs prefill on the destination).
+    pub prefill_pending: bool,
+    pub first_token_s: Option<f64>,
+    pub lost: bool,
+    /// Token occupancy registered in the KV allocator at checkpoint
+    /// time — what the destination must re-allocate.
+    pub kv_tokens: u32,
+}
+
+impl KvCheckpoint {
+    /// Blocks the checkpoint occupies on an engine with `block_tokens`
+    /// tokens per block (the restore-side capacity requirement and the
+    /// transfer-cost input).
+    pub fn blocks(&self, block_tokens: u32) -> u32 {
+        crate::engine::kv_cache::blocks_for(self.kv_tokens, block_tokens)
+    }
+}
+
+/// Coordinator-visible snapshot of one resident request (migration
+/// candidate enumeration).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResidentInfo {
+    pub id: RequestId,
+    pub prompt_tokens: u32,
+    pub generated: u32,
+    pub prefill_pending: bool,
+    pub lost: bool,
+    /// Token occupancy registered in the KV allocator.
+    pub kv_tokens: u32,
 }
 
 /// What happened during one engine iteration.
@@ -69,6 +120,8 @@ pub struct IterationReport {
     pub completed: Vec<RequestOutcome>,
     /// Rows stalled by KV exhaustion this iteration.
     pub stalled: u32,
+    /// Rows holding KV but still mid-migration-transfer (no token).
+    pub in_transit: u32,
     /// Requests preempted to break a total KV deadlock (vLLM-style
     /// recompute preemption): their blocks are released and the caller
     /// must re-queue them (they re-run prefill from scratch).
@@ -177,7 +230,81 @@ impl EngineSim {
             first_token_s: None,
             lost,
             stalled: false,
+            resume_at_s: 0.0,
             req,
+        });
+        Ok(())
+    }
+
+    /// Resident requests eligible for checkpointing, with their KV
+    /// occupancy (migration-candidate enumeration).
+    pub fn residents(&self) -> Vec<ResidentInfo> {
+        self.active
+            .iter()
+            .map(|a| ResidentInfo {
+                id: a.req.id,
+                prompt_tokens: a.req.prompt_tokens,
+                generated: a.generated,
+                prefill_pending: a.prefill_pending,
+                lost: a.lost,
+                kv_tokens: self.kv.tokens_of(a.req.id).unwrap_or(0),
+            })
+            .collect()
+    }
+
+    /// Serialize a resident request's KV ownership + generation
+    /// progress and REMOVE it from this engine (its blocks are
+    /// released).  Returns `None` for unknown ids.  The checkpoint
+    /// restores onto any engine with room via [`Self::restore`];
+    /// restoring back onto this engine is always possible (the blocks
+    /// were just freed), so a failed migration can be rolled back.
+    pub fn checkpoint(&mut self, id: RequestId) -> Option<KvCheckpoint> {
+        let pos = self.active.iter().position(|a| a.req.id == id)?;
+        let kv_tokens = self.kv.tokens_of(id).unwrap_or(0);
+        let a = self.active.swap_remove(pos);
+        self.kv.release(id);
+        Some(KvCheckpoint {
+            req: a.req,
+            scheduled_s: a.scheduled_s,
+            generated: a.generated,
+            prefill_pending: a.prefill_pending,
+            first_token_s: a.first_token_s,
+            lost: a.lost,
+            kv_tokens,
+        })
+    }
+
+    /// Restore a checkpointed request onto this engine: re-allocates
+    /// its KV blocks and re-joins the batch at the next iteration
+    /// boundary.  `resume_at_s` models the KV transfer stall — until
+    /// then the row holds its blocks but emits no token (pass the
+    /// checkpoint instant for a free local restore).  On failure (KV or
+    /// batch slot) the engine is untouched and the checkpoint is handed
+    /// back so the caller can restore it elsewhere.
+    pub fn restore(
+        &mut self,
+        ckpt: KvCheckpoint,
+        resume_at_s: f64,
+    ) -> Result<(), KvCheckpoint> {
+        if self.batch() >= self.spec.max_batch {
+            return Err(ckpt);
+        }
+        let tokens = ckpt.kv_tokens.max(ckpt.req.prompt_tokens).max(1);
+        if self.kv.allocate(ckpt.req.id, tokens).is_err() {
+            return Err(ckpt);
+        }
+        self.active.push(Active {
+            scheduled_iter: self.iter_index,
+            scheduled_s: ckpt.scheduled_s,
+            generated: ckpt.generated,
+            prefill_pending: ckpt.prefill_pending,
+            first_token_s: ckpt.first_token_s,
+            lost: ckpt.lost,
+            stalled: false,
+            // A pending prefill has no KV to transfer — it recomputes
+            // here and may start immediately.
+            resume_at_s: if ckpt.prefill_pending { 0.0 } else { resume_at_s },
+            req: ckpt.req,
         });
         Ok(())
     }
@@ -226,6 +353,7 @@ impl EngineSim {
         // Token bookkeeping.
         let mut tokens = 0u32;
         let mut stalled = 0u32;
+        let mut in_transit = 0u32;
         let mut completed = Vec::new();
         let mut i = 0;
         while i < self.active.len() {
@@ -236,6 +364,12 @@ impl EngineSim {
                 a.generated = 1;
                 a.first_token_s = Some(end);
                 tokens += 1;
+            } else if a.resume_at_s > now {
+                // Live-migration transfer still in flight: the row
+                // holds its blocks and occupies a batch slot but emits
+                // no token this iteration (never true for non-migrated
+                // rows, whose resume_at_s is 0).
+                in_transit += 1;
             } else {
                 // Decode: grow KV by one token, then emit.
                 let want = a.req.prompt_tokens + a.generated + 1;
@@ -267,7 +401,11 @@ impl EngineSim {
         // recompute here; the admission KV check exists to make this
         // rare).
         let mut evicted = Vec::new();
-        let live_decodes = self.active.iter().filter(|a| !a.prefill_pending).count() as u32;
+        let live_decodes = self
+            .active
+            .iter()
+            .filter(|a| !a.prefill_pending && a.resume_at_s <= now)
+            .count() as u32;
         if stalled > 0 && stalled == live_decodes && self.kv.free_blocks() == 0 {
             if self.active.len() == 1 {
                 // A sole resident request larger than the whole pool can
@@ -310,6 +448,7 @@ impl EngineSim {
             tokens,
             completed,
             stalled,
+            in_transit,
             evicted,
         };
         self.iter_index += 1;
@@ -510,6 +649,114 @@ mod tests {
         assert_eq!(drained.len(), 2);
         assert!(e.is_idle());
         assert_eq!(e.kv_blocks_used(), 0);
+    }
+
+    #[test]
+    fn checkpoint_removes_and_restore_rejoins() {
+        let mut e = engine();
+        e.admit(req(1, 640, 50, 0.0), 0.0, false).unwrap();
+        e.admit(req(2, 64, 50, 0.0), 0.0, false).unwrap();
+        let r = e.run_iteration(0.0);
+        let t = r.duration_s;
+        let used_before = e.kv_blocks_used();
+        let ri = e
+            .residents()
+            .into_iter()
+            .find(|r| r.id == 1)
+            .expect("resident");
+        assert_eq!(ri.generated, 1);
+        assert!(!ri.prefill_pending);
+        let ckpt = e.checkpoint(1).expect("checkpoint");
+        assert_eq!(ckpt.req.id, 1);
+        assert_eq!(ckpt.generated, 1);
+        assert_eq!(ckpt.kv_tokens, 640);
+        assert_eq!(e.batch(), 1);
+        assert!(e.kv_blocks_used() < used_before);
+        assert!(e.checkpoint(1).is_none(), "already checkpointed");
+        // Restore with no stall: the row rejoins and finishes.
+        e.restore(ckpt, t).unwrap();
+        assert_eq!(e.batch(), 2);
+        assert_eq!(e.kv_blocks_used(), used_before);
+        let mut now = t;
+        let mut done = vec![];
+        for _ in 0..200 {
+            if e.is_idle() {
+                break;
+            }
+            let r = e.run_iteration(now);
+            now += r.duration_s;
+            done.extend(r.completed.into_iter().map(|o| o.id));
+        }
+        done.sort_unstable();
+        assert_eq!(done, vec![1, 2]);
+        assert_eq!(e.kv_blocks_used(), 0);
+    }
+
+    #[test]
+    fn restore_rejected_without_capacity_returns_checkpoint() {
+        let mut src = engine();
+        src.admit(req(1, 640, 50, 0.0), 0.0, false).unwrap();
+        src.run_iteration(0.0);
+        let ckpt = src.checkpoint(1).unwrap();
+        // Destination whose whole pool is smaller than the checkpoint.
+        let spec = EngineSpec {
+            kv_blocks: 5,
+            ..llama2_13b(2)
+        };
+        let mut dst = EngineSim::new(spec, FREQ_MAX_MHZ);
+        let ckpt = dst.restore(ckpt, 0.0).unwrap_err();
+        assert_eq!(dst.batch(), 0);
+        assert_eq!(dst.kv_blocks_used(), 0);
+        // Rolling back onto the source always succeeds: its blocks
+        // were freed by the checkpoint.
+        src.restore(ckpt, 0.0).unwrap();
+        assert_eq!(src.batch(), 1);
+    }
+
+    #[test]
+    fn transit_stall_suppresses_tokens_until_resume() {
+        let mut e = engine();
+        e.admit(req(1, 64, 40, 0.0), 0.0, false).unwrap();
+        let r = e.run_iteration(0.0);
+        let t = r.duration_s;
+        let ckpt = e.checkpoint(1).unwrap();
+        // Restore with a transfer stall well past the next iterations.
+        e.restore(ckpt, t + 1.0).unwrap();
+        let mut now = t;
+        let r = e.run_iteration(now);
+        assert_eq!(r.in_transit, 1);
+        assert_eq!(r.tokens, 0);
+        assert_eq!(r.batch, 1, "transit rows still occupy the batch");
+        now += r.duration_s;
+        // Drive past the resume instant: tokens flow again.
+        let mut produced = 0;
+        for _ in 0..200 {
+            if e.is_idle() {
+                break;
+            }
+            let r = e.run_iteration(now);
+            now += r.duration_s;
+            produced += r.tokens;
+        }
+        assert!(e.is_idle());
+        assert_eq!(produced, 39, "remaining tokens after the stall");
+    }
+
+    #[test]
+    fn prefill_pending_checkpoint_recomputes_prefill() {
+        let mut e = engine();
+        e.admit(req(1, 500, 10, 0.0), 0.0, false).unwrap();
+        // Checkpoint BEFORE any iteration: prefill never ran.
+        let ckpt = e.checkpoint(1).unwrap();
+        assert!(ckpt.prefill_pending);
+        assert_eq!(ckpt.generated, 0);
+        let mut dst = engine();
+        // Even with a stall requested, a pending prefill restores
+        // runnable immediately (there is no KV to transfer).
+        dst.restore(ckpt, 5.0).unwrap();
+        let r = dst.run_iteration(0.0);
+        assert_eq!(r.prefills, 1);
+        assert_eq!(r.tokens, 1);
     }
 
     #[test]

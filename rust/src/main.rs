@@ -19,7 +19,7 @@
 use throttllem::cli::Args;
 use throttllem::config::models::{engine_by_name, llama2_13b, table2_engines};
 use throttllem::config::{
-    parse_fleet_jsonl, parse_replica_spec, ReplicaSpec, ServingConfig,
+    parse_fleet_jsonl, parse_replica_spec, MigrationSpec, ReplicaSpec, ServingConfig,
 };
 use throttllem::coordinator::{
     serve_fleet_plan, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
@@ -82,6 +82,28 @@ fn cli_scenario_requests(
     }
 }
 
+/// Parse the `--migration on|off` switch plus its cost knobs
+/// (`--migration-base-ms`, `--migration-gbps`, `--migration-power`)
+/// into a [`MigrationSpec`].  Off is the default: scale-in drains.
+fn migration_from_args(args: &Args) -> anyhow::Result<MigrationSpec> {
+    let enabled = match args.get("migration") {
+        Some(v) => MigrationSpec::parse_enabled(v)?,
+        None => false,
+    };
+    let mut m = if enabled {
+        MigrationSpec::enabled_default()
+    } else {
+        MigrationSpec::disabled()
+    };
+    m.base_latency_s = args.get_f64("migration-base-ms", m.base_latency_s * 1e3)? / 1e3;
+    m.gb_per_s = args.get_f64("migration-gbps", m.gb_per_s)?;
+    m.link_power_w = args.get_f64("migration-power", m.link_power_w)?;
+    anyhow::ensure!(m.gb_per_s > 0.0, "--migration-gbps must be positive");
+    anyhow::ensure!(m.base_latency_s >= 0.0, "--migration-base-ms must be >= 0");
+    anyhow::ensure!(m.link_power_w >= 0.0, "--migration-power must be >= 0");
+    Ok(m)
+}
+
 fn policy_by_name(name: &str) -> anyhow::Result<Policy> {
     Ok(match name {
         "triton" => Policy::triton(),
@@ -133,6 +155,10 @@ usage: throttllem <serve|profile|train-model|engines|real-serve> [--options]
                  {\"model\":\"llama2-13b\",\"tp\":2,\"count\":2})
                --autoscale-replicas  (opt in to fleet-axis scale in/out on an
                  explicit fleet; off by default to keep the capacity mix)
+               --migration on|off  (live KV migration of resident requests on
+                 fleet scale-in; off = drain-based scale-in, the default)
+               --migration-base-ms <ms> --migration-gbps <GB/s>
+               --migration-power <W>   (modeled transfer cost knobs)
   profile:     --engine <name> --samples <n>
   train-model: --engine <name> [--samples <n>]
   real-serve:  --artifacts <dir> --batch <n> --steps <n>";
@@ -247,7 +273,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         &cfg,
         policy,
         policy.autoscaling && replicas > 1,
-    );
+    )
+    .with_migration(migration_from_args(args)?);
     let fleet_out = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
     print_serve_report(&cfg, policy, router, replicas, &fleet_out);
     Ok(())
@@ -284,6 +311,7 @@ fn cmd_serve_hetero(
         autoscale_replicas: policy.autoscaling
             && n > 1
             && args.flag("autoscale-replicas"),
+        migration: migration_from_args(args)?,
     };
     let engines = plan.engines();
     // Fleet-wide knobs anchor on the highest-capacity engine; replicas
@@ -372,6 +400,22 @@ fn print_serve_report(
             fleet_out.replica_activations,
             fleet_out.replica_deactivations
         );
+        let mg = &fleet_out.migrations;
+        if mg.migrations + mg.refused_slo + mg.refused_capacity > 0 {
+            // No completed migrated request yet -> the attainment
+            // fraction is undefined; print a dash, not NaN%.
+            let att = s.migrated_e2e_attainment(cfg.slo.e2e_p99);
+            let att = if att.is_nan() {
+                "--".to_string()
+            } else {
+                format!("{:.1}%", att * 100.0)
+            };
+            println!(
+                "live migrations    : {} ok / {} slo-refused / {} capacity-refused \
+                 | migrated E2E att. {att} | link energy {:.1} J",
+                mg.migrations, mg.refused_slo, mg.refused_capacity, s.migration_energy_j
+            );
+        }
         println!(
             "{:<8} {:<16} {:>8} {:>10} {:>8} {:>10} {:>10} {:>9}",
             "replica",

@@ -136,6 +136,16 @@ pub struct ServingStats {
     /// idle) and were rejected.
     pub dropped: u64,
     pub wall_s: f64,
+    /// Requests live-migrated INTO this replica on fleet scale-in.
+    pub migrated_in: u64,
+    /// Requests live-migrated AWAY from this replica on fleet scale-in.
+    pub migrated_out: u64,
+    /// Modeled link/host energy of inbound KV migrations, J (already
+    /// included in `total_energy_j`).
+    pub migration_energy_j: f64,
+    /// E2E latencies of completions that arrived via live migration —
+    /// the migrated-request attainment series.
+    pub migrated_e2e: Series,
 }
 
 impl ServingStats {
@@ -179,6 +189,12 @@ impl ServingStats {
         self.tbt.frac_within(slo)
     }
 
+    /// Fraction of live-migrated completions whose E2E beats `slo`
+    /// (NaN when nothing migrated — the `--migration off` case).
+    pub fn migrated_e2e_attainment(&self, slo: f64) -> f64 {
+        self.migrated_e2e.frac_within(slo)
+    }
+
     /// Fold another replica's serving stats into this one (fleet
     /// aggregation): sample series concatenate, counters and energy
     /// add, and the wall clock is the latest replica to drain.
@@ -196,6 +212,10 @@ impl ServingStats {
         self.lost += other.lost;
         self.dropped += other.dropped;
         self.wall_s = self.wall_s.max(other.wall_s);
+        self.migrated_in += other.migrated_in;
+        self.migrated_out += other.migrated_out;
+        self.migration_energy_j += other.migration_energy_j;
+        self.migrated_e2e.extend_from(&other.migrated_e2e);
     }
 }
 
@@ -296,6 +316,27 @@ mod tests {
         assert!((a.wall_s - 9.0).abs() < 1e-12);
         assert_eq!(a.e2e.len(), 3);
         assert_eq!(a.e2e.values(), &[1.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn migration_fields_merge_and_attain() {
+        let mut a = ServingStats::default();
+        a.migrated_in = 2;
+        a.migrated_e2e.push(1.0);
+        a.migrated_e2e.push(5.0);
+        a.migration_energy_j = 10.0;
+        let mut b = ServingStats::default();
+        b.migrated_out = 3;
+        b.migrated_e2e.push(2.0);
+        b.migration_energy_j = 4.0;
+        a.merge_from(&b);
+        assert_eq!(a.migrated_in, 2);
+        assert_eq!(a.migrated_out, 3);
+        assert_eq!(a.migrated_e2e.len(), 3);
+        assert!((a.migration_energy_j - 14.0).abs() < 1e-12);
+        // 2 of 3 migrated completions inside a 3 s SLO.
+        assert!((a.migrated_e2e_attainment(3.0) - 2.0 / 3.0).abs() < 1e-12);
+        assert!(ServingStats::default().migrated_e2e_attainment(1.0).is_nan());
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //! decision, via the debug assertion inside `Replica::headroom_for`.
 
 use throttllem::config::models::llama2_13b;
-use throttllem::config::{ReplicaSpec, ServingConfig};
+use throttllem::config::{MigrationSpec, ReplicaSpec, ServingConfig};
 use throttllem::coordinator::{
     serve_fleet, serve_fleet_plan, FleetOutcome, FleetPlan, FleetSpec, PerfModel,
     Policy, RouterPolicy,
@@ -100,6 +100,7 @@ fn homogeneous_plan_reproduces_fleet_spec_outcomes_exactly() {
                 replicas: vec![ReplicaSpec::from_config(&cfg, policy.autoscaling); n],
                 router,
                 autoscale_replicas: false,
+                migration: MigrationSpec::disabled(),
             };
             let via_plan = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
             assert_fleets_identical(&via_spec, &via_plan);
@@ -208,6 +209,7 @@ fn per_replica_tp_ladders_autoscale_independently() {
         replicas: specs,
         router: RouterPolicy::LeastLoaded,
         autoscale_replicas: false,
+        migration: MigrationSpec::disabled(),
     };
     assert_eq!(plan.engines().len(), 3, "ladder + fixed dedup to 3 engines");
     let reqs = trace(6.0, 240.0, 17);

@@ -1,0 +1,243 @@
+//! Live-migration integration tests: checkpoint/restore round-trip
+//! bit-identity at the engine level, and the serve_fleet_plan contract
+//! that `--migration off` (and a migration pass whose every move is
+//! refused) is byte-identical to drain-based scale-in, while a real
+//! migration run frees scale-in victims earlier without costing SLO
+//! attainment.
+//!
+//! Edge-case unit coverage lives next to the code: destination
+//! capacity refusal and SLO-guard refusal paths in
+//! `coordinator/server.rs` tests, guard semantics (KV overflow, doomed
+//! residents, lost candidates, transfer-stall deadlines) in
+//! `coordinator/migration.rs` tests, and engine-level
+//! checkpoint/restore corners (capacity rollback, transfer stall,
+//! pending prefill) in `engine/sim.rs` tests.
+
+use throttllem::config::models::llama2_13b;
+use throttllem::config::{MigrationSpec, ServingConfig};
+use throttllem::coordinator::{
+    serve_scenario, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
+};
+use throttllem::engine::request::Request;
+use throttllem::engine::EngineSim;
+use throttllem::gpusim::dvfs::FREQ_MAX_MHZ;
+use throttllem::workload::fleet_trace::ScenarioKind;
+
+fn req(id: u64, prompt: u32, gen: u32) -> Request {
+    Request {
+        id,
+        prompt_tokens: prompt,
+        gen_tokens: gen,
+        predicted_gen: gen,
+        arrival_s: 0.0,
+    }
+}
+
+/// Checkpoint + zero-stall restore onto the SAME engine must be
+/// unobservable: every subsequent iteration duration, energy sample
+/// and completion metric matches an untouched twin engine to the bit.
+#[test]
+fn checkpoint_restore_roundtrip_is_bit_identical() {
+    let mut plain = EngineSim::new(llama2_13b(2), FREQ_MAX_MHZ);
+    let mut cycled = EngineSim::new(llama2_13b(2), FREQ_MAX_MHZ);
+    for e in [&mut plain, &mut cycled] {
+        e.admit(req(1, 640, 60), 0.0, false).unwrap();
+        e.admit(req(2, 200, 40), 0.0, false).unwrap();
+    }
+    // One fused-prefill iteration on both.
+    let r_p = plain.run_iteration(0.0);
+    let r_c = cycled.run_iteration(0.0);
+    assert_eq!(r_p.duration_s.to_bits(), r_c.duration_s.to_bits());
+    let mut t = r_p.duration_s;
+
+    // Round-trip request 1 through a checkpoint at the boundary.
+    let before_blocks = cycled.kv_blocks_used();
+    let ckpt = cycled.checkpoint(1).expect("resident");
+    assert_eq!(ckpt.kv_tokens, 640);
+    cycled.restore(ckpt, t).expect("restore onto same engine");
+    assert_eq!(cycled.kv_blocks_used(), before_blocks);
+    assert_eq!(cycled.batch(), plain.batch());
+
+    // Lock-step the two engines to completion: bit-identical timing,
+    // energy and outcomes (completion order within an iteration may
+    // differ after the swap_remove/push cycle, so compare by id).
+    let mut out_p = vec![];
+    let mut out_c = vec![];
+    for _ in 0..200 {
+        if plain.is_idle() {
+            break;
+        }
+        let rp = plain.run_iteration(t);
+        let rc = cycled.run_iteration(t);
+        assert_eq!(rp.duration_s.to_bits(), rc.duration_s.to_bits());
+        assert_eq!(rp.energy_j.to_bits(), rc.energy_j.to_bits());
+        assert_eq!(rp.batch, rc.batch);
+        assert_eq!(rp.kv_blocks, rc.kv_blocks);
+        assert_eq!(rp.tokens, rc.tokens);
+        assert_eq!(rc.in_transit, 0, "zero-stall restore never transits");
+        t += rp.duration_s;
+        out_p.extend(rp.completed);
+        out_c.extend(rc.completed);
+    }
+    assert!(plain.is_idle() && cycled.is_idle());
+    assert_eq!(
+        plain.total_energy_j().to_bits(),
+        cycled.total_energy_j().to_bits()
+    );
+    out_p.sort_by_key(|o| o.id);
+    out_c.sort_by_key(|o| o.id);
+    assert_eq!(out_p.len(), out_c.len());
+    for (a, b) in out_p.iter().zip(&out_c) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.e2e_s.to_bits(), b.e2e_s.to_bits());
+        assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits());
+        assert_eq!(a.tbt_avg_s.to_bits(), b.tbt_avg_s.to_bits());
+        assert_eq!(a.gen_tokens, b.gen_tokens);
+    }
+}
+
+/// The diurnal cold-start scenario on a fleet-autoscaled homogeneous
+/// deployment — the configuration the CI migration gate runs.
+fn diurnal_run(migration: MigrationSpec) -> (ServingConfig, FleetOutcome, usize) {
+    let policy = Policy::throttllem();
+    let cfg = ServingConfig::throttllem(llama2_13b(2));
+    let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
+        .with_migration(migration);
+    let model = PerfModel::train(&plan.engines(), 40, 0);
+    let (_, reqs, out) = serve_scenario(
+        &cfg,
+        policy,
+        &model,
+        &plan,
+        ScenarioKind::Diurnal,
+        420.0,
+        0.55,
+        0,
+    );
+    (cfg, out, reqs.len())
+}
+
+/// Bit-identical comparison of two fleet outcomes (stats + counters).
+fn assert_outcomes_identical(a: &FleetOutcome, b: &FleetOutcome) {
+    let (sa, sb) = (&a.total.stats, &b.total.stats);
+    assert_eq!(sa.completed, sb.completed);
+    assert_eq!(sa.dropped, sb.dropped);
+    assert_eq!(sa.lost, sb.lost);
+    assert_eq!(sa.total_tokens, sb.total_tokens);
+    assert_eq!(sa.total_energy_j.to_bits(), sb.total_energy_j.to_bits());
+    assert_eq!(sa.wall_s.to_bits(), sb.wall_s.to_bits());
+    assert_eq!(sa.e2e.values(), sb.e2e.values());
+    assert_eq!(sa.tbt.values(), sb.tbt.values());
+    assert_eq!(sa.freq.values(), sb.freq.values());
+    assert_eq!(sa.power.values(), sb.power.values());
+    assert_eq!(sa.iter_tbt.values(), sb.iter_tbt.values());
+    assert_eq!(a.total.timeline.len(), b.total.timeline.len());
+    assert_eq!(a.replica_activations, b.replica_activations);
+    assert_eq!(a.replica_deactivations, b.replica_deactivations);
+    assert_eq!(a.rerouted, b.rerouted);
+    for (x, y) in a.total.outcomes.iter().zip(&b.total.outcomes) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.e2e_s.to_bits(), y.e2e_s.to_bits());
+    }
+}
+
+/// `--migration off` runs the exact drain-based serving loop: the
+/// migration machinery must be structurally unreachable.  A default
+/// plan (old constructors) and an explicit `MigrationSpec::disabled()`
+/// are the same thing, and nothing migration-related is recorded.
+#[test]
+fn migration_off_is_drain_based_scale_in() {
+    let (_, out, n) = diurnal_run(MigrationSpec::disabled());
+    assert_eq!(
+        out.total.stats.completed + out.total.stats.dropped,
+        n as u64
+    );
+    assert!(
+        out.replica_deactivations >= 1,
+        "scenario must exercise fleet scale-in"
+    );
+    assert_eq!(out.migrations.migrations, 0);
+    assert_eq!(out.migrations.refused_slo, 0);
+    assert_eq!(out.migrations.refused_capacity, 0);
+    assert_eq!(out.total.stats.migrated_in, 0);
+    assert_eq!(out.total.stats.migrated_out, 0);
+    assert_eq!(out.total.stats.migration_energy_j, 0.0);
+    assert!(out.total.stats.migrated_e2e.is_empty());
+    // Determinism pin: a second identical run is bit-identical.
+    let (_, again, _) = diurnal_run(MigrationSpec::disabled());
+    assert_outcomes_identical(&out, &again);
+}
+
+/// A migration pass whose every move is refused (transfer latency far
+/// beyond the E2E budget, tripping the guard's unconditional stall
+/// bound before anything else runs) must be byte-identical to
+/// `--migration off`.  The projection-reading refusal path is pinned
+/// separately: `coordinator/server.rs`'s guard-refusal unit test
+/// drives a sub-budget stall through the deadline check, and the
+/// tracker's debug cross-checks assert on every later use that the
+/// guard left the destination's incremental projection intact.
+#[test]
+fn all_refused_migration_is_byte_identical_to_off() {
+    let (_, off, _) = diurnal_run(MigrationSpec::disabled());
+    let refused_all = MigrationSpec {
+        base_latency_s: 1e9,
+        ..MigrationSpec::enabled_default()
+    };
+    let (_, on, _) = diurnal_run(refused_all);
+    assert_eq!(on.migrations.migrations, 0, "every move must be refused");
+    assert_outcomes_identical(&off, &on);
+    assert_eq!(on.total.stats.migrated_in, 0);
+    assert_eq!(on.total.stats.migration_energy_j, 0.0);
+}
+
+/// Live migration on the diurnal cold-start scenario: scale-in victims
+/// hand their residents over and power off earlier, at no SLO cost.
+/// (The strict fewer-iterations/attainment gate also runs in CI via
+/// `fleet_demo --migrate-compare` on the full-length scenario.)
+#[test]
+fn diurnal_migration_frees_victims_without_slo_cost() {
+    let (cfg, off, n) = diurnal_run(MigrationSpec::disabled());
+    let (_, on, n_on) = diurnal_run(MigrationSpec::enabled_default());
+    assert_eq!(n, n_on, "same deterministic trace on both legs");
+    assert_eq!(
+        on.total.stats.completed + on.total.stats.dropped,
+        n as u64,
+        "conservation with migration on"
+    );
+    assert!(on.replica_deactivations >= 1);
+    let s = &on.total.stats;
+    if on.migrations.migrations > 0 {
+        // Bookkeeping is consistent...
+        assert_eq!(s.migrated_in, on.migrations.migrations);
+        assert_eq!(s.migrated_out, on.migrations.migrations);
+        assert!(s.migration_energy_j > 0.0);
+        assert!(s.migrated_e2e.len() as u64 <= s.migrated_in);
+        // ...scale-in completed earlier (victims stop iterating
+        // instead of serving out their residents)...
+        assert!(
+            on.total.timeline.len() <= off.total.timeline.len(),
+            "migration must not add fleet iterations: {} vs {}",
+            on.total.timeline.len(),
+            off.total.timeline.len()
+        );
+        // ...and attainment did not regress (the SLO guard's job).
+        let att = |o: &FleetOutcome| {
+            let a = o.total.stats.e2e_slo_attainment(cfg.slo.e2e_p99);
+            if a.is_nan() {
+                1.0
+            } else {
+                a
+            }
+        };
+        assert!(
+            att(&on) >= att(&off) - 1e-9,
+            "attainment regressed: {} vs {}",
+            att(&on),
+            att(&off)
+        );
+    } else {
+        // No busy victim on this trace: migration must then be a
+        // perfect no-op.
+        assert_outcomes_identical(&off, &on);
+    }
+}
