@@ -26,11 +26,15 @@
 //!     happen, scale-in completes earlier (fewer engine iterations)
 //!     and SLO attainment is no worse.
 //!
+//! Every mode accepts `--threads <n>` (RUN-phase worker threads,
+//! 0 = auto): any value is bit-identical to `--threads 1`, so the flag
+//! only changes wall-clock time, never results.
+//!
 //! Run with:
 //!   cargo run --release --example fleet_demo [-- --replicas 4 --duration 600]
 //!   cargo run --release --example fleet_demo -- --mixed [--duration 600]
 //!   cargo run --release --example fleet_demo -- --scenario burst --record t.jsonl
-//!   cargo run --release --example fleet_demo -- --replay t.jsonl
+//!   cargo run --release --example fleet_demo -- --replay t.jsonl --threads 4
 //!   cargo run --release --example fleet_demo -- --migrate-compare --duration 600
 
 use throttllem::cli::Args;
@@ -49,14 +53,20 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let duration = args.get_f64("duration", 600.0)?;
     let seed = args.get_u64("seed", 0)?;
+    let threads = args.get_u64("threads", 1)? as usize;
     if args.flag("migrate-compare") {
         migrate_compare(&args)
     } else if args.get("scenario").is_some() || args.get("replay").is_some() {
         scenario_mode(&args)
     } else if args.flag("mixed") {
-        mixed_demo(duration, seed)
+        mixed_demo(duration, seed, threads)
     } else {
-        homogeneous_demo(args.get_u64("replicas", 4)? as usize, duration, seed)
+        homogeneous_demo(
+            args.get_u64("replicas", 4)? as usize,
+            duration,
+            seed,
+            threads,
+        )
     }
 }
 
@@ -84,8 +94,8 @@ fn migrate_compare(args: &Args) -> anyhow::Result<()> {
     // axis migration serves is in play.
     let policy = Policy::throttllem();
     let cfg = ServingConfig::throttllem(llama2_13b(2));
-    let base =
-        FleetPlan::homogeneous(replicas, RouterPolicy::RoundRobin, &cfg, policy, true);
+    let base = FleetPlan::homogeneous(replicas, RouterPolicy::RoundRobin, &cfg, policy, true)
+        .with_threads(args.get_u64("threads", 1)? as usize);
     let model = PerfModel::train(&base.engines(), 100, seed);
     let peak = args.get_f64("peak", 0.55 * base.rated_rps())?;
     let (meta, mut reqs) =
@@ -194,6 +204,7 @@ fn scenario_mode(args: &Args) -> anyhow::Result<()> {
         }
         (None, None) => unreachable!("scenario_mode needs --scenario/--replay"),
     };
+    let threads = args.get_u64("threads", 1)? as usize;
     let policy = Policy::throttle_only();
     let (plan, cfg, label) = if args.flag("mixed") {
         let specs = vec![
@@ -203,15 +214,15 @@ fn scenario_mode(args: &Args) -> anyhow::Result<()> {
             ReplicaSpec::fixed(llama2_13b(1)),
         ];
         (
-            FleetPlan::heterogeneous(specs, RouterPolicy::RoundRobin),
+            FleetPlan::heterogeneous(specs, RouterPolicy::RoundRobin).with_threads(threads),
             ServingConfig::throttllem(llama2_13b(4)),
             "mixed fleet (1xTP4 + 1xTP2 + 2xTP1)".to_string(),
         )
     } else {
         let replicas = args.get_u64("replicas", 4)? as usize;
         let cfg = ServingConfig::throttllem(llama2_13b(2));
-        let plan =
-            FleetPlan::homogeneous(replicas, RouterPolicy::RoundRobin, &cfg, policy, false);
+        let plan = FleetPlan::homogeneous(replicas, RouterPolicy::RoundRobin, &cfg, policy, false)
+            .with_threads(threads);
         (plan, cfg, format!("{replicas} x llama2-13b-tp2"))
     };
     let model = PerfModel::train(&plan.engines(), 100, seed);
@@ -340,7 +351,12 @@ fn print_replica_breakdown(out: &FleetOutcome) {
     }
 }
 
-fn homogeneous_demo(replicas: usize, duration: f64, seed: u64) -> anyhow::Result<()> {
+fn homogeneous_demo(
+    replicas: usize,
+    duration: f64,
+    seed: u64,
+    threads: usize,
+) -> anyhow::Result<()> {
     let spec = llama2_13b(2);
     let model = PerfModel::train(&[spec.clone()], 100, seed);
     // Right-scale to ~80% of the fleet's aggregate rated load.
@@ -383,7 +399,8 @@ fn homogeneous_demo(replicas: usize, duration: f64, seed: u64) -> anyhow::Result
     print_header();
     let mut detailed: Option<FleetOutcome> = None;
     for (name, policy, cfg, router) in combos {
-        let plan = FleetPlan::homogeneous(replicas, router, &cfg, policy, false);
+        let plan = FleetPlan::homogeneous(replicas, router, &cfg, policy, false)
+            .with_threads(threads);
         let out = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
         print_row(&name, &cfg, &out);
         if router == RouterPolicy::LeastLoaded {
@@ -403,14 +420,14 @@ fn homogeneous_demo(replicas: usize, duration: f64, seed: u64) -> anyhow::Result
     Ok(())
 }
 
-fn mixed_demo(duration: f64, seed: u64) -> anyhow::Result<()> {
+fn mixed_demo(duration: f64, seed: u64, threads: usize) -> anyhow::Result<()> {
     let specs = vec![
         ReplicaSpec::fixed(llama2_13b(4)),
         ReplicaSpec::fixed(llama2_13b(2)),
         ReplicaSpec::fixed(llama2_13b(1)),
         ReplicaSpec::fixed(llama2_13b(1)),
     ];
-    let base = FleetPlan::heterogeneous(specs, RouterPolicy::RoundRobin);
+    let base = FleetPlan::heterogeneous(specs, RouterPolicy::RoundRobin).with_threads(threads);
     let rated = base.rated_rps();
     let peak = 0.6 * rated;
     let cfg = ServingConfig::throttllem(llama2_13b(4));

@@ -12,21 +12,62 @@
 //! emitted to `BENCH_perf.json` (suite `perf_hotpath`) so CI tracks
 //! the trajectory.
 
-use throttllem::bench_util::{bench, black_box, section, write_bench_json, BenchResult};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use throttllem::bench_util::{
+    bench, black_box, section, single_run_result, write_bench_json, BenchResult,
+};
 use throttllem::config::models::llama2_13b;
-use throttllem::config::SloSpec;
+use throttllem::config::{ServingConfig, SloSpec};
 use throttllem::coordinator::projection::{project, project_entries, ProjectionTracker};
 use throttllem::coordinator::router::{headroom_score, HeadroomCache};
 use throttllem::coordinator::scheduler::{
     entry_for, evaluate_slo, evaluate_slo_entries, EvalScratch, Scheduler,
 };
 use throttllem::coordinator::scoreboard::{Entry, Scoreboard};
+use throttllem::coordinator::shard::steady_state_sweep;
 use throttllem::coordinator::throttle::{min_slo_frequency, min_slo_frequency_with};
-use throttllem::coordinator::PerfModel;
+use throttllem::coordinator::{
+    outcome_digest, serve_fleet_plan, FleetPlan, PerfModel, Policy, RouterPolicy,
+};
 use throttllem::engine::request::Request;
 use throttllem::engine::sim::EngineSim;
 use throttllem::gpusim::dvfs::{frequency_grid, FREQ_MAX_MHZ};
 use throttllem::sim::Pcg64;
+use throttllem::workload::trace::{synth_trace, TraceParams};
+use throttllem::workload::LengthPredictor;
+
+/// Counting allocator: tallies every heap allocation (alloc, zeroed,
+/// realloc) so the steady-state sweep below can assert the RUN-phase
+/// hot path performs no per-iteration allocations beyond amortized
+/// telemetry growth.  Deallocation is free of bookkeeping: the audit
+/// only cares about allocation pressure.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn scoreboard(n: u32, rng: &mut Pcg64) -> Scoreboard {
     let mut sb = Scoreboard::new();
@@ -277,6 +318,63 @@ fn main() {
     });
     println!("{r}");
     report.push(r);
+
+    // Steady-state allocation audit: one warm replica driven through
+    // repeated RUN-phase rounds; past the warm-up mark, the serving
+    // hot path reuses per-replica scratch (EvalScratch, the DVFS grid,
+    // headroom cache, queue ring), so allocations must stay bounded by
+    // amortized telemetry-Vec growth.  Advisory by default; a hard
+    // gate in debug builds and under THROTTLLEM_STRICT_ALLOC=1 (the
+    // CI bench job sets it).
+    section("steady-state allocation audit (coordinator/shard.rs)");
+    let audit_cfg = ServingConfig::throttllem(spec.clone());
+    let mut marked = 0u64;
+    let iters = steady_state_sweep(&audit_cfg, Policy::throttle_only(), &model, 64, 256, &mut || {
+        marked = ALLOCS.load(Ordering::Relaxed)
+    });
+    let allocs = ALLOCS.load(Ordering::Relaxed) - marked;
+    let budget = 2 * iters + 64;
+    println!(
+        "{iters} engine iterations after warm-up: {allocs} heap allocations \
+         ({:.3}/iter, budget {budget})",
+        allocs as f64 / iters.max(1) as f64
+    );
+    if cfg!(debug_assertions) || std::env::var("THROTTLLEM_STRICT_ALLOC").is_ok() {
+        assert!(
+            allocs <= budget,
+            "steady-state sweep allocated {allocs} times over {iters} \
+             iterations (budget {budget}): the RUN-phase hot path has \
+             grown a per-iteration allocation"
+        );
+        println!("strict allocation gate: PASS ({allocs} <= {budget})");
+    }
+
+    // Sharded-coordinator wall time at micro scale: an 8-replica fleet
+    // on one short trace at 1 vs 4 RUN-phase worker threads, with the
+    // bit-identity contract cross-checked via the outcome digest (the
+    // fleet bench runs the 64-replica version).  Neither entry is
+    // gate-tracked — these are wall times, not hot-path budgets.
+    section("sharded coordinator wall time (8 replicas, threads 1 vs 4)");
+    let fleet_spec = llama2_13b(2);
+    let fleet_cfg = ServingConfig::throttllem(fleet_spec.clone());
+    let policy = Policy::throttle_only();
+    let plan8 = FleetPlan::homogeneous(8, RouterPolicy::RoundRobin, &fleet_cfg, policy, false);
+    eprintln!("training model for the 8-replica fleet...");
+    let fleet_model = PerfModel::train(&plan8.engines(), 60, 0);
+    let peak = 0.5 * plan8.rated_rps();
+    let mut reqs = synth_trace(&TraceParams::short(120.0, peak, 0));
+    LengthPredictor::oracle().apply(&mut reqs, 1024);
+    let mut digests = Vec::new();
+    for threads in [1usize, 4] {
+        let plan = plan8.clone().with_threads(threads);
+        let t0 = Instant::now();
+        let out = serve_fleet_plan(&fleet_cfg, policy, &fleet_model, &reqs, &plan);
+        let r = single_run_result(&format!("serve fleet8 (threads={threads})"), t0.elapsed());
+        println!("{r}");
+        digests.push(outcome_digest(&out));
+        report.push(r);
+    }
+    assert_eq!(digests[0], digests[1], "threads=4 broke bit-identity");
 
     println!(
         "\nbudget check: admission+throttle mean must be << 35 ms; projection << 2 ms."

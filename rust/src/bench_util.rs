@@ -12,8 +12,9 @@
 //!     `BENCH_perf.json` run against the committed
 //!     `BENCH_baseline.json` (driven by the `bench_gate` binary in
 //!     CI: fail > 25% ns/op regression on tracked hot-path benches,
-//!     warn > 10%, cross-machine ratios normalized by the
-//!     [`CALIBRATION_BENCH`] fixed-work loop).
+//!     warn > 10%, the same bands on p50 and doubled bands on p99
+//!     when both files carry percentiles, cross-machine ratios
+//!     normalized by the [`CALIBRATION_BENCH`] fixed-work loop).
 
 use std::time::Instant;
 
@@ -34,6 +35,7 @@ pub struct BenchResult {
     pub mean_ns: f64,
     pub p50_ns: f64,
     pub p95_ns: f64,
+    pub p99_ns: f64,
     pub min_ns: f64,
     pub max_ns: f64,
 }
@@ -51,11 +53,12 @@ impl std::fmt::Display for BenchResult {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{:<40} {:>10.3} us/iter  (p50 {:>9.3}, p95 {:>9.3}, n={})",
+            "{:<40} {:>10.3} us/iter  (p50 {:>9.3}, p95 {:>9.3}, p99 {:>9.3}, n={})",
             self.name,
             self.mean_ns / 1e3,
             self.p50_ns / 1e3,
             self.p95_ns / 1e3,
+            self.p99_ns / 1e3,
             self.iters
         )
     }
@@ -92,6 +95,7 @@ fn summarize(name: &str, samples_ns: &mut [f64]) -> BenchResult {
         mean_ns: mean,
         p50_ns: pct(50.0),
         p95_ns: pct(95.0),
+        p99_ns: pct(99.0),
         min_ns: samples_ns[0],
         max_ns: samples_ns[n - 1],
     }
@@ -104,7 +108,8 @@ pub fn black_box<T>(x: T) -> T {
 }
 
 /// Write this suite's results into a machine-readable JSON report at
-/// `path` (`{"benches":[{suite,name,ns_per_op,p50_ns,p95_ns,iters}]}`).
+/// `path`
+/// (`{"benches":[{suite,name,ns_per_op,p50_ns,p95_ns,p99_ns,iters}]}`).
 /// Entries from OTHER suites already present in the file are
 /// preserved, so one report accumulates across bench binaries (the CI
 /// smoke job runs `fleet` then `perf_hotpath` into the same file).
@@ -134,6 +139,7 @@ pub fn write_bench_json_to(path: &str, suite: &str, results: &[BenchResult]) {
             ("ns_per_op", Json::Num(r.mean_ns)),
             ("p50_ns", Json::Num(r.p50_ns)),
             ("p95_ns", Json::Num(r.p95_ns)),
+            ("p99_ns", Json::Num(r.p99_ns)),
             ("iters", Json::Num(r.iters as f64)),
         ]));
     }
@@ -162,6 +168,7 @@ pub fn single_run_result(name: &str, elapsed: std::time::Duration) -> BenchResul
         mean_ns: ns,
         p50_ns: ns,
         p95_ns: ns,
+        p99_ns: ns,
         min_ns: ns,
         max_ns: ns,
     }
@@ -438,10 +445,40 @@ pub enum GateLevel {
     MissingCurrent,
 }
 
-/// One tracked bench's verdict.
+/// Which statistic of a tracked bench a [`GateFinding`] judges.  The
+/// tail gate gets doubled thresholds: p99 is the noisiest statistic a
+/// CI runner produces, and a real regression that ONLY moves the tail
+/// past 2x the warn band is still caught.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateMetric {
+    MeanNs,
+    P50Ns,
+    P99Ns,
+}
+
+impl GateMetric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GateMetric::MeanNs => "ns/op",
+            GateMetric::P50Ns => "p50",
+            GateMetric::P99Ns => "p99",
+        }
+    }
+
+    /// Threshold multiplier over [`GateConfig`] percentages.
+    fn slack(&self) -> f64 {
+        match self {
+            GateMetric::MeanNs | GateMetric::P50Ns => 1.0,
+            GateMetric::P99Ns => 2.0,
+        }
+    }
+}
+
+/// One tracked bench statistic's verdict.
 #[derive(Debug, Clone)]
 pub struct GateFinding {
     pub name: String,
+    pub metric: GateMetric,
     pub base_ns: f64,
     pub cur_ns: f64,
     /// Normalized cur/base ns ratio (1.0 = unchanged; NaN when
@@ -461,6 +498,10 @@ pub struct GateReport {
     /// The baseline declares itself a bootstrap placeholder (padded
     /// values committed before the first measured refresh).
     pub bootstrap: bool,
+    /// Tracked benches whose p50/p99 could not be gated because one
+    /// side predates the percentile fields — counted as warnings (the
+    /// gate warns, never fails, on baselines lacking percentiles).
+    pub missing_percentiles: usize,
 }
 
 impl GateReport {
@@ -473,10 +514,19 @@ impl GateReport {
             .iter()
             .filter(|f| matches!(f.level, GateLevel::Warn | GateLevel::MissingCurrent))
             .count()
+            + self.missing_percentiles
     }
 }
 
-fn bench_entries(doc: &Json) -> Vec<(String, String, f64)> {
+struct BenchEntry {
+    suite: String,
+    name: String,
+    ns: f64,
+    p50_ns: Option<f64>,
+    p99_ns: Option<f64>,
+}
+
+fn bench_entries(doc: &Json) -> Vec<BenchEntry> {
     let mut out = Vec::new();
     if let Some(arr) = doc.get("benches").and_then(|b| b.as_arr()) {
         for e in arr {
@@ -485,24 +535,34 @@ fn bench_entries(doc: &Json) -> Vec<(String, String, f64)> {
                 e.get("name").and_then(|s| s.as_str()),
                 e.get("ns_per_op").and_then(|v| v.as_f64()),
             ) {
-                out.push((suite.to_string(), name.to_string(), ns));
+                out.push(BenchEntry {
+                    suite: suite.to_string(),
+                    name: name.to_string(),
+                    ns,
+                    p50_ns: e.get("p50_ns").and_then(|v| v.as_f64()),
+                    p99_ns: e.get("p99_ns").and_then(|v| v.as_f64()),
+                });
             }
         }
     }
     out
 }
 
-fn find_ns(entries: &[(String, String, f64)], suite: &str, name: &str) -> Option<f64> {
-    entries
-        .iter()
-        .find(|(s, n, _)| s == suite && n == name)
-        .map(|&(_, _, ns)| ns)
+fn find_entry<'a>(
+    entries: &'a [BenchEntry],
+    suite: &str,
+    name: &str,
+) -> Option<&'a BenchEntry> {
+    entries.iter().find(|e| e.suite == suite && e.name == name)
 }
 
 /// Diff `current` against `baseline` (both parsed `BENCH_perf.json`
 /// documents): every tracked hot-path bench in the baseline must stay
-/// within `cfg.fail_pct` of its baseline ns/op, with ratios normalized
-/// by the [`CALIBRATION_BENCH`] ratio when both files carry it.
+/// within `cfg.fail_pct` of its baseline ns/op — and of its baseline
+/// p50/p99 when both sides carry percentile fields (p99 at doubled
+/// thresholds; pre-percentile baselines WARN, never fail) — with
+/// ratios normalized by the [`CALIBRATION_BENCH`] ratio when both
+/// files carry it.
 pub fn gate_bench_report(
     baseline: &Json,
     current: &Json,
@@ -513,10 +573,10 @@ pub fn gate_bench_report(
     anyhow::ensure!(!base.is_empty(), "baseline has no bench entries");
     anyhow::ensure!(!cur.is_empty(), "current report has no bench entries");
     let calibration = match (
-        find_ns(&base, TRACKED_SUITE, CALIBRATION_BENCH),
-        find_ns(&cur, TRACKED_SUITE, CALIBRATION_BENCH),
+        find_entry(&base, TRACKED_SUITE, CALIBRATION_BENCH),
+        find_entry(&cur, TRACKED_SUITE, CALIBRATION_BENCH),
     ) {
-        (Some(b), Some(c)) if b > 0.0 && c > 0.0 => Some(c / b),
+        (Some(b), Some(c)) if b.ns > 0.0 && c.ns > 0.0 => Some(c.ns / b.ns),
         _ => None,
     };
     let bootstrap = baseline
@@ -525,34 +585,52 @@ pub fn gate_bench_report(
         .and_then(|m| m.as_str())
         == Some("bootstrap");
     let mut findings = Vec::new();
-    for (suite, name, base_ns) in &base {
-        if suite != TRACKED_SUITE || name == CALIBRATION_BENCH || *base_ns <= 0.0 {
+    let mut missing_percentiles = 0usize;
+    let judge = |name: &str, metric: GateMetric, base_ns: f64, cur_ns: f64| {
+        let ratio = (cur_ns / base_ns) / calibration.unwrap_or(1.0);
+        let level = if ratio > 1.0 + metric.slack() * cfg.fail_pct / 100.0 {
+            GateLevel::Fail
+        } else if ratio > 1.0 + metric.slack() * cfg.warn_pct / 100.0 {
+            GateLevel::Warn
+        } else {
+            GateLevel::Ok
+        };
+        GateFinding {
+            name: name.to_string(),
+            metric,
+            base_ns,
+            cur_ns,
+            ratio,
+            level,
+        }
+    };
+    for b in &base {
+        if b.suite != TRACKED_SUITE || b.name == CALIBRATION_BENCH || b.ns <= 0.0 {
             continue;
         }
-        match find_ns(&cur, suite, name) {
+        match find_entry(&cur, &b.suite, &b.name) {
             None => findings.push(GateFinding {
-                name: name.clone(),
-                base_ns: *base_ns,
+                name: b.name.clone(),
+                metric: GateMetric::MeanNs,
+                base_ns: b.ns,
                 cur_ns: f64::NAN,
                 ratio: f64::NAN,
                 level: GateLevel::MissingCurrent,
             }),
-            Some(cur_ns) => {
-                let ratio = (cur_ns / base_ns) / calibration.unwrap_or(1.0);
-                let level = if ratio > 1.0 + cfg.fail_pct / 100.0 {
-                    GateLevel::Fail
-                } else if ratio > 1.0 + cfg.warn_pct / 100.0 {
-                    GateLevel::Warn
-                } else {
-                    GateLevel::Ok
-                };
-                findings.push(GateFinding {
-                    name: name.clone(),
-                    base_ns: *base_ns,
-                    cur_ns,
-                    ratio,
-                    level,
-                });
+            Some(c) => {
+                findings.push(judge(&b.name, GateMetric::MeanNs, b.ns, c.ns));
+                let pcts = [
+                    (GateMetric::P50Ns, b.p50_ns, c.p50_ns),
+                    (GateMetric::P99Ns, b.p99_ns, c.p99_ns),
+                ];
+                for (metric, base_p, cur_p) in pcts {
+                    match (base_p, cur_p) {
+                        (Some(bp), Some(cp)) if bp > 0.0 => {
+                            findings.push(judge(&b.name, metric, bp, cp));
+                        }
+                        _ => missing_percentiles += 1,
+                    }
+                }
             }
         }
     }
@@ -564,6 +642,7 @@ pub fn gate_bench_report(
         findings,
         calibration,
         bootstrap,
+        missing_percentiles,
     })
 }
 
@@ -644,6 +723,7 @@ mod tests {
             mean_ns: ns,
             p50_ns: ns,
             p95_ns: ns,
+            p99_ns: ns,
             min_ns: ns,
             max_ns: ns,
         };
@@ -668,7 +748,30 @@ mod tests {
         let _ = std::fs::remove_file(path);
     }
 
+    /// Test report with percentile fields derived from ns (p50 = ns,
+    /// p99 = 2ns, both scaling with the mean).
     fn report(entries: &[(&str, &str, f64)], meta_mode: Option<&str>) -> Json {
+        let benches: Vec<Json> = entries
+            .iter()
+            .map(|(s, n, ns)| {
+                Json::obj(vec![
+                    ("suite", Json::Str(s.to_string())),
+                    ("name", Json::Str(n.to_string())),
+                    ("ns_per_op", Json::Num(*ns)),
+                    ("p50_ns", Json::Num(*ns)),
+                    ("p99_ns", Json::Num(2.0 * ns)),
+                ])
+            })
+            .collect();
+        let mut pairs = vec![("benches", Json::Arr(benches))];
+        if let Some(m) = meta_mode {
+            pairs.push(("meta", Json::obj(vec![("mode", Json::Str(m.to_string()))])));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Pre-percentile report format (ns/op only).
+    fn legacy_report(entries: &[(&str, &str, f64)]) -> Json {
         let benches: Vec<Json> = entries
             .iter()
             .map(|(s, n, ns)| {
@@ -679,11 +782,7 @@ mod tests {
                 ])
             })
             .collect();
-        let mut pairs = vec![("benches", Json::Arr(benches))];
-        if let Some(m) = meta_mode {
-            pairs.push(("meta", Json::obj(vec![("mode", Json::Str(m.to_string()))])));
-        }
-        Json::obj(pairs)
+        Json::obj(vec![("benches", Json::Arr(benches))])
     }
 
     #[test]
@@ -699,10 +798,72 @@ mod tests {
         let r = gate_bench_report(&doc, &doc, &GateConfig::default()).unwrap();
         assert!(!r.failed());
         assert_eq!(r.warnings(), 0);
-        assert_eq!(r.findings.len(), 1);
-        assert!((r.findings[0].ratio - 1.0).abs() < 1e-12);
+        // One tracked bench x {ns/op, p50, p99}.
+        assert_eq!(r.findings.len(), 3);
+        assert!(r.findings.iter().all(|f| (f.ratio - 1.0).abs() < 1e-12));
         assert_eq!(r.calibration, Some(1.0));
         assert!(!r.bootstrap);
+        assert_eq!(r.missing_percentiles, 0);
+    }
+
+    #[test]
+    fn gate_warns_not_fails_on_baseline_lacking_percentiles() {
+        // A pre-percentile baseline still gates ns/op, and the absent
+        // p50/p99 are surfaced as warnings, never failures.
+        let base = legacy_report(&[
+            (TRACKED_SUITE, CALIBRATION_BENCH, 1000.0),
+            (TRACKED_SUITE, "admission", 5000.0),
+        ]);
+        let cur = report(
+            &[
+                (TRACKED_SUITE, CALIBRATION_BENCH, 1000.0),
+                (TRACKED_SUITE, "admission", 5000.0),
+            ],
+            None,
+        );
+        let r = gate_bench_report(&base, &cur, &GateConfig::default()).unwrap();
+        assert!(!r.failed());
+        assert_eq!(r.missing_percentiles, 2, "p50 and p99 ungateable");
+        assert_eq!(r.warnings(), 2);
+        assert_eq!(r.findings.len(), 1, "only ns/op judged");
+        assert_eq!(r.findings[0].metric, GateMetric::MeanNs);
+    }
+
+    #[test]
+    fn gate_fails_on_p50_regression_and_tail_gets_slack() {
+        let mk = |p50: f64, p99: f64| {
+            Json::obj(vec![(
+                "benches",
+                Json::Arr(vec![Json::obj(vec![
+                    ("suite", Json::Str(TRACKED_SUITE.to_string())),
+                    ("name", Json::Str("admission".to_string())),
+                    ("ns_per_op", Json::Num(5000.0)),
+                    ("p50_ns", Json::Num(p50)),
+                    ("p99_ns", Json::Num(p99)),
+                ])]),
+            )])
+        };
+        let base = mk(4000.0, 9000.0);
+        // p50 +30% with the mean unchanged: the median gate trips.
+        let r = gate_bench_report(&base, &mk(5200.0, 9000.0), &GateConfig::default())
+            .unwrap();
+        assert!(r.failed(), "p50 regression must fail: {:?}", r.findings);
+        assert!(r
+            .findings
+            .iter()
+            .any(|f| f.metric == GateMetric::P50Ns && f.level == GateLevel::Fail));
+        // p99 +30%: inside the doubled tail band — warn territory only.
+        let r = gate_bench_report(&base, &mk(4000.0, 11700.0), &GateConfig::default())
+            .unwrap();
+        assert!(!r.failed(), "tail noise within 2x band: {:?}", r.findings);
+        assert!(r
+            .findings
+            .iter()
+            .any(|f| f.metric == GateMetric::P99Ns && f.level == GateLevel::Warn));
+        // p99 +60%: past even the doubled band — a real tail regression.
+        let r = gate_bench_report(&base, &mk(4000.0, 14400.0), &GateConfig::default())
+            .unwrap();
+        assert!(r.failed(), "p99 blowup must fail: {:?}", r.findings);
     }
 
     #[test]

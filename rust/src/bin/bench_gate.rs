@@ -3,8 +3,11 @@
 //! Diffs a freshly produced `BENCH_perf.json` against the committed
 //! `BENCH_baseline.json`: tracked hot-path benches (suite
 //! `perf_hotpath`) must stay within 25% of their baseline ns/op (warn
-//! at 10%), with cross-machine speed differences normalized by the
-//! `calibration fixed-work` bench's ratio.
+//! at 10%) — and of their baseline p50/p99 when both files carry the
+//! percentile fields (p99 at doubled thresholds; baselines lacking
+//! percentiles warn, never fail) — with cross-machine speed
+//! differences normalized by the `calibration fixed-work` bench's
+//! ratio.
 //!
 //! Subcommands:
 //!   check     — gate the current report against the baseline
@@ -24,7 +27,7 @@
 //!   bench_gate selftest [--current BENCH_perf.json]
 
 use throttllem::bench_util::{
-    gate_bench_report, inject_slowdown, GateConfig, GateLevel, GateReport,
+    gate_bench_report, inject_slowdown, GateConfig, GateLevel, GateMetric, GateReport,
 };
 use throttllem::cli::Args;
 use throttllem::jsonl::{self, Json};
@@ -81,6 +84,14 @@ fn print_report(r: &GateReport, cfg: &GateConfig) {
              perf baseline\""
         );
     }
+    if r.missing_percentiles > 0 {
+        println!(
+            "note: {} p50/p99 statistics ungated (one side predates \
+             percentile fields; re-bless the baseline from a measured \
+             run to enable them) — counted as warnings",
+            r.missing_percentiles
+        );
+    }
     for f in &r.findings {
         let tag = match f.level {
             GateLevel::Ok => "ok  ",
@@ -94,14 +105,22 @@ fn print_report(r: &GateReport, cfg: &GateConfig) {
                 f.name, f.base_ns
             );
         } else {
+            // p99 gets doubled thresholds (tail noise); the printed
+            // bands reflect the metric actually judged.
+            let slack = if f.metric == GateMetric::P99Ns {
+                2.0
+            } else {
+                1.0
+            };
             println!(
-                "[{tag}] {:<44} {:>12.1} -> {:>12.1} ns/op  (x{:.3}, fail >x{:.2}, warn >x{:.2})",
+                "[{tag}] {:<44} {:>5} {:>12.1} -> {:>12.1} ns  (x{:.3}, fail >x{:.2}, warn >x{:.2})",
                 f.name,
+                f.metric.name(),
                 f.base_ns,
                 f.cur_ns,
                 f.ratio,
-                1.0 + cfg.fail_pct / 100.0,
-                1.0 + cfg.warn_pct / 100.0
+                1.0 + slack * cfg.fail_pct / 100.0,
+                1.0 + slack * cfg.warn_pct / 100.0
             );
         }
     }

@@ -23,7 +23,10 @@
 //!     destination-side SLO guard and modeled transfer costs);
 //!   * [`server`]: the event loop wiring everything to the engine —
 //!     generalized to an N-replica fleet coordinator — and the
-//!     Triton-like baseline policies the paper compares against.
+//!     Triton-like baseline policies the paper compares against;
+//!   * [`shard`]: the per-replica stepping state (`Replica`) and the
+//!     deterministic worker pool that parallelizes the RUN phase
+//!     across threads, bit-identical to single-threaded execution.
 
 pub mod autoscaler;
 pub mod migration;
@@ -33,6 +36,7 @@ pub mod router;
 pub mod scheduler;
 pub mod scoreboard;
 pub mod server;
+pub mod shard;
 pub mod throttle;
 
 pub use migration::MigrationCounters;
@@ -42,7 +46,7 @@ pub use router::{HeadroomCache, RouterPolicy};
 pub use scheduler::{AdmissionDecision, EvalScratch, Scheduler};
 pub use scoreboard::Scoreboard;
 pub use server::{
-    scenario_params, serve_fleet, serve_fleet_plan, serve_scenario,
-    serve_trace, FamilyStats, FleetOutcome, FleetPlan, FleetSpec, Policy,
-    ReplicaOutcome, ServeOutcome,
+    outcome_digest, scenario_params, serve_fleet, serve_fleet_plan, serve_scenario, serve_trace,
+    FamilyStats, FleetOutcome, FleetPlan, FleetSpec, Policy, ReplicaOutcome, ServeOutcome,
 };
+pub use shard::effective_threads;

@@ -15,7 +15,7 @@
 //! as inflight batching allows.
 //!
 //! Fleet topology ([`serve_fleet`] / [`serve_fleet_plan`]): N
-//! replicas, each owning its own [`EngineSim`], [`Scoreboard`], DVFS
+//! replicas, each owning its own `EngineSim`, `Scoreboard`, DVFS
 //! state and §IV-E frequency controller, fronted by an admission
 //! router ([`RouterPolicy`]) that picks a replica per arrival and
 //! re-routes a request on universal rejection before ever dropping it.
@@ -24,7 +24,7 @@
 //! per-replica TP ladders and SLO overrides), and the router scores
 //! each replica against its OWN capacity grid.  Autoscaling is
 //! two-axis: every replica right-sizes its own tensor parallelism
-//! through [`Autoscaler`] over ITS OWN ladder (shadow instancing per
+//! through `Autoscaler` over ITS OWN ladder (shadow instancing per
 //! replica), while a [`FleetScaler`] activates/drains whole replicas
 //! against the aggregate arrival rate — scale-in picks its victim by
 //! projected energy-per-token, not just queue depth.  `serve_trace`
@@ -32,29 +32,35 @@
 //! `replicas == 1` every code path below degenerates to the original
 //! event loop, so the results are bit-identical —
 //! `tests/fleet_equivalence.rs` pins this.
+//!
+//! Parallel execution ([`FleetPlan::threads`]): the RUN phase — every
+//! replica stepping its engines to the next decision point — is
+//! partitioned across worker threads by a
+//! [`crate::coordinator::shard::ShardPool`], while ALL coordination
+//! (routing, scaling, migration, reroutes, stats reduction) stays on
+//! the coordinator thread between rounds.  `--threads N` is
+//! bit-identical to `--threads 1` for every scenario and thread count
+//! — `tests/fleet_threads.rs` pins this the same way
+//! `fleet_equivalence.rs` pins the fleet-of-one path.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashMap, VecDeque};
 
 use crate::config::fleet::{MigrationSpec, ReplicaSpec};
 use crate::config::{EngineSpec, ModelFamily, ServingConfig, SloSpec};
-use crate::coordinator::autoscaler::{
-    Autoscaler, FleetDecision, FleetScaler, ScaleDecision,
-};
+use crate::coordinator::autoscaler::{FleetDecision, FleetScaler};
 use crate::coordinator::migration::{
     migration_entry, migration_slo_guard, MigrationCounters,
 };
 use crate::coordinator::perf_model::PerfModel;
-use crate::coordinator::projection::ProjectionTracker;
-use crate::coordinator::router::{headroom_score, HeadroomCache, RouterPolicy};
-use crate::coordinator::scheduler::{
-    entry_for, AdmissionDecision, EvalScratch, Scheduler,
+use crate::coordinator::router::{headroom_score, RouterPolicy};
+use crate::coordinator::scheduler::entry_for;
+use crate::coordinator::shard::{
+    effective_threads, rethrottle, EngineRt, Replica, ShardPool,
 };
-use crate::coordinator::scoreboard::Scoreboard;
 use crate::coordinator::throttle::min_slo_frequency_with;
 use crate::engine::kv_cache::blocks_for;
 use crate::engine::request::{Request, RequestId, RequestOutcome};
-use crate::engine::sim::EngineSim;
-use crate::gpusim::dvfs::{frequency_grid, FREQ_MAX_MHZ};
+use crate::gpusim::dvfs::FREQ_MAX_MHZ;
 use crate::gpusim::latency::{decode_latency_s, GpuState};
 use crate::gpusim::power::{idle_power_w, power_w};
 use crate::metrics::ServingStats;
@@ -201,6 +207,11 @@ pub struct FleetPlan {
     /// default: scale-in then drains, byte-identical to the
     /// pre-migration serving loop.
     pub migration: MigrationSpec,
+    /// Worker threads for the RUN phase (`--threads`): replicas are
+    /// partitioned into fixed contiguous shards stepped in parallel.
+    /// `0` means auto (available parallelism); any value is
+    /// bit-identical to `1` — the knob only affects wall-clock speed.
+    pub threads: usize,
 }
 
 impl FleetPlan {
@@ -215,12 +226,20 @@ impl FleetPlan {
             router,
             autoscale_replicas: false,
             migration: MigrationSpec::disabled(),
+            threads: 1,
         }
     }
 
     /// Replace the live-migration policy (builder style).
     pub fn with_migration(mut self, migration: MigrationSpec) -> Self {
         self.migration = migration;
+        self
+    }
+
+    /// Set the RUN-phase worker-thread count (builder style).  `0`
+    /// means auto; every value produces bit-identical output.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
         self
     }
 
@@ -242,6 +261,7 @@ impl FleetPlan {
             router,
             autoscale_replicas,
             migration: MigrationSpec::disabled(),
+            threads: 1,
         }
     }
 
@@ -325,543 +345,6 @@ pub struct FleetOutcome {
     pub migrations: MigrationCounters,
 }
 
-struct EngineRt {
-    sim: EngineSim,
-    sb: Scoreboard,
-    /// Incrementally maintained §IV-B projection over `sb` (synced
-    /// from the scoreboard's delta journal; debug builds bit-compare
-    /// it against a from-scratch build on every use).
-    tracker: ProjectionTracker,
-    /// Reusable SLO-evaluation buffers + GBDT prediction memo.
-    scratch: EvalScratch,
-    /// The DVFS grid the §IV-E search runs over (built once; the
-    /// per-rethrottle rebuild was an allocation on the hot path).
-    grid: Vec<u32>,
-    /// Time its next iteration may start.
-    cursor: f64,
-    accepting: bool,
-    /// Completions seen so far (admission-retry invalidation).
-    completions: u64,
-    /// Recent arrival timestamps (sliding window) for the throttle's
-    /// prefill-load estimate.
-    recent_arrivals: VecDeque<f64>,
-    /// EMA of admitted prompt lengths (prefill-cost estimate input).
-    prompt_ema: f64,
-    /// Head-of-line request that failed admission, and the completion
-    /// count at that moment.  Re-checking is pointless until another
-    /// request completes (KV and batch only shrink on completion), so
-    /// the hot loop skips redundant admission-control evaluations.
-    blocked_head: Option<(u64, u64)>,
-}
-
-impl EngineRt {
-    fn new(spec: EngineSpec, at: f64) -> Self {
-        let block_tokens = spec.block_tokens;
-        let mut sim = EngineSim::new(spec, FREQ_MAX_MHZ);
-        sim.account_idle(at.max(0.0)); // zero-cost: marks accounting start
-        Self {
-            sim,
-            sb: Scoreboard::new(),
-            tracker: ProjectionTracker::new(block_tokens),
-            scratch: EvalScratch::new(),
-            grid: frequency_grid(),
-            cursor: at,
-            accepting: true,
-            completions: 0,
-            blocked_head: None,
-            recent_arrivals: VecDeque::new(),
-            prompt_ema: 0.0,
-        }
-    }
-
-    /// Expected slowdown factor from future-arrival prefill stalls:
-    /// 1 + λ · t_prefill (the projection assumes no arrivals; under
-    /// sustained load every admission fuses a prefill into an
-    /// iteration, stalling all decodes — §IV-F's TTFT discussion).
-    fn load_inflation(&mut self, now: f64) -> f64 {
-        const WINDOW_S: f64 = 30.0;
-        while self
-            .recent_arrivals
-            .front()
-            .map(|&t| t < now - WINDOW_S)
-            .unwrap_or(false)
-        {
-            self.recent_arrivals.pop_front();
-        }
-        // Relative margin on top of the arrival-driven term: long-
-        // horizon T_R predictions are systematically optimistic (model
-        // bias compounds over hundreds of iterations).
-        const REL_MARGIN: f64 = 1.10;
-        if self.recent_arrivals.is_empty() || self.prompt_ema <= 0.0 {
-            return REL_MARGIN;
-        }
-        let span = (now - self.recent_arrivals.front().unwrap()).max(1.0);
-        let lambda = self.recent_arrivals.len() as f64 / span.min(WINDOW_S);
-        let t_prefill = crate::gpusim::latency::prefill_latency_s(
-            self.sim.spec(),
-            self.prompt_ema as u32,
-            FREQ_MAX_MHZ,
-        );
-        (1.0 + lambda * t_prefill) * REL_MARGIN
-    }
-}
-
-/// One fleet replica: its engines (more than one only while an old
-/// engine drains after a shadow-instancing switch), its FIFO queue,
-/// its TP-axis autoscaler over ITS OWN ladder, its SLO scheduler, and
-/// its telemetry.
-struct Replica {
-    id: usize,
-    /// This replica's own deployment description.
-    rspec: ReplicaSpec,
-    /// Admission control against this replica's effective SLO.
-    sched: Scheduler,
-    engines: Vec<EngineRt>,
-    queue: VecDeque<Request>,
-    scaler: Option<Autoscaler>,
-    next_tick: Option<f64>,
-    window_arrivals: u64,
-    stats: ServingStats,
-    outcomes: Vec<RequestOutcome>,
-    timeline: Vec<TimelinePoint>,
-    shadow_energy: f64,
-    /// Energy of engines already drained and retired (fixes the seed's
-    /// leak where `engines.retain(..)` dropped their accumulated
-    /// energy before the final sum).
-    retired_energy: f64,
-    switches: u32,
-    routed: u64,
-    /// Fleet axis: whether the router may assign new arrivals here.
-    active: bool,
-    /// Pending fleet-axis activation (spawn) completion time.
-    activation_ready: Option<f64>,
-    /// Last instant this replica did anything (iteration end, idle
-    /// accounting while powered on, engine retirement) — the end of
-    /// ITS serving window, unlike the fleet-global clock.
-    last_event_s: f64,
-    /// Bumps on routing-relevant events outside the scoreboard: queue
-    /// mutations, engine switches, (de)activations.  Third component
-    /// of the headroom-cache key.
-    route_epoch: u64,
-    /// Memoized §IV-B projection summary for router scoring.
-    headroom: HeadroomCache,
-    /// Resident requests that arrived here via live migration and have
-    /// not completed yet (their completions feed the migrated-request
-    /// attainment series).
-    migrated_ids: HashSet<RequestId>,
-    /// Modeled link/host energy of migrations INTO this replica, J.
-    migration_energy: f64,
-}
-
-impl Replica {
-    fn new(id: usize, rspec: &ReplicaSpec, fleet_slo: SloSpec, policy: Policy) -> Self {
-        let scaler = if policy.autoscaling && !rspec.scale_set.is_empty() {
-            Some(Autoscaler::new(rspec.scale_set.clone(), 0))
-        } else {
-            None
-        };
-        let spec = scaler
-            .as_ref()
-            .map(|s| s.current_spec().clone())
-            .unwrap_or_else(|| rspec.engine.clone());
-        let next_tick = scaler.as_ref().map(|s| s.interval_s);
-        Replica {
-            id,
-            sched: Scheduler::new(rspec.slo.unwrap_or(fleet_slo)),
-            rspec: rspec.clone(),
-            engines: vec![EngineRt::new(spec, 0.0)],
-            queue: VecDeque::new(),
-            scaler,
-            next_tick,
-            window_arrivals: 0,
-            stats: ServingStats::default(),
-            outcomes: Vec::new(),
-            timeline: Vec::new(),
-            shadow_energy: 0.0,
-            retired_energy: 0.0,
-            switches: 0,
-            routed: 0,
-            active: true,
-            activation_ready: None,
-            last_event_s: 0.0,
-            route_epoch: 0,
-            headroom: HeadroomCache::new(),
-            migrated_ids: HashSet::new(),
-            migration_energy: 0.0,
-        }
-    }
-
-    fn all_idle(&self) -> bool {
-        self.engines.iter().all(|e| e.sim.is_idle())
-    }
-
-    fn drained(&self) -> bool {
-        self.queue.is_empty() && self.all_idle()
-    }
-
-    /// Spec a (re)activated replica boots with: its own autoscaler's
-    /// current rung, or its own fixed engine.
-    fn respec(&self) -> EngineSpec {
-        self.scaler
-            .as_ref()
-            .map(|s| s.current_spec().clone())
-            .unwrap_or_else(|| self.rspec.engine.clone())
-    }
-
-    /// Router signal: outstanding work (resident rows + queued).
-    fn outstanding(&self) -> u64 {
-        let resident: u64 = self.engines.iter().map(|e| e.sim.batch() as u64).sum();
-        resident + self.queue.len() as u64
-    }
-
-    /// Batch slots of the accepting engine (least-loaded's normalizer:
-    /// 10 outstanding on a 64-slot engine is lighter load than 5 on an
-    /// 8-slot one).
-    fn batch_capacity(&self) -> u32 {
-        self.engines
-            .iter()
-            .find(|e| e.accepting)
-            .map(|e| e.sim.spec().max_batch)
-            .unwrap_or(0)
-    }
-
-    /// Router signal: projected KV/batch headroom of the accepting
-    /// engine (§IV-B projection) for an arriving request of
-    /// `prompt_tokens`, normalized by THIS replica's own capacity grid
-    /// — heterogeneous replicas compare capacity fractions, and a
-    /// prompt that could never fit here scores `NEG_INFINITY`.
-    ///
-    /// The projection summary is memoized ([`HeadroomCache`]) and
-    /// invalidated on admission/completion (scoreboard epoch),
-    /// iteration boundaries, and queue/topology changes
-    /// (`route_epoch`); rebuilding it per arrival was
-    /// O(arrivals × replicas) projection builds on the hot path.
-    fn headroom_for(&mut self, prompt_tokens: u32) -> f64 {
-        let Some(idx) = self.engines.iter().position(|e| e.accepting) else {
-            return f64::NEG_INFINITY;
-        };
-        let e = &mut self.engines[idx];
-        let spec = e.sim.spec();
-        let block_tokens = spec.block_tokens;
-        let kv_capacity = spec.kv_blocks;
-        let max_batch = spec.max_batch;
-        let req_blocks = blocks_for(prompt_tokens, block_tokens);
-        if req_blocks > kv_capacity {
-            return f64::NEG_INFINITY; // could never fit, even empty
-        }
-        let key = (e.sim.iter_index(), e.sb.epoch(), self.route_epoch);
-        let (peak_kv, queued_blocks, queued_requests) = match self.headroom.get(key) {
-            Some(s) => s,
-            None => {
-                // Cache miss: peak projected KV comes from the
-                // engine's incrementally maintained tracker instead of
-                // a from-scratch projection build.
-                let proj = e.tracker.project(&e.sb, e.sim.iter_index(), None);
-                let s = (
-                    proj.peak_kv(),
-                    queued_blocks_sum(&self.queue, block_tokens),
-                    self.queue.len(),
-                );
-                self.headroom.store(key, s);
-                s
-            }
-        };
-        let score = headroom_score(
-            kv_capacity,
-            peak_kv,
-            queued_blocks.saturating_add(req_blocks),
-            max_batch,
-            e.sim.batch(),
-            queued_requests + 1,
-        );
-        #[cfg(debug_assertions)]
-        {
-            // The cache AND the tracker must be unobservable: recompute
-            // from an uncached, from-scratch projection and require bit
-            // equality (every debug-mode fleet run cross-checks this on
-            // every routing decision).
-            let proj = crate::coordinator::projection::project(
-                &e.sb,
-                e.sim.iter_index(),
-                block_tokens,
-            );
-            let fresh = headroom_score(
-                kv_capacity,
-                proj.peak_kv(),
-                queued_blocks_sum(&self.queue, block_tokens)
-                    .saturating_add(req_blocks),
-                max_batch,
-                e.sim.batch(),
-                self.queue.len() + 1,
-            );
-            debug_assert!(
-                score.to_bits() == fresh.to_bits(),
-                "cached projected-headroom diverged from uncached: {score} vs {fresh}"
-            );
-        }
-        score
-    }
-
-    /// Projected energy-per-token (J/token) at the replica's current
-    /// operating point: total power at the engines' applied
-    /// frequencies over total decode throughput.  An idle replica
-    /// produces nothing and scores infinity — it burns idle power for
-    /// zero tokens, the least efficient state a replica can be in.
-    fn energy_per_token(&self) -> f64 {
-        let mut power = 0.0f64;
-        let mut tps = 0.0f64;
-        for e in &self.engines {
-            let spec = e.sim.spec();
-            let freq = e.sim.dvfs.target();
-            let batch = e.sim.batch();
-            let kv = e.sim.kv_blocks_used();
-            power += power_w(spec, batch, kv, freq);
-            if batch > 0 {
-                let st = GpuState {
-                    batch,
-                    kv_blocks: kv,
-                    freq_mhz: freq,
-                };
-                tps += batch as f64 / decode_latency_s(spec, &st);
-            }
-        }
-        if tps > 0.0 {
-            power / tps
-        } else {
-            f64::INFINITY
-        }
-    }
-
-    /// Run this replica's engines up to the decision point, then retire
-    /// drained non-accepting engines (capturing their energy). Returns
-    /// whether any iteration executed.
-    fn run_until(
-        &mut self,
-        decision: f64,
-        cfg: &ServingConfig,
-        policy: Policy,
-        model: &PerfModel,
-    ) -> bool {
-        let mut progressed = false;
-        for idx in 0..self.engines.len() {
-            loop {
-                let e = &mut self.engines[idx];
-                if e.sim.is_idle() || e.cursor >= decision {
-                    break;
-                }
-                if e.accepting {
-                    try_admissions(
-                        e,
-                        &mut self.queue,
-                        cfg,
-                        policy,
-                        model,
-                        &self.sched,
-                        &mut self.stats,
-                    );
-                }
-                let e = &mut self.engines[idx];
-                if e.sim.is_idle() {
-                    break;
-                }
-                let shadow_p = shadow_power(self.scaler.as_ref(), e.cursor);
-                let report = e.sim.run_iteration(e.cursor);
-                e.cursor = report.start_s + report.duration_s;
-                if e.cursor > self.last_event_s {
-                    self.last_event_s = e.cursor;
-                }
-                progressed = true;
-                // Telemetry
-                self.stats.power.push(report.power_w);
-                self.stats.freq.push(report.freq_mhz as f64);
-                self.stats.iter_tbt.push(report.duration_s);
-                self.timeline.push(TimelinePoint {
-                    t: report.start_s,
-                    replica: self.id,
-                    engine_tp: e.sim.spec().tensor_parallel,
-                    freq_mhz: report.freq_mhz,
-                    power_w: report.power_w,
-                    shadow_power_w: shadow_p,
-                    batch: report.batch,
-                    kv_blocks: report.kv_blocks,
-                });
-                e.completions += report.completed.len() as u64;
-                // Recompute-preempted rows go back to the queue head,
-                // BLOCKED until some request completes — re-admitting
-                // immediately would re-consume the freed blocks and
-                // livelock the evict/re-admit cycle.
-                for req in &report.evicted {
-                    e.sb.strike(req.id);
-                    self.queue.push_front(req.clone());
-                    e.blocked_head = Some((req.id, e.completions));
-                    // The eviction may come from a DRAINING engine,
-                    // whose scoreboard epoch is not in the headroom
-                    // cache key (the key tracks the ACCEPTING
-                    // engine): invalidate via route_epoch so the
-                    // router sees the re-queued request.
-                    self.route_epoch += 1;
-                }
-                let had_completions =
-                    !report.completed.is_empty() || !report.evicted.is_empty();
-                for o in &report.completed {
-                    e.sb.strike(o.id);
-                    self.stats.record_outcome(o);
-                    // Migrated-request attainment: completions that
-                    // arrived via live migration feed their own series
-                    // (empty set lookup when migration is off).
-                    if self.migrated_ids.remove(&o.id) {
-                        self.stats.migrated_e2e.push(o.e2e_s);
-                    }
-                    self.outcomes.push(o.clone());
-                }
-                // §IV-F: bump predictions the reality has outrun.
-                // Allocation-free: the engine's live view streams
-                // straight into the scoreboard sync (the old path
-                // collected an `active_info` Vec plus a `bumped` Vec
-                // EVERY iteration, almost always to conclude nothing
-                // changed).
-                let bumped = e
-                    .sb
-                    .sync_overruns_iter(e.sim.active_overruns(), cfg.max_tokens);
-                // Re-evaluate the throttling controller when the batch
-                // composition changed (completion or prediction bump):
-                // without this, a frequency chosen under light load
-                // would persist while a queue builds behind a full
-                // batch (§IV-E is admission-triggered; completions are
-                // the other composition-change event).
-                if policy.throttling && (had_completions || bumped > 0) {
-                    rethrottle(e, !self.queue.is_empty(), model, &self.sched);
-                }
-            }
-        }
-
-        // Retire drained non-accepting engines (graceful shutdown
-        // done), folding their accumulated energy and final clock
-        // into the replica.
-        let retired = &mut self.retired_energy;
-        let last = &mut self.last_event_s;
-        self.engines.retain(|e| {
-            let keep = e.accepting || !e.sim.is_idle();
-            if !keep {
-                *retired += e.sim.total_energy_j();
-                if e.cursor > *last {
-                    *last = e.cursor;
-                }
-            }
-            keep
-        });
-        progressed
-    }
-
-    /// Wake idle accepting engines at `now` for immediate admission.
-    fn wake_and_admit(
-        &mut self,
-        now: f64,
-        cfg: &ServingConfig,
-        policy: Policy,
-        model: &PerfModel,
-    ) {
-        let mut powered_on = false;
-        for e in self.engines.iter_mut().filter(|e| e.accepting) {
-            powered_on = true;
-            if e.sim.is_idle() && e.cursor < now {
-                e.sim.account_idle(now);
-                e.cursor = now;
-            }
-            if e.sim.is_idle() {
-                try_admissions(
-                    e,
-                    &mut self.queue,
-                    cfg,
-                    policy,
-                    model,
-                    &self.sched,
-                    &mut self.stats,
-                );
-            }
-        }
-        // A powered-on replica is live (burning at least idle power)
-        // even when no iteration runs: its serving window extends.
-        if powered_on && now > self.last_event_s {
-            self.last_event_s = now;
-        }
-    }
-
-    /// Fast-forward a stale tick cadence before handing rerouted work
-    /// to this replica.  A drained replica's `next_tick` is excluded
-    /// from the decision min (nothing to do) and freezes; if work is
-    /// later rerouted here, the frozen timestamp would re-enter the
-    /// decision min and drag the fleet's event clock BACKWARDS.
-    fn catch_up_tick(&mut self, now: f64) {
-        if let (Some(s), Some(t)) = (self.scaler.as_ref(), self.next_tick) {
-            if t < now {
-                let intervals = ((now - t) / s.interval_s).ceil();
-                self.next_tick = Some(t + intervals * s.interval_s);
-            }
-        }
-    }
-
-    /// TP-axis monitoring tick.
-    fn tick_scaler(&mut self, now: f64) {
-        if let (Some(s), Some(t)) = (self.scaler.as_mut(), self.next_tick) {
-            if now >= t {
-                let rps = self.window_arrivals as f64 / s.interval_s;
-                self.window_arrivals = 0;
-                if let ScaleDecision::StartShadow { target } = s.tick(now, rps) {
-                    let _ = target; // energy accounted at switch time
-                }
-                self.next_tick = Some(t + s.interval_s);
-            }
-        }
-    }
-
-    /// Shadow instance ready -> transition to the new engine size.
-    fn complete_shadow(&mut self, now: f64) {
-        if let Some(s) = self.scaler.as_mut() {
-            if let Some(sh) = s.shadow() {
-                if now >= sh.ready_at {
-                    let warm = idle_power_w(&s.specs()[sh.target], FREQ_MAX_MHZ)
-                        * (sh.ready_at - sh.started_at);
-                    self.shadow_energy += warm;
-                    let new_idx = s.poll_ready(now).expect("shadow was ready");
-                    let spec = s.specs()[new_idx].clone();
-                    for e in self.engines.iter_mut() {
-                        e.accepting = false;
-                    }
-                    self.engines.push(EngineRt::new(spec, now));
-                    self.switches += 1;
-                    // The accepting engine changed: invalidate the
-                    // router's cached projection summary.
-                    self.route_epoch += 1;
-                }
-            }
-        }
-    }
-
-    /// Fleet axis: stop accepting, drain, and power off when idle.
-    fn deactivate(&mut self, now: f64) {
-        self.active = false;
-        self.activation_ready = None;
-        for e in self.engines.iter_mut() {
-            e.accepting = false;
-        }
-        if let Some(s) = self.scaler.as_mut() {
-            // An in-flight TP shadow is discarded, but the warm-up
-            // idle power it burned until now is real energy — charge
-            // it, mirroring complete_shadow's lump accounting.
-            if let Some(sh) = s.shadow() {
-                let warmed = (now.min(sh.ready_at) - sh.started_at).max(0.0);
-                self.shadow_energy +=
-                    idle_power_w(&s.specs()[sh.target], FREQ_MAX_MHZ) * warmed;
-            }
-            s.cancel_shadow();
-        }
-        self.next_tick = None;
-        self.window_arrivals = 0;
-        self.route_epoch += 1;
-    }
-}
-
 /// Serve `requests` (sorted by arrival) under `policy` on a fleet of
 /// one; returns the single-engine outcome. Exactly equivalent to
 /// `serve_fleet(.., &FleetSpec::single()).total`.
@@ -905,6 +388,38 @@ pub fn serve_fleet_plan(
     model: &PerfModel,
     requests: &[Request],
     plan: &FleetPlan,
+) -> FleetOutcome {
+    let threads = effective_threads(plan.threads, plan.replicas.len());
+    if threads <= 1 {
+        // The single-threaded path runs the literal inline loop — no
+        // pool, no channels — so `--threads 1` IS the pre-sharding
+        // serving loop.
+        return serve_fleet_plan_inner(cfg, policy, model, requests, plan, &mut None);
+    }
+    std::thread::scope(|scope| {
+        let mut pool = Some(ShardPool::spawn(
+            scope,
+            threads,
+            plan.replicas.len(),
+            cfg,
+            policy,
+            model,
+        ));
+        serve_fleet_plan_inner(cfg, policy, model, requests, plan, &mut pool)
+    })
+}
+
+/// The fleet event loop.  `pool` carries the RUN-phase worker pool
+/// (`None` = step replicas inline on this thread); every other phase
+/// is identical in both modes, which is what keeps the thread count
+/// unobservable in the output.
+fn serve_fleet_plan_inner(
+    cfg: &ServingConfig,
+    policy: Policy,
+    model: &PerfModel,
+    requests: &[Request],
+    plan: &FleetPlan,
+    pool: &mut Option<ShardPool>,
 ) -> FleetOutcome {
     debug_assert!(requests.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
     assert!(!plan.replicas.is_empty(), "a fleet needs at least one replica");
@@ -966,10 +481,19 @@ pub fn serve_fleet_plan(
         }
 
         // ---- run engine iterations up to the decision point ----------
-        let mut progressed = false;
-        for rp in replicas.iter_mut() {
-            progressed |= rp.run_until(decision, cfg, policy, model);
-        }
+        // Replicas are independent over this phase (each touches only
+        // its own state), so the pool may step shards in parallel;
+        // `run_round` hands the fleet back in index order.
+        let progressed = match pool.as_mut() {
+            Some(p) => p.run_round(&mut replicas, decision),
+            None => {
+                let mut progressed = false;
+                for rp in replicas.iter_mut() {
+                    progressed |= rp.run_until(decision, cfg, policy, model);
+                }
+                progressed
+            }
+        };
 
         if decision.is_infinite() {
             if !progressed {
@@ -1192,8 +716,13 @@ pub fn serve_fleet_plan(
     }
 
     // ---- finalize -----------------------------------------------------
+    // Explicit ordered reduction: per-replica parts are tagged with
+    // their replica index and sorted by it before merging, so the
+    // aggregate is a pure function of the SET of parts — production
+    // order can never leak into the output (`metrics` property-tests
+    // the permutation invariance of the merge itself).
     let mut replica_outcomes = Vec::with_capacity(n);
-    let mut parts: Vec<ServeOutcome> = Vec::with_capacity(n);
+    let mut parts: Vec<(usize, ServeOutcome)> = Vec::with_capacity(n);
     for mut rp in replicas {
         // Fleet clock for the aggregate (bit-identical to the single-
         // engine loop when replicas == 1).
@@ -1225,26 +754,32 @@ pub fn serve_fleet_plan(
             routed: rp.routed,
             engine: rp.respec().name,
         });
-        parts.push(ServeOutcome {
-            stats: rp.stats,
-            outcomes: rp.outcomes,
-            timeline: rp.timeline,
-            shadow_energy_j: rp.shadow_energy,
-            engine_switches: rp.switches,
-        });
+        parts.push((
+            rp.id,
+            ServeOutcome {
+                stats: rp.stats,
+                outcomes: rp.outcomes,
+                timeline: rp.timeline,
+                shadow_energy_j: rp.shadow_energy,
+                engine_switches: rp.switches,
+            },
+        ));
     }
+    // Pin the reduction order to the replica index regardless of how
+    // the parts were produced (a no-op today, the contract forever).
+    parts.sort_by_key(|&(id, _)| id);
     let total = if parts.len() == 1 {
         // Fleet of one: hand back the replica's outcome verbatim so the
         // single-engine path stays bit-identical.
-        parts.pop().unwrap()
+        parts.pop().unwrap().1
     } else {
-        let mut stats = ServingStats::default();
+        let stats =
+            ServingStats::merge_ordered(parts.iter().map(|(id, p)| (*id, &p.stats)));
         let mut outcomes = Vec::new();
         let mut timeline = Vec::new();
         let mut shadow = 0.0f64;
         let mut switches = 0u32;
-        for part in parts {
-            stats.merge_from(&part.stats);
+        for (_, part) in parts {
             outcomes.extend(part.outcomes);
             timeline.extend(part.timeline);
             shadow += part.shadow_energy_j;
@@ -1337,6 +872,101 @@ pub fn serve_scenario(
     crate::workload::LengthPredictor::oracle().apply(&mut reqs, cfg.max_tokens);
     let out = serve_fleet_plan(cfg, policy, model, &reqs, plan);
     (params, reqs, out)
+}
+
+/// FNV-1a accumulator for [`outcome_digest`] (same constants as
+/// `workload::fleet_trace::fnv1a64`, streamed field-by-field).
+struct Fnv(u64);
+
+impl Fnv {
+    fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.0 ^= x as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn series(&mut self, s: &crate::metrics::Series) {
+        self.u64(s.values().len() as u64);
+        for &v in s.values() {
+            self.f64(v);
+        }
+    }
+}
+
+/// Order-sensitive digest of EVERYTHING a fleet run produced: every
+/// counter, every float by bit pattern, every series sample, the full
+/// timeline and request outcomes, the per-replica breakdown and the
+/// migration telemetry.  Two runs digest equal iff their outcomes are
+/// bit-identical — the `--threads N == --threads 1` determinism
+/// contract the CI `threads-identity` job compares through the CLI's
+/// `--outcome-digest` flag.
+pub fn outcome_digest(out: &FleetOutcome) -> u64 {
+    fn stats(h: &mut Fnv, s: &ServingStats) {
+        h.u64(s.completed);
+        h.u64(s.dropped);
+        h.u64(s.lost);
+        h.u64(s.total_tokens);
+        h.f64(s.total_energy_j);
+        h.f64(s.wall_s);
+        h.u64(s.migrated_in);
+        h.u64(s.migrated_out);
+        h.f64(s.migration_energy_j);
+        h.series(&s.e2e);
+        h.series(&s.tbt);
+        h.series(&s.ttft);
+        h.series(&s.queue);
+        h.series(&s.power);
+        h.series(&s.freq);
+        h.series(&s.iter_tbt);
+        h.series(&s.migrated_e2e);
+    }
+    let mut h = Fnv(0xcbf2_9ce4_8422_2325);
+    stats(&mut h, &out.total.stats);
+    h.u64(out.total.outcomes.len() as u64);
+    for o in &out.total.outcomes {
+        h.u64(o.id);
+        h.f64(o.e2e_s);
+        h.f64(o.ttft_s);
+        h.f64(o.tbt_avg_s);
+        h.u64(o.lost as u64);
+    }
+    h.u64(out.total.timeline.len() as u64);
+    for p in &out.total.timeline {
+        h.f64(p.t);
+        h.u64(p.replica as u64);
+        h.u32(p.engine_tp);
+        h.u32(p.freq_mhz);
+        h.f64(p.power_w);
+        h.f64(p.shadow_power_w);
+        h.u32(p.batch);
+        h.u32(p.kv_blocks);
+    }
+    h.f64(out.total.shadow_energy_j);
+    h.u32(out.total.engine_switches);
+    h.u64(out.replicas.len() as u64);
+    for r in &out.replicas {
+        h.u64(r.routed);
+        h.u32(r.engine_switches);
+        h.f64(r.shadow_energy_j);
+        h.bytes(r.engine.as_bytes());
+        stats(&mut h, &r.stats);
+    }
+    h.u64(out.rerouted);
+    h.u32(out.replica_activations);
+    h.u32(out.replica_deactivations);
+    h.u64(out.migrations.migrations);
+    h.u64(out.migrations.refused_slo);
+    h.u64(out.migrations.refused_capacity);
+    h.0
 }
 
 /// Pick the replica an arrival (of `prompt_tokens`) is routed to.  The
@@ -1695,148 +1325,6 @@ fn migrate_residents(
             }
         }
     }
-}
-
-/// Sum of KV blocks the queued prompts will demand — shared by the
-/// cached router-scoring path and its debug cross-check (previously
-/// duplicated inline in both).
-fn queued_blocks_sum(queue: &VecDeque<Request>, block_tokens: u32) -> u32 {
-    queue
-        .iter()
-        .map(|r| blocks_for(r.prompt_tokens, block_tokens))
-        .sum()
-}
-
-fn shadow_power(scaler: Option<&Autoscaler>, t: f64) -> f64 {
-    match scaler.and_then(|s| s.shadow().map(|sh| (s, sh))) {
-        Some((s, sh)) if t >= sh.started_at && t < sh.ready_at => {
-            idle_power_w(&s.specs()[sh.target], FREQ_MAX_MHZ)
-        }
-        _ => 0.0,
-    }
-}
-
-/// Admit as many queued requests as the policy allows (FIFO with
-/// head-of-line blocking, matching the paper's single queue).
-fn try_admissions(
-    e: &mut EngineRt,
-    queue: &mut VecDeque<Request>,
-    cfg: &ServingConfig,
-    policy: Policy,
-    model: &PerfModel,
-    sched: &Scheduler,
-    stats: &mut ServingStats,
-) {
-    let now = e.cursor;
-    while let Some(req) = queue.front() {
-        // Blocked-head fast path: nothing relevant changed since the
-        // last failed check, so skip the expensive re-evaluation.
-        if let Some((id, at)) = e.blocked_head {
-            if id == req.id && at == e.completions {
-                break;
-            }
-            e.blocked_head = None;
-        }
-        if e.sim.batch() >= e.sim.spec().max_batch {
-            break;
-        }
-        let spec = e.sim.spec().clone();
-        let adjusted =
-            conservative_adjust(req.predicted_gen, cfg.predictor_p95_error, cfg.max_tokens);
-        let k = e.sim.iter_index();
-        let entry = entry_for(req.id, req.prompt_tokens, adjusted, req.arrival_s, k, &sched.slo);
-
-        let lost = if policy.slo_admission {
-            e.sb.virtual_append(entry);
-            let (decision, already_lost) = sched.admission_check(
-                model,
-                &spec,
-                &e.sb,
-                &mut e.tracker,
-                &mut e.scratch,
-                k,
-                now,
-                req.id,
-            );
-            // De-facto-lost residents stop blocking future admissions.
-            for id in already_lost {
-                e.sb.mark_lost(id);
-            }
-            match decision {
-                AdmissionDecision::Admit => {
-                    e.sb.commit_virtual();
-                    false
-                }
-                AdmissionDecision::AdmitLost => {
-                    e.sb.commit_virtual();
-                    e.sb.mark_lost(req.id);
-                    true
-                }
-                AdmissionDecision::Queue(_) => {
-                    e.sb.rollback_virtual();
-                    e.blocked_head = Some((req.id, e.completions));
-                    break;
-                }
-            }
-        } else {
-            // Triton baseline: KV-capacity gate only.
-            if !e.sim.kv_fits(req.prompt_tokens) {
-                e.blocked_head = Some((req.id, e.completions));
-                break;
-            }
-            e.sb.insert(entry);
-            false
-        };
-
-        let req = queue.pop_front().unwrap();
-        match e.sim.admit(req.clone(), now, lost) {
-            Ok(()) => {}
-            Err(_) => {
-                // Engine-side admission raced (KV or batch slot): undo
-                // everything and leave the request at the queue head.
-                e.sb.strike(entry.id);
-                queue.push_front(req);
-                e.blocked_head = Some((entry.id, e.completions));
-                break;
-            }
-        }
-
-        // §IV-E: the throttling controller runs on admission.
-        if policy.throttling {
-            rethrottle(e, !queue.is_empty(), model, sched);
-        }
-    }
-    let _ = stats;
-}
-
-/// Run the §IV-E controller for the engine's current scoreboard.
-///
-/// `queue_pressure`: when admission control could NOT place every
-/// waiting query (the wait queue is non-empty), the engine runs at
-/// maximum frequency — queued queries' deadlines are burning and the
-/// fastest drain protects their SLOs (the paper observes "peak power
-/// equal to that of Triton when under high system pressure").
-fn rethrottle(e: &mut EngineRt, queue_pressure: bool, model: &PerfModel, sched: &Scheduler) {
-    let now = e.cursor;
-    let f = if queue_pressure {
-        FREQ_MAX_MHZ
-    } else {
-        let scale = e.load_inflation(now);
-        let k = e.sim.iter_index();
-        let proj = e.tracker.project(&e.sb, k, None);
-        min_slo_frequency_with(
-            &e.grid,
-            model,
-            e.sim.spec(),
-            &sched.slo,
-            &e.sb,
-            proj,
-            now,
-            scale,
-            &mut e.scratch,
-        )
-    };
-    e.sim.dvfs.set(now, f);
 }
 
 /// The replica's queue head cannot pass admission with every engine

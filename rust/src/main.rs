@@ -22,7 +22,7 @@ use throttllem::config::{
     parse_fleet_jsonl, parse_replica_spec, MigrationSpec, ReplicaSpec, ServingConfig,
 };
 use throttllem::coordinator::{
-    serve_fleet_plan, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
+    outcome_digest, serve_fleet_plan, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
 };
 use throttllem::engine::request::Request;
 use throttllem::mlmodel::{mae, mape, r2_score};
@@ -80,6 +80,21 @@ fn cli_scenario_requests(
             Ok(legacy())
         }
     }
+}
+
+/// `--outcome-digest <file>`: write the run's [`outcome_digest`] as a
+/// 16-hex-digit line.  The CI threads-identity job serves the same
+/// trace at `--threads 1` and `--threads 4` and compares the files
+/// bitwise — the cheapest cross-process form of the determinism
+/// contract.
+fn maybe_write_digest(args: &Args, out: &FleetOutcome) -> anyhow::Result<()> {
+    if let Some(path) = args.get("outcome-digest") {
+        let hex = format!("{:016x}\n", outcome_digest(out));
+        std::fs::write(path, &hex)
+            .map_err(|e| anyhow::anyhow!("--outcome-digest {path:?}: {e}"))?;
+        eprintln!("outcome digest: {} -> {path}", hex.trim());
+    }
+    Ok(())
 }
 
 /// Parse the `--migration on|off` switch plus its cost knobs
@@ -159,6 +174,10 @@ usage: throttllem <serve|profile|train-model|engines|real-serve> [--options]
                  fleet scale-in; off = drain-based scale-in, the default)
                --migration-base-ms <ms> --migration-gbps <GB/s>
                --migration-power <W>   (modeled transfer cost knobs)
+               --threads <n>  (RUN-phase worker threads, 0 = auto; any
+                 value is bit-identical to --threads 1)
+               --outcome-digest <file>  (write the run's 64-bit outcome
+                 digest as hex; equal digests = bit-identical runs)
   profile:     --engine <name> --samples <n>
   train-model: --engine <name> [--samples <n>]
   real-serve:  --artifacts <dir> --batch <n> --steps <n>";
@@ -274,8 +293,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         policy,
         policy.autoscaling && replicas > 1,
     )
-    .with_migration(migration_from_args(args)?);
+    .with_migration(migration_from_args(args)?)
+    .with_threads(args.get_u64("threads", 1)? as usize);
     let fleet_out = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
+    maybe_write_digest(args, &fleet_out)?;
     print_serve_report(&cfg, policy, router, replicas, &fleet_out);
     Ok(())
 }
@@ -312,6 +333,7 @@ fn cmd_serve_hetero(
             && n > 1
             && args.flag("autoscale-replicas"),
         migration: migration_from_args(args)?,
+        threads: args.get_u64("threads", 1)? as usize,
     };
     let engines = plan.engines();
     // Fleet-wide knobs anchor on the highest-capacity engine; replicas
@@ -353,6 +375,7 @@ fn cmd_serve_hetero(
     );
 
     let fleet_out = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
+    maybe_write_digest(args, &fleet_out)?;
     print_serve_report(&cfg, policy, router, n, &fleet_out);
     Ok(())
 }

@@ -217,6 +217,26 @@ impl ServingStats {
         self.migration_energy_j += other.migration_energy_j;
         self.migrated_e2e.extend_from(&other.migrated_e2e);
     }
+
+    /// Order-independent fleet reduction: merge `(replica_index,
+    /// stats)` parts into one aggregate, sorting by replica index
+    /// FIRST so the result is a pure function of the part set.
+    /// Float accumulation order is thereby pinned — handing parts in
+    /// any permutation produces bit-identical output (property-tested
+    /// below), which is what lets the sharded coordinator reduce
+    /// worker results without caring how rounds interleaved.
+    pub fn merge_ordered<'a, I>(parts: I) -> ServingStats
+    where
+        I: IntoIterator<Item = (usize, &'a ServingStats)>,
+    {
+        let mut parts: Vec<(usize, &ServingStats)> = parts.into_iter().collect();
+        parts.sort_by_key(|&(id, _)| id);
+        let mut total = ServingStats::default();
+        for (_, part) in parts {
+            total.merge_from(part);
+        }
+        total
+    }
 }
 
 #[cfg(test)]
@@ -337,6 +357,91 @@ mod tests {
         // 2 of 3 migrated completions inside a 3 s SLO.
         assert!((a.migrated_e2e_attainment(3.0) - 2.0 / 3.0).abs() < 1e-12);
         assert!(ServingStats::default().migrated_e2e_attainment(1.0).is_nan());
+    }
+
+    /// Bit-level equality of two stats (floats compared via to_bits —
+    /// the fleet determinism contract, not approximate equality).
+    fn assert_stats_bit_identical(a: &ServingStats, b: &ServingStats) {
+        let series = |s: &ServingStats| {
+            [
+                s.e2e.values().to_vec(),
+                s.tbt.values().to_vec(),
+                s.ttft.values().to_vec(),
+                s.queue.values().to_vec(),
+                s.power.values().to_vec(),
+                s.freq.values().to_vec(),
+                s.iter_tbt.values().to_vec(),
+                s.migrated_e2e.values().to_vec(),
+            ]
+        };
+        for (x, y) in series(a).iter().zip(series(b).iter()) {
+            assert_eq!(x.len(), y.len());
+            for (u, v) in x.iter().zip(y.iter()) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
+        assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+        assert_eq!(a.wall_s.to_bits(), b.wall_s.to_bits());
+        assert_eq!(
+            a.migration_energy_j.to_bits(),
+            b.migration_energy_j.to_bits()
+        );
+        assert_eq!(a.total_tokens, b.total_tokens);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.lost, b.lost);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.migrated_in, b.migrated_in);
+        assert_eq!(a.migrated_out, b.migrated_out);
+    }
+
+    #[test]
+    fn merge_ordered_is_permutation_invariant() {
+        // Property: merging any permutation of tagged per-replica parts
+        // produces BIT-identical aggregates.  Values are chosen to make
+        // float-order sensitivity visible (summing doubles of very
+        // different magnitudes does not commute bitwise), so an
+        // unsorted reduction would fail this test.
+        let k = 7usize;
+        let mut parts: Vec<ServingStats> = Vec::new();
+        for i in 0..k {
+            let mut s = ServingStats::default();
+            let scale = (10.0f64).powi(i as i32 * 3 - 9);
+            s.record_outcome(&outcome(0.1 + scale, 10 + i as u32));
+            s.record_outcome(&outcome(3.0 * scale + 0.7, 20));
+            s.total_energy_j = 1e-4 + scale * 7.3;
+            s.migration_energy_j = scale / 3.0;
+            s.wall_s = 5.0 + i as f64 * 0.1;
+            s.dropped = i as u64 % 3;
+            s.migrated_in = i as u64;
+            s.migrated_e2e.push(scale + 0.01);
+            parts.push(s);
+        }
+        let tagged: Vec<(usize, &ServingStats)> =
+            parts.iter().enumerate().collect();
+        let reference = ServingStats::merge_ordered(tagged.clone());
+
+        // Identity, reversed, and every rotation of the part list.
+        let mut orders: Vec<Vec<(usize, &ServingStats)>> = vec![
+            tagged.clone(),
+            tagged.iter().rev().cloned().collect(),
+        ];
+        for r in 1..k {
+            let mut rot = tagged.clone();
+            rot.rotate_left(r);
+            orders.push(rot);
+        }
+        for order in orders {
+            let merged = ServingStats::merge_ordered(order);
+            assert_stats_bit_identical(&reference, &merged);
+        }
+
+        // And the pinned order matches today's plain index-order fold
+        // (the pre-refactor aggregation), bit for bit.
+        let mut plain = ServingStats::default();
+        for p in &parts {
+            plain.merge_from(p);
+        }
+        assert_stats_bit_identical(&reference, &plain);
     }
 
     #[test]
