@@ -12,6 +12,10 @@
 //! Requires `make artifacts`. Run with:
 //!   cargo run --release --example real_model_serving [-- --requests 24 --steps 24]
 
+// Reviewed wall-clock use: this example times a real PJRT execution;
+// nothing here feeds simulated outcomes.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use throttllem::cli::Args;

@@ -16,6 +16,11 @@
 //!     when both files carry percentiles, cross-machine ratios
 //!     normalized by the [`CALIBRATION_BENCH`] fixed-work loop).
 
+// Reviewed wall-clock/env use: this module's whole purpose is timing
+// real executions and reading bench-harness knobs; nothing here feeds
+// simulated outcomes (it is outside detlint's r3 scope).
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use crate::config::ServingConfig;

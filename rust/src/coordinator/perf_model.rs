@@ -6,6 +6,11 @@
 //! queries it per projected future iteration; `t_r` cumulatively sums
 //! predicted TBTs to estimate arrival times of future iterations.
 
+// Reviewed HashMap use: the prediction memo is keyed lookup only with
+// a deterministic custom hasher and is never iterated (detlint r2
+// enforces that), so hash order cannot reach FleetOutcome.
+#![allow(clippy::disallowed_types)]
+
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
 

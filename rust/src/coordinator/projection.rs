@@ -292,6 +292,7 @@ impl ProjectionTracker {
     ///
     /// Debug builds bit-compare the result against a from-scratch
     /// [`project_entries`] build on every call.
+    // detlint: hot
     pub fn project(
         &mut self,
         sb: &Scoreboard,

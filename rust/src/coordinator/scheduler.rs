@@ -196,6 +196,7 @@ pub fn evaluate_slo_entries(
 /// Violator ids are left in `scratch.violators`; `scratch.blamed` is
 /// never touched, so callers may stash a prior evaluation's verdict
 /// there across a second evaluation.
+// detlint: hot
 #[allow(clippy::too_many_arguments)]
 pub fn evaluate_slo_scratch<'a>(
     model: &PerfModel,
@@ -274,6 +275,7 @@ impl Scheduler {
     /// marking) and the caller should mark them so; they do not block
     /// the candidate, which is only blamed for violations it newly
     /// causes.
+    // detlint: hot
     #[allow(clippy::too_many_arguments)]
     pub fn admission_check(
         &self,
@@ -291,6 +293,7 @@ impl Scheduler {
 
         // Check 1: KV cache capacity.
         if proj.peak_kv() > spec.kv_blocks {
+            // detlint: allow(r4, reason = "empty vec![] never allocates")
             return (AdmissionDecision::Queue(QueueReason::KvCapacity), vec![]);
         }
 
@@ -307,6 +310,7 @@ impl Scheduler {
             scratch,
         );
         if !eval.tbt_ok {
+            // detlint: allow(r4, reason = "empty vec![] never allocates")
             return (AdmissionDecision::Queue(QueueReason::TbtSlo), vec![]);
         }
 
@@ -318,6 +322,7 @@ impl Scheduler {
         let mut blamed = std::mem::take(&mut scratch.blamed);
         blamed.clear();
         blamed.extend(scratch.violators.iter().copied().filter(|&id| id != new_id));
+        // detlint: allow(r4, reason = "empty vec![] never allocates; only the rare doomed-resident path pushes into it")
         let mut already_lost: Vec<RequestId> = vec![];
         if !blamed.is_empty() {
             // Which of them violate even WITHOUT the candidate?  The

@@ -43,6 +43,11 @@
 //! — `tests/fleet_threads.rs` pins this the same way
 //! `fleet_equivalence.rs` pins the fleet-of-one path.
 
+// Reviewed HashMap use: `reroutes` is keyed `entry()` access only and
+// is never iterated (detlint r2 enforces that), so hash order cannot
+// reach FleetOutcome.
+#![allow(clippy::disallowed_types)]
+
 use std::collections::{HashMap, VecDeque};
 
 use crate::config::fleet::{MigrationSpec, ReplicaSpec};
@@ -438,6 +443,11 @@ fn serve_fleet_plan_inner(
     let mut fleet_window = 0u64;
 
     let mut rr_cursor = 0usize;
+    // detlint r2 audit (2026-08): `reroutes` is touched ONLY through
+    // keyed `entry()` lookups (see forward_or_drop) — never iterated —
+    // so its per-instance hash order cannot leak into FleetOutcome;
+    // the run-twice digest test in rust/tests/fleet_threads.rs
+    // regression-guards this.
     let mut reroutes: HashMap<RequestId, usize> = HashMap::new();
     let mut rerouted = 0u64;
     let mut activations = 0u32;

@@ -68,6 +68,7 @@ pub fn min_slo_frequency_on_grid(
 /// ~log₂(grid) probes — and across consecutive searches for as long as
 /// the committed entry set and iteration stay put (the scratch stamp
 /// clears the memo the moment either moves).
+// detlint: hot
 #[allow(clippy::too_many_arguments)]
 pub fn min_slo_frequency_with(
     grid: &[u32],

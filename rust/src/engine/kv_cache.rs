@@ -7,6 +7,11 @@
 //! allocator refuses to overcommit (the scheduler's KV-capacity check
 //! exists to keep swapping from ever happening).
 
+// Reviewed HashMap use: `held` is keyed lookup only on the serving
+// path; the sole iterations live in `check_invariants` and are
+// order-independent (see the detlint r2 allows there).
+#![allow(clippy::disallowed_types)]
+
 use std::collections::HashMap;
 
 use crate::engine::request::RequestId;
@@ -136,17 +141,22 @@ impl KvAllocator {
     /// Invariant check (used by property tests): no block is both free
     /// and held, and accounting adds up.
     pub fn check_invariants(&self) {
+        // detlint: allow(r2, reason = "a sum over map values is commutative; iteration order cannot affect the assert")
         let held: u32 = self.held.values().map(|(_, b)| b.len() as u32).sum();
         assert_eq!(held + self.free_blocks(), self.capacity_blocks);
         let mut seen = vec![false; self.capacity_blocks as usize];
-        for b in self
-            .free
-            .iter()
-            .chain(self.held.values().flat_map(|(_, b)| b.iter()))
-        {
+        for b in &self.free {
             assert!(!seen[*b as usize], "block {b} double-owned");
             seen[*b as usize] = true;
         }
+        // detlint: allow(r2, reason = "double-ownership scan marks each block once; the verdict is order-independent")
+        for (_id, (_tokens, blocks)) in &self.held {
+            for b in blocks {
+                assert!(!seen[*b as usize], "block {b} double-owned");
+                seen[*b as usize] = true;
+            }
+        }
+        // detlint: allow(r2, reason = "per-entry assert touches each request independently; order cannot affect the verdict")
         for (id, (tokens, blocks)) in &self.held {
             assert_eq!(
                 blocks.len() as u32,

@@ -46,9 +46,11 @@ pub fn power_w(spec: &EngineSpec, batch: u32, kv_blocks: u32, freq_mhz: u32) -> 
     let fnorm =
         (freq_mhz as f64 / super::dvfs::FREQ_MAX_MHZ as f64).clamp(0.05, 1.0);
     let kv_frac = (kv_blocks as f64 / spec.kv_blocks as f64).min(1.0);
+    // detlint: allow(r1, reason = "load-bearing std math: energy golden digests are blessed against std powf here")
+    let kv_term = P_KV_W * kv_frac * fnorm.powf(1.5);
     let per_gpu = P_STATIC_W
         + P_DYN_W * pdyn_norm(fnorm)
-        + P_KV_W * kv_frac * fnorm.powf(1.5)
+        + kv_term
         + P_BATCH_W * batch as f64 / spec.n_gpus as f64;
     per_gpu * spec.n_gpus as f64
 }

@@ -23,6 +23,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod gpusim;
 pub mod jsonl;
+pub mod lint;
 pub mod metrics;
 pub mod mlmodel;
 pub mod runtime;

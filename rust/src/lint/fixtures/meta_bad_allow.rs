@@ -1,0 +1,6 @@
+// detlint-fixture: virtual-path = rust/src/sim/fixture_bad_allow.rs
+// detlint-expect: bad-allow @ 5
+// detlint-expect: r1 @ 6
+
+// detlint: allow(r1)
+pub fn f(x: f64) -> f64 { x.exp() }

@@ -1,0 +1,5 @@
+// detlint-fixture: virtual-path = rust/src/sim/fixture_unused_allow.rs
+// detlint-expect: unused-allow @ 4
+
+// detlint: allow(r1, reason = "nothing underneath violates r1")
+pub fn f(x: f64) -> f64 { x.sqrt() }

@@ -1,0 +1,8 @@
+// detlint-fixture: virtual-path = rust/src/gpusim/fixture_r1_clean.rs
+
+pub fn safe(p: f64) -> f64 {
+    // detlint: allow(r1, reason = "fixture: std exp is load-bearing here")
+    let e = p.exp();
+    // sqrt is IEEE-exact (correctly rounded on every platform): exempt.
+    e + p.sqrt()
+}

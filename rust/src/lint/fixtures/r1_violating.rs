@@ -1,0 +1,6 @@
+// detlint-fixture: virtual-path = rust/src/gpusim/fixture_r1.rs
+// detlint-expect: r1 @ 5
+
+pub fn energy(p: f64) -> f64 {
+    p.exp() * 2.0
+}

@@ -1,0 +1,11 @@
+// detlint-fixture: virtual-path = rust/src/engine/fixture_r2_clean.rs
+
+pub fn lookup(m: &std::collections::HashMap<u64, u64>, k: u64) -> Option<u64> {
+    // Keyed access never observes iteration order.
+    m.get(&k).copied()
+}
+
+pub fn count(m: &std::collections::HashMap<u64, u64>) -> usize {
+    // detlint: allow(r2, reason = "fixture: count is order-independent")
+    m.values().count()
+}

@@ -1,0 +1,11 @@
+// detlint-fixture: virtual-path = rust/src/coordinator/fixture_r2.rs
+// detlint-expect: r2 @ 7
+// detlint-expect: r2 @ 10
+
+pub fn sum_all(m: &std::collections::HashMap<u64, u64>) -> u64 {
+    let mut total = 0;
+    for (_, v) in m {
+        total += v;
+    }
+    total + m.values().sum::<u64>()
+}

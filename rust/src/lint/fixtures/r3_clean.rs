@@ -1,0 +1,6 @@
+// detlint-fixture: virtual-path = rust/benches/fixture_r3_clean.rs
+
+// Benches run on the wall clock by definition: out of r3's scope.
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

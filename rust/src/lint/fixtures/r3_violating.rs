@@ -1,0 +1,6 @@
+// detlint-fixture: virtual-path = rust/src/sim/fixture_r3.rs
+// detlint-expect: r3 @ 5
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

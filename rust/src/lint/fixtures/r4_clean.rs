@@ -1,0 +1,14 @@
+// detlint-fixture: virtual-path = rust/src/coordinator/fixture_r4_clean.rs
+
+// detlint: hot
+pub fn hot_accumulate(acc: &mut Vec<u64>, x: u64) {
+    // Push into caller-owned capacity only grows amortized; the
+    // runtime audit in perf_hotpath checks steady-state counts.
+    acc.push(x);
+    let y = x.clone();
+    acc.push(y);
+}
+
+pub fn cold_alloc() -> Vec<u64> {
+    vec![1, 2, 3]
+}

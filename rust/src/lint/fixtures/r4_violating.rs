@@ -1,0 +1,11 @@
+// detlint-fixture: virtual-path = rust/src/coordinator/fixture_r4.rs
+// detlint-expect: r4 @ 7
+// detlint-expect: r4 @ 9
+
+// detlint: hot
+pub fn hot_sum(xs: &[u64]) -> Vec<u64> {
+    let mut out = vec![0u64];
+    out.extend(xs.iter().map(|x| x * 2));
+    let flat: Vec<u64> = out.iter().copied().collect();
+    flat
+}

@@ -1,0 +1,6 @@
+// detlint-fixture: virtual-path = rust/benches/perf_hotpath.rs
+
+// The counting allocator's file is the one whitelisted unsafe site.
+pub fn counted() -> u64 {
+    unsafe { core::mem::transmute::<i64, u64>(-1) }
+}

@@ -1,0 +1,6 @@
+// detlint-fixture: virtual-path = rust/src/engine/fixture_r5.rs
+// detlint-expect: r5 @ 5
+
+pub fn peek(xs: &[u64]) -> u64 {
+    unsafe { *xs.get_unchecked(0) }
+}

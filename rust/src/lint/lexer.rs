@@ -1,0 +1,475 @@
+//! A minimal, line/column-tracking Rust lexer for `detlint`.
+//!
+//! This is not a full Rust lexer — it is exactly enough to let the
+//! rule engine in [`super::rules`] match token *sequences* (`.` `exp`
+//! `(`) instead of raw text, which is what makes the rules immune to
+//! pattern strings appearing inside string literals or comments.  The
+//! tricky cases it does handle correctly:
+//!
+//! - line comments, nested block comments (captured separately so the
+//!   directive parser can see `// detlint: ...` annotations),
+//! - string literals with escapes, raw strings `r#"..."#` (any hash
+//!   depth), byte strings,
+//! - lifetimes (`'a`) vs. char literals (`'x'`, `'\n'`),
+//! - numeric literals including float forms (`1.5`, `1e-9`, `10.0f64`)
+//!   so `1.5.powf(...)` and `0..n` tokenize unambiguously.
+//!
+//! Everything else becomes single-character punctuation tokens.
+
+/// Token classes the rule engine distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `for`, `unsafe`, `HashMap`, ...).
+    Ident,
+    /// Numeric literal (integer or float, with suffix).
+    Num,
+    /// String literal of any flavor (`"..."`, `r#"..."#`, `b"..."`).
+    Str,
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// A single punctuation character (`.`, `:`, `{`, `!`, ...).
+    Punct,
+}
+
+/// One token with its 1-based source position.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+impl Tok {
+    /// True for a punctuation token of exactly this character.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+
+    /// True for an identifier token with exactly this text.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+}
+
+/// One comment (text without the `//` / `/* */` markers, trimmed).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// Lexer output: code tokens plus the comment stream.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+/// Lex `src` into tokens and comments.  Never fails: unterminated
+/// constructs simply run to end-of-file (the rule engine tolerates a
+/// truncated tail — real compilation errors are rustc's job).
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut col = 1u32;
+
+    // Advance one char, maintaining line/col.
+    macro_rules! bump {
+        () => {{
+            if chars[i] == '\n' {
+                line += 1;
+                col = 1;
+            } else {
+                col += 1;
+            }
+            i += 1;
+        }};
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        let (tline, tcol) = (line, col);
+
+        // Whitespace.
+        if c.is_whitespace() {
+            bump!();
+            continue;
+        }
+
+        // Line comment.
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            let start = i + 2;
+            let mut end = start;
+            while end < chars.len() && chars[end] != '\n' {
+                end += 1;
+            }
+            out.comments.push(Comment {
+                text: chars[start..end].iter().collect::<String>().trim().to_string(),
+                line: tline,
+                col: tcol,
+            });
+            while i < end {
+                bump!();
+            }
+            continue;
+        }
+
+        // Block comment (nested, per Rust).
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let start = i + 2;
+            let mut depth = 1u32;
+            bump!();
+            bump!();
+            let mut text_end = i;
+            while i < chars.len() && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    bump!();
+                    bump!();
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    bump!();
+                    bump!();
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    bump!();
+                }
+                text_end = i;
+            }
+            out.comments.push(Comment {
+                text: chars[start..text_end.min(chars.len())]
+                    .iter()
+                    .collect::<String>()
+                    .trim()
+                    .to_string(),
+                line: tline,
+                col: tcol,
+            });
+            continue;
+        }
+
+        // Raw strings and byte strings: r"..", r#".."#, br#".."#, b"..".
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            if c == 'b' && chars.get(j) == Some(&'r') {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while chars.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            let is_raw = j > i + 1 || (chars.get(i + 1) == Some(&'"') && c == 'r');
+            if chars.get(j) == Some(&'"') && (is_raw || c == 'b') {
+                // Consume prefix + opening quote.
+                while i <= j {
+                    bump!();
+                }
+                if hashes == 0 && !is_raw {
+                    // b"..." — escaped string body.
+                    while i < chars.len() {
+                        if chars[i] == '\\' && i + 1 < chars.len() {
+                            bump!();
+                            bump!();
+                        } else if chars[i] == '"' {
+                            bump!();
+                            break;
+                        } else {
+                            bump!();
+                        }
+                    }
+                } else {
+                    // Raw body: ends at `"` followed by `hashes` hashes.
+                    while i < chars.len() {
+                        if chars[i] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && chars.get(i + 1 + k) == Some(&'#') {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                for _ in 0..=hashes {
+                                    bump!();
+                                }
+                                break;
+                            }
+                        }
+                        bump!();
+                    }
+                }
+                out.tokens.push(Tok {
+                    kind: TokKind::Str,
+                    text: String::new(),
+                    line: tline,
+                    col: tcol,
+                });
+                continue;
+            }
+            if c == 'b' && chars.get(i + 1) == Some(&'\'') {
+                // Byte char b'x'.
+                bump!(); // b
+                bump!(); // '
+                while i < chars.len() {
+                    if chars[i] == '\\' && i + 1 < chars.len() {
+                        bump!();
+                        bump!();
+                    } else if chars[i] == '\'' {
+                        bump!();
+                        break;
+                    } else {
+                        bump!();
+                    }
+                }
+                out.tokens.push(Tok {
+                    kind: TokKind::Char,
+                    text: String::new(),
+                    line: tline,
+                    col: tcol,
+                });
+                continue;
+            }
+            // Fall through: plain identifier starting with r/b.
+        }
+
+        // Plain string literal.
+        if c == '"' {
+            bump!();
+            while i < chars.len() {
+                if chars[i] == '\\' && i + 1 < chars.len() {
+                    bump!();
+                    bump!();
+                } else if chars[i] == '"' {
+                    bump!();
+                    break;
+                } else {
+                    bump!();
+                }
+            }
+            out.tokens.push(Tok {
+                kind: TokKind::Str,
+                text: String::new(),
+                line: tline,
+                col: tcol,
+            });
+            continue;
+        }
+
+        // Lifetime vs. char literal.
+        if c == '\'' {
+            let next = chars.get(i + 1).copied();
+            let after = chars.get(i + 2).copied();
+            let is_char = match next {
+                Some('\\') => true,
+                Some(n) if (n.is_alphanumeric() || n == '_') && after == Some('\'') => true,
+                Some(n) if !n.is_alphabetic() && n != '_' => true, // e.g. '(' — malformed, treat as char
+                _ => false,
+            };
+            if is_char {
+                bump!(); // '
+                while i < chars.len() {
+                    if chars[i] == '\\' && i + 1 < chars.len() {
+                        bump!();
+                        bump!();
+                    } else if chars[i] == '\'' {
+                        bump!();
+                        break;
+                    } else {
+                        bump!();
+                    }
+                }
+                out.tokens.push(Tok {
+                    kind: TokKind::Char,
+                    text: String::new(),
+                    line: tline,
+                    col: tcol,
+                });
+            } else {
+                // Lifetime: `'` + ident chars.
+                bump!();
+                let start = i;
+                while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    bump!();
+                }
+                out.tokens.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: chars[start..i].iter().collect(),
+                    line: tline,
+                    col: tcol,
+                });
+            }
+            continue;
+        }
+
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                bump!();
+            }
+            out.tokens.push(Tok {
+                kind: TokKind::Ident,
+                text: chars[start..i].iter().collect(),
+                line: tline,
+                col: tcol,
+            });
+            continue;
+        }
+
+        // Number: digits, `_`, hex/oct/bin, float `.` + digit, exponent,
+        // and trailing type suffix (`1.5f64`, `10u32`).
+        if c.is_ascii_digit() {
+            let start = i;
+            bump!();
+            if chars.get(i).map(|c| *c == 'x' || *c == 'o' || *c == 'b') == Some(true)
+                && chars[start] == '0'
+            {
+                bump!();
+                while i < chars.len() && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                    bump!();
+                }
+            } else {
+                while i < chars.len() && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                    bump!();
+                }
+                // Fractional part ONLY if `.` is followed by a digit —
+                // so `1.5` is one token while `0..n` and `1.max(x)` are not.
+                if chars.get(i) == Some(&'.')
+                    && chars.get(i + 1).map(|c| c.is_ascii_digit()) == Some(true)
+                {
+                    bump!();
+                    while i < chars.len() && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                        bump!();
+                    }
+                }
+                // Exponent.
+                if chars.get(i).map(|c| *c == 'e' || *c == 'E') == Some(true)
+                    && chars
+                        .get(i + 1)
+                        .map(|c| c.is_ascii_digit() || *c == '+' || *c == '-')
+                        == Some(true)
+                {
+                    bump!();
+                    bump!();
+                    while i < chars.len() && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                        bump!();
+                    }
+                }
+                // Suffix (`f64`, `u32`, ...).
+                while i < chars.len() && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                    bump!();
+                }
+            }
+            out.tokens.push(Tok {
+                kind: TokKind::Num,
+                text: chars[start..i].iter().collect(),
+                line: tline,
+                col: tcol,
+            });
+            continue;
+        }
+
+        // Single punctuation char.
+        out.tokens.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line: tline,
+            col: tcol,
+        });
+        bump!();
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_are_not_tokens() {
+        let l = lex("let x = 1; // trailing .exp()\n/* block .ln() */ let y = 2;");
+        assert_eq!(l.comments.len(), 2);
+        assert_eq!(l.comments[0].text, "trailing .exp()");
+        assert_eq!(l.comments[1].text, "block .ln()");
+        assert!(l.tokens.iter().all(|t| t.text != "exp" && t.text != "ln"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let l = lex("/* a /* b */ c */ fn f() {}");
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(idents("/* a /* b */ c */ fn f() {}"), vec!["fn", "f"]);
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let src = r##"let s = "call .exp() here"; let r = r#"raw .ln()"#;"##;
+        let l = lex(src);
+        assert!(l.tokens.iter().all(|t| t.text != "exp" && t.text != "ln"));
+        assert_eq!(
+            l.tokens.iter().filter(|t| t.kind == TokKind::Str).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn lifetime_vs_char_literal() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        let lifetimes: Vec<_> = l
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .collect();
+        let chars: Vec<_> = l.tokens.iter().filter(|t| t.kind == TokKind::Char).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert_eq!(chars.len(), 2);
+    }
+
+    #[test]
+    fn float_method_calls_tokenize() {
+        // `1.5.powf(2.0)` → Num(1.5) Punct(.) Ident(powf) ...
+        let l = lex("let y = 1.5.powf(2.0); let r = 0..n;");
+        let toks: Vec<_> = l.tokens.iter().map(|t| t.text.as_str()).collect();
+        assert!(toks.contains(&"1.5"));
+        assert!(toks.contains(&"powf"));
+        assert!(toks.contains(&"2.0"));
+        // Range `0..n` keeps its two dots as punctuation.
+        let dots = l.tokens.iter().filter(|t| t.is_punct('.')).count();
+        assert_eq!(dots, 3);
+    }
+
+    #[test]
+    fn number_suffixes_and_exponents() {
+        let l = lex("let a = 10.0f64; let b = 1e-9; let c = 0xff_u32;");
+        let nums: Vec<_> = l
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["10.0f64", "1e-9", "0xff_u32"]);
+    }
+
+    #[test]
+    fn positions_are_one_based_and_tracked() {
+        let l = lex("fn f() {\n    let x = 1;\n}");
+        let x = l.tokens.iter().find(|t| t.is_ident("x")).unwrap();
+        assert_eq!((x.line, x.col), (2, 9));
+    }
+}

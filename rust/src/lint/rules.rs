@@ -1,0 +1,809 @@
+//! The `detlint` rule engine: five determinism / hot-path rules over
+//! the token stream of [`super::lexer`], plus the
+//! `// detlint: allow(<rule>, reason = "...")` escape hatch.
+//!
+//! Rules (see README "Static analysis" for the catalog):
+//!
+//! - **r1** — no std float transcendentals (`.exp()`, `.ln()`, `.sin()`,
+//!   `.cos()`, `.powf()`, `.powi()`; `.sqrt()` is IEEE-exact and
+//!   exempt) outside `sim/detmath.rs`.  Std libm differs across
+//!   platforms in the last ulp, which breaks the golden-hash contract.
+//! - **r2** — no `HashMap`/`HashSet` *iteration* in outcome-affecting
+//!   modules (`coordinator/`, `sim/`, `workload/`, `engine/`): the
+//!   per-instance `RandomState` seed makes iteration order
+//!   nondeterministic even within one process.  Keyed lookup is fine.
+//! - **r3** — no wall-clock or OS entropy (`Instant::now`,
+//!   `SystemTime`, `thread_rng`, `std::env` reads) in those same
+//!   modules: RNG only via `sim/rng.rs`, time only via `sim/clock.rs`.
+//! - **r4** — functions tagged `// detlint: hot` reject allocating
+//!   constructs (`Vec::new`, `vec![]`, `.collect()`, `.to_vec()`,
+//!   `.clone()` on non-`Copy`-hinted receivers, `format!`, `Box::new`,
+//!   `String::from`) — the static complement of the
+//!   `THROTTLLEM_STRICT_ALLOC` runtime audit in `perf_hotpath`.
+//! - **r5** — no `unsafe` outside the reviewed whitelist (currently
+//!   only the counting allocator in `rust/benches/perf_hotpath.rs`).
+//!
+//! Every rule is a *heuristic over tokens* (no type information): it is
+//! tuned to have zero false negatives on the constructs above at the
+//! cost of occasional false positives, which is what the mandatory-
+//! reason `allow` annotation is for.  An `allow` that suppresses
+//! nothing is itself an error (`unused-allow`), so annotations cannot
+//! rot in place.
+
+use super::lexer::{lex, Tok, TokKind};
+
+/// The five lintable rules (allow annotations must name one of these).
+pub const RULE_NAMES: [&str; 5] = ["r1", "r2", "r3", "r4", "r5"];
+
+/// File that R1 exempts (the deterministic math implementation itself,
+/// whose tests compare against std as a sanity oracle).
+pub const R1_EXEMPT: &str = "rust/src/sim/detmath.rs";
+
+/// Module prefixes where R2/R3 apply: everything whose state can reach
+/// `FleetOutcome` or the recorded trace.
+pub const OUTCOME_SCOPE: [&str; 4] = [
+    "rust/src/coordinator/",
+    "rust/src/sim/",
+    "rust/src/workload/",
+    "rust/src/engine/",
+];
+
+/// R5 whitelist: files allowed to contain `unsafe` without annotation.
+pub const UNSAFE_WHITELIST: [&str; 1] = ["rust/benches/perf_hotpath.rs"];
+
+const R1_METHODS: [&str; 6] = ["exp", "ln", "sin", "cos", "powf", "powi"];
+const R2_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+const COPY_PRIMS: [&str; 17] = [
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize", "f32",
+    "f64", "bool", "char", "str",
+];
+
+/// One diagnostic, printable as `path:line:col rule message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diag {
+    pub path: String,
+    pub line: u32,
+    pub col: u32,
+    /// "r1".."r5", or the meta-rules "bad-allow" / "unused-allow".
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Diag {
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}:{} {} {}",
+            self.path, self.line, self.col, self.rule, self.msg
+        )
+    }
+}
+
+/// A parsed `// detlint: allow(rule, reason = "...")` annotation.
+struct Allow {
+    rule: &'static str,
+    line: u32,
+    col: u32,
+    used: bool,
+}
+
+/// Lint one file's source.  `path` must be the repo-relative,
+/// '/'-separated path (fixtures substitute a virtual path here so the
+/// path-scoped rules can be exercised from the fixtures directory).
+pub fn lint_source(path: &str, src: &str) -> Vec<Diag> {
+    let lexed = lex(src);
+    let toks = &lexed.tokens;
+
+    // ---- directives -------------------------------------------------
+    let mut allows: Vec<Allow> = Vec::new();
+    let mut hot_lines: Vec<(u32, u32)> = Vec::new(); // (line, col)
+    let mut diags: Vec<Diag> = Vec::new();
+
+    for c in &lexed.comments {
+        let Some(body) = c.text.strip_prefix("detlint:") else {
+            continue;
+        };
+        let body = body.trim();
+        if body == "hot" {
+            hot_lines.push((c.line, c.col));
+            continue;
+        }
+        match parse_allow(body) {
+            Ok(rule) => allows.push(Allow {
+                rule,
+                line: c.line,
+                col: c.col,
+                used: false,
+            }),
+            Err(why) => diags.push(Diag {
+                path: path.to_string(),
+                line: c.line,
+                col: c.col,
+                rule: "bad-allow",
+                msg: why,
+            }),
+        }
+    }
+
+    // ---- raw rule diagnostics --------------------------------------
+    let mut raw: Vec<Diag> = Vec::new();
+    rule_r1(path, toks, &mut raw);
+    rule_r2(path, toks, &mut raw);
+    rule_r3(path, toks, &mut raw);
+    rule_r4(path, toks, &hot_lines, &mut raw, &mut diags);
+    rule_r5(path, toks, &mut raw);
+
+    // ---- apply allows ----------------------------------------------
+    // An allow suppresses matching-rule diagnostics on its own line
+    // (trailing-comment form); otherwise on the next token-bearing
+    // line (comment-above form, stackable because comments are not
+    // tokens).
+    let mut token_lines: Vec<u32> = toks.iter().map(|t| t.line).collect();
+    token_lines.sort_unstable();
+    token_lines.dedup();
+    let next_code_line = |after: u32| -> Option<u32> {
+        let idx = token_lines.partition_point(|&l| l <= after);
+        token_lines.get(idx).copied()
+    };
+
+    let mut suppressed = vec![false; raw.len()];
+    for a in &mut allows {
+        let same_line_hit = raw
+            .iter()
+            .enumerate()
+            .any(|(i, d)| !suppressed[i] && d.rule == a.rule && d.line == a.line);
+        let target = if same_line_hit {
+            Some(a.line)
+        } else {
+            next_code_line(a.line)
+        };
+        if let Some(t) = target {
+            for (i, d) in raw.iter().enumerate() {
+                if d.rule == a.rule && d.line == t {
+                    suppressed[i] = true;
+                    a.used = true;
+                }
+            }
+        }
+    }
+    for (i, d) in raw.into_iter().enumerate() {
+        if !suppressed[i] {
+            diags.push(d);
+        }
+    }
+    for a in &allows {
+        if !a.used {
+            diags.push(Diag {
+                path: path.to_string(),
+                line: a.line,
+                col: a.col,
+                rule: "unused-allow",
+                msg: format!(
+                    "allow({}) suppressed no diagnostic; remove it or fix the annotation placement",
+                    a.rule
+                ),
+            });
+        }
+    }
+
+    diags.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
+    diags
+}
+
+/// Parse the inside of a `detlint:` comment body of the allow form.
+/// Returns the canonical rule name, or a human-readable error.
+fn parse_allow(body: &str) -> Result<&'static str, String> {
+    let inner = body
+        .strip_prefix("allow(")
+        .and_then(|s| s.strip_suffix(')'))
+        .ok_or_else(|| {
+            format!(
+                "malformed detlint directive {body:?}: expected `hot` or \
+                 `allow(<rule>, reason = \"...\")`"
+            )
+        })?;
+    let (rule_part, rest) = inner.split_once(',').ok_or_else(|| {
+        "allow is missing its mandatory reason: `allow(<rule>, reason = \"...\")`".to_string()
+    })?;
+    let rule_part = rule_part.trim();
+    let rule = RULE_NAMES
+        .iter()
+        .find(|r| **r == rule_part)
+        .copied()
+        .ok_or_else(|| format!("unknown rule {rule_part:?} (expected one of r1..r5)"))?;
+    let rest = rest.trim();
+    let reason = rest
+        .strip_prefix("reason")
+        .map(|s| s.trim_start())
+        .and_then(|s| s.strip_prefix('='))
+        .map(|s| s.trim())
+        .ok_or_else(|| "allow is missing `reason = \"...\"`".to_string())?;
+    let quoted = reason.strip_prefix('"').and_then(|s| s.strip_suffix('"'));
+    match quoted {
+        Some(q) if !q.trim().is_empty() => Ok(rule),
+        Some(_) => Err("allow reason must not be empty".to_string()),
+        None => Err("allow reason must be a quoted string".to_string()),
+    }
+}
+
+fn in_outcome_scope(path: &str) -> bool {
+    OUTCOME_SCOPE.iter().any(|p| path.starts_with(p))
+}
+
+/// R1: `.exp(` / `.ln(` / `.sin(` / `.cos(` / `.powf(` / `.powi(`
+/// anywhere outside `sim/detmath.rs`.
+fn rule_r1(path: &str, toks: &[Tok], out: &mut Vec<Diag>) {
+    if path == R1_EXEMPT {
+        return;
+    }
+    for i in 0..toks.len().saturating_sub(2) {
+        if toks[i].is_punct('.')
+            && toks[i + 1].kind == TokKind::Ident
+            && R1_METHODS.contains(&toks[i + 1].text.as_str())
+            && toks[i + 2].is_punct('(')
+        {
+            out.push(Diag {
+                path: path.to_string(),
+                line: toks[i + 1].line,
+                col: toks[i + 1].col,
+                rule: "r1",
+                msg: format!(
+                    "std float `.{}()` is platform-dependent in the last ulp and \
+                     breaks golden-hash bit-identity; use sim/detmath or annotate \
+                     why std math is load-bearing",
+                    toks[i + 1].text
+                ),
+            });
+        }
+    }
+}
+
+/// R2: iteration over identifiers declared as `HashMap`/`HashSet` in
+/// outcome-affecting modules.  Receiver typing is a file-scoped name
+/// heuristic: any identifier that appears as `name: HashMap<...>`,
+/// `name: &HashSet<...>`, or `name = HashMap::new()` (with or without
+/// a `std::collections::` path) is treated as a hash collection for
+/// the rest of the file.
+fn rule_r2(path: &str, toks: &[Tok], out: &mut Vec<Diag>) {
+    if !in_outcome_scope(path) {
+        return;
+    }
+    // Pass 1: collect hash-collection identifier names.
+    let mut names: Vec<String> = Vec::new();
+    for i in 0..toks.len() {
+        if !(toks[i].is_ident("HashMap") || toks[i].is_ident("HashSet")) {
+            continue;
+        }
+        // Unwind a leading `std :: collections ::` style path.
+        let mut j = i;
+        while j >= 3
+            && toks[j - 1].is_punct(':')
+            && toks[j - 2].is_punct(':')
+            && toks[j - 3].kind == TokKind::Ident
+        {
+            j -= 3;
+        }
+        if j == 0 {
+            continue;
+        }
+        // Skip `&`, `&'a`, `mut` between the `:` and the type.
+        let mut k = j - 1;
+        while k > 0
+            && (toks[k].is_punct('&')
+                || toks[k].is_ident("mut")
+                || toks[k].kind == TokKind::Lifetime)
+        {
+            k -= 1;
+        }
+        // `name : <type>` (let binding, field, or fn param) or
+        // `name = HashMap::new()` (inferred let binding).
+        if (toks[k].is_punct(':') || toks[k].is_punct('='))
+            && k > 0
+            && toks[k - 1].kind == TokKind::Ident
+        {
+            let name = toks[k - 1].text.clone();
+            if !names.contains(&name) {
+                names.push(name);
+            }
+        }
+    }
+    if names.is_empty() {
+        return;
+    }
+    let is_map = |t: &Tok| t.kind == TokKind::Ident && names.iter().any(|n| *n == t.text);
+
+    // Pass 2a: `<name> . <iterating-method> (`.
+    for i in 0..toks.len().saturating_sub(3) {
+        if is_map(&toks[i])
+            && toks[i + 1].is_punct('.')
+            && toks[i + 2].kind == TokKind::Ident
+            && R2_METHODS.contains(&toks[i + 2].text.as_str())
+            && toks[i + 3].is_punct('(')
+        {
+            out.push(Diag {
+                path: path.to_string(),
+                line: toks[i + 2].line,
+                col: toks[i + 2].col,
+                rule: "r2",
+                msg: format!(
+                    "`.{}()` iterates hash collection `{}` in an outcome-affecting \
+                     module; iteration order is per-instance random — use a sorted \
+                     or Vec-backed structure, or annotate why order never escapes \
+                     into FleetOutcome",
+                    toks[i + 2].text, toks[i].text
+                ),
+            });
+        }
+    }
+
+    // Pass 2b: `for <pat> in [&][mut] [self.]<name> {`.
+    for i in 0..toks.len() {
+        if !toks[i].is_ident("in") {
+            continue;
+        }
+        let mut j = i + 1;
+        while j < toks.len() && (toks[j].is_punct('&') || toks[j].is_ident("mut")) {
+            j += 1;
+        }
+        // Read a dotted/pathed chain of idents; remember the last one.
+        let mut last: Option<usize> = None;
+        while j < toks.len() {
+            if toks[j].kind == TokKind::Ident {
+                last = Some(j);
+                j += 1;
+            } else if toks[j].is_punct('.') || toks[j].is_punct(':') {
+                j += 1;
+            } else {
+                break;
+            }
+        }
+        // Only a bare collection expression directly iterated counts:
+        // a following `(` means a method call (handled by pass 2a).
+        if j < toks.len() && toks[j].is_punct('{') {
+            if let Some(l) = last {
+                if is_map(&toks[l]) {
+                    out.push(Diag {
+                        path: path.to_string(),
+                        line: toks[l].line,
+                        col: toks[l].col,
+                        rule: "r2",
+                        msg: format!(
+                            "`for .. in` over hash collection `{}` in an \
+                             outcome-affecting module; iteration order is \
+                             per-instance random — use a sorted or Vec-backed \
+                             structure, or annotate why order never escapes into \
+                             FleetOutcome",
+                            toks[l].text
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// R3: wall-clock / OS entropy in outcome-affecting modules.
+fn rule_r3(path: &str, toks: &[Tok], out: &mut Vec<Diag>) {
+    if !in_outcome_scope(path) {
+        return;
+    }
+    let mut push = |t: &Tok, what: &str| {
+        out.push(Diag {
+            path: path.to_string(),
+            line: t.line,
+            col: t.col,
+            rule: "r3",
+            msg: format!(
+                "{what} injects wall-clock/OS entropy into a deterministic \
+                 module; RNG must come from sim/rng.rs and time from sim/clock.rs"
+            ),
+        });
+    };
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.is_ident("SystemTime") {
+            push(t, "`SystemTime`");
+        } else if t.is_ident("thread_rng") {
+            push(t, "`thread_rng`");
+        } else if t.is_ident("Instant")
+            && i + 3 < toks.len()
+            && toks[i + 1].is_punct(':')
+            && toks[i + 2].is_punct(':')
+            && toks[i + 3].is_ident("now")
+        {
+            push(t, "`Instant::now`");
+        } else if t.is_ident("env")
+            && i + 3 < toks.len()
+            && toks[i + 1].is_punct(':')
+            && toks[i + 2].is_punct(':')
+            && ["var", "vars", "var_os", "args", "args_os"]
+                .contains(&toks[i + 3].text.as_str())
+        {
+            push(t, "`std::env` read");
+        }
+    }
+}
+
+/// R4: allocating constructs inside `// detlint: hot` functions.
+fn rule_r4(
+    path: &str,
+    toks: &[Tok],
+    hot_lines: &[(u32, u32)],
+    out: &mut Vec<Diag>,
+    meta: &mut Vec<Diag>,
+) {
+    for &(hline, hcol) in hot_lines {
+        // The tag binds to the first `fn` at or after its line
+        // (trailing-comment form binds to the same line).
+        let Some(fn_idx) = toks
+            .iter()
+            .position(|t| t.is_ident("fn") && t.line >= hline)
+        else {
+            meta.push(Diag {
+                path: path.to_string(),
+                line: hline,
+                col: hcol,
+                rule: "bad-allow",
+                msg: "`detlint: hot` tag is not followed by a function".to_string(),
+            });
+            continue;
+        };
+        let fn_name = toks
+            .get(fn_idx + 1)
+            .map(|t| t.text.clone())
+            .unwrap_or_default();
+        // Find the body: first `{` after the signature; a `;` first
+        // means a bodiless trait method.
+        let mut open = None;
+        let mut paren = 0i32;
+        for (i, t) in toks.iter().enumerate().skip(fn_idx) {
+            if t.is_punct('(') || t.is_punct('[') {
+                paren += 1;
+            } else if t.is_punct(')') || t.is_punct(']') {
+                paren -= 1;
+            } else if t.is_punct('{') {
+                open = Some(i);
+                break;
+            } else if t.is_punct(';') && paren == 0 {
+                break;
+            }
+        }
+        let Some(open) = open else {
+            meta.push(Diag {
+                path: path.to_string(),
+                line: hline,
+                col: hcol,
+                rule: "bad-allow",
+                msg: format!("`detlint: hot` tagged fn `{fn_name}` has no body"),
+            });
+            continue;
+        };
+        let mut depth = 1i32;
+        let mut close = toks.len();
+        for (i, t) in toks.iter().enumerate().skip(open + 1) {
+            if t.is_punct('{') {
+                depth += 1;
+            } else if t.is_punct('}') {
+                depth -= 1;
+                if depth == 0 {
+                    close = i;
+                    break;
+                }
+            }
+        }
+        let body = &toks[open + 1..close];
+        let fn_range = &toks[fn_idx..close];
+        check_hot_body(path, &fn_name, body, fn_range, out);
+    }
+}
+
+/// Whether `name` is hinted `Copy` inside the tagged function: declared
+/// with a primitive type annotation (`name: u64`, `name: &f64`).
+fn copy_hinted(name: &str, fn_range: &[Tok]) -> bool {
+    for i in 0..fn_range.len().saturating_sub(2) {
+        if fn_range[i].is_ident(name) && fn_range[i + 1].is_punct(':') {
+            let mut j = i + 2;
+            while j < fn_range.len()
+                && (fn_range[j].is_punct('&')
+                    || fn_range[j].is_ident("mut")
+                    || fn_range[j].kind == TokKind::Lifetime)
+            {
+                j += 1;
+            }
+            if j < fn_range.len()
+                && fn_range[j].kind == TokKind::Ident
+                && COPY_PRIMS.contains(&fn_range[j].text.as_str())
+            {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn check_hot_body(path: &str, fn_name: &str, body: &[Tok], fn_range: &[Tok], out: &mut Vec<Diag>) {
+    let mut push = |t: &Tok, what: String| {
+        out.push(Diag {
+            path: path.to_string(),
+            line: t.line,
+            col: t.col,
+            rule: "r4",
+            msg: format!(
+                "allocating construct {what} in hot function `{fn_name}` \
+                 (steady-state sweep must stay allocation-free; see \
+                 THROTTLLEM_STRICT_ALLOC in perf_hotpath)"
+            ),
+        });
+    };
+    for i in 0..body.len() {
+        let t = &body[i];
+        // `Vec::new` / `Box::new` / `String::from`.
+        if (t.is_ident("Vec") || t.is_ident("Box") || t.is_ident("String"))
+            && i + 3 < body.len()
+            && body[i + 1].is_punct(':')
+            && body[i + 2].is_punct(':')
+        {
+            let m = &body[i + 3];
+            let hit = (t.is_ident("Vec") && (m.is_ident("new") || m.is_ident("with_capacity")))
+                || (t.is_ident("Box") && m.is_ident("new"))
+                || (t.is_ident("String") && (m.is_ident("from") || m.is_ident("new")));
+            if hit {
+                push(t, format!("`{}::{}`", t.text, m.text));
+            }
+        }
+        // `vec!` / `format!`.
+        if (t.is_ident("vec") || t.is_ident("format"))
+            && i + 1 < body.len()
+            && body[i + 1].is_punct('!')
+        {
+            push(t, format!("`{}!`", t.text));
+        }
+        // `.collect()` / `.to_vec()` / `.clone()`.
+        if t.is_punct('.') && i + 2 < body.len() && body[i + 2].is_punct('(') {
+            let m = &body[i + 1];
+            if m.is_ident("collect") || m.is_ident("to_vec") || m.is_ident("to_string") {
+                push(m, format!("`.{}()`", m.text));
+            } else if m.is_ident("clone") {
+                // Copy-hinted receivers (primitive-typed locals/params)
+                // are memcpys, not allocations.
+                let receiver_ok = i > 0
+                    && body[i - 1].kind == TokKind::Ident
+                    && copy_hinted(&body[i - 1].text, fn_range);
+                if !receiver_ok {
+                    push(m, "`.clone()` on a non-Copy-hinted receiver".to_string());
+                }
+            }
+        }
+    }
+}
+
+/// R5: `unsafe` outside the whitelist.
+fn rule_r5(path: &str, toks: &[Tok], out: &mut Vec<Diag>) {
+    if UNSAFE_WHITELIST.contains(&path) {
+        return;
+    }
+    for t in toks {
+        if t.is_ident("unsafe") {
+            out.push(Diag {
+                path: path.to_string(),
+                line: t.line,
+                col: t.col,
+                rule: "r5",
+                msg: "`unsafe` outside the reviewed whitelist \
+                      (rust/benches/perf_hotpath.rs); extend the whitelist only \
+                      with a reviewed justification"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(diags: &[Diag]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn r1_flags_transcendentals_and_exempts_sqrt() {
+        let d = lint_source(
+            "rust/src/gpusim/x.rs",
+            "fn f(x: f64) -> f64 { x.exp() + x.sqrt() + x.powf(1.5) }",
+        );
+        assert_eq!(rules_of(&d), vec!["r1", "r1"]);
+        assert!(d[0].msg.contains(".exp()"));
+        assert!(d[1].msg.contains(".powf()"));
+    }
+
+    #[test]
+    fn r1_exempts_detmath() {
+        let d = lint_source(
+            "rust/src/sim/detmath.rs",
+            "fn f(x: f64) -> f64 { x.exp() }",
+        );
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn r1_ignores_strings_and_comments() {
+        let d = lint_source(
+            "rust/src/sim/x.rs",
+            "// calls .exp() conceptually\nfn f() -> &'static str { \".exp()\" }",
+        );
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn r2_tracks_declarations_and_flags_iteration() {
+        let src = r#"
+            use std::collections::HashMap;
+            fn f() {
+                let mut m: HashMap<u64, u64> = HashMap::new();
+                m.insert(1, 2);          // keyed access: fine
+                let _ = m.get(&1);       // fine
+                for (k, v) in &m {       // flagged
+                    let _ = (k, v);
+                }
+                let _: Vec<_> = m.keys().collect(); // flagged
+            }
+        "#;
+        let d = lint_source("rust/src/coordinator/x.rs", src);
+        assert_eq!(rules_of(&d), vec!["r2", "r2"]);
+    }
+
+    #[test]
+    fn r2_only_in_outcome_scope() {
+        let src = "fn f(m: &std::collections::HashMap<u64, u64>) { for x in m.keys() { let _ = x; } }";
+        assert!(lint_source("rust/src/metrics/x.rs", src).is_empty());
+        assert_eq!(rules_of(&lint_source("rust/src/engine/x.rs", src)), vec!["r2"]);
+    }
+
+    #[test]
+    fn r2_self_field_iteration() {
+        let src = r#"
+            struct S { held: std::collections::HashSet<u64> }
+            impl S {
+                fn f(&self) { for x in &self.held { let _ = x; } }
+                fn g(&self) -> usize { self.held.values().count() }
+            }
+        "#;
+        let d = lint_source("rust/src/engine/x.rs", src);
+        assert_eq!(rules_of(&d), vec!["r2", "r2"]);
+    }
+
+    #[test]
+    fn r3_flags_entropy_sources() {
+        let src = r#"
+            fn f() {
+                let t = std::time::Instant::now();
+                let e = std::env::var("X");
+                let _ = (t, e);
+            }
+        "#;
+        let d = lint_source("rust/src/workload/x.rs", src);
+        assert_eq!(rules_of(&d), vec!["r3", "r3"]);
+        // Out of scope: benches may time things.
+        assert!(lint_source("rust/benches/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r4_flags_allocations_only_in_hot_fns() {
+        let src = r#"
+            // detlint: hot
+            fn hot_one(n: u64) -> u64 {
+                let v = vec![1, 2];
+                let w = Vec::new();
+                let s = format!("{n}");
+                let _ = (v, w, s);
+                n
+            }
+            fn cold(n: u64) -> Vec<u64> { vec![n] }
+        "#;
+        let d = lint_source("rust/src/coordinator/x.rs", src);
+        assert_eq!(rules_of(&d), vec!["r4", "r4", "r4"]);
+    }
+
+    #[test]
+    fn r4_clone_copy_hint() {
+        let src = r#"
+            // detlint: hot
+            fn hot_one(a: u64, req: &Request) -> u64 {
+                let b = a.clone();      // Copy-hinted: fine
+                let r = req.clone();    // flagged
+                let _ = r;
+                b
+            }
+        "#;
+        let d = lint_source("rust/src/coordinator/x.rs", src);
+        assert_eq!(rules_of(&d), vec!["r4"]);
+        assert!(d[0].msg.contains("clone"));
+    }
+
+    #[test]
+    fn r4_hot_without_fn_is_bad() {
+        let d = lint_source("rust/src/coordinator/x.rs", "// detlint: hot\nconst X: u64 = 1;\n");
+        assert_eq!(rules_of(&d), vec!["bad-allow"]);
+    }
+
+    #[test]
+    fn r5_unsafe_whitelist() {
+        let src = "fn f() { unsafe { core::hint::unreachable_unchecked() } }";
+        assert_eq!(rules_of(&lint_source("rust/src/engine/x.rs", src)), vec!["r5"]);
+        assert!(lint_source("rust/benches/perf_hotpath.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_suppresses_and_must_be_used() {
+        let src = r#"
+            // detlint: allow(r1, reason = "test of suppression")
+            fn f(x: f64) -> f64 { x.exp() }
+        "#;
+        assert!(lint_source("rust/src/sim/x.rs", src).is_empty());
+
+        let unused = r#"
+            // detlint: allow(r1, reason = "nothing to suppress")
+            fn f(x: f64) -> f64 { x.sqrt() }
+        "#;
+        let d = lint_source("rust/src/sim/x.rs", unused);
+        assert_eq!(rules_of(&d), vec!["unused-allow"]);
+    }
+
+    #[test]
+    fn allow_trailing_comment_form() {
+        let src = "fn f(x: f64) -> f64 { x.exp() } // detlint: allow(r1, reason = \"same line\")";
+        assert!(lint_source("rust/src/sim/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn stacked_allows_bind_to_next_code_line() {
+        let src = r#"
+            // detlint: allow(r1, reason = "std ln is load-bearing here")
+            // detlint: allow(r2, reason = "order-independent sum")
+            fn f(m: &std::collections::HashMap<u64, f64>) -> f64 {
+                m.values().map(|v| v.ln()).sum()
+            }
+        "#;
+        // Binding is line-precise: both allows bind past the comments
+        // to the `fn` signature line, which has no violations — the
+        // violations sit one line further down and stay flagged, and
+        // the misplaced allows are reported as unused.
+        let d = lint_source("rust/src/coordinator/x.rs", src);
+        assert_eq!(
+            rules_of(&d),
+            vec!["unused-allow", "unused-allow", "r2", "r1"]
+        );
+    }
+
+    #[test]
+    fn missing_reason_is_bad_allow() {
+        let src = "// detlint: allow(r1)\nfn f(x: f64) -> f64 { x.exp() }";
+        let d = lint_source("rust/src/sim/x.rs", src);
+        assert_eq!(rules_of(&d), vec!["bad-allow", "r1"]);
+    }
+
+    #[test]
+    fn unknown_rule_is_bad_allow() {
+        let src = "// detlint: allow(r9, reason = \"nope\")\nfn f() {}";
+        let d = lint_source("rust/src/sim/x.rs", src);
+        assert_eq!(rules_of(&d), vec!["bad-allow"]);
+    }
+
+    #[test]
+    fn empty_reason_is_bad_allow() {
+        let src = "// detlint: allow(r1, reason = \"  \")\nfn f(x: f64) -> f64 { x.exp() }";
+        let d = lint_source("rust/src/sim/x.rs", src);
+        assert_eq!(rules_of(&d), vec!["bad-allow", "r1"]);
+    }
+}

@@ -401,11 +401,12 @@ mod tests {
         // float-order sensitivity visible (summing doubles of very
         // different magnitudes does not commute bitwise), so an
         // unsorted reduction would fail this test.
-        let k = 7usize;
+        const SCALES: [f64; 7] = [1e-9, 1e-6, 1e-3, 1.0, 1e3, 1e6, 1e9];
+        let k = SCALES.len();
         let mut parts: Vec<ServingStats> = Vec::new();
         for i in 0..k {
             let mut s = ServingStats::default();
-            let scale = (10.0f64).powi(i as i32 * 3 - 9);
+            let scale = SCALES[i];
             s.record_outcome(&outcome(0.1 + scale, 10 + i as u32));
             s.record_outcome(&outcome(3.0 * scale + 0.7, 20));
             s.total_energy_j = 1e-4 + scale * 7.3;

@@ -232,7 +232,10 @@ mod tests {
     fn respects_max_depth() {
         let mut rng = Pcg64::new(4);
         let x: Vec<Vec<f64>> = (0..500).map(|_| vec![rng.next_f64()]).collect();
-        let y: Vec<f64> = x.iter().map(|r| (10.0 * r[0]).sin()).collect();
+        let y: Vec<f64> = x
+            .iter()
+            .map(|r| crate::sim::detmath::sin_det(10.0 * r[0]))
+            .collect();
         let p = TreeParams {
             max_depth: 3,
             ..Default::default()

@@ -13,6 +13,10 @@
 
 #[cfg(feature = "pjrt")]
 mod imp {
+    // Reviewed HashMap use: executable caches are keyed lookup only
+    // and are never iterated, so hash order cannot reach outcomes.
+    #![allow(clippy::disallowed_types)]
+
     use std::collections::HashMap;
     use std::path::Path;
 

@@ -80,13 +80,22 @@ impl Pcg64 {
 
     /// Standard normal via Box–Muller (single value; the spare is
     /// discarded to keep the generator state trivially reproducible).
+    ///
+    /// Deliberately uses std `ln`/`cos` (not [`crate::sim::detmath`]):
+    /// python/bless_golden.py samples with the identical std calls, so
+    /// the golden workload hashes are keyed to these exact bit
+    /// patterns.  Migrating the samplers to detmath would re-bless
+    /// every golden — tracked as a ROADMAP follow-up.
     pub fn normal(&mut self) -> f64 {
         loop {
             let u1 = self.next_f64();
             if u1 > 1e-300 {
                 let u2 = self.next_f64();
-                return (-2.0 * u1.ln()).sqrt()
-                    * (2.0 * std::f64::consts::PI * u2).cos();
+                // detlint: allow(r1, reason = "load-bearing std math: golden traces are blessed against std ln (see doc comment)")
+                let r = (-2.0 * u1.ln()).sqrt();
+                // detlint: allow(r1, reason = "load-bearing std math: golden traces are blessed against std cos (see doc comment)")
+                let theta = (2.0 * std::f64::consts::PI * u2).cos();
+                return r * theta;
             }
         }
     }
@@ -98,12 +107,14 @@ impl Pcg64 {
 
     /// Log-normal with the given parameters of the underlying normal.
     pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        // detlint: allow(r1, reason = "load-bearing std math: golden traces are blessed against std exp (see normal())")
         (mu + sigma * self.normal()).exp()
     }
 
     /// Exponential with rate `lambda` (mean 1/lambda).
     pub fn exponential(&mut self, lambda: f64) -> f64 {
         assert!(lambda > 0.0);
+        // detlint: allow(r1, reason = "load-bearing std math: golden traces are blessed against std ln (see normal())")
         -self.next_f64().max(1e-300).ln() / lambda
     }
 
@@ -174,7 +185,10 @@ mod tests {
         assert!(seen_lo && seen_hi);
     }
 
+    /// 50k-sample moment check — statistical, not logic; far too slow
+    /// under Miri's interpreter and exercises no pointer tricks anyway.
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn normal_moments() {
         let mut r = Pcg64::new(11);
         let n = 50_000;
@@ -187,6 +201,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn exponential_mean() {
         let mut r = Pcg64::new(13);
         let n = 50_000;

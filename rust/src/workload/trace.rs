@@ -95,10 +95,13 @@ impl TraceParams {
 /// peak over a wandering baseline (Fig. 5b).
 fn shape(t_norm: f64, wobble: &[f64]) -> f64 {
     // Gaussian bump at the midpoint + slow sinusoidal wander.
+    // detlint: allow(r1, reason = "load-bearing std math: golden trace hashes are blessed against std exp here")
     let peak = (-((t_norm - 0.5) * (t_norm - 0.5)) / (2.0 * 0.18 * 0.18)).exp();
-    let wander = 0.18
-        * ((t_norm * std::f64::consts::PI * 4.0).sin()
-            + (t_norm * std::f64::consts::PI * 7.0).cos());
+    // detlint: allow(r1, reason = "load-bearing std math: golden trace hashes are blessed against std sin here")
+    let wander_sin = (t_norm * std::f64::consts::PI * 4.0).sin();
+    // detlint: allow(r1, reason = "load-bearing std math: golden trace hashes are blessed against std cos here")
+    let wander_cos = (t_norm * std::f64::consts::PI * 7.0).cos();
+    let wander = 0.18 * (wander_sin + wander_cos);
     // Per-bin multiplicative noise (piecewise over 15 bins).
     let bin = ((t_norm * wobble.len() as f64) as usize).min(wobble.len() - 1);
     ((0.30 + 0.70 * peak + wander) * wobble[bin]).max(0.0)

@@ -198,6 +198,43 @@ fn migration_on_diurnal_threads_bit_identical() {
     }
 }
 
+/// Trimmed race-detection target for the CI ThreadSanitizer job
+/// (`cargo +nightly test -Zbuild-std ... --test fleet_threads -- tsan_smoke`):
+/// one steady and one burst leg at `--threads 4`, long enough to cross
+/// every worker-pool handoff (spawn, per-round replica ownership
+/// transfer, barrier merge, shutdown) but short enough for sanitizer
+/// overhead.  Under plain `cargo test` it doubles as a cheap smoke.
+#[test]
+fn tsan_smoke_worker_pool_handoffs() {
+    let policy = Policy::throttle_only();
+    let cfg = ServingConfig::throttllem(llama2_13b(2));
+    let plan = FleetPlan::homogeneous(4, RouterPolicy::ProjectedHeadroom, &cfg, policy, false)
+        .with_threads(4);
+    let model = PerfModel::train(&plan.engines(), 40, 0);
+    for kind in [ScenarioKind::Steady, ScenarioKind::Burst] {
+        let (_, _, out) = serve_scenario(&cfg, policy, &model, &plan, kind, 60.0, 0.6, 0);
+        assert!(out.total.stats.completed > 0, "smoke must serve load");
+    }
+}
+
+/// Two back-to-back runs in the same process build fresh
+/// `HashMap`/`HashSet` instances whose SipHash seeds differ, so a
+/// digest mismatch here means a hash-ordered iteration leaked into
+/// `FleetOutcome` — exactly what detlint's r2 rule guards statically.
+/// This is the dynamic regression for the audited keyed-only
+/// collections (`reroutes` in server.rs, `migrated_ids` in shard.rs)
+/// on the full policy with migration and fleet scaling enabled.
+#[test]
+fn rerun_digest_stable_across_hash_seeds() {
+    let a = migration_run(2);
+    let b = migration_run(2);
+    assert_eq!(
+        outcome_digest(&a),
+        outcome_digest(&b),
+        "same plan, same process, fresh hash seeds: the outcome digest must not move"
+    );
+}
+
 const GOLDEN_PATH: &str = concat!(
     env!("CARGO_MANIFEST_DIR"),
     "/rust/tests/golden/fleet_threads_burst.hash"

@@ -48,7 +48,9 @@ fn brute_force(sb: &Scoreboard, j: u64, n_tokens: u32) -> (u32, u32) {
 
 #[test]
 fn projection_matches_brute_force_eq1_eq2() {
-    proptest_lite(PropConfig { cases: 200, seed: 1 }, |rng| {
+    // Miri interprets ~1000x slower: trim case counts, keep coverage.
+    let cases = if cfg!(miri) { 8 } else { 200 };
+    proptest_lite(PropConfig { cases, seed: 1 }, |rng| {
         let (sb, k) = random_scoreboard(rng, 40);
         let n_tokens = 64;
         let proj = project(&sb, k, n_tokens);
@@ -66,7 +68,8 @@ fn projection_matches_brute_force_eq1_eq2() {
 
 #[test]
 fn projection_batch_never_exceeds_entries() {
-    proptest_lite(PropConfig { cases: 100, seed: 2 }, |rng| {
+    let cases = if cfg!(miri) { 10 } else { 100 };
+    proptest_lite(PropConfig { cases, seed: 2 }, |rng| {
         let (sb, k) = random_scoreboard(rng, 64);
         let proj = project(&sb, k, 64);
         let n = sb.committed().len() as u32;
@@ -82,7 +85,8 @@ fn kv_projection_monotone_while_batch_constant() {
     // only grow. (With future s_i > k, a simultaneous leave+join keeps
     // the count while changing the KV sum, so the property is scoped
     // to running entries.)
-    proptest_lite(PropConfig { cases: 100, seed: 3 }, |rng| {
+    let cases = if cfg!(miri) { 10 } else { 100 };
+    proptest_lite(PropConfig { cases, seed: 3 }, |rng| {
         let (mut sb, k) = random_scoreboard(rng, 20);
         let ids: Vec<u64> = sb.committed().iter().map(|e| e.id).collect();
         for id in ids {
@@ -105,7 +109,12 @@ fn kv_projection_monotone_while_batch_constant() {
     });
 }
 
+/// GBDT training dominates this test; under Miri's interpreter that is
+/// minutes of pure float math with no pointer discipline to check, so
+/// the Miri job skips it (the pure projection/tracker properties above
+/// and below still run there).
 #[test]
+#[cfg_attr(miri, ignore)]
 fn throttle_choice_is_consistent_with_slo_eval() {
     let spec = llama2_13b(2);
     let model = PerfModel::train(&[spec.clone()], 40, 0);
@@ -144,7 +153,8 @@ fn throttle_choice_is_consistent_with_slo_eval() {
 /// rollback / strike / bump_overrun / advance-iteration, seeded PCG.
 #[test]
 fn tracker_matches_from_scratch_under_random_op_sequences() {
-    proptest_lite(PropConfig { cases: 60, seed: 7 }, |rng| {
+    let cases = if cfg!(miri) { 6 } else { 60 };
+    proptest_lite(PropConfig { cases, seed: 7 }, |rng| {
         let bt = 64u32;
         let mut sb = Scoreboard::new();
         let mut tracker = ProjectionTracker::new(bt);
@@ -302,7 +312,8 @@ fn tracker_window_advance_past_horizon() {
 
 #[test]
 fn virtual_rollback_is_always_clean() {
-    proptest_lite(PropConfig { cases: 100, seed: 5 }, |rng| {
+    let cases = if cfg!(miri) { 10 } else { 100 };
+    proptest_lite(PropConfig { cases, seed: 5 }, |rng| {
         let (mut sb, k) = random_scoreboard(rng, 20);
         let before = project(&sb, k, 64);
         sb.virtual_append(Entry {
