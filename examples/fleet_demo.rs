@@ -19,7 +19,11 @@
 //!     `--replay <file>` (= `--scenario replay:<file>`) replays one
 //!     bit-exactly; `--min-attainment <frac>` exits non-zero when the
 //!     best router misses the E2E-attainment bar (the CI scenario
-//!     matrix gate);
+//!     matrix gate); `--faults on [--fault-seed <n>]` turns on the
+//!     deterministic fault schedule (crashes, thermal throttles, link
+//!     degradation, preemption notices) and `--require-recoveries`
+//!     exits non-zero unless at least one crash recovery happened
+//!     (the CI chaos gate);
 //!   * `--migrate-compare` — the CI migration gate: the same scenario
 //!     trace (diurnal by default) served with `--migration off` vs
 //!     `on` on a fleet-autoscaled deployment, asserting migrations
@@ -39,7 +43,7 @@
 
 use throttllem::cli::Args;
 use throttllem::config::models::llama2_13b;
-use throttllem::config::{MigrationSpec, ReplicaSpec, ServingConfig};
+use throttllem::config::{FaultSpec, MigrationSpec, ReplicaSpec, ServingConfig};
 use throttllem::coordinator::{
     serve_fleet_plan, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
 };
@@ -205,6 +209,19 @@ fn scenario_mode(args: &Args) -> anyhow::Result<()> {
         (None, None) => unreachable!("scenario_mode needs --scenario/--replay"),
     };
     let threads = args.get_u64("threads", 1)? as usize;
+    let faults = {
+        let enabled = match args.get("faults") {
+            Some(v) => FaultSpec::parse_enabled(v)?,
+            None => false,
+        };
+        let mut f = if enabled {
+            FaultSpec::enabled_default()
+        } else {
+            FaultSpec::disabled()
+        };
+        f.seed = args.get_u64("fault-seed", f.seed)?;
+        f
+    };
     let policy = Policy::throttle_only();
     let (plan, cfg, label) = if args.flag("mixed") {
         let specs = vec![
@@ -214,7 +231,9 @@ fn scenario_mode(args: &Args) -> anyhow::Result<()> {
             ReplicaSpec::fixed(llama2_13b(1)),
         ];
         (
-            FleetPlan::heterogeneous(specs, RouterPolicy::RoundRobin).with_threads(threads),
+            FleetPlan::heterogeneous(specs, RouterPolicy::RoundRobin)
+                .with_faults(faults)
+                .with_threads(threads),
             ServingConfig::throttllem(llama2_13b(4)),
             "mixed fleet (1xTP4 + 1xTP2 + 2xTP1)".to_string(),
         )
@@ -222,6 +241,7 @@ fn scenario_mode(args: &Args) -> anyhow::Result<()> {
         let replicas = args.get_u64("replicas", 4)? as usize;
         let cfg = ServingConfig::throttllem(llama2_13b(2));
         let plan = FleetPlan::homogeneous(replicas, RouterPolicy::RoundRobin, &cfg, policy, false)
+            .with_faults(faults)
             .with_threads(threads);
         (plan, cfg, format!("{replicas} x llama2-13b-tp2"))
     };
@@ -247,6 +267,7 @@ fn scenario_mode(args: &Args) -> anyhow::Result<()> {
 
     print_header();
     let mut best_att = f64::NEG_INFINITY;
+    let mut total_recoveries = 0u64;
     let mut rr = None;
     let mut ph = None;
     for router in [
@@ -260,6 +281,25 @@ fn scenario_mode(args: &Args) -> anyhow::Result<()> {
         };
         let out = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
         print_row(&format!("{} ({})", meta.scenario, router.name()), &cfg, &out);
+        if faults.enabled {
+            let fc = &out.faults;
+            println!(
+                "  faults: {} crashes ({} recovered / {} requeued, {} retries), \
+                 {} throttles, {} preemptions, {} link failures | \
+                 shed {} / fault-lost {} / respawns {}",
+                fc.crashes,
+                fc.crash_recoveries,
+                fc.crash_requeues,
+                fc.retries,
+                fc.throttle_events,
+                fc.preemptions,
+                fc.link_failures,
+                fc.shed,
+                fc.faulted_lost,
+                fc.respawns
+            );
+            total_recoveries += fc.crash_recoveries;
+        }
         let s = &out.total.stats;
         let att = s.e2e_slo_attainment(cfg.slo.e2e_p99);
         let att = if att.is_nan() { 0.0 } else { att };
@@ -303,6 +343,18 @@ fn scenario_mode(args: &Args) -> anyhow::Result<()> {
             best_att * 100.0,
             min * 100.0
         );
+    }
+    if args.flag("require-recoveries") {
+        anyhow::ensure!(
+            faults.enabled,
+            "--require-recoveries needs --faults on"
+        );
+        anyhow::ensure!(
+            total_recoveries > 0,
+            "chaos gate: no crash recoveries happened on this schedule \
+             (retune --fault-seed / fault rates / duration)"
+        );
+        println!("chaos gate: {total_recoveries} crash recoveries across routers");
     }
     Ok(())
 }

@@ -141,6 +141,29 @@ mod tests {
     }
 
     #[test]
+    fn bad_float_error_names_flag_and_value() {
+        let a = parse(&["serve", "--peak", "fast"]);
+        let err = a.get_f64("peak", 1.0).unwrap_err().to_string();
+        assert!(err.contains("--peak"), "{err}");
+        assert!(err.contains("fast"), "{err}");
+    }
+
+    #[test]
+    fn bad_integer_error_names_flag_and_value() {
+        let a = parse(&["serve", "--fault-seed", "-3"]);
+        let err = a.get_u64("fault-seed", 0).unwrap_err().to_string();
+        assert!(err.contains("--fault-seed"), "{err}");
+        assert!(err.contains("-3"), "{err}");
+    }
+
+    #[test]
+    fn empty_equals_value_is_kept_and_rejected_by_typed_accessors() {
+        let a = parse(&["serve", "--threads="]);
+        assert_eq!(a.get("threads"), Some(""));
+        assert!(a.get_u64("threads", 1).is_err());
+    }
+
+    #[test]
     fn repeated_options_accumulate() {
         let a = parse(&[
             "serve",

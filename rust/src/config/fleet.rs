@@ -169,6 +169,95 @@ impl Default for MigrationSpec {
     }
 }
 
+/// Deterministic fault-injection policy (the `--faults on|off` /
+/// `--fault-seed` surface).  When enabled, a reproducible fault
+/// schedule is generated up front from `seed` (PCG64 + `detmath` only,
+/// the same byte-identical contract as the fleet trace generator) and
+/// replayed by the coordinator: replica crashes, thermal throttle
+/// windows, migration-link outages and preemption notices.  Disabled
+/// is the default and leaves the serving loop byte-identical to the
+/// fault-free path (the `--migration off` pattern).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub enabled: bool,
+    /// Fault-schedule seed, independent of the workload seed so the
+    /// same trace can be replayed under different fault histories.
+    pub seed: u64,
+    /// Mean time between replica crashes, seconds (fleet-wide; <= 0
+    /// disables the family).
+    pub crash_mtbf_s: f64,
+    /// Mean time between thermal-throttle onsets, seconds.
+    pub throttle_mtbf_s: f64,
+    /// Forced DVFS ceiling during a throttle window, MHz.
+    pub throttle_cap_mhz: u32,
+    /// Thermal-throttle window length, seconds.
+    pub throttle_window_s: f64,
+    /// Mean time between migration-link outages, seconds.
+    pub link_mtbf_s: f64,
+    /// Link-outage window length, seconds (fleet-wide fabric).
+    pub link_window_s: f64,
+    /// Mean time between preemption notices, seconds.
+    pub preempt_mtbf_s: f64,
+    /// Drain deadline granted by a preemption notice, seconds.
+    pub preempt_notice_s: f64,
+    /// Cadence of periodic best-effort KV checkpoints, seconds.
+    pub checkpoint_interval_s: f64,
+    /// Re-admission attempts granted to a requeued request before it
+    /// is counted as faulted loss.
+    pub retry_budget: u32,
+    /// Base retry backoff, seconds (doubles per attempt).
+    pub retry_backoff_s: f64,
+    /// Crash/preemption respawn latency, seconds (same provisioning
+    /// cost as a fleet-axis activation).
+    pub respawn_s: f64,
+}
+
+impl FaultSpec {
+    /// Faults off: the serving loop is byte-identical to the pre-fault
+    /// path.
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            ..Self::enabled_default()
+        }
+    }
+
+    /// Faults on with the default chaos mix.
+    pub fn enabled_default() -> Self {
+        Self {
+            enabled: true,
+            seed: 0,
+            crash_mtbf_s: 180.0,
+            throttle_mtbf_s: 150.0,
+            throttle_cap_mhz: 600,
+            throttle_window_s: 40.0,
+            link_mtbf_s: 200.0,
+            link_window_s: 25.0,
+            preempt_mtbf_s: 360.0,
+            preempt_notice_s: 12.0,
+            checkpoint_interval_s: 5.0,
+            retry_budget: 3,
+            retry_backoff_s: 2.0,
+            respawn_s: 25.0,
+        }
+    }
+
+    /// Parse the `--faults` CLI value.
+    pub fn parse_enabled(s: &str) -> anyhow::Result<bool> {
+        match s {
+            "on" | "true" | "1" => Ok(true),
+            "off" | "false" | "0" => Ok(false),
+            other => anyhow::bail!("--faults {other:?} (expected on | off)"),
+        }
+    }
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
 /// A strictly-integral JSON number in u32 range (`Json::as_u64` would
 /// silently truncate 2.5 to 2 and wrap out-of-range values).
 fn json_u32(j: &Json) -> Option<u32> {
@@ -403,6 +492,26 @@ mod tests {
         assert!(MigrationSpec::parse_enabled("on").unwrap());
         assert!(!MigrationSpec::parse_enabled("off").unwrap());
         assert!(MigrationSpec::parse_enabled("maybe").is_err());
+    }
+
+    #[test]
+    fn fault_spec_defaults_and_parse() {
+        let f = FaultSpec::enabled_default();
+        assert!(f.enabled);
+        assert!(f.crash_mtbf_s > 0.0 && f.respawn_s > 0.0);
+        assert!(f.throttle_cap_mhz >= 210 && f.throttle_cap_mhz < 1410);
+        assert!(!FaultSpec::disabled().enabled);
+        assert_eq!(FaultSpec::default(), FaultSpec::disabled());
+        assert!(FaultSpec::parse_enabled("on").unwrap());
+        assert!(FaultSpec::parse_enabled("1").unwrap());
+        assert!(!FaultSpec::parse_enabled("off").unwrap());
+        assert!(!FaultSpec::parse_enabled("false").unwrap());
+        // Unknown values surface as errors with a usage hint, never a
+        // panic (CLI robustness contract).
+        let e = FaultSpec::parse_enabled("chaos").unwrap_err();
+        assert!(format!("{e}").contains("expected on | off"), "{e}");
+        assert!(FaultSpec::parse_enabled("").is_err());
+        assert!(FaultSpec::parse_enabled("On").is_err());
     }
 
     #[test]

@@ -50,7 +50,7 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::config::fleet::{MigrationSpec, ReplicaSpec};
+use crate::config::fleet::{FaultSpec, MigrationSpec, ReplicaSpec};
 use crate::config::{EngineSpec, ModelFamily, ServingConfig, SloSpec};
 use crate::coordinator::autoscaler::{FleetDecision, FleetScaler};
 use crate::coordinator::migration::{
@@ -59,16 +59,19 @@ use crate::coordinator::migration::{
 use crate::coordinator::perf_model::PerfModel;
 use crate::coordinator::router::{headroom_score, RouterPolicy};
 use crate::coordinator::scheduler::entry_for;
+use crate::coordinator::scoreboard::Entry;
 use crate::coordinator::shard::{
     effective_threads, rethrottle, EngineRt, Replica, ShardPool,
 };
 use crate::coordinator::throttle::min_slo_frequency_with;
 use crate::engine::kv_cache::blocks_for;
 use crate::engine::request::{Request, RequestId, RequestOutcome};
+use crate::engine::sim::KvCheckpoint;
 use crate::gpusim::dvfs::FREQ_MAX_MHZ;
 use crate::gpusim::latency::{decode_latency_s, GpuState};
 use crate::gpusim::power::{idle_power_w, power_w};
 use crate::metrics::ServingStats;
+use crate::sim::faults::{fault_schedule, FaultCounters, FaultKind};
 use crate::workload::predictor::conservative_adjust;
 
 /// Serving policy knobs (the paper's ablation axes).
@@ -212,6 +215,12 @@ pub struct FleetPlan {
     /// default: scale-in then drains, byte-identical to the
     /// pre-migration serving loop.
     pub migration: MigrationSpec,
+    /// Deterministic fault injection (`--faults on|off` +
+    /// `--fault-seed`): crashes, thermal throttles, migration-link
+    /// failures and preemption notices, with checkpoint-based
+    /// recovery.  Disabled by default: the serving loop is
+    /// byte-identical to the fault-free path.
+    pub faults: FaultSpec,
     /// Worker threads for the RUN phase (`--threads`): replicas are
     /// partitioned into fixed contiguous shards stepped in parallel.
     /// `0` means auto (available parallelism); any value is
@@ -231,6 +240,7 @@ impl FleetPlan {
             router,
             autoscale_replicas: false,
             migration: MigrationSpec::disabled(),
+            faults: FaultSpec::disabled(),
             threads: 1,
         }
     }
@@ -238,6 +248,12 @@ impl FleetPlan {
     /// Replace the live-migration policy (builder style).
     pub fn with_migration(mut self, migration: MigrationSpec) -> Self {
         self.migration = migration;
+        self
+    }
+
+    /// Replace the fault-injection policy (builder style).
+    pub fn with_faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = faults;
         self
     }
 
@@ -266,6 +282,7 @@ impl FleetPlan {
             router,
             autoscale_replicas,
             migration: MigrationSpec::disabled(),
+            faults: FaultSpec::disabled(),
             threads: 1,
         }
     }
@@ -348,6 +365,9 @@ pub struct FleetOutcome {
     pub replica_deactivations: u32,
     /// Live-migration telemetry (all zero with `--migration off`).
     pub migrations: MigrationCounters,
+    /// Fault-injection and recovery telemetry (all zero with
+    /// `--faults off`).
+    pub faults: FaultCounters,
 }
 
 /// Serve `requests` (sorted by arrival) under `policy` on a fleet of
@@ -458,12 +478,44 @@ fn serve_fleet_plan_inner(
     // against.  Only maintained when the fleet axis is active.
     let mut recent_prompts: VecDeque<(f64, u32)> = VecDeque::new();
 
+    // Fault injection (`--faults on`): the schedule is generated up
+    // front from the spec's own seed over the arrival horizon, so it
+    // is a pure function of (spec, fleet size, trace) — independent of
+    // thread count and of anything the serving loop does.  `None`
+    // keeps every fault branch below dead and the loop byte-identical
+    // to the fault-free path.
+    let mut faults: Option<FaultRt> = plan.faults.enabled.then(|| {
+        let horizon = requests.last().map(|r| r.arrival_s).unwrap_or(0.0);
+        FaultRt {
+            schedule: fault_schedule(&plan.faults, n, horizon),
+            cursor: 0,
+            counters: FaultCounters::default(),
+            retry_q: Vec::new(),
+            pending: Vec::new(),
+            link_down_until: 0.0,
+            next_ckpt_s: (plan.faults.checkpoint_interval_s > 0.0)
+                .then_some(plan.faults.checkpoint_interval_s),
+            link: if plan.migration.enabled {
+                plan.migration
+            } else {
+                // Recovery still needs a priced link when live
+                // migration is off; the default spec models it.
+                MigrationSpec::enabled_default()
+            },
+        }
+    });
+
     let mut next_arrival = 0usize;
     let mut now = 0.0f64;
 
     loop {
         let arrivals_done = next_arrival >= requests.len();
-        if arrivals_done && replicas.iter().all(Replica::drained) {
+        let faults_quiescent = faults
+            .as_ref()
+            .map(|f| f.retry_q.is_empty() && f.pending.is_empty())
+            .unwrap_or(true);
+        if arrivals_done && faults_quiescent && replicas.iter().all(Replica::drained)
+        {
             break;
         }
 
@@ -488,6 +540,33 @@ fn serve_fleet_plan_inner(
         if let Some(t) = fleet_tick {
             // Reaching this point means work remains somewhere.
             decision = decision.min(t);
+        }
+        if let Some(f) = faults.as_ref() {
+            // Every fault instant is a coordination-phase decision
+            // point: onsets, window ends, respawns, drain deadlines,
+            // checkpoint ticks and retry fronts all interleave with
+            // the RUN phase at exact virtual times, which is what
+            // keeps `--threads N` bit-identical under chaos.
+            if let Some(e) = f.schedule.get(f.cursor) {
+                decision = decision.min(e.at_s);
+            }
+            if let Some(e) = f.retry_q.first() {
+                decision = decision.min(e.0);
+            }
+            if let Some(t) = f.next_ckpt_s {
+                decision = decision.min(t);
+            }
+            for rp in &replicas {
+                if let Some(t) = rp.respawn_at {
+                    decision = decision.min(t);
+                }
+                if let Some((_, t)) = rp.thermal {
+                    decision = decision.min(t);
+                }
+                if let Some(t) = rp.preempt_deadline {
+                    decision = decision.min(t);
+                }
+            }
         }
 
         // ---- run engine iterations up to the decision point ----------
@@ -526,10 +605,51 @@ fn serve_fleet_plan_inner(
         // ---- handle the decision point --------------------------------
         now = decision;
 
+        // Fault axis, first half: complete respawns, close thermal
+        // windows, apply due fault events, enforce drain deadlines.
+        if let Some(f) = faults.as_mut() {
+            fault_pre_pass(
+                f,
+                &mut replicas,
+                now,
+                &plan.faults,
+                cfg,
+                policy,
+                model,
+                plan.router,
+                &mut rr_cursor,
+                &mut migrations,
+            );
+        }
+
         // Arrivals at `now`, routed to a replica each.
         while let Some(r) = requests.get(next_arrival) {
             if r.arrival_s > now {
                 break;
+            }
+            if let Some(f) = faults.as_mut() {
+                if !replicas
+                    .iter()
+                    .any(|rp| rp.active && rp.engines.iter().any(|e| e.accepting))
+                {
+                    // Graceful degradation under total outage: hold
+                    // the arrival if capacity returns inside its SLO
+                    // budget, shed it (a counted drop at admission)
+                    // otherwise.
+                    let deadline = r.arrival_s + cfg.slo.e2e_p99;
+                    let earliest = replicas
+                        .iter()
+                        .flat_map(|rp| [rp.respawn_at, rp.activation_ready])
+                        .flatten()
+                        .fold(f64::INFINITY, f64::min);
+                    if earliest <= deadline {
+                        f.pending.push(r.clone());
+                    } else {
+                        f.counters.shed += 1;
+                    }
+                    next_arrival += 1;
+                    continue;
+                }
             }
             let target =
                 route_arrival(plan.router, &mut rr_cursor, &mut replicas, r.prompt_tokens);
@@ -671,6 +791,11 @@ fn serve_fleet_plan_inner(
                             // (instead of waiting for drain), each
                             // behind the destination-side SLO guard.
                             if plan.migration.enabled {
+                                let link_ok = faults
+                                    .as_ref()
+                                    .map(|f| now >= f.link_down_until)
+                                    .unwrap_or(true);
+                                let mut rollbacks = 0u64;
                                 migrate_residents(
                                     &mut replicas,
                                     j,
@@ -679,7 +804,12 @@ fn serve_fleet_plan_inner(
                                     model,
                                     &plan.migration,
                                     &mut migrations,
+                                    link_ok,
+                                    &mut rollbacks,
                                 );
+                                if let Some(f) = faults.as_mut() {
+                                    f.counters.link_failures += rollbacks;
+                                }
                             }
                         }
                     }
@@ -709,6 +839,21 @@ fn serve_fleet_plan_inner(
             }
         }
 
+        // Fault axis, second half: flush held arrivals onto restored
+        // capacity, take the periodic checkpoints, work the retry
+        // queue.  Runs after activation completions so a spawn and the
+        // work waiting on it meet at the same decision point.
+        if let Some(f) = faults.as_mut() {
+            fault_post_pass(
+                f,
+                &mut replicas,
+                now,
+                &plan.faults,
+                plan.router,
+                &mut rr_cursor,
+            );
+        }
+
         // Blocked-queue guard at this decision point.
         for idx in 0..replicas.len() {
             if replicas[idx].all_idle() && !replicas[idx].queue.is_empty() {
@@ -726,6 +871,7 @@ fn serve_fleet_plan_inner(
     }
 
     // ---- finalize -----------------------------------------------------
+    let fault_counters = faults.map(|f| f.counters).unwrap_or_default();
     // Explicit ordered reduction: per-replica parts are tagged with
     // their replica index and sorted by it before merging, so the
     // aggregate is a pure function of the SET of parts — production
@@ -778,7 +924,7 @@ fn serve_fleet_plan_inner(
     // Pin the reduction order to the replica index regardless of how
     // the parts were produced (a no-op today, the contract forever).
     parts.sort_by_key(|&(id, _)| id);
-    let total = if parts.len() == 1 {
+    let mut total = if parts.len() == 1 {
         // Fleet of one: hand back the replica's outcome verbatim so the
         // single-engine path stays bit-identical.
         parts.pop().unwrap().1
@@ -807,6 +953,11 @@ fn serve_fleet_plan_inner(
             engine_switches: switches,
         }
     };
+    // Shed and faulted-lost requests never reached any replica, so
+    // they are fleet-level accounting carried by the aggregate only
+    // (both zero with `--faults off`).
+    total.stats.shed = fault_counters.shed;
+    total.stats.faulted_lost = fault_counters.faulted_lost;
     // Per-model-family aggregation (heterogeneous fleets: the CLI and
     // demos break attainment and energy out per family).
     let mut families: Vec<FamilyStats> = Vec::new();
@@ -832,6 +983,435 @@ fn serve_fleet_plan_inner(
         replica_activations: activations,
         replica_deactivations: deactivations,
         migrations,
+        faults: fault_counters,
+    }
+}
+
+/// Mutable fault-injection state threaded through the event loop
+/// (`--faults on` only; the loop carries `None` otherwise).
+struct FaultRt {
+    /// Precomputed fault schedule, sorted by onset.
+    schedule: Vec<crate::sim::faults::FaultEvent>,
+    /// First unapplied schedule entry.
+    cursor: usize,
+    counters: FaultCounters,
+    /// `(retry_at, attempt, request)` sorted by `(retry_at, id)` —
+    /// fault-orphaned requests awaiting bounded re-admission.
+    retry_q: Vec<(f64, u32, Request)>,
+    /// Arrivals held during a total outage, waiting on a respawn or a
+    /// pending activation inside their SLO budget.
+    pending: Vec<Request>,
+    /// The migration/recovery link is down while `now < until`.
+    link_down_until: f64,
+    /// Next periodic-checkpoint instant (`None`: checkpointing off).
+    next_ckpt_s: Option<f64>,
+    /// Link model pricing recovery transfers (the fleet's migration
+    /// spec, or the default one when live migration is off).
+    link: MigrationSpec,
+}
+
+/// Insert into the retry queue keeping `(retry_at, id)` order — the
+/// queue is processed front-first, so equal retry instants resolve by
+/// request id, never by insertion history.
+fn push_retry(q: &mut Vec<(f64, u32, Request)>, at: f64, attempt: u32, req: Request) {
+    let pos = q.partition_point(|e| (e.0, e.2.id) <= (at, req.id));
+    q.insert(pos, (at, attempt, req));
+}
+
+/// Route a fault-displaced request to a surviving replica now, or park
+/// it on the retry queue when the fleet has no capacity.
+fn requeue_or_route(
+    f: &mut FaultRt,
+    replicas: &mut [Replica],
+    req: Request,
+    now: f64,
+    fspec: &FaultSpec,
+    router: RouterPolicy,
+    rr_cursor: &mut usize,
+) {
+    if replicas
+        .iter()
+        .any(|r| r.active && r.engines.iter().any(|e| e.accepting))
+    {
+        let tgt = route_arrival(router, rr_cursor, replicas, req.prompt_tokens);
+        replicas[tgt].catch_up_tick(now);
+        replicas[tgt].route_epoch += 1;
+        replicas[tgt].queue.push_back(req);
+    } else {
+        push_retry(&mut f.retry_q, now + fspec.retry_backoff_s, 1, req);
+    }
+}
+
+/// Re-place one crashed resident from its periodic checkpoint onto the
+/// best surviving replica (capacity-gated, priced over the recovery
+/// link).  Returns false when no survivor can take it — the caller
+/// falls back to a from-scratch retry.
+#[allow(clippy::too_many_arguments)]
+fn recover_checkpoint(
+    replicas: &mut [Replica],
+    from: usize,
+    ckpt: KvCheckpoint,
+    now: f64,
+    cfg: &ServingConfig,
+    policy: Policy,
+    model: &PerfModel,
+    link: &MigrationSpec,
+) -> bool {
+    let footprint = ckpt.kv_tokens.max(ckpt.req.prompt_tokens);
+    let Some(to) = best_reroute_target(replicas, from, footprint) else {
+        return false;
+    };
+    let dst = &mut replicas[to];
+    // Same stale-tick hazard as live migration: fast-forward a drained
+    // destination before restored work makes it non-idle.
+    dst.catch_up_tick(now);
+    let Some(d_idx) = dst.engines.iter().position(|e| e.accepting) else {
+        return false;
+    };
+    let de = &mut dst.engines[d_idx];
+    let need = blocks_for(footprint, de.sim.spec().block_tokens);
+    if de.sim.batch() >= de.sim.spec().max_batch || need > de.sim.kv_blocks_free() {
+        return false;
+    }
+    // A checkpointed pending prefill has no KV to stream.
+    let stall = if ckpt.prefill_pending {
+        link.base_latency_s
+    } else {
+        link.transfer_seconds(need)
+    };
+    if de.sim.is_idle() {
+        de.sim.account_idle(now);
+        de.cursor = de.cursor.max(now);
+    }
+    let k = de.sim.iter_index();
+    // The source scoreboard died with the replica: rebuild the entry
+    // from the checkpoint, crediting generation progress exactly as
+    // `migration_entry` does (no SLO guard — recovery beats certain
+    // loss, even at the destination's expense).
+    let adjusted = conservative_adjust(
+        ckpt.req.predicted_gen,
+        cfg.predictor_p95_error,
+        cfg.max_tokens,
+    )
+    .max(ckpt.generated + 1);
+    let entry = Entry {
+        id: ckpt.req.id,
+        scheduled_iter: k.saturating_sub(ckpt.generated as u64),
+        prompt_tokens: ckpt.req.prompt_tokens,
+        predicted_gen: adjusted,
+        deadline_s: ckpt.req.arrival_s + dst.sched.slo.e2e_p99,
+        lost: ckpt.lost,
+    };
+    match de.sim.restore(ckpt, now + stall) {
+        Ok(()) => {
+            de.sb.insert(entry);
+            dst.migration_energy += link.transfer_energy_j(stall);
+            dst.route_epoch += 1;
+            if policy.throttling {
+                rethrottle(de, !dst.queue.is_empty(), model, &dst.sched);
+            }
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+/// Tear down a dead replica and recover what the last checkpoint tick
+/// saved: checkpointed residents are re-placed on survivors over the
+/// recovery link, everything else (uncheckpointed residents, queued
+/// work) re-enters through the bounded retry queue.  The replica stays
+/// dark — blacklisted by the router via `active` — until `respawn_at`.
+#[allow(clippy::too_many_arguments)]
+fn crash_and_recover(
+    f: &mut FaultRt,
+    replicas: &mut [Replica],
+    idx: usize,
+    now: f64,
+    respawn_at: f64,
+    fspec: &FaultSpec,
+    cfg: &ServingConfig,
+    policy: Policy,
+    model: &PerfModel,
+) {
+    let store = std::mem::take(&mut replicas[idx].ckpt_store);
+    let orphans = replicas[idx].crash(now);
+    let link_ok = now >= f.link_down_until;
+    for req in orphans {
+        let ckpt = if link_ok {
+            store
+                .iter()
+                .find(|(id, _)| *id == req.id)
+                .map(|(_, c)| c.clone())
+        } else {
+            None
+        };
+        let recovered = match ckpt {
+            Some(c) => {
+                recover_checkpoint(replicas, idx, c, now, cfg, policy, model, &f.link)
+            }
+            None => false,
+        };
+        if recovered {
+            f.counters.crash_recoveries += 1;
+        } else {
+            f.counters.crash_requeues += 1;
+            push_retry(&mut f.retry_q, now + fspec.retry_backoff_s, 1, req);
+        }
+    }
+    replicas[idx].respawn_at = Some(respawn_at);
+}
+
+/// First-half fault processing at a decision point: respawns complete,
+/// thermal windows close, due fault events apply, preemption drain
+/// deadlines fire.  Coordination-phase only — never touched by RUN
+/// workers — so thread count stays unobservable.
+#[allow(clippy::too_many_arguments)]
+fn fault_pre_pass(
+    f: &mut FaultRt,
+    replicas: &mut [Replica],
+    now: f64,
+    fspec: &FaultSpec,
+    cfg: &ServingConfig,
+    policy: Policy,
+    model: &PerfModel,
+    router: RouterPolicy,
+    rr_cursor: &mut usize,
+    migrations: &mut MigrationCounters,
+) {
+    // Respawns: the machine is back, warmed up like a fleet
+    // activation but WITHOUT counting as one — `respawns` is its own
+    // counter precisely so the autoscaler's activation telemetry
+    // keeps meaning "the scaler asked for capacity".
+    for rp in replicas.iter_mut() {
+        let Some(at) = rp.respawn_at else { continue };
+        if now < at {
+            continue;
+        }
+        rp.respawn_at = None;
+        let espec = rp.respec();
+        rp.shadow_energy += idle_power_w(&espec, FREQ_MAX_MHZ) * fspec.respawn_s;
+        rp.engines.push(EngineRt::new(espec, now));
+        if let Some((cap, _)) = rp.thermal {
+            if let Some(e) = rp.engines.last_mut() {
+                e.sim.dvfs.set_cap(now, cap);
+            }
+        }
+        rp.active = true;
+        rp.next_tick = rp.scaler.as_ref().map(|s| now + s.interval_s);
+        rp.last_event_s = rp.last_event_s.max(now);
+        rp.route_epoch += 1;
+        f.counters.respawns += 1;
+    }
+
+    // Thermal windows closing: lift the cap and let the §IV-E
+    // controller re-plan at full grid, exactly as an admission would.
+    for rp in replicas.iter_mut() {
+        let Some((_, until)) = rp.thermal else { continue };
+        if now < until {
+            continue;
+        }
+        rp.thermal = None;
+        for e in rp.engines.iter_mut() {
+            e.sim.dvfs.clear_cap();
+            if policy.throttling && e.accepting {
+                rethrottle(e, !rp.queue.is_empty(), model, &rp.sched);
+            }
+        }
+        rp.route_epoch += 1;
+    }
+
+    // Due fault events.  Overlapping faults on a replica already dead
+    // or draining toward a preemption deadline are skipped: the
+    // machine can only be lost once per outage.
+    while let Some(ev) = f.schedule.get(f.cursor) {
+        if ev.at_s > now {
+            break;
+        }
+        let ev = *ev;
+        f.cursor += 1;
+        match ev.kind {
+            FaultKind::Crash => {
+                let rp = &replicas[ev.replica];
+                if rp.active && rp.respawn_at.is_none() && rp.preempt_deadline.is_none()
+                {
+                    f.counters.crashes += 1;
+                    crash_and_recover(
+                        f,
+                        replicas,
+                        ev.replica,
+                        now,
+                        now + fspec.respawn_s,
+                        fspec,
+                        cfg,
+                        policy,
+                        model,
+                    );
+                }
+            }
+            FaultKind::ThermalThrottle { cap_mhz, until_s } => {
+                let rp = &mut replicas[ev.replica];
+                // A dark replica has no silicon to throttle.
+                if rp.respawn_at.is_none() && !rp.engines.is_empty() {
+                    f.counters.throttle_events += 1;
+                    rp.thermal = Some((cap_mhz, until_s));
+                    for e in rp.engines.iter_mut() {
+                        e.sim.dvfs.set_cap(now, cap_mhz);
+                        if policy.throttling && e.accepting {
+                            rethrottle(e, !rp.queue.is_empty(), model, &rp.sched);
+                        }
+                    }
+                    rp.route_epoch += 1;
+                }
+            }
+            FaultKind::LinkDown { until_s } => {
+                f.link_down_until = f.link_down_until.max(until_s);
+            }
+            FaultKind::Preempt { deadline_s } => {
+                let rp = &replicas[ev.replica];
+                if rp.active && rp.respawn_at.is_none() && rp.preempt_deadline.is_none()
+                {
+                    f.counters.preemptions += 1;
+                    // Stop accepting and blacklist immediately; queued
+                    // work never started, so it moves for free.
+                    replicas[ev.replica].deactivate(now);
+                    replicas[ev.replica].preempt_deadline = Some(deadline_s);
+                    let moved: Vec<Request> =
+                        replicas[ev.replica].queue.drain(..).collect();
+                    for req in moved {
+                        requeue_or_route(
+                            f, replicas, req, now, fspec, router, rr_cursor,
+                        );
+                    }
+                    // Race the drain deadline: live-migrate residents
+                    // out while the notice lasts.  A down link forces
+                    // the rollback branch — the source stays coherent
+                    // and keeps draining toward the deadline.
+                    let link_ok = now >= f.link_down_until;
+                    let link = f.link;
+                    let mut rollbacks = 0u64;
+                    migrate_residents(
+                        replicas,
+                        ev.replica,
+                        now,
+                        policy,
+                        model,
+                        &link,
+                        migrations,
+                        link_ok,
+                        &mut rollbacks,
+                    );
+                    f.counters.link_failures += rollbacks;
+                }
+            }
+        }
+    }
+
+    // Preemption drain deadlines: whatever is still resident is lost
+    // with the machine, recovered from checkpoints like a crash (the
+    // notice gave the checkpoint cadence time to cover it).
+    for i in 0..replicas.len() {
+        let Some(d) = replicas[i].preempt_deadline else {
+            continue;
+        };
+        if now < d {
+            continue;
+        }
+        crash_and_recover(
+            f,
+            replicas,
+            i,
+            now,
+            now + fspec.respawn_s,
+            fspec,
+            cfg,
+            policy,
+            model,
+        );
+    }
+}
+
+/// Second-half fault processing at a decision point: flush held
+/// arrivals onto restored capacity, take the periodic checkpoints,
+/// work the bounded retry queue.
+fn fault_post_pass(
+    f: &mut FaultRt,
+    replicas: &mut [Replica],
+    now: f64,
+    fspec: &FaultSpec,
+    router: RouterPolicy,
+    rr_cursor: &mut usize,
+) {
+    let capacity = |replicas: &[Replica]| {
+        replicas
+            .iter()
+            .any(|r| r.active && r.engines.iter().any(|e| e.accepting))
+    };
+
+    // Held arrivals meet the capacity they were promised.
+    if !f.pending.is_empty() {
+        if capacity(replicas) {
+            let held: Vec<Request> = f.pending.drain(..).collect();
+            for req in held {
+                let tgt = route_arrival(router, rr_cursor, replicas, req.prompt_tokens);
+                replicas[tgt].catch_up_tick(now);
+                replicas[tgt].route_epoch += 1;
+                replicas[tgt].queue.push_back(req);
+            }
+        } else if !replicas
+            .iter()
+            .any(|r| r.respawn_at.is_some() || r.activation_ready.is_some())
+        {
+            // The capacity the holds were waiting on evaporated (e.g.
+            // a cancelled spawn): shed rather than wait forever.
+            f.counters.shed += f.pending.len() as u64;
+            f.pending.clear();
+        }
+    }
+
+    // Periodic best-effort checkpoints: replace each live replica's
+    // store with fresh snapshots of its residents.  Non-destructive —
+    // the running batch never notices.
+    if let Some(t) = f.next_ckpt_s {
+        if now >= t {
+            for rp in replicas.iter_mut().filter(|r| r.active) {
+                rp.ckpt_store.clear();
+                for ei in 0..rp.engines.len() {
+                    for ri in rp.engines[ei].sim.residents() {
+                        if let Some(ck) = rp.engines[ei].sim.snapshot(ri.id) {
+                            rp.ckpt_store.push((ri.id, ck));
+                        }
+                    }
+                }
+            }
+            let mut next = t;
+            while next <= now {
+                next += fspec.checkpoint_interval_s;
+            }
+            f.next_ckpt_s = Some(next);
+        }
+    }
+
+    // Bounded deterministic retry: each due entry is re-admitted when
+    // any replica accepts, re-armed with exponential backoff while the
+    // budget lasts, and counted lost — never hung — once it runs out.
+    let due = f.retry_q.partition_point(|e| e.0 <= now);
+    if due > 0 {
+        let batch: Vec<(f64, u32, Request)> = f.retry_q.drain(..due).collect();
+        for (_, attempt, req) in batch {
+            if capacity(replicas) {
+                f.counters.retries += 1;
+                let tgt = route_arrival(router, rr_cursor, replicas, req.prompt_tokens);
+                replicas[tgt].catch_up_tick(now);
+                replicas[tgt].route_epoch += 1;
+                replicas[tgt].queue.push_back(req);
+            } else if attempt >= fspec.retry_budget {
+                f.counters.faulted_lost += 1;
+            } else {
+                let backoff =
+                    fspec.retry_backoff_s * (1u64 << attempt.min(20)) as f64;
+                push_retry(&mut f.retry_q, now + backoff, attempt + 1, req);
+            }
+        }
     }
 }
 
@@ -930,6 +1510,8 @@ pub fn outcome_digest(out: &FleetOutcome) -> u64 {
         h.u64(s.migrated_in);
         h.u64(s.migrated_out);
         h.f64(s.migration_energy_j);
+        h.u64(s.shed);
+        h.u64(s.faulted_lost);
         h.series(&s.e2e);
         h.series(&s.tbt);
         h.series(&s.ttft);
@@ -976,6 +1558,16 @@ pub fn outcome_digest(out: &FleetOutcome) -> u64 {
     h.u64(out.migrations.migrations);
     h.u64(out.migrations.refused_slo);
     h.u64(out.migrations.refused_capacity);
+    h.u64(out.faults.crashes);
+    h.u64(out.faults.crash_recoveries);
+    h.u64(out.faults.crash_requeues);
+    h.u64(out.faults.retries);
+    h.u64(out.faults.shed);
+    h.u64(out.faults.faulted_lost);
+    h.u64(out.faults.throttle_events);
+    h.u64(out.faults.link_failures);
+    h.u64(out.faults.preemptions);
+    h.u64(out.faults.respawns);
     h.0
 }
 
@@ -1155,12 +1747,20 @@ fn p95_prompt(recent: &VecDeque<(f64, u32)>) -> u32 {
 ///      first-inactive order exactly, so homogeneous fleets are
 ///      byte-identical to the previous behavior.
 ///
-/// Returns only replicas that are inactive with no pending spawn.
+/// Returns only replicas that are inactive with no pending spawn —
+/// and not dark from a fault: a crashed or preempted replica is the
+/// FAULT path's capacity (it comes back via respawn, not activation),
+/// so the autoscaler never double-books it.
 fn select_scale_out_order(replicas: &[Replica], mix_p95_prompt: u32) -> Vec<usize> {
     let mut cands: Vec<(bool, f64, f64, usize)> = replicas
         .iter()
         .enumerate()
-        .filter(|(_, r)| !r.active && r.activation_ready.is_none())
+        .filter(|(_, r)| {
+            !r.active
+                && r.activation_ready.is_none()
+                && r.respawn_at.is_none()
+                && r.preempt_deadline.is_none()
+        })
         .map(|(i, r)| {
             let (feasible, ept, headroom) = scale_out_fit(&r.respec(), mix_p95_prompt);
             (feasible, ept, headroom, i)
@@ -1220,7 +1820,11 @@ fn two_replicas(
 /// the best-fit surviving replicas (`--migration on`).  Each move is
 /// gated by destination capacity and the [`migration_slo_guard`]; a
 /// refused request stays on the victim and drains exactly as
-/// drain-based scale-in would have it.
+/// drain-based scale-in would have it.  With `link_ok == false`
+/// (fault-injected link outage) every transfer fails mid-flight: the
+/// checkpoint rolls back onto the source — which stays coherent and
+/// keeps draining — and `rollbacks` counts the failures.
+#[allow(clippy::too_many_arguments)]
 fn migrate_residents(
     replicas: &mut [Replica],
     from: usize,
@@ -1229,6 +1833,8 @@ fn migrate_residents(
     model: &PerfModel,
     mig: &MigrationSpec,
     counters: &mut MigrationCounters,
+    link_ok: bool,
+    rollbacks: &mut u64,
 ) {
     // Index-based iteration: the body needs disjoint &mut access to
     // the source and destination replicas per move.
@@ -1302,6 +1908,18 @@ fn migrate_residents(
             let Some(ckpt) = se.sim.checkpoint(ri.id) else {
                 continue;
             };
+            if !link_ok {
+                // Mid-transfer link failure: the destination never
+                // sees the blocks.  Roll the restore back onto the
+                // source — its allocator just freed exactly these
+                // blocks, so the rollback cannot fail — leaving it
+                // coherent to drain the request itself.
+                se.sim
+                    .restore(ckpt, now)
+                    .expect("rollback restore onto the migration source");
+                *rollbacks += 1;
+                continue;
+            }
             match de.sim.restore(ckpt, now + stall) {
                 Ok(()) => {
                     // Scoreboard strike/insert ride the existing delta
@@ -1855,6 +2473,7 @@ mod tests {
         replicas[0].deactivate(1.0);
         let mig = MigrationSpec::enabled_default();
         let mut counters = MigrationCounters::default();
+        let mut rollbacks = 0u64;
         migrate_residents(
             &mut replicas,
             0,
@@ -1863,8 +2482,11 @@ mod tests {
             &model,
             &mig,
             &mut counters,
+            true,
+            &mut rollbacks,
         );
         assert_eq!(counters.migrations, 1);
+        assert_eq!(rollbacks, 0);
         assert_eq!(counters.refused_slo + counters.refused_capacity, 0);
         assert!(replicas[0].engines[0].sim.is_idle(), "victim freed");
         assert!(replicas[0].engines[0].sb.get(7).is_none());
@@ -1909,6 +2531,8 @@ mod tests {
             &model,
             &MigrationSpec::enabled_default(),
             &mut counters,
+            true,
+            &mut 0,
         );
         assert_eq!(counters.migrations, 0);
         assert!(counters.refused_capacity >= 1);
@@ -1943,6 +2567,8 @@ mod tests {
             &model,
             &mig,
             &mut counters,
+            true,
+            &mut 0,
         );
         assert_eq!(counters.migrations, 0);
         assert_eq!(counters.refused_slo, 1);
@@ -1980,5 +2606,220 @@ mod tests {
         assert_eq!(out.replicas[0].engine, spec8b.name);
         assert_eq!(out.replicas[1].engine, spec13b.name);
         assert!(plan.is_heterogeneous());
+    }
+
+    fn test_fault_rt() -> FaultRt {
+        FaultRt {
+            schedule: Vec::new(),
+            cursor: 0,
+            counters: FaultCounters::default(),
+            retry_q: Vec::new(),
+            pending: Vec::new(),
+            link_down_until: 0.0,
+            next_ckpt_s: Some(5.0),
+            link: MigrationSpec::enabled_default(),
+        }
+    }
+
+    #[test]
+    fn link_failure_rolls_back_transfer_onto_coherent_source() {
+        let (mut replicas, model) = migration_test_pair();
+        seed_resident(&mut replicas[0], 7, 640, 1e9);
+        replicas[0].deactivate(1.0);
+        let mut counters = MigrationCounters::default();
+        let mut rollbacks = 0u64;
+        migrate_residents(
+            &mut replicas,
+            0,
+            1.0,
+            Policy::throttle_only(),
+            &model,
+            &MigrationSpec::enabled_default(),
+            &mut counters,
+            false, // link down mid-transfer
+            &mut rollbacks,
+        );
+        assert_eq!(rollbacks, 1);
+        assert_eq!(counters.migrations, 0);
+        // Source coherent: the request is still resident with its KV
+        // and scoreboard row, and drains to completion locally.
+        assert_eq!(replicas[0].engines[0].sim.batch(), 1);
+        assert!(replicas[0].engines[0].sb.get(7).is_some());
+        assert_eq!(replicas[1].engines[0].sim.batch(), 0);
+        let mut now = 1.0;
+        for _ in 0..500 {
+            if replicas[0].engines[0].sim.is_idle() {
+                break;
+            }
+            let r = replicas[0].engines[0].sim.run_iteration(now);
+            now += r.duration_s;
+        }
+        assert!(replicas[0].engines[0].sim.is_idle(), "drains on source");
+    }
+
+    #[test]
+    fn crash_recovers_checkpointed_and_requeues_the_rest() {
+        let (mut replicas, model) = migration_test_pair();
+        let cfg = ServingConfig::throttllem(llama2_13b(2));
+        // Two residents on replica 0; only id 7 was checkpointed.
+        seed_resident(&mut replicas[0], 7, 640, 1e9);
+        seed_resident(&mut replicas[0], 8, 640, 1e9);
+        let ck = replicas[0].engines[0].sim.snapshot(7).expect("snapshot");
+        replicas[0].ckpt_store.push((7, ck));
+        let mut f = test_fault_rt();
+        let fspec = FaultSpec::enabled_default();
+        crash_and_recover(
+            &mut f,
+            &mut replicas,
+            0,
+            10.0,
+            35.0,
+            &fspec,
+            &cfg,
+            Policy::throttle_only(),
+            &model,
+        );
+        assert_eq!(f.counters.crash_recoveries, 1);
+        assert_eq!(f.counters.crash_requeues, 1);
+        // The dead replica is dark until its respawn.
+        assert_eq!(replicas[0].respawn_at, Some(35.0));
+        assert!(!replicas[0].active);
+        assert!(replicas[0].engines.is_empty());
+        // The checkpointed resident lives on the survivor, generation
+        // progress credited.
+        let e = replicas[1].engines[0].sb.get(7).expect("recovered entry");
+        assert!(e.predicted_gen >= 2);
+        assert_eq!(replicas[1].engines[0].sim.batch(), 1);
+        assert!(replicas[1].migration_energy > 0.0);
+        // The uncheckpointed one waits on the bounded retry queue.
+        assert_eq!(f.retry_q.len(), 1);
+        assert_eq!(f.retry_q[0].2.id, 8);
+        assert_eq!(f.retry_q[0].1, 1);
+        assert!((f.retry_q[0].0 - (10.0 + fspec.retry_backoff_s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crash_with_link_down_requeues_even_checkpointed_residents() {
+        let (mut replicas, model) = migration_test_pair();
+        let cfg = ServingConfig::throttllem(llama2_13b(2));
+        seed_resident(&mut replicas[0], 7, 640, 1e9);
+        let ck = replicas[0].engines[0].sim.snapshot(7).expect("snapshot");
+        replicas[0].ckpt_store.push((7, ck));
+        let mut f = test_fault_rt();
+        f.link_down_until = 100.0; // outage covers the crash
+        crash_and_recover(
+            &mut f,
+            &mut replicas,
+            0,
+            10.0,
+            35.0,
+            &FaultSpec::enabled_default(),
+            &cfg,
+            Policy::throttle_only(),
+            &model,
+        );
+        assert_eq!(f.counters.crash_recoveries, 0);
+        assert_eq!(f.counters.crash_requeues, 1);
+        assert_eq!(replicas[1].engines[0].sim.batch(), 0, "nothing crossed");
+    }
+
+    #[test]
+    fn fault_free_run_has_zero_fault_telemetry() {
+        let spec = llama2_13b(2);
+        let cfg = ServingConfig::throttllem(spec.clone());
+        let m = model_for(&spec);
+        let reqs = quick_trace(2.0, 60.0, 12);
+        let plan = FleetPlan::homogeneous(
+            2,
+            RouterPolicy::RoundRobin,
+            &cfg,
+            Policy::throttle_only(),
+            false,
+        );
+        let out = serve_fleet_plan(&cfg, Policy::throttle_only(), &m, &reqs, &plan);
+        assert_eq!(out.faults, FaultCounters::default());
+        assert_eq!(out.total.stats.shed, 0);
+        assert_eq!(out.total.stats.faulted_lost, 0);
+    }
+
+    #[test]
+    fn chaos_run_conserves_requests_and_recovers() {
+        let spec = llama2_13b(2);
+        let cfg = ServingConfig::throttllem(spec.clone());
+        let m = model_for(&spec);
+        let reqs = quick_trace(3.0, 240.0, 11);
+        let fspec = FaultSpec {
+            crash_mtbf_s: 30.0,
+            throttle_mtbf_s: 40.0,
+            link_mtbf_s: 60.0,
+            preempt_mtbf_s: 90.0,
+            ..FaultSpec::enabled_default()
+        };
+        let plan = FleetPlan::homogeneous(
+            3,
+            RouterPolicy::LeastLoaded,
+            &cfg,
+            Policy::throttle_only(),
+            false,
+        )
+        .with_migration(MigrationSpec::enabled_default())
+        .with_faults(fspec);
+        let out = serve_fleet_plan(&cfg, Policy::throttle_only(), &m, &reqs, &plan);
+        let s = &out.total.stats;
+        // Every request is accounted for exactly once: completed,
+        // dropped at admission, shed during an outage, or lost after
+        // exhausting its fault-retry budget.  No panics, no hangs.
+        assert_eq!(
+            s.completed + s.dropped + s.shed + s.faulted_lost,
+            reqs.len() as u64,
+            "conservation violated: {:?}",
+            out.faults
+        );
+        assert!(out.faults.crashes >= 1, "no crashes injected: {:?}", out.faults);
+        assert!(
+            out.faults.crash_recoveries + out.faults.crash_requeues >= 1,
+            "crashed residents must be recovered or requeued: {:?}",
+            out.faults
+        );
+        assert!(out.faults.throttle_events >= 1, "{:?}", out.faults);
+        // The run completes the overwhelming majority of traffic even
+        // under chaos (three replicas cover single failures).
+        assert!(
+            s.completed as f64 >= 0.5 * reqs.len() as f64,
+            "completed {}/{} under chaos",
+            s.completed,
+            reqs.len()
+        );
+    }
+
+    #[test]
+    fn faulted_run_is_reproducible_and_seed_sensitive() {
+        let spec = llama2_13b(2);
+        let cfg = ServingConfig::throttllem(spec.clone());
+        let m = model_for(&spec);
+        let reqs = quick_trace(2.0, 120.0, 13);
+        let fspec = FaultSpec {
+            crash_mtbf_s: 40.0,
+            ..FaultSpec::enabled_default()
+        };
+        let mk = |seed: u64| {
+            let plan = FleetPlan::homogeneous(
+                2,
+                RouterPolicy::RoundRobin,
+                &cfg,
+                Policy::throttle_only(),
+                false,
+            )
+            .with_faults(FaultSpec { seed, ..fspec });
+            outcome_digest(&serve_fleet_plan(
+                &cfg,
+                Policy::throttle_only(),
+                &m,
+                &reqs,
+                &plan,
+            ))
+        };
+        assert_eq!(mk(0), mk(0), "same fault seed, same outcome");
+        assert_ne!(mk(0), mk(1), "fault seed must steer the run");
     }
 }

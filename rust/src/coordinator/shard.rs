@@ -46,7 +46,7 @@ use crate::coordinator::server::{Policy, TimelinePoint};
 use crate::coordinator::throttle::min_slo_frequency_with;
 use crate::engine::kv_cache::blocks_for;
 use crate::engine::request::{Request, RequestId, RequestOutcome};
-use crate::engine::sim::EngineSim;
+use crate::engine::sim::{EngineSim, KvCheckpoint};
 use crate::gpusim::dvfs::{frequency_grid, FREQ_MAX_MHZ};
 use crate::gpusim::latency::{decode_latency_s, GpuState};
 use crate::gpusim::power::{idle_power_w, power_w};
@@ -184,6 +184,21 @@ pub(crate) struct Replica {
     pub(crate) migrated_ids: HashSet<RequestId>,
     /// Modeled link/host energy of migrations INTO this replica, J.
     pub(crate) migration_energy: f64,
+    /// Fault axis: pending respawn completion after a crash or a
+    /// preemption took this replica (`None` = not dead).  Kept
+    /// separate from `activation_ready` so the fleet autoscaler never
+    /// mistakes a fault respawn for a voluntary scale-out it asked for.
+    pub(crate) respawn_at: Option<f64>,
+    /// Open thermal-throttle window: `(cap_mhz, until_s)`.  Engines
+    /// created while the window is open inherit the cap — the ceiling
+    /// is the silicon's, not any one `EngineRt`'s.
+    pub(crate) thermal: Option<(u32, f64)>,
+    /// Drain deadline of an in-progress preemption notice.
+    pub(crate) preempt_deadline: Option<f64>,
+    /// Periodic best-effort checkpoints of resident requests, replaced
+    /// wholesale each checkpoint tick — what crash recovery restores
+    /// from.  Always empty with `--faults off`.
+    pub(crate) ckpt_store: Vec<(RequestId, KvCheckpoint)>,
 }
 
 impl Replica {
@@ -226,6 +241,10 @@ impl Replica {
             headroom: HeadroomCache::new(),
             migrated_ids: HashSet::new(),
             migration_energy: 0.0,
+            respawn_at: None,
+            thermal: None,
+            preempt_deadline: None,
+            ckpt_store: Vec::new(),
         }
     }
 
@@ -572,6 +591,14 @@ impl Replica {
                         e.accepting = false;
                     }
                     self.engines.push(EngineRt::new(spec, now));
+                    // The silicon's thermal ceiling outlives any one
+                    // engine: a window opened on this replica caps the
+                    // freshly-booted engine too.
+                    if let Some((cap, _)) = self.thermal {
+                        if let Some(e) = self.engines.last_mut() {
+                            e.sim.dvfs.set_cap(now, cap);
+                        }
+                    }
                     self.switches += 1;
                     // The accepting engine changed: invalidate the
                     // router's cached projection summary.
@@ -602,6 +629,44 @@ impl Replica {
         self.next_tick = None;
         self.window_arrivals = 0;
         self.route_epoch += 1;
+    }
+
+    /// Fault axis: the replica dies at `now`.  Every engine is torn
+    /// down (its accumulated energy is retired — the joules were
+    /// burned even though the work was lost), resident and queued
+    /// requests are handed back for recovery, and the replica goes
+    /// dark until its respawn.  The caller decides which orphans are
+    /// recoverable from `ckpt_store` and sets `respawn_at`.
+    pub(crate) fn crash(&mut self, now: f64) -> Vec<Request> {
+        let mut orphans: Vec<Request> = Vec::new();
+        for e in self.engines.iter_mut() {
+            e.sim.account_idle(now);
+            orphans.extend(e.sim.drain());
+            self.retired_energy += e.sim.total_energy_j();
+            if e.cursor > self.last_event_s {
+                self.last_event_s = e.cursor;
+            }
+        }
+        self.engines.clear();
+        orphans.extend(self.queue.drain(..));
+        self.active = false;
+        self.activation_ready = None;
+        if let Some(s) = self.scaler.as_mut() {
+            // Same in-flight-shadow accounting as deactivate: the
+            // warm-up idle power burned so far is real energy.
+            if let Some(sh) = s.shadow() {
+                let warmed = (now.min(sh.ready_at) - sh.started_at).max(0.0);
+                self.shadow_energy +=
+                    idle_power_w(&s.specs()[sh.target], FREQ_MAX_MHZ) * warmed;
+            }
+            s.cancel_shadow();
+        }
+        self.next_tick = None;
+        self.window_arrivals = 0;
+        self.preempt_deadline = None;
+        self.last_event_s = self.last_event_s.max(now);
+        self.route_epoch += 1;
+        orphans
     }
 }
 

@@ -274,6 +274,25 @@ impl EngineSim {
         })
     }
 
+    /// Non-destructive checkpoint: serialize a resident request's KV
+    /// ownership + generation progress WITHOUT removing it.  This is
+    /// the periodic best-effort checkpoint the fault-recovery path
+    /// replays after a crash — the original keeps running; only if the
+    /// replica dies does the stored copy matter.  Returns `None` for
+    /// unknown ids.
+    pub fn snapshot(&self, id: RequestId) -> Option<KvCheckpoint> {
+        let a = self.active.iter().find(|a| a.req.id == id)?;
+        Some(KvCheckpoint {
+            req: a.req.clone(),
+            scheduled_s: a.scheduled_s,
+            generated: a.generated,
+            prefill_pending: a.prefill_pending,
+            first_token_s: a.first_token_s,
+            lost: a.lost,
+            kv_tokens: self.kv.tokens_of(id).unwrap_or(0),
+        })
+    }
+
     /// Restore a checkpointed request onto this engine: re-allocates
     /// its KV blocks and re-joins the batch at the next iteration
     /// boundary.  `resume_at_s` models the KV transfer stall — until
@@ -690,6 +709,29 @@ mod tests {
         done.sort_unstable();
         assert_eq!(done, vec![1, 2]);
         assert_eq!(e.kv_blocks_used(), 0);
+    }
+
+    #[test]
+    fn snapshot_is_non_destructive_and_matches_checkpoint() {
+        let mut e = engine();
+        e.admit(req(1, 640, 50, 0.0), 0.0, false).unwrap();
+        e.run_iteration(0.0);
+        let snap = e.snapshot(1).expect("snapshot");
+        // The original keeps running.
+        assert_eq!(e.batch(), 1);
+        assert!(e.kv_blocks_used() > 0);
+        assert!(e.snapshot(99).is_none());
+        // A snapshot agrees with the destructive checkpoint field by
+        // field — it is the same serialization without the removal.
+        let ckpt = e.checkpoint(1).unwrap();
+        assert_eq!(snap, ckpt);
+        // And it restores onto a fresh engine like any checkpoint.
+        let mut dst = engine();
+        dst.restore(snap, 0.0).unwrap();
+        assert_eq!(dst.batch(), 1);
+        let ri = &dst.residents()[0];
+        assert_eq!(ri.generated, 1);
+        assert!(!ri.prefill_pending);
     }
 
     #[test]

@@ -34,6 +34,10 @@ pub struct DvfsActuator {
     current: u32,
     pending: Option<(f64, u32)>, // (effective_at, freq)
     switches: u64,
+    /// Hardware-imposed ceiling (thermal throttle). Unlike `set`, a cap
+    /// applies immediately — the silicon clamps, it doesn't negotiate —
+    /// and it is not counted as a controller-issued switch.
+    cap: Option<u32>,
 }
 
 impl DvfsActuator {
@@ -43,11 +47,14 @@ impl DvfsActuator {
             current: quantize(initial),
             pending: None,
             switches: 0,
+            cap: None,
         }
     }
 
     /// Request `freq_mhz` at time `now`; returns the quantized target.
     /// A no-op if the (quantized) target equals the current/pending one.
+    /// The request is recorded uncapped so the controller's intent
+    /// survives the throttle window; `effective` clamps.
     pub fn set(&mut self, now: f64, freq_mhz: u32) -> u32 {
         let target = quantize(freq_mhz);
         let effective_target = self.pending.map(|(_, f)| f).unwrap_or(self.current);
@@ -61,7 +68,32 @@ impl DvfsActuator {
                 self.pending = None;
             }
         }
-        target
+        self.clamp(target)
+    }
+
+    /// Impose a thermal ceiling of `cap_mhz` (quantized) starting now.
+    /// Takes effect immediately — no switch latency, no switch count.
+    pub fn set_cap(&mut self, now: f64, cap_mhz: u32) {
+        self.apply_pending(now);
+        self.cap = Some(quantize(cap_mhz));
+    }
+
+    /// Lift the thermal ceiling; the controller's last request resumes
+    /// at the next `effective`/`set` with normal switch semantics.
+    pub fn clear_cap(&mut self) {
+        self.cap = None;
+    }
+
+    /// Current hardware ceiling, if throttled.
+    pub fn cap(&self) -> Option<u32> {
+        self.cap
+    }
+
+    fn clamp(&self, f: u32) -> u32 {
+        match self.cap {
+            Some(c) => f.min(c),
+            None => f,
+        }
     }
 
     fn apply_pending(&mut self, now: f64) {
@@ -76,10 +108,10 @@ impl DvfsActuator {
     /// Frequency the GPU actually runs at, at time `now`.
     pub fn effective(&mut self, now: f64) -> u32 {
         self.apply_pending(now);
-        self.current
+        self.clamp(self.current)
     }
 
-    /// Last requested (target) frequency.
+    /// Last requested (target) frequency (uncapped controller intent).
     pub fn target(&self) -> u32 {
         self.pending.map(|(_, f)| f).unwrap_or(self.current)
     }
@@ -142,6 +174,39 @@ mod tests {
         // second request.
         assert_eq!(a.effective(0.20), 1410);
         assert_eq!(a.effective(0.26), 900);
+    }
+
+    #[test]
+    fn cap_clamps_immediately_without_counting_a_switch() {
+        let mut a = DvfsActuator::new(1410);
+        a.set_cap(0.0, 600);
+        assert_eq!(a.cap(), Some(600));
+        assert_eq!(a.effective(0.0), 600, "cap applies with no latency");
+        assert_eq!(a.switch_count(), 0);
+        assert_eq!(a.target(), 1410, "controller intent survives the cap");
+        // Requests above the cap are recorded but clamped.
+        assert_eq!(a.set(1.0, 1200), 600);
+        assert_eq!(a.effective(1.3), 600);
+        // Requests below the cap pass through.
+        assert_eq!(a.set(2.0, 450), 450);
+        assert_eq!(a.effective(2.3), 450);
+    }
+
+    #[test]
+    fn clear_cap_restores_controller_intent() {
+        let mut a = DvfsActuator::new(1410);
+        a.set_cap(0.0, 600);
+        assert_eq!(a.effective(0.0), 600);
+        a.clear_cap();
+        assert_eq!(a.cap(), None);
+        assert_eq!(a.effective(0.0), 1410, "pinned freq resumes uncapped");
+    }
+
+    #[test]
+    fn cap_is_quantized() {
+        let mut a = DvfsActuator::new(1410);
+        a.set_cap(0.0, 601);
+        assert_eq!(a.cap(), Some(quantize(601)));
     }
 
     #[test]

@@ -246,7 +246,9 @@ impl<'a> Parser<'a> {
                 Some(_) => {
                     // advance one UTF-8 char
                     let s = std::str::from_utf8(&self.b[self.i..])?;
-                    let c = s.chars().next().unwrap();
+                    let c = s.chars().next().ok_or_else(|| {
+                        anyhow::anyhow!("truncated UTF-8 at byte {}", self.i)
+                    })?;
                     out.push(c);
                     self.i += c.len_utf8();
                 }

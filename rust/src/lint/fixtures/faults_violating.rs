@@ -1,0 +1,16 @@
+// detlint-fixture: virtual-path = rust/src/sim/faults_fixture.rs
+// detlint-expect: r2 @ 11
+// detlint-expect: r3 @ 15
+
+// The fault module sits inside detlint's outcome-affecting scope
+// (rust/src/sim/): hash-ordered iteration over per-replica fault state
+// and wall-clock stamps in the schedule are exactly the bugs that would
+// break the --threads N identity of a faulted run.
+
+pub fn total_downtime(by_replica: &std::collections::HashMap<u32, f64>) -> f64 {
+    by_replica.values().sum()
+}
+
+pub fn fault_stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

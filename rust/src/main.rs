@@ -19,7 +19,7 @@
 use throttllem::cli::Args;
 use throttllem::config::models::{engine_by_name, llama2_13b, table2_engines};
 use throttllem::config::{
-    parse_fleet_jsonl, parse_replica_spec, MigrationSpec, ReplicaSpec, ServingConfig,
+    parse_fleet_jsonl, parse_replica_spec, FaultSpec, MigrationSpec, ReplicaSpec, ServingConfig,
 };
 use throttllem::coordinator::{
     outcome_digest, serve_fleet_plan, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
@@ -119,6 +119,23 @@ fn migration_from_args(args: &Args) -> anyhow::Result<MigrationSpec> {
     Ok(m)
 }
 
+/// Parse the `--faults on|off` switch plus `--fault-seed <n>` into a
+/// [`FaultSpec`].  Off is the default: with faults off the serving
+/// path is byte-identical to a run without the fault subsystem.
+fn faults_from_args(args: &Args) -> anyhow::Result<FaultSpec> {
+    let enabled = match args.get("faults") {
+        Some(v) => FaultSpec::parse_enabled(v)?,
+        None => false,
+    };
+    let mut f = if enabled {
+        FaultSpec::enabled_default()
+    } else {
+        FaultSpec::disabled()
+    };
+    f.seed = args.get_u64("fault-seed", f.seed)?;
+    Ok(f)
+}
+
 fn policy_by_name(name: &str) -> anyhow::Result<Policy> {
     Ok(match name {
         "triton" => Policy::triton(),
@@ -132,6 +149,7 @@ fn policy_by_name(name: &str) -> anyhow::Result<Policy> {
 fn main() {
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
+        eprintln!("hint: run `throttllem` without arguments for usage");
         std::process::exit(1);
     }
 }
@@ -174,6 +192,12 @@ usage: throttllem <serve|profile|train-model|engines|real-serve> [--options]
                  fleet scale-in; off = drain-based scale-in, the default)
                --migration-base-ms <ms> --migration-gbps <GB/s>
                --migration-power <W>   (modeled transfer cost knobs)
+               --faults on|off  (deterministic fault injection: replica
+                 crashes, thermal throttles, link degradation and
+                 preemption notices; off = today's fault-free path,
+                 byte-identical, the default)
+               --fault-seed <n>  (fault-schedule seed, independent of
+                 --seed; same seed => same schedule at any --threads)
                --threads <n>  (RUN-phase worker threads, 0 = auto; any
                  value is bit-identical to --threads 1)
                --outcome-digest <file>  (write the run's 64-bit outcome
@@ -294,6 +318,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         policy.autoscaling && replicas > 1,
     )
     .with_migration(migration_from_args(args)?)
+    .with_faults(faults_from_args(args)?)
     .with_threads(args.get_u64("threads", 1)? as usize);
     let fleet_out = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
     maybe_write_digest(args, &fleet_out)?;
@@ -333,6 +358,7 @@ fn cmd_serve_hetero(
             && n > 1
             && args.flag("autoscale-replicas"),
         migration: migration_from_args(args)?,
+        faults: faults_from_args(args)?,
         threads: args.get_u64("threads", 1)? as usize,
     };
     let engines = plan.engines();
@@ -416,6 +442,26 @@ fn print_serve_report(
     println!("energy [kJ]        : {:.1}", s.total_energy_j / 1e3);
     println!("tokens/J           : {:.3}", s.tokens_per_joule());
     println!("engine switches    : {}", out.engine_switches);
+    let fc = &fleet_out.faults;
+    if fc.crashes + fc.throttle_events + fc.preemptions + fc.link_failures + fc.shed + fc.faulted_lost
+        > 0
+    {
+        println!(
+            "faults             : {} crashes ({} recovered / {} requeued, {} retries), \
+             {} throttles, {} preemptions, {} link failures",
+            fc.crashes,
+            fc.crash_recoveries,
+            fc.crash_requeues,
+            fc.retries,
+            fc.throttle_events,
+            fc.preemptions,
+            fc.link_failures
+        );
+        println!(
+            "shed / fault-lost / respawns : {} / {} / {}",
+            fc.shed, fc.faulted_lost, fc.respawns
+        );
+    }
     if replicas > 1 {
         println!(
             "rerouted / replica scale in+out : {} / {}+{}",

@@ -146,6 +146,13 @@ pub struct ServingStats {
     /// E2E latencies of completions that arrived via live migration —
     /// the migrated-request attainment series.
     pub migrated_e2e: Series,
+    /// Arrivals shed at admission under fault-degraded capacity
+    /// (graceful degradation: refused against the SLO budget instead of
+    /// queueing unboundedly). Zero when faults are off.
+    pub shed: u64,
+    /// Requests lost to faults after their recovery retry budget ran
+    /// out. Zero when faults are off.
+    pub faulted_lost: u64,
 }
 
 impl ServingStats {
@@ -216,6 +223,8 @@ impl ServingStats {
         self.migrated_out += other.migrated_out;
         self.migration_energy_j += other.migration_energy_j;
         self.migrated_e2e.extend_from(&other.migrated_e2e);
+        self.shed += other.shed;
+        self.faulted_lost += other.faulted_lost;
     }
 
     /// Order-independent fleet reduction: merge `(replica_index,
@@ -345,13 +354,18 @@ mod tests {
         a.migrated_e2e.push(1.0);
         a.migrated_e2e.push(5.0);
         a.migration_energy_j = 10.0;
+        a.shed = 1;
         let mut b = ServingStats::default();
         b.migrated_out = 3;
         b.migrated_e2e.push(2.0);
         b.migration_energy_j = 4.0;
+        b.shed = 2;
+        b.faulted_lost = 1;
         a.merge_from(&b);
         assert_eq!(a.migrated_in, 2);
         assert_eq!(a.migrated_out, 3);
+        assert_eq!(a.shed, 3);
+        assert_eq!(a.faulted_lost, 1);
         assert_eq!(a.migrated_e2e.len(), 3);
         assert!((a.migration_energy_j - 14.0).abs() < 1e-12);
         // 2 of 3 migrated completions inside a 3 s SLO.
@@ -392,6 +406,8 @@ mod tests {
         assert_eq!(a.dropped, b.dropped);
         assert_eq!(a.migrated_in, b.migrated_in);
         assert_eq!(a.migrated_out, b.migrated_out);
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(a.faulted_lost, b.faulted_lost);
     }
 
     #[test]

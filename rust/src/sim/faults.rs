@@ -1,0 +1,289 @@
+//! Deterministic fault-injection schedules for the fleet coordinator.
+//!
+//! The paper's controller assumes replicas that never fail; production
+//! fleets lose GPUs to crashes, thermal throttling and preemption
+//! constantly (AGFT and GreenLLM both motivate online control with
+//! exactly these runtime perturbations).  This module generates a
+//! **reproducible fault schedule** up front from a
+//! [`FaultSpec`](crate::config::FaultSpec): four independent Poisson
+//! processes (one PCG64 stream per fault family, `detmath`-backed
+//! exponential gaps — no platform libm), merged and sorted by onset.
+//!
+//! Because the schedule is a pure function of `(spec, replicas,
+//! duration)` computed before serving starts, it is byte-identical
+//! across platforms and across `--threads N` — the same determinism
+//! contract as `workload/fleet_trace.rs`.  The coordinator replays the
+//! events as additional decision points in its coordination phase, so
+//! fault handling never races the RUN phase.
+//!
+//! Fault kinds:
+//!   * **Crash** — the replica dies instantly; un-checkpointed
+//!     resident KV is lost, checkpointed residents are re-placed on
+//!     surviving replicas, the rest re-queue with bounded retry.
+//!   * **ThermalThrottle** — the DVFS grid is forcibly capped below
+//!     the controller's chosen frequency for a window; the throttle
+//!     loop must re-plan around a ceiling it did not pick.
+//!   * **LinkDown** — the migration fabric fails fleet-wide for a
+//!     window; mid-transfer moves roll back onto a coherent source.
+//!   * **Preempt** — a drain deadline with notice that races the
+//!     migration path; residents still aboard at the deadline take
+//!     the crash path.
+
+use crate::config::FaultSpec;
+use crate::sim::detmath::ln_det;
+use crate::sim::Pcg64;
+
+/// PCG64 stream ids, one per fault family (disjoint from the fleet
+/// trace generator's 0xb425/0x0b1e/0xf1ee streams).
+const STREAM_CRASH: u64 = 0xfa01;
+const STREAM_THROTTLE: u64 = 0xfa02;
+const STREAM_LINK: u64 = 0xfa03;
+const STREAM_PREEMPT: u64 = 0xfa04;
+
+/// What a scheduled fault does when its instant arrives.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The replica dies; recovery re-places checkpointed residents and
+    /// re-queues the rest.  Respawns after `FaultSpec::respawn_s`.
+    Crash,
+    /// DVFS forcibly capped at `cap_mhz` until `until_s`.
+    ThermalThrottle { cap_mhz: u32, until_s: f64 },
+    /// The migration link is down fleet-wide until `until_s` (the
+    /// event's `replica` is ignored — the fabric is shared).
+    LinkDown { until_s: f64 },
+    /// Drain notice: the replica stops accepting work now and is taken
+    /// at `deadline_s`; residents race the migration path out.
+    Preempt { deadline_s: f64 },
+}
+
+impl FaultKind {
+    /// Stable tie-break rank for same-instant events.
+    fn rank(&self) -> u8 {
+        match self {
+            FaultKind::Crash => 0,
+            FaultKind::ThermalThrottle { .. } => 1,
+            FaultKind::LinkDown { .. } => 2,
+            FaultKind::Preempt { .. } => 3,
+        }
+    }
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at_s: f64,
+    /// Target replica index (ignored by [`FaultKind::LinkDown`]).
+    pub replica: usize,
+    pub kind: FaultKind,
+}
+
+/// Fleet-level fault/recovery telemetry (one per `serve_fleet_plan`
+/// run); folded into the outcome digest, so any divergence in fault
+/// handling breaks the determinism tests loudly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Replica crashes applied (events targeting inactive replicas are
+    /// no-ops and not counted).
+    pub crashes: u64,
+    /// Residents re-placed onto surviving replicas from a checkpoint.
+    pub crash_recoveries: u64,
+    /// Residents and queued requests re-queued after a crash or
+    /// preemption (KV lost; they re-run prefill elsewhere).
+    pub crash_requeues: u64,
+    /// Re-admission attempts made for requeued requests.
+    pub retries: u64,
+    /// Arrivals shed at admission because post-fault capacity could
+    /// not meet their SLO budget.
+    pub shed: u64,
+    /// Requeued requests whose retry budget ran out — counted loss,
+    /// never a panic or a hang.
+    pub faulted_lost: u64,
+    /// Thermal-throttle windows applied.
+    pub throttle_events: u64,
+    /// Transfers rolled back because the migration link was down.
+    pub link_failures: u64,
+    /// Preemption notices applied.
+    pub preemptions: u64,
+    /// Crashed/preempted replicas brought back after the respawn
+    /// latency (distinguished from voluntary fleet-axis activations).
+    pub respawns: u64,
+}
+
+/// Deterministic exponential gap with mean `mean_s` (detmath `ln`, the
+/// fleet-trace sampler idiom — never std `ln`, which differs across
+/// platforms in the last ulp).
+fn exponential_gap(rng: &mut Pcg64, mean_s: f64) -> f64 {
+    debug_assert!(mean_s > 0.0);
+    -ln_det(rng.next_f64().max(1e-300)) * mean_s
+}
+
+/// One Poisson fault family: onsets with mean gap `mtbf_s` over
+/// `[0, duration_s)`, each targeting a uniform replica.
+fn family(
+    spec: &FaultSpec,
+    replicas: usize,
+    duration_s: f64,
+    mtbf_s: f64,
+    stream: u64,
+    mk: impl Fn(f64, &FaultSpec) -> FaultKind,
+) -> Vec<FaultEvent> {
+    let mut out = Vec::new();
+    if mtbf_s <= 0.0 {
+        return out;
+    }
+    let mut rng = Pcg64::with_stream(spec.seed, stream);
+    let mut t = 0.0f64;
+    loop {
+        t += exponential_gap(&mut rng, mtbf_s);
+        if t >= duration_s {
+            break;
+        }
+        let replica = rng.uniform_usize(0, replicas - 1);
+        out.push(FaultEvent {
+            at_s: t,
+            replica,
+            kind: mk(t, spec),
+        });
+    }
+    out
+}
+
+/// Generate the full fault schedule: the four families merged and
+/// sorted by `(onset, replica, kind)`.  A pure function of its inputs
+/// — same spec, fleet size and duration give byte-identical schedules
+/// on every platform and thread count.
+pub fn fault_schedule(
+    spec: &FaultSpec,
+    replicas: usize,
+    duration_s: f64,
+) -> Vec<FaultEvent> {
+    if !spec.enabled || replicas == 0 || duration_s <= 0.0 {
+        return Vec::new();
+    }
+    let mut events = family(
+        spec,
+        replicas,
+        duration_s,
+        spec.crash_mtbf_s,
+        STREAM_CRASH,
+        |_, _| FaultKind::Crash,
+    );
+    events.extend(family(
+        spec,
+        replicas,
+        duration_s,
+        spec.throttle_mtbf_s,
+        STREAM_THROTTLE,
+        |t, s| FaultKind::ThermalThrottle {
+            cap_mhz: s.throttle_cap_mhz,
+            until_s: t + s.throttle_window_s,
+        },
+    ));
+    events.extend(family(
+        spec,
+        replicas,
+        duration_s,
+        spec.link_mtbf_s,
+        STREAM_LINK,
+        |t, s| FaultKind::LinkDown {
+            until_s: t + s.link_window_s,
+        },
+    ));
+    events.extend(family(
+        spec,
+        replicas,
+        duration_s,
+        spec.preempt_mtbf_s,
+        STREAM_PREEMPT,
+        |t, s| FaultKind::Preempt {
+            deadline_s: t + s.preempt_notice_s,
+        },
+    ));
+    events.sort_by(|a, b| {
+        a.at_s
+            .total_cmp(&b.at_s)
+            .then(a.replica.cmp(&b.replica))
+            .then(a.kind.rank().cmp(&b.kind.rank()))
+    });
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(seed: u64) -> FaultSpec {
+        FaultSpec {
+            seed,
+            ..FaultSpec::enabled_default()
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_seed_sensitive() {
+        let a = fault_schedule(&spec(0), 4, 600.0);
+        let b = fault_schedule(&spec(0), 4, 600.0);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "default mix over 600 s must fault");
+        let c = fault_schedule(&spec(1), 4, 600.0);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn schedule_is_sorted_and_bounded() {
+        let ev = fault_schedule(&spec(3), 4, 600.0);
+        assert!(ev.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+        for e in &ev {
+            assert!(e.at_s >= 0.0 && e.at_s < 600.0);
+            assert!(e.replica < 4);
+            match e.kind {
+                FaultKind::ThermalThrottle { cap_mhz, until_s } => {
+                    assert_eq!(cap_mhz, 600);
+                    assert!(until_s > e.at_s);
+                }
+                FaultKind::LinkDown { until_s } => assert!(until_s > e.at_s),
+                FaultKind::Preempt { deadline_s } => assert!(deadline_s > e.at_s),
+                FaultKind::Crash => {}
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_spec_schedules_nothing() {
+        assert!(fault_schedule(&FaultSpec::disabled(), 4, 600.0).is_empty());
+        assert!(fault_schedule(&spec(0), 0, 600.0).is_empty());
+        assert!(fault_schedule(&spec(0), 4, 0.0).is_empty());
+    }
+
+    #[test]
+    fn zero_mtbf_disables_one_family() {
+        let mut s = spec(0);
+        s.crash_mtbf_s = 0.0;
+        s.preempt_mtbf_s = 0.0;
+        let ev = fault_schedule(&s, 4, 600.0);
+        assert!(!ev.is_empty());
+        assert!(ev.iter().all(|e| !matches!(
+            e.kind,
+            FaultKind::Crash | FaultKind::Preempt { .. }
+        )));
+    }
+
+    #[test]
+    fn all_families_present_over_long_horizon() {
+        let ev = fault_schedule(&spec(0), 4, 3600.0);
+        let has = |f: fn(&FaultKind) -> bool| ev.iter().any(|e| f(&e.kind));
+        assert!(has(|k| matches!(k, FaultKind::Crash)));
+        assert!(has(|k| matches!(k, FaultKind::ThermalThrottle { .. })));
+        assert!(has(|k| matches!(k, FaultKind::LinkDown { .. })));
+        assert!(has(|k| matches!(k, FaultKind::Preempt { .. })));
+    }
+
+    #[test]
+    fn counters_default_to_zero() {
+        let c = FaultCounters::default();
+        assert_eq!(c.crashes + c.crash_recoveries + c.crash_requeues, 0);
+        assert_eq!(c.retries + c.shed + c.faulted_lost, 0);
+        assert_eq!(c.throttle_events + c.link_failures + c.preemptions, 0);
+        assert_eq!(c.respawns, 0);
+    }
+}

@@ -10,7 +10,9 @@
 pub mod clock;
 pub mod detmath;
 pub mod dist;
+pub mod faults;
 pub mod rng;
 
 pub use clock::{EventQueue, VirtualClock};
+pub use faults::{fault_schedule, FaultCounters, FaultEvent, FaultKind};
 pub use rng::Pcg64;

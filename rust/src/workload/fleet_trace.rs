@@ -616,6 +616,7 @@ pub fn scenario_requests(
             let text = std::fs::read_to_string(path)
                 .map_err(|e| anyhow::anyhow!("replay {path:?}: {e}"))?;
             parse_fleet_trace_jsonl(&text)
+                .map_err(|e| anyhow::anyhow!("replay {path:?}: {e:#}"))
         }
     }
 }

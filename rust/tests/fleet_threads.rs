@@ -18,11 +18,15 @@
 //! ```
 
 use throttllem::config::models::llama2_13b;
-use throttllem::config::{MigrationSpec, ServingConfig};
+use throttllem::config::{FaultSpec, MigrationSpec, ServingConfig};
 use throttllem::coordinator::{
     outcome_digest, serve_scenario, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
 };
+use throttllem::engine::request::Request;
+use throttllem::engine::EngineSim;
+use throttllem::gpusim::dvfs::FREQ_MAX_MHZ;
 use throttllem::metrics::ServingStats;
+use throttllem::sim::{FaultCounters, Pcg64};
 use throttllem::workload::fleet_trace::ScenarioKind;
 
 /// Serve one smoke-scale scenario on a 4-replica homogeneous fleet at
@@ -71,6 +75,8 @@ fn assert_stats_identical(a: &ServingStats, b: &ServingStats) {
     assert_eq!(a.wall_s.to_bits(), b.wall_s.to_bits());
     assert_eq!(a.migrated_in, b.migrated_in);
     assert_eq!(a.migrated_out, b.migrated_out);
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.faulted_lost, b.faulted_lost);
     assert_eq!(
         a.migration_energy_j.to_bits(),
         b.migration_energy_j.to_bits()
@@ -129,6 +135,7 @@ fn assert_fleet_identical(a: &FleetOutcome, b: &FleetOutcome) {
     assert_eq!(a.migrations.migrations, b.migrations.migrations);
     assert_eq!(a.migrations.refused_slo, b.migrations.refused_slo);
     assert_eq!(a.migrations.refused_capacity, b.migrations.refused_capacity);
+    assert_eq!(a.faults, b.faults);
     // The digest must agree with the field-by-field verdict: equal
     // outcomes hash equal (the CI job relies on exactly this).
     assert_eq!(outcome_digest(a), outcome_digest(b));
@@ -195,6 +202,178 @@ fn migration_on_diurnal_threads_bit_identical() {
     for threads in [2, 4] {
         let out = migration_run(threads);
         assert_fleet_identical(&base, &out);
+    }
+}
+
+/// The chaos leg: the migration-on diurnal configuration with the
+/// deterministic fault schedule turned on hot enough to produce
+/// crashes, throttles and recoveries inside the 420 s window.
+fn faulted_run(threads: usize) -> FleetOutcome {
+    let policy = Policy::throttllem();
+    let cfg = ServingConfig::throttllem(llama2_13b(2));
+    let mut faults = FaultSpec::enabled_default();
+    // Seed chosen so the schedule front-loads crashes into the diurnal
+    // high-load midsection (7 crash onsets across 3 replicas over
+    // 92-324 s, none inside a link-down window) — the `crashes >= 1`
+    // and recovery assertions below hold with wide margin instead of
+    // depending on late-run scale-in state.
+    faults.seed = 4;
+    faults.crash_mtbf_s = 60.0;
+    faults.throttle_mtbf_s = 80.0;
+    faults.link_mtbf_s = 120.0;
+    faults.preempt_mtbf_s = 180.0;
+    let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
+        .with_migration(MigrationSpec::enabled_default())
+        .with_faults(faults)
+        .with_threads(threads);
+    let model = PerfModel::train(&plan.engines(), 40, 0);
+    let (_, _, out) = serve_scenario(
+        &cfg,
+        policy,
+        &model,
+        &plan,
+        ScenarioKind::Diurnal,
+        420.0,
+        0.55,
+        0,
+    );
+    out
+}
+
+/// Fault injection joins the determinism contract: every fault
+/// decision (schedule cursor, checkpoint ticks, retry fronts, respawn
+/// and preemption deadlines) resolves in the single-threaded
+/// coordination phase, so a faulted run is bit-identical at any
+/// RUN-phase thread count — fault counters included.
+#[test]
+fn faulted_diurnal_threads_bit_identical() {
+    let base = faulted_run(1);
+    assert!(
+        base.faults.crashes >= 1,
+        "chaos leg must inject at least one crash (got {:?})",
+        base.faults
+    );
+    assert!(
+        base.faults.crash_recoveries + base.faults.crash_requeues >= 1,
+        "crashes must trigger recovery work (got {:?})",
+        base.faults
+    );
+    eprintln!("chaos leg fault counters: {:?}", base.faults);
+    for threads in [2, 4] {
+        let out = faulted_run(threads);
+        assert_fleet_identical(&base, &out);
+    }
+}
+
+/// `--faults off` must be byte-identical to a plan that never heard of
+/// the fault subsystem: same outcomes, same digest, all-zero fault
+/// telemetry.  This is the regression the CI faults-off identity job
+/// compares cross-process via `--outcome-digest`.
+#[test]
+fn faults_off_is_byte_identical_to_fault_free_plan() {
+    let base = migration_run(1);
+    let policy = Policy::throttllem();
+    let cfg = ServingConfig::throttllem(llama2_13b(2));
+    let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
+        .with_migration(MigrationSpec::enabled_default())
+        .with_faults(FaultSpec::disabled())
+        .with_threads(1);
+    let model = PerfModel::train(&plan.engines(), 40, 0);
+    let (_, _, out) = serve_scenario(
+        &cfg,
+        policy,
+        &model,
+        &plan,
+        ScenarioKind::Diurnal,
+        420.0,
+        0.55,
+        0,
+    );
+    assert_fleet_identical(&base, &out);
+    assert_eq!(out.faults, FaultCounters::default());
+    assert_eq!(out.total.stats.shed, 0);
+    assert_eq!(out.total.stats.faulted_lost, 0);
+}
+
+/// Property: checkpoint -> crash -> recover round-trips a resident
+/// request exactly.  Across randomized engine loads, the recovered
+/// entry's KV occupancy and generation progress match the checkpoint,
+/// and a mid-transfer failure rolls the checkpoint back onto the
+/// source engine without disturbing it.
+#[test]
+fn checkpoint_crash_recover_roundtrip_property() {
+    let spec = llama2_13b(2);
+    let bt = spec.block_tokens;
+    for seed in 0..16u64 {
+        let mut rng = Pcg64::new(0xfa_u64 << 32 | seed);
+        let mut src = EngineSim::new(spec.clone(), FREQ_MAX_MHZ);
+        let n = 2 + (rng.uniform_u64(0, 1 << 20) % 4);
+        for id in 1..=n {
+            let prompt = 64 + (rng.uniform_u64(0, 1 << 20) % 1200) as u32;
+            let gen = 8 + (rng.uniform_u64(0, 1 << 20) % 120) as u32;
+            src.admit(
+                Request {
+                    id,
+                    prompt_tokens: prompt,
+                    gen_tokens: gen,
+                    predicted_gen: gen,
+                    arrival_s: 0.0,
+                },
+                0.0,
+                false,
+            )
+            .unwrap();
+        }
+        let mut t = 0.0;
+        for _ in 0..rng.uniform_u64(0, 1 << 20) % 6 {
+            if src.is_idle() {
+                break;
+            }
+            let r = src.run_iteration(t);
+            t += r.duration_s;
+        }
+        let residents = src.residents();
+        if residents.is_empty() {
+            continue;
+        }
+        let pick = residents[(rng.uniform_u64(0, 1 << 20) as usize) % residents.len()];
+
+        // Mid-transfer link failure: the destructive checkpoint rolls
+        // back onto the source, which must come out untouched.
+        let before_blocks = src.kv_blocks_used();
+        let before_batch = src.batch();
+        let taken = src.checkpoint(pick.id).expect("resident checkpoint");
+        src.restore(taken, t).expect("rollback onto the source");
+        assert_eq!(src.kv_blocks_used(), before_blocks, "seed {seed}");
+        assert_eq!(src.batch(), before_batch, "seed {seed}");
+
+        // Periodic (non-destructive) checkpoint, then crash the source.
+        let ckpt = src.snapshot(pick.id).expect("resident snapshot");
+        assert_eq!(ckpt.generated, pick.generated);
+        let orphans = src.drain();
+        assert!(orphans.iter().any(|r| r.id == pick.id), "seed {seed}");
+        assert_eq!(src.batch(), 0);
+        assert_eq!(src.kv_blocks_used(), 0);
+
+        // Recover onto a fresh destination and compare the resident
+        // against the checkpoint field by field.
+        let mut dst = EngineSim::new(spec.clone(), FREQ_MAX_MHZ);
+        dst.restore(ckpt.clone(), t).expect("restore onto empty engine");
+        let tokens = ckpt.kv_tokens.max(ckpt.req.prompt_tokens).max(1);
+        assert_eq!(dst.batch(), 1, "seed {seed}");
+        assert_eq!(dst.kv_blocks_used(), (tokens + bt - 1) / bt, "seed {seed}");
+        let back = dst.snapshot(pick.id).expect("recovered resident");
+        assert_eq!(back.req, ckpt.req, "seed {seed}");
+        assert_eq!(back.generated, ckpt.generated, "seed {seed}");
+        assert_eq!(back.prefill_pending, ckpt.prefill_pending, "seed {seed}");
+        assert_eq!(back.lost, ckpt.lost, "seed {seed}");
+        assert_eq!(
+            back.scheduled_s.to_bits(),
+            ckpt.scheduled_s.to_bits(),
+            "seed {seed}"
+        );
+        assert_eq!(back.first_token_s, ckpt.first_token_s, "seed {seed}");
+        assert_eq!(back.kv_tokens, tokens, "seed {seed}");
     }
 }
 
