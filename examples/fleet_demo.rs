@@ -28,7 +28,11 @@
 //!     trace (diurnal by default) served with `--migration off` vs
 //!     `on` on a fleet-autoscaled deployment, asserting migrations
 //!     happen, scale-in completes earlier (fewer engine iterations)
-//!     and SLO attainment is no worse.
+//!     and SLO attainment is no worse;
+//!   * `--predict-compare` — the CI predictive gate: the same scenario
+//!     trace served reactive (`--predict off`) vs predictive
+//!     (`--predict on`), asserting predictive attainment is no worse
+//!     at energy within `--energy-tolerance` (default 2%).
 //!
 //! Every mode accepts `--threads <n>` (RUN-phase worker threads,
 //! 0 = auto): any value is bit-identical to `--threads 1`, so the flag
@@ -43,9 +47,9 @@
 
 use throttllem::cli::Args;
 use throttllem::config::models::llama2_13b;
-use throttllem::config::{FaultSpec, MigrationSpec, ReplicaSpec, ServingConfig};
+use throttllem::config::{FaultSpec, MigrationSpec, PredictSpec, ReplicaSpec, ServingConfig};
 use throttllem::coordinator::{
-    serve_fleet_plan, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
+    serve_fleet_plan, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy, Workload,
 };
 use throttllem::workload::fleet_trace::{
     record_fleet_trace, scenario_requests, Scenario,
@@ -58,7 +62,9 @@ fn main() -> anyhow::Result<()> {
     let duration = args.get_f64("duration", 600.0)?;
     let seed = args.get_u64("seed", 0)?;
     let threads = args.get_u64("threads", 1)? as usize;
-    if args.flag("migrate-compare") {
+    if args.flag("predict-compare") {
+        predict_compare(&args)
+    } else if args.flag("migrate-compare") {
         migrate_compare(&args)
     } else if args.get("scenario").is_some() || args.get("replay").is_some() {
         scenario_mode(&args)
@@ -191,6 +197,124 @@ fn migrate_compare(args: &Args) -> anyhow::Result<()> {
         it_off,
         wall_on,
         wall_off,
+    );
+    Ok(())
+}
+
+/// The CI predictive gate (`--predict-compare`): serve the SAME
+/// scenario trace (diurnal by default; CI also runs flash) on the same
+/// fleet-autoscaled deployment twice — reactive (`--predict off`) vs
+/// predictive (`--predict on`), with live migration enabled on BOTH
+/// legs so the only delta is the forecaster — and enforce the
+/// ROADMAP's "beat the reactive baseline" contract:
+///
+///   1. the reactive leg reports zero predictive telemetry,
+///   2. the predictive leg actually decided something (pre-warm,
+///      proactive migration, or cost-aware scale-in victim),
+///   3. E2E SLO attainment is no worse than reactive, and
+///   4. energy stays within `--energy-tolerance` (default 2%) of the
+///      reactive leg.
+///
+/// Exits non-zero when any leg of the contract fails.
+fn predict_compare(args: &Args) -> anyhow::Result<()> {
+    let duration = args.get_f64("duration", 600.0)?;
+    let seed = args.get_u64("seed", 0)?;
+    let replicas = args.get_u64("replicas", 4)? as usize;
+    let scenario = Scenario::parse(args.get_or("scenario", "diurnal"))?;
+    let tolerance = args.get_f64("energy-tolerance", 0.02)?;
+    let policy = Policy::throttllem();
+    let cfg = ServingConfig::throttllem(llama2_13b(2));
+    let base = FleetPlan::homogeneous(replicas, RouterPolicy::RoundRobin, &cfg, policy, true)
+        .with_migration(MigrationSpec::enabled_default())
+        .with_threads(args.get_u64("threads", 1)? as usize);
+    let model = PerfModel::train(&base.engines(), 100, seed);
+    let peak = args.get_f64("peak", 0.55 * base.rated_rps())?;
+    let (meta, mut reqs) =
+        scenario_requests(&scenario, replicas, peak, duration, seed)?;
+    LengthPredictor::oracle().apply(&mut reqs, cfg.max_tokens);
+    println!(
+        "predictive gate: scenario {} on {replicas} x {} | {} requests \
+         (peak ~{:.1} RPS over {:.0} s)\n",
+        meta.scenario,
+        cfg.engine.name,
+        reqs.len(),
+        meta.peak_rps,
+        meta.duration_s
+    );
+
+    let run = |predict: PredictSpec| {
+        let plan = base.clone().with_prediction(predict);
+        plan.serve(&cfg, policy, &model, Workload::Trace(&reqs))
+    };
+    // The forecaster's assumed day length is the scenario duration
+    // (the synthetic diurnal cycle spans exactly the trace).
+    let mut spec = PredictSpec::enabled_default();
+    spec.period_s = args.get_f64("predict-period", duration)?;
+    let reactive = run(PredictSpec::disabled());
+    let predictive = run(spec);
+
+    let att = |o: &FleetOutcome| {
+        let a = o.total.stats.e2e_slo_attainment(cfg.slo.e2e_p99);
+        if a.is_nan() {
+            0.0
+        } else {
+            a
+        }
+    };
+    let (att_r, att_p) = (att(&reactive), att(&predictive));
+    let (e_r, e_p) = (
+        reactive.total.stats.total_energy_j,
+        predictive.total.stats.total_energy_j,
+    );
+    print_header();
+    print_row("reactive   (--predict off)", &cfg, &reactive);
+    print_row("predictive (--predict on)", &cfg, &predictive);
+    let pc = &predictive.predict;
+    println!(
+        "\npredictive: {} forecast ticks, {} pre-warmed, {} proactive \
+         migrations ({} refused), {} cost-aware scale-ins",
+        pc.forecast_ticks,
+        pc.prewarmed,
+        pc.proactive_migrations,
+        pc.proactive_refused,
+        pc.predictive_scale_ins
+    );
+    anyhow::ensure!(
+        reactive.predict == Default::default(),
+        "predictive gate: --predict off leaked predictive telemetry"
+    );
+    anyhow::ensure!(
+        pc.forecast_ticks > 0,
+        "predictive gate: forecaster never ran (no fleet ticks?)"
+    );
+    anyhow::ensure!(
+        pc.prewarmed + pc.proactive_migrations + pc.predictive_scale_ins > 0,
+        "predictive gate: predictive control never made a decision \
+         (retune peak/duration)"
+    );
+    anyhow::ensure!(
+        att_p >= att_r - 1e-9,
+        "predictive gate: attainment regressed ({:.3}% predictive vs \
+         {:.3}% reactive)",
+        att_p * 100.0,
+        att_r * 100.0
+    );
+    anyhow::ensure!(
+        e_p <= e_r * (1.0 + tolerance),
+        "predictive gate: energy blew the {:.0}% budget ({:.1} kJ \
+         predictive vs {:.1} kJ reactive)",
+        tolerance * 100.0,
+        e_p / 1e3,
+        e_r / 1e3
+    );
+    println!(
+        "predictive gate: OK (attainment {:.1}% >= {:.1}%, energy \
+         {:.1} kJ <= {:.1} kJ + {:.0}%)",
+        att_p * 100.0,
+        att_r * 100.0,
+        e_p / 1e3,
+        e_r / 1e3,
+        tolerance * 100.0
     );
     Ok(())
 }

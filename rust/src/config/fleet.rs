@@ -19,6 +19,17 @@ use crate::config::models::{default_tp, engine_by_name, family_engine};
 use crate::config::{EngineSpec, ServingConfig, SloSpec};
 use crate::jsonl::Json;
 
+/// Shared parser for every boolean `--<flag> on|off` CLI surface
+/// (`--migration`, `--faults`, `--predict`): one grammar, one error
+/// style (flag + offending value + usage hint), no per-spec copies.
+pub fn parse_on_off(flag: &str, s: &str) -> anyhow::Result<bool> {
+    match s {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => anyhow::bail!("--{flag} {other:?} (expected on | off)"),
+    }
+}
+
 /// One replica's deployment description: which engine it boots, which
 /// TP ladder its own autoscaler may climb, and which SLO it enforces.
 #[derive(Debug, Clone, PartialEq)]
@@ -145,11 +156,7 @@ impl MigrationSpec {
 
     /// Parse the `--migration` CLI value.
     pub fn parse_enabled(s: &str) -> anyhow::Result<bool> {
-        match s {
-            "on" | "true" | "1" => Ok(true),
-            "off" | "false" | "0" => Ok(false),
-            other => anyhow::bail!("--migration {other:?} (expected on | off)"),
-        }
+        parse_on_off("migration", s)
     }
 
     /// Modeled wall-clock cost of moving `blocks` KV blocks.
@@ -244,15 +251,70 @@ impl FaultSpec {
 
     /// Parse the `--faults` CLI value.
     pub fn parse_enabled(s: &str) -> anyhow::Result<bool> {
-        match s {
-            "on" | "true" | "1" => Ok(true),
-            "off" | "false" | "0" => Ok(false),
-            other => anyhow::bail!("--faults {other:?} (expected on | off)"),
-        }
+        parse_on_off("faults", s)
     }
 }
 
 impl Default for FaultSpec {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+/// Predictive fleet-control policy (the `--predict on|off` surface).
+/// When enabled, the coordinator feeds a deterministic arrival
+/// forecaster ([`crate::workload::ArrivalForecaster`]) from the
+/// per-tick arrival counts and uses it for three decisions: pre-warm
+/// replicas ahead of forecast ramps, proactively migrate residents off
+/// KV-pressured replicas before requests must queue, and rank
+/// scale-in victims by how cheap their residents are to move.
+/// Disabled is the default and leaves the serving loop byte-identical
+/// to the reactive path (the `--migration off` / `--faults off`
+/// pattern).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PredictSpec {
+    pub enabled: bool,
+    /// Pre-warm horizon, seconds: how far ahead the forecast is
+    /// evaluated when deciding to spawn ahead of a ramp.  Default is
+    /// one spawn window plus one scaler interval, so a replica warmed
+    /// on a forecast is ready when the ramp lands.
+    pub lead_s: f64,
+    /// EWMA smoothing factor of the forecaster's Holt level in (0, 1].
+    pub alpha: f64,
+    /// Assumed diurnal period of the harmonic term, seconds.
+    pub period_s: f64,
+    /// Proactive-offload trigger: fraction of a replica's KV pool the
+    /// §IV-B projected peak must reach before residents are moved off.
+    pub kv_pressure: f64,
+}
+
+impl PredictSpec {
+    /// Prediction off: the coordinator stays purely reactive.
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            ..Self::enabled_default()
+        }
+    }
+
+    /// Prediction on with the default forecaster knobs.
+    pub fn enabled_default() -> Self {
+        Self {
+            enabled: true,
+            lead_s: 35.0,
+            alpha: 0.35,
+            period_s: 600.0,
+            kv_pressure: 0.85,
+        }
+    }
+
+    /// Parse the `--predict` CLI value.
+    pub fn parse_enabled(s: &str) -> anyhow::Result<bool> {
+        parse_on_off("predict", s)
+    }
+}
+
+impl Default for PredictSpec {
     fn default() -> Self {
         Self::disabled()
     }
@@ -512,6 +574,37 @@ mod tests {
         assert!(format!("{e}").contains("expected on | off"), "{e}");
         assert!(FaultSpec::parse_enabled("").is_err());
         assert!(FaultSpec::parse_enabled("On").is_err());
+    }
+
+    #[test]
+    fn predict_spec_defaults_and_parse() {
+        let p = PredictSpec::enabled_default();
+        assert!(p.enabled);
+        assert!(p.lead_s > 0.0 && p.period_s > 0.0);
+        assert!(p.alpha > 0.0 && p.alpha <= 1.0);
+        assert!(p.kv_pressure > 0.0 && p.kv_pressure <= 1.0);
+        assert!(!PredictSpec::disabled().enabled);
+        assert_eq!(PredictSpec::default(), PredictSpec::disabled());
+        assert!(PredictSpec::parse_enabled("on").unwrap());
+        assert!(!PredictSpec::parse_enabled("0").unwrap());
+        let e = PredictSpec::parse_enabled("soon").unwrap_err();
+        assert!(format!("{e}").contains("expected on | off"), "{e}");
+    }
+
+    /// The shared on|off parser names the flag it was parsing in its
+    /// error, so every `--<flag>` surface keeps the PR 8 error style.
+    #[test]
+    fn on_off_errors_name_their_flag() {
+        for (flag, parse) in [
+            ("migration", MigrationSpec::parse_enabled as fn(&str) -> anyhow::Result<bool>),
+            ("faults", FaultSpec::parse_enabled),
+            ("predict", PredictSpec::parse_enabled),
+        ] {
+            let e = parse("sideways").unwrap_err();
+            let msg = format!("{e}");
+            assert!(msg.contains(&format!("--{flag}")), "{flag}: {msg}");
+            assert!(msg.contains("expected on | off"), "{flag}: {msg}");
+        }
     }
 
     #[test]

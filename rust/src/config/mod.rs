@@ -9,7 +9,10 @@
 pub mod fleet;
 pub mod models;
 
-pub use fleet::{parse_fleet_jsonl, parse_replica_spec, FaultSpec, MigrationSpec, ReplicaSpec};
+pub use fleet::{
+    parse_fleet_jsonl, parse_on_off, parse_replica_spec, FaultSpec, MigrationSpec, PredictSpec,
+    ReplicaSpec,
+};
 pub use models::{EngineSpec, ModelFamily, PartitionKind};
 
 /// Service-level objectives the coordinator enforces (paper §V-A).

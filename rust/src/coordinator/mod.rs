@@ -47,6 +47,7 @@ pub use scheduler::{AdmissionDecision, EvalScratch, Scheduler};
 pub use scoreboard::Scoreboard;
 pub use server::{
     outcome_digest, scenario_params, serve_fleet, serve_fleet_plan, serve_scenario, serve_trace,
-    FamilyStats, FleetOutcome, FleetPlan, FleetSpec, Policy, ReplicaOutcome, ServeOutcome,
+    FamilyStats, FleetOutcome, FleetPlan, FleetSpec, Policy, PredictCounters, ReplicaOutcome,
+    ServeOutcome, Workload,
 };
 pub use shard::effective_threads;

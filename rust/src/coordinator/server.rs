@@ -50,7 +50,7 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::config::fleet::{FaultSpec, MigrationSpec, ReplicaSpec};
+use crate::config::fleet::{FaultSpec, MigrationSpec, PredictSpec, ReplicaSpec};
 use crate::config::{EngineSpec, ModelFamily, ServingConfig, SloSpec};
 use crate::coordinator::autoscaler::{FleetDecision, FleetScaler};
 use crate::coordinator::migration::{
@@ -72,7 +72,9 @@ use crate::gpusim::latency::{decode_latency_s, GpuState};
 use crate::gpusim::power::{idle_power_w, power_w};
 use crate::metrics::ServingStats;
 use crate::sim::faults::{fault_schedule, FaultCounters, FaultKind};
-use crate::workload::predictor::conservative_adjust;
+use crate::workload::fleet_trace::{parse_fleet_trace_jsonl, synth_fleet_trace, ScenarioKind};
+use crate::workload::forecast::ArrivalForecaster;
+use crate::workload::predictor::{conservative_adjust, LengthPredictor};
 
 /// Serving policy knobs (the paper's ablation axes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -221,6 +223,13 @@ pub struct FleetPlan {
     /// recovery.  Disabled by default: the serving loop is
     /// byte-identical to the fault-free path.
     pub faults: FaultSpec,
+    /// Predictive fleet control (`--predict on|off`): an arrival
+    /// forecaster feeds replica pre-warming ahead of ramps, proactive
+    /// KV-pressure offload, and migration-cost-aware scale-in victim
+    /// ranking — all resolved in the single-threaded coordination
+    /// phase.  Disabled by default: the serving loop is byte-identical
+    /// to the reactive path.
+    pub predict: PredictSpec,
     /// Worker threads for the RUN phase (`--threads`): replicas are
     /// partitioned into fixed contiguous shards stepped in parallel.
     /// `0` means auto (available parallelism); any value is
@@ -241,6 +250,7 @@ impl FleetPlan {
             autoscale_replicas: false,
             migration: MigrationSpec::disabled(),
             faults: FaultSpec::disabled(),
+            predict: PredictSpec::disabled(),
             threads: 1,
         }
     }
@@ -254,6 +264,12 @@ impl FleetPlan {
     /// Replace the fault-injection policy (builder style).
     pub fn with_faults(mut self, faults: FaultSpec) -> Self {
         self.faults = faults;
+        self
+    }
+
+    /// Replace the predictive-control policy (builder style).
+    pub fn with_prediction(mut self, predict: PredictSpec) -> Self {
+        self.predict = predict;
         self
     }
 
@@ -283,6 +299,7 @@ impl FleetPlan {
             autoscale_replicas,
             migration: MigrationSpec::disabled(),
             faults: FaultSpec::disabled(),
+            predict: PredictSpec::disabled(),
             threads: 1,
         }
     }
@@ -368,11 +385,102 @@ pub struct FleetOutcome {
     /// Fault-injection and recovery telemetry (all zero with
     /// `--faults off`).
     pub faults: FaultCounters,
+    /// Predictive-control telemetry (all zero with `--predict off`).
+    pub predict: PredictCounters,
 }
 
-/// Serve `requests` (sorted by arrival) under `policy` on a fleet of
-/// one; returns the single-engine outcome. Exactly equivalent to
-/// `serve_fleet(.., &FleetSpec::single()).total`.
+/// Predictive-control telemetry for one serving run (all zero with
+/// `--predict off` — `tests/fleet_threads.rs` pins that the whole
+/// outcome, not just these counters, is byte-identical then).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PredictCounters {
+    /// Fleet ticks on which the forecaster was fed and consulted.
+    pub forecast_ticks: u64,
+    /// Replica spawns started ahead of a forecast ramp (beyond the
+    /// reactive scaler's own decision).
+    pub prewarmed: u64,
+    /// Residents proactively migrated off a KV-pressured replica
+    /// before admission had to queue behind them.
+    pub proactive_migrations: u64,
+    /// Proactive moves refused (capacity, destination pressure, or
+    /// the destination-side SLO guard).
+    pub proactive_refused: u64,
+    /// Scale-in victims chosen by the migration-cost-aware ranking.
+    pub predictive_scale_ins: u64,
+}
+
+/// The workload a [`FleetPlan::serve`] call runs: an explicit request
+/// trace, a synthesized scenario, or a recorded JSONL replay.  This is
+/// the one front door the four legacy `serve_*` entry points now shim
+/// onto (`tests/fleet_equivalence.rs` pins the shims bitwise).
+#[derive(Debug)]
+pub enum Workload<'a> {
+    /// Pre-built requests, sorted by arrival.
+    Trace(&'a [Request]),
+    /// Synthesize a fleet scenario right-scaled to the plan's rated
+    /// load, with the oracle length predictor applied — exactly what
+    /// [`serve_scenario`] always did.
+    Scenario {
+        kind: ScenarioKind,
+        duration_s: f64,
+        utilization: f64,
+        seed: u64,
+    },
+    /// Requests loaded from a recorded JSONL fleet trace
+    /// ([`Workload::replay`]).
+    Replay(Vec<Request>),
+}
+
+impl Workload<'_> {
+    /// Load a recorded fleet-trace JSONL file as a replay workload.
+    /// File I/O happens here, at construction, so [`FleetPlan::serve`]
+    /// itself stays infallible.
+    pub fn replay(path: &str) -> anyhow::Result<Workload<'static>> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("replay {path:?}: {e}"))?;
+        let (_, reqs) = parse_fleet_trace_jsonl(&text)
+            .map_err(|e| anyhow::anyhow!("replay {path:?}: {e:#}"))?;
+        Ok(Workload::Replay(reqs))
+    }
+}
+
+impl FleetPlan {
+    /// Serve `workload` on this plan — THE fleet serving entry point.
+    /// `cfg` supplies the fleet-wide policy knobs (SLO default,
+    /// predictor error, `max_tokens`); `policy` the paper's ablation
+    /// axes; `model` the trained §IV-C performance model.  The legacy
+    /// [`serve_trace`] / [`serve_fleet`] / [`serve_fleet_plan`] /
+    /// [`serve_scenario`] entry points are thin shims over this,
+    /// bit-identical by construction and pinned in
+    /// `tests/fleet_equivalence.rs`.
+    pub fn serve(
+        &self,
+        cfg: &ServingConfig,
+        policy: Policy,
+        model: &PerfModel,
+        workload: Workload,
+    ) -> FleetOutcome {
+        match workload {
+            Workload::Trace(reqs) => serve_requests(cfg, policy, model, reqs, self),
+            Workload::Replay(reqs) => serve_requests(cfg, policy, model, &reqs, self),
+            Workload::Scenario {
+                kind,
+                duration_s,
+                utilization,
+                seed,
+            } => {
+                let params = scenario_params(self, kind, duration_s, utilization, seed);
+                let mut reqs = synth_fleet_trace(&params);
+                LengthPredictor::oracle().apply(&mut reqs, cfg.max_tokens);
+                serve_requests(cfg, policy, model, &reqs, self)
+            }
+        }
+    }
+}
+
+/// Deprecated: thin shim over [`FleetPlan::serve`] with a
+/// single-replica plan.  Serve `requests` (sorted by arrival) under
+/// `policy` on a fleet of one; returns the single-engine outcome.
 pub fn serve_trace(
     cfg: &ServingConfig,
     policy: Policy,
@@ -382,10 +490,10 @@ pub fn serve_trace(
     serve_fleet(cfg, policy, model, requests, &FleetSpec::single()).total
 }
 
-/// Serve `requests` (sorted by arrival) on `fleet.replicas` identical
-/// replicas under `policy`; returns per-replica and aggregate
-/// outcomes.  Equivalent to [`serve_fleet_plan`] with
-/// [`FleetPlan::homogeneous`] semantics.
+/// Deprecated: thin shim over [`FleetPlan::serve`] with a homogeneous
+/// plan.  Serve `requests` (sorted by arrival) on `fleet.replicas`
+/// identical replicas under `policy`; returns per-replica and
+/// aggregate outcomes.
 pub fn serve_fleet(
     cfg: &ServingConfig,
     policy: Policy,
@@ -393,21 +501,33 @@ pub fn serve_fleet(
     requests: &[Request],
     fleet: &FleetSpec,
 ) -> FleetOutcome {
-    serve_fleet_plan(
+    FleetPlan::from_fleet_spec(fleet, cfg, policy).serve(
         cfg,
         policy,
         model,
-        requests,
-        &FleetPlan::from_fleet_spec(fleet, cfg, policy),
+        Workload::Trace(requests),
     )
 }
 
-/// Serve `requests` (sorted by arrival) on the fleet `plan` describes
-/// — one [`ReplicaSpec`] per replica, mixed TP sizes / model families
-/// allowed — under `policy`; returns per-replica, per-family and
-/// aggregate outcomes.  `cfg` supplies the fleet-wide policy knobs
-/// (SLO default, predictor error, `max_tokens`).
+/// Deprecated: thin shim over [`FleetPlan::serve`] with
+/// [`Workload::Trace`].  Serve `requests` (sorted by arrival) on the
+/// fleet `plan` describes — one [`ReplicaSpec`] per replica, mixed TP
+/// sizes / model families allowed — under `policy`; returns
+/// per-replica, per-family and aggregate outcomes.
 pub fn serve_fleet_plan(
+    cfg: &ServingConfig,
+    policy: Policy,
+    model: &PerfModel,
+    requests: &[Request],
+    plan: &FleetPlan,
+) -> FleetOutcome {
+    plan.serve(cfg, policy, model, Workload::Trace(requests))
+}
+
+/// Thread-count dispatch behind [`FleetPlan::serve`]: spin up the
+/// RUN-phase shard pool when the plan asks for parallelism, else run
+/// the literal inline loop.
+fn serve_requests(
     cfg: &ServingConfig,
     policy: Policy,
     model: &PerfModel,
@@ -503,6 +623,17 @@ fn serve_fleet_plan_inner(
                 MigrationSpec::enabled_default()
             },
         }
+    });
+
+    // Predictive control (`--predict on`): the forecaster observes the
+    // per-tick arrival rate and feeds three coordination-phase
+    // decisions — pre-warm ahead of forecast ramps, proactive
+    // KV-pressure offload, migration-cost-aware victim ranking.
+    // `None` keeps every predictive branch below dead and the loop
+    // byte-identical to the reactive path.
+    let mut predict: Option<PredictRt> = plan.predict.enabled.then(|| PredictRt {
+        forecaster: ArrivalForecaster::new(plan.predict.alpha, plan.predict.period_s),
+        counters: PredictCounters::default(),
     });
 
     let mut next_arrival = 0usize;
@@ -716,6 +847,14 @@ fn serve_fleet_plan_inner(
                         / active_count as f64
                 };
                 let provisioned = active_count + pending;
+                // Feed the forecaster BEFORE the reactive decision so
+                // the predictive passes below (and the scale-in veto)
+                // see the freshest level.  The reactive `fs.tick`
+                // itself never consults the forecaster.
+                if let Some(pr) = predict.as_mut() {
+                    pr.forecaster.observe(now, rps);
+                    pr.counters.forecast_ticks += 1;
+                }
                 match fs.tick(now, rps, per_replica_rps, provisioned) {
                     FleetDecision::Hold => {}
                     FleetDecision::Activate { count } => {
@@ -741,6 +880,23 @@ fn serve_fleet_plan_inner(
                     }
                     FleetDecision::Deactivate { count } => {
                         let mut remaining = count;
+                        // Predictive veto: never shed capacity the
+                        // forecast says the fleet needs again within
+                        // the pre-warm horizon.  Without this, the
+                        // reactive scaler cancels a pre-warmed spawn
+                        // every tick (resetting its warm-up clock), so
+                        // a pre-warmed replica could never finish
+                        // spawning across a diurnal trough.
+                        if let Some(pr) = predict.as_ref() {
+                            let f = pr
+                                .forecaster
+                                .forecast_rps(now + plan.predict.lead_s);
+                            let keep = fs
+                                .desired_replicas(f, per_replica_rps)
+                                .min(provisioned);
+                            remaining =
+                                remaining.min(provisioned.saturating_sub(keep));
+                        }
                         // Cancel pending spawns first — the cheapest
                         // capacity to shed (FleetScaler's provisioned
                         // count includes them). The partial warm-up
@@ -766,9 +922,23 @@ fn serve_fleet_plan_inner(
                                 break;
                             }
                             // Energy-aware victim selection (ROADMAP
-                            // "Fleet-axis energy policy").
-                            let Some(j) = select_scale_in_victim(&replicas)
-                            else {
+                            // "Fleet-axis energy policy"); with
+                            // `--predict on` the ranking also prices
+                            // what evicting each candidate costs.
+                            let choice = match predict.as_mut() {
+                                Some(pr) => {
+                                    let v = select_scale_in_victim_predictive(
+                                        &replicas,
+                                        &plan.migration,
+                                    );
+                                    if v.is_some() {
+                                        pr.counters.predictive_scale_ins += 1;
+                                    }
+                                    v
+                                }
+                                None => select_scale_in_victim(&replicas),
+                            };
+                            let Some(j) = choice else {
                                 break;
                             };
                             replicas[j].deactivate(now);
@@ -811,6 +981,64 @@ fn serve_fleet_plan_inner(
                                     f.counters.link_failures += rollbacks;
                                 }
                             }
+                        }
+                    }
+                }
+                // Predictive passes (`--predict on`, coordination
+                // phase): (a) pre-warm replicas ahead of a forecast
+                // ramp so the SPAWN_TIME_S cold-start window overlaps
+                // the remaining quiet period instead of the ramp
+                // itself; (b) proactively offload residents from
+                // KV-pressured replicas before admission queues
+                // behind them.
+                if let Some(pr) = predict.as_mut() {
+                    let forecast =
+                        pr.forecaster.forecast_rps(now + plan.predict.lead_s);
+                    // Only pre-warm on a genuine forecast RISE past
+                    // what the fleet already provisions — never on
+                    // the downslope the reactive scaler is shedding.
+                    if forecast > rps {
+                        let provisioned_now = replicas
+                            .iter()
+                            .filter(|r| {
+                                r.active || r.activation_ready.is_some()
+                            })
+                            .count();
+                        let desired =
+                            fs.desired_replicas(forecast, per_replica_rps);
+                        if desired > provisioned_now {
+                            let order = select_scale_out_order(
+                                &replicas,
+                                p95_prompt(&recent_prompts),
+                            );
+                            let mut want = desired - provisioned_now;
+                            for i in order {
+                                if want == 0 {
+                                    break;
+                                }
+                                replicas[i].activation_ready =
+                                    Some(now + fs.spawn_time_s);
+                                pr.counters.prewarmed += 1;
+                                want -= 1;
+                            }
+                        }
+                    }
+                    if plan.migration.enabled {
+                        let link_ok = faults
+                            .as_ref()
+                            .map(|f| now >= f.link_down_until)
+                            .unwrap_or(true);
+                        if link_ok {
+                            proactive_offload(
+                                &mut replicas,
+                                now,
+                                policy,
+                                model,
+                                &plan.migration,
+                                plan.predict.kv_pressure,
+                                &mut migrations,
+                                &mut pr.counters,
+                            );
                         }
                     }
                 }
@@ -984,7 +1212,20 @@ fn serve_fleet_plan_inner(
         replica_deactivations: deactivations,
         migrations,
         faults: fault_counters,
+        predict: predict.map(|p| p.counters).unwrap_or_default(),
     }
+}
+
+/// Mutable predictive-control state threaded through the event loop
+/// (`--predict on` only; the loop carries `None` otherwise, keeping
+/// every predictive branch dead and the run byte-identical to the
+/// reactive path — the same gating discipline as [`FaultRt`]).  The
+/// forecaster is fed and queried exclusively at fleet ticks, inside
+/// the single-threaded coordination phase, so `--threads N` stays
+/// bit-identical.
+struct PredictRt {
+    forecaster: ArrivalForecaster,
+    counters: PredictCounters,
 }
 
 /// Mutable fault-injection state threaded through the event loop
@@ -1436,12 +1677,15 @@ pub fn scenario_params(
     )
 }
 
-/// Serve a generated fleet scenario on `plan`: synthesize the fleet's
-/// ONE shared arrival stream (correlated bursts land on every replica
-/// at once — the per-replica synthesizer decorrelated them by
-/// construction), apply the oracle length predictor, and run
-/// [`serve_fleet_plan`].  Returns the trace parameters and requests so
-/// callers can record the scenario for bit-exact JSONL replay.
+/// Deprecated: thin shim over [`FleetPlan::serve`] with
+/// [`Workload::Scenario`] semantics.  Serve a generated fleet scenario
+/// on `plan`: synthesize the fleet's ONE shared arrival stream
+/// (correlated bursts land on every replica at once — the per-replica
+/// synthesizer decorrelated them by construction), apply the oracle
+/// length predictor, and serve.  Returns the trace parameters and
+/// requests so callers can record the scenario for bit-exact JSONL
+/// replay (why this shim survives: [`Workload::Scenario`] does not
+/// hand the synthesized trace back).
 #[allow(clippy::too_many_arguments)]
 pub fn serve_scenario(
     cfg: &ServingConfig,
@@ -1458,9 +1702,9 @@ pub fn serve_scenario(
     FleetOutcome,
 ) {
     let params = scenario_params(plan, kind, duration_s, utilization, seed);
-    let mut reqs = crate::workload::fleet_trace::synth_fleet_trace(&params);
-    crate::workload::LengthPredictor::oracle().apply(&mut reqs, cfg.max_tokens);
-    let out = serve_fleet_plan(cfg, policy, model, &reqs, plan);
+    let mut reqs = synth_fleet_trace(&params);
+    LengthPredictor::oracle().apply(&mut reqs, cfg.max_tokens);
+    let out = plan.serve(cfg, policy, model, Workload::Trace(&reqs));
     (params, reqs, out)
 }
 
@@ -1568,6 +1812,11 @@ pub fn outcome_digest(out: &FleetOutcome) -> u64 {
     h.u64(out.faults.link_failures);
     h.u64(out.faults.preemptions);
     h.u64(out.faults.respawns);
+    h.u64(out.predict.forecast_ticks);
+    h.u64(out.predict.prewarmed);
+    h.u64(out.predict.proactive_migrations);
+    h.u64(out.predict.proactive_refused);
+    h.u64(out.predict.predictive_scale_ins);
     h.0
 }
 
@@ -1656,6 +1905,60 @@ fn select_scale_in_victim(replicas: &[Replica]) -> Option<usize> {
         };
         if better {
             victim = Some((ept, out, i));
+        }
+    }
+    victim.map(|(_, _, i)| i)
+}
+
+/// Migration-latency-aware scale-in victim (`--predict on`): like
+/// [`select_scale_in_victim`], ranks ACTIVE replicas by projected
+/// J/token — but discounts each candidate by what evicting it costs
+/// the survivors: the modeled transfer time of its residents' KV
+/// footprints plus the queued work it displaces (priced at the link's
+/// base latency per entry).  A slightly less efficient replica whose
+/// state is cheap to move can therefore outrank the reactive choice.
+/// Idle replicas stay infinitely inefficient (and cost nothing to
+/// evict), so they are still shed first.  Exact ties keep the
+/// reactive order: least outstanding work, then highest index.
+fn select_scale_in_victim_predictive(
+    replicas: &[Replica],
+    mig: &MigrationSpec,
+) -> Option<usize> {
+    let mut victim: Option<(f64, u64, usize)> = None;
+    for (i, r) in replicas.iter().enumerate() {
+        if !r.active {
+            continue;
+        }
+        let mut move_s = 0.0f64;
+        for e in &r.engines {
+            let block_tokens = e.sim.spec().block_tokens;
+            for ri in e.sim.residents() {
+                let blocks =
+                    blocks_for(ri.kv_tokens.max(ri.prompt_tokens), block_tokens);
+                move_s += if ri.prefill_pending {
+                    mig.base_latency_s
+                } else {
+                    mig.transfer_seconds(blocks)
+                };
+            }
+        }
+        move_s += r.queue.len() as f64 * mig.base_latency_s;
+        let score = r.energy_per_token() / (1.0 + move_s);
+        let out = r.outstanding();
+        let better = match victim {
+            None => true,
+            Some((best_score, best_out, best_i)) => {
+                if score != best_score {
+                    score > best_score
+                } else if out != best_out {
+                    out < best_out
+                } else {
+                    i > best_i
+                }
+            }
+        };
+        if better {
+            victim = Some((score, out, i));
         }
     }
     victim.map(|(_, _, i)| i)
@@ -1949,6 +2252,169 @@ fn migrate_residents(
                         .restore(ckpt, now)
                         .expect("rollback restore onto the migration source");
                     counters.refused_capacity += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Proactively migrate residents off replicas whose §IV-B projected
+/// peak KV demand crowds their pool (`--predict on` + `--migration
+/// on`) — BEFORE admission has to queue behind the pressure, the open
+/// edge the scale-in-only migration of PR 5 left.  Reuses the scale-in
+/// machinery end to end: destination ranking by normalized headroom,
+/// the destination-side [`migration_slo_guard`], and checkpoint /
+/// restore.  Two extra rules keep it stable: moves go largest
+/// footprint first (most relief per transfer), and a destination whose
+/// own projected peak would cross the pressure threshold is refused —
+/// every move strictly lowers fleet pressure, so two crowded replicas
+/// can never trade residents forever.  The source stays live, so a
+/// refusal simply leaves the request where it is.
+#[allow(clippy::too_many_arguments)]
+fn proactive_offload(
+    replicas: &mut [Replica],
+    now: f64,
+    policy: Policy,
+    model: &PerfModel,
+    mig: &MigrationSpec,
+    kv_pressure: f64,
+    counters: &mut MigrationCounters,
+    pc: &mut PredictCounters,
+) {
+    for from in 0..replicas.len() {
+        if !replicas[from].active {
+            continue;
+        }
+        for eng_idx in 0..replicas[from].engines.len() {
+            // One attempted move per re-projection: every successful
+            // move shrinks the source's resident set, so this loop
+            // terminates; any refusal ends the engine's pass.
+            loop {
+                let pressured = {
+                    let e = &mut replicas[from].engines[eng_idx];
+                    let spec = e.sim.spec();
+                    if spec.kv_blocks == 0 {
+                        break;
+                    }
+                    let limit = (kv_pressure * spec.kv_blocks as f64) as u32;
+                    let k = e.sim.iter_index();
+                    e.tracker.project(&e.sb, k, None).peak_kv() > limit
+                };
+                if !pressured {
+                    break;
+                }
+                // Largest footprint first; ties to the lowest id.
+                let Some(ri) = replicas[from].engines[eng_idx]
+                    .sim
+                    .residents()
+                    .into_iter()
+                    .max_by_key(|ri| {
+                        (
+                            ri.kv_tokens.max(ri.prompt_tokens),
+                            std::cmp::Reverse(ri.id),
+                        )
+                    })
+                else {
+                    break;
+                };
+                let src_entry = match replicas[from].engines[eng_idx].sb.get(ri.id)
+                {
+                    Some(e) => *e,
+                    None => break,
+                };
+                let footprint = ri.kv_tokens.max(ri.prompt_tokens);
+                let Some(to) = best_reroute_target(replicas, from, footprint)
+                else {
+                    counters.refused_capacity += 1;
+                    pc.proactive_refused += 1;
+                    break;
+                };
+                let (src, dst) = two_replicas(replicas, from, to);
+                // Same stale-tick hazard as scale-in migration: a
+                // drained destination's frozen TP-scaler tick must
+                // fast-forward before it takes work.
+                dst.catch_up_tick(now);
+                let Some(d_idx) = dst.engines.iter().position(|e| e.accepting)
+                else {
+                    counters.refused_capacity += 1;
+                    pc.proactive_refused += 1;
+                    break;
+                };
+                let de = &mut dst.engines[d_idx];
+                let d_spec_blocks = de.sim.spec().kv_blocks;
+                let need = blocks_for(footprint, de.sim.spec().block_tokens);
+                let full = de.sim.batch() >= de.sim.spec().max_batch;
+                if full || need > de.sim.kv_blocks_free() {
+                    counters.refused_capacity += 1;
+                    pc.proactive_refused += 1;
+                    break;
+                }
+                // Never offload ONTO a pressured destination: the
+                // move must strictly lower fleet-wide pressure.
+                let d_limit = (kv_pressure * d_spec_blocks as f64) as u32;
+                let dk = de.sim.iter_index();
+                let d_peak = de.tracker.project(&de.sb, dk, None).peak_kv();
+                if d_peak.saturating_add(need) > d_limit {
+                    counters.refused_capacity += 1;
+                    pc.proactive_refused += 1;
+                    break;
+                }
+                let stall = if ri.prefill_pending {
+                    mig.base_latency_s
+                } else {
+                    mig.transfer_seconds(need)
+                };
+                let entry = migration_entry(&src_entry, ri.generated, dk);
+                if !migration_slo_guard(
+                    model,
+                    de.sim.spec(),
+                    &dst.sched.slo,
+                    &de.sb,
+                    &mut de.tracker,
+                    dk,
+                    now,
+                    &entry,
+                    stall,
+                ) {
+                    counters.refused_slo += 1;
+                    pc.proactive_refused += 1;
+                    break;
+                }
+                if de.sim.is_idle() {
+                    de.sim.account_idle(now);
+                    de.cursor = de.cursor.max(now);
+                }
+                let se = &mut src.engines[eng_idx];
+                let Some(ckpt) = se.sim.checkpoint(ri.id) else {
+                    break;
+                };
+                match de.sim.restore(ckpt, now + stall) {
+                    Ok(()) => {
+                        se.sb.strike(ri.id);
+                        de.sb.insert(entry);
+                        src.route_epoch += 1;
+                        dst.route_epoch += 1;
+                        dst.migrated_ids.insert(ri.id);
+                        dst.migration_energy += mig.transfer_energy_j(stall);
+                        dst.stats.migrated_in += 1;
+                        src.stats.migrated_out += 1;
+                        counters.migrations += 1;
+                        pc.proactive_migrations += 1;
+                        if policy.throttling {
+                            // Both batch compositions changed: re-run
+                            // the §IV-E controller on each side.
+                            rethrottle(de, !dst.queue.is_empty(), model, &dst.sched);
+                            rethrottle(se, !src.queue.is_empty(), model, &src.sched);
+                        }
+                    }
+                    Err(ckpt) => {
+                        se.sim
+                            .restore(ckpt, now)
+                            .expect("rollback restore onto the offload source");
+                        counters.refused_capacity += 1;
+                        pc.proactive_refused += 1;
+                        break;
+                    }
                 }
             }
         }
@@ -2384,6 +2850,69 @@ mod tests {
     }
 
     #[test]
+    fn predictive_victim_discounts_expensive_moves() {
+        // Replica 0: efficient operating point, one resident, empty
+        // queue -> cheap to evict.  Replica 1: max frequency (the
+        // reactive victim), one resident plus ten queued requests ->
+        // expensive to evict once displacement is priced in.
+        let mk = || {
+            let mut a = test_replica(0, llama2_13b(2));
+            a.engines[0].sim.dvfs.set(0.0, 1050);
+            a.engines[0]
+                .sim
+                .admit(test_request(0, 64), 0.0, false)
+                .unwrap();
+            let mut b = test_replica(1, llama2_13b(2));
+            b.engines[0].sim.dvfs.set(0.0, FREQ_MAX_MHZ);
+            b.engines[0]
+                .sim
+                .admit(test_request(1, 64), 0.0, false)
+                .unwrap();
+            for id in 2..12 {
+                b.queue.push_back(test_request(id, 64));
+            }
+            vec![a, b]
+        };
+        let replicas = mk();
+        // Reactive ranking: J/token alone -> the max-frequency replica.
+        assert_eq!(select_scale_in_victim(&replicas), Some(1));
+        // A free link (zero orchestration latency, both residents
+        // still in prefill) makes move cost vanish: the predictive
+        // rule degenerates to the reactive one.
+        let mut free = MigrationSpec::enabled_default();
+        free.base_latency_s = 0.0;
+        assert_eq!(select_scale_in_victim_predictive(&replicas, &free), Some(1));
+        // An expensive link (100 s per displaced entry) swamps the
+        // J/token gap: the cheap-to-move replica becomes the victim.
+        let mut slow = MigrationSpec::enabled_default();
+        slow.base_latency_s = 100.0;
+        assert_eq!(select_scale_in_victim_predictive(&replicas, &slow), Some(0));
+    }
+
+    #[test]
+    fn predictive_victim_sheds_idle_replicas_first() {
+        let mig = MigrationSpec::enabled_default();
+        // Idle replicas: infinite J/token, nothing to move -> still
+        // the first victim, exactly as in the reactive rule.
+        let mut busy = test_replica(0, llama2_13b(2));
+        busy.engines[0].sim.dvfs.set(0.0, 1050);
+        busy.engines[0]
+            .sim
+            .admit(test_request(0, 64), 0.0, false)
+            .unwrap();
+        let idle = test_replica(1, llama2_13b(2));
+        let replicas = vec![busy, idle];
+        assert_eq!(select_scale_in_victim_predictive(&replicas, &mig), Some(1));
+        // Inactive replicas are never victims; an all-inactive fleet
+        // yields none.
+        let mut replicas = replicas;
+        replicas[1].active = false;
+        assert_eq!(select_scale_in_victim_predictive(&replicas, &mig), Some(0));
+        replicas[0].active = false;
+        assert_eq!(select_scale_in_victim_predictive(&replicas, &mig), None);
+    }
+
+    #[test]
     fn scale_out_order_is_capacity_and_energy_aware() {
         // Mixed inactive pool: TP1 (120 blocks), TP2 (439), TP4 (1050).
         let mut replicas = vec![
@@ -2573,6 +3102,100 @@ mod tests {
         assert_eq!(counters.migrations, 0);
         assert_eq!(counters.refused_slo, 1);
         assert_eq!(replicas[0].engines[0].sim.batch(), 1, "stays and drains");
+        assert_eq!(replicas[1].engines[0].sim.batch(), 0);
+    }
+
+    #[test]
+    fn proactive_offload_relieves_kv_pressure() {
+        // Two ~68-block residents project a ~136-block peak on the
+        // source; at kv_pressure 0.25 the 439-block pool's limit is
+        // 109 blocks -> pressured.  Moving ONE resident (need ~65
+        // blocks, within the idle destination's own limit) relieves
+        // the source below the threshold, so exactly one migrates.
+        let (mut replicas, model) = migration_test_pair();
+        seed_resident(&mut replicas[0], 7, 4096, 1e9);
+        seed_resident(&mut replicas[0], 8, 4096, 1e9);
+        let mig = MigrationSpec::enabled_default();
+        let mut counters = MigrationCounters::default();
+        let mut pc = PredictCounters::default();
+        proactive_offload(
+            &mut replicas,
+            1.0,
+            Policy::throttle_only(),
+            &model,
+            &mig,
+            0.25,
+            &mut counters,
+            &mut pc,
+        );
+        assert_eq!(counters.migrations, 1);
+        assert_eq!(pc.proactive_migrations, 1);
+        assert_eq!(pc.proactive_refused, 0);
+        // The source stays LIVE (this is the pre-queueing offload, not
+        // a scale-in drain): one resident on each side afterwards.
+        assert!(replicas[0].active);
+        assert_eq!(replicas[0].engines[0].sim.batch(), 1);
+        assert_eq!(replicas[1].engines[0].sim.batch(), 1);
+        let moved_7 = replicas[1].engines[0].sb.get(7).is_some();
+        let moved_8 = replicas[1].engines[0].sb.get(8).is_some();
+        assert!(moved_7 ^ moved_8, "exactly one resident moves");
+        assert_eq!(replicas[0].stats.migrated_out, 1);
+        assert_eq!(replicas[1].stats.migrated_in, 1);
+    }
+
+    #[test]
+    fn proactive_offload_refuses_pressured_destination() {
+        // A single ~104-block resident carries ALL of the source's
+        // pressure: at kv_pressure 0.2 (limit 87 blocks) the move
+        // would push the destination past the same threshold, so the
+        // anti-ping-pong rule refuses and the request stays put.
+        let (mut replicas, model) = migration_test_pair();
+        seed_resident(&mut replicas[0], 7, 6400, 1e9);
+        let mig = MigrationSpec::enabled_default();
+        let mut counters = MigrationCounters::default();
+        let mut pc = PredictCounters::default();
+        proactive_offload(
+            &mut replicas,
+            1.0,
+            Policy::throttle_only(),
+            &model,
+            &mig,
+            0.2,
+            &mut counters,
+            &mut pc,
+        );
+        assert_eq!(counters.migrations, 0);
+        assert_eq!(pc.proactive_migrations, 0);
+        assert_eq!(pc.proactive_refused, 1);
+        assert!(counters.refused_capacity >= 1);
+        assert_eq!(replicas[0].engines[0].sim.batch(), 1, "stays put");
+        assert!(replicas[0].engines[0].sb.get(7).is_some());
+        assert_eq!(replicas[1].engines[0].sim.batch(), 0);
+    }
+
+    #[test]
+    fn proactive_offload_noop_below_pressure_threshold() {
+        // A ~14-block resident against the default 0.85 threshold
+        // (373 blocks): nothing is pressured, nothing moves, zero
+        // telemetry on BOTH counter blocks.
+        let (mut replicas, model) = migration_test_pair();
+        seed_resident(&mut replicas[0], 7, 640, 1e9);
+        let mig = MigrationSpec::enabled_default();
+        let mut counters = MigrationCounters::default();
+        let mut pc = PredictCounters::default();
+        proactive_offload(
+            &mut replicas,
+            1.0,
+            Policy::throttle_only(),
+            &model,
+            &mig,
+            0.85,
+            &mut counters,
+            &mut pc,
+        );
+        assert_eq!(counters, MigrationCounters::default());
+        assert_eq!(pc, PredictCounters::default());
+        assert_eq!(replicas[0].engines[0].sim.batch(), 1);
         assert_eq!(replicas[1].engines[0].sim.batch(), 0);
     }
 

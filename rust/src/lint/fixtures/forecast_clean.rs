@@ -1,0 +1,21 @@
+// detlint-fixture: virtual-path = rust/src/workload/forecast_clean_fixture.rs
+
+// The deterministic shape of the same forecaster logic: detmath free
+// functions for the harmonic basis (bit-identical on every platform),
+// IEEE-exact float arithmetic for the exponential smoothing, and time
+// taken from the simulation clock the caller passes in.
+
+use crate::sim::detmath::{cos_det, sin_det};
+
+pub fn harmonic_basis(t_s: f64, period_s: f64) -> (f64, f64) {
+    let phase = core::f64::consts::TAU * (t_s / period_s);
+    (sin_det(phase), cos_det(phase))
+}
+
+pub fn ewma(level: f64, sample: f64, alpha: f64) -> f64 {
+    alpha * sample + (1.0 - alpha) * level
+}
+
+pub fn bucket(t_s: f64, interval_s: f64) -> u64 {
+    (t_s / interval_s).floor() as u64
+}

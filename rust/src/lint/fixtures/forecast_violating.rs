@@ -1,0 +1,24 @@
+// detlint-fixture: virtual-path = rust/src/workload/forecast_fixture.rs
+// detlint-expect: r1 @ 14
+// detlint-expect: r1 @ 18
+// detlint-expect: r3 @ 22
+
+// The arrival forecaster sits inside detlint's outcome-affecting
+// scope (rust/src/workload/): a std-library harmonic fit (libm
+// sin/cos differs across platforms in the last ulp) or OS entropy in
+// the observation path are exactly the bugs that would break the
+// --threads N bit-identity of a predictive run.  The real forecaster
+// uses sim/detmath and simulated time exclusively.
+
+pub fn harmonic_sin(phase: f64) -> f64 {
+    phase.sin()
+}
+
+pub fn harmonic_cos(phase: f64) -> f64 {
+    phase.cos()
+}
+
+pub fn jitter(bound: f64) -> f64 {
+    let mut rng = rand::thread_rng();
+    rand::Rng::gen_range(&mut rng, 0.0..bound)
+}

@@ -19,10 +19,11 @@
 use throttllem::cli::Args;
 use throttllem::config::models::{engine_by_name, llama2_13b, table2_engines};
 use throttllem::config::{
-    parse_fleet_jsonl, parse_replica_spec, FaultSpec, MigrationSpec, ReplicaSpec, ServingConfig,
+    parse_fleet_jsonl, parse_replica_spec, FaultSpec, MigrationSpec, PredictSpec, ReplicaSpec,
+    ServingConfig,
 };
 use throttllem::coordinator::{
-    outcome_digest, serve_fleet_plan, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
+    outcome_digest, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy, Workload,
 };
 use throttllem::engine::request::Request;
 use throttllem::mlmodel::{mae, mape, r2_score};
@@ -136,6 +137,59 @@ fn faults_from_args(args: &Args) -> anyhow::Result<FaultSpec> {
     Ok(f)
 }
 
+/// Parse the `--predict on|off` switch plus its forecaster knobs
+/// (`--predict-lead <s>`, `--predict-period <s>`) into a
+/// [`PredictSpec`].  Off is the default: the serving path is
+/// byte-identical to the reactive loop.
+fn predict_from_args(args: &Args) -> anyhow::Result<PredictSpec> {
+    let enabled = match args.get("predict") {
+        Some(v) => PredictSpec::parse_enabled(v)?,
+        None => false,
+    };
+    let mut p = if enabled {
+        PredictSpec::enabled_default()
+    } else {
+        PredictSpec::disabled()
+    };
+    p.lead_s = args.get_f64("predict-lead", p.lead_s)?;
+    p.period_s = args.get_f64("predict-period", p.period_s)?;
+    anyhow::ensure!(p.lead_s >= 0.0, "--predict-lead must be >= 0");
+    anyhow::ensure!(p.period_s > 0.0, "--predict-period must be positive");
+    Ok(p)
+}
+
+/// Parse `--predictor oracle|noisy:<p95>` into the generation-length
+/// predictor the admission path sees.  Defaults preserve the legacy
+/// `--error` behavior: noisy at `--error` when positive, else oracle.
+/// The caller must also set `cfg.predictor_p95_error` from the
+/// returned predictor so the §IV-F conservative adjustment assumes
+/// exactly the noise the predictor injects.
+fn predictor_from_args(args: &Args, error: f64, seed: u64) -> anyhow::Result<LengthPredictor> {
+    match args.get("predictor") {
+        None => Ok(if error > 0.0 {
+            LengthPredictor::noisy(error, seed)
+        } else {
+            LengthPredictor::oracle()
+        }),
+        Some("oracle") => Ok(LengthPredictor::oracle()),
+        Some(v) => match v.strip_prefix("noisy:") {
+            Some(p95) => {
+                let p: f64 = p95
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--predictor noisy:{p95:?}: {e}"))?;
+                anyhow::ensure!(
+                    (0.0..1.0).contains(&p),
+                    "--predictor noisy:<p95> needs 0 <= p95 < 1, got {p}"
+                );
+                Ok(LengthPredictor::noisy(p, seed))
+            }
+            None => {
+                anyhow::bail!("--predictor {v:?} (expected oracle | noisy:<p95>)")
+            }
+        },
+    }
+}
+
 fn policy_by_name(name: &str) -> anyhow::Result<Policy> {
     Ok(match name {
         "triton" => Policy::triton(),
@@ -198,6 +252,16 @@ usage: throttllem <serve|profile|train-model|engines|real-serve> [--options]
                  byte-identical, the default)
                --fault-seed <n>  (fault-schedule seed, independent of
                  --seed; same seed => same schedule at any --threads)
+               --predict on|off  (predictive fleet control: forecast-driven
+                 replica pre-warming, proactive KV-pressure migration and
+                 migration-cost-aware scale-in; off = today's reactive
+                 path, byte-identical, the default)
+               --predict-lead <s> --predict-period <s>  (forecast horizon
+                 and assumed diurnal period of the arrival forecaster)
+               --predictor oracle|noisy:<p95>  (generation-length predictor
+                 for admission; default: noisy at --error when positive,
+                 else oracle; sets the conservative adjustment to the
+                 predictor's own p95 error)
                --threads <n>  (RUN-phase worker threads, 0 = auto; any
                  value is bit-identical to --threads 1)
                --outcome-digest <file>  (write the run's 64-bit outcome
@@ -278,7 +342,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         };
         (c, vec![engine])
     };
-    cfg.predictor_p95_error = error;
+    let predictor = predictor_from_args(args, error, seed)?;
+    cfg.predictor_p95_error = predictor.p95_rel_error();
 
     eprintln!("training performance model on {} engine(s)...", engines.len());
     let model = PerfModel::train(&engines, 120, seed);
@@ -295,11 +360,6 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             synth_trace(&params)
         }
     })?;
-    let predictor = if error > 0.0 {
-        LengthPredictor::noisy(error, seed)
-    } else {
-        LengthPredictor::oracle()
-    };
     predictor.apply(&mut reqs, cfg.max_tokens);
     eprintln!(
         "replaying {} requests over {:.0} s under policy {} on {} replica(s) ({})...",
@@ -319,8 +379,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     )
     .with_migration(migration_from_args(args)?)
     .with_faults(faults_from_args(args)?)
+    .with_prediction(predict_from_args(args)?)
     .with_threads(args.get_u64("threads", 1)? as usize);
-    let fleet_out = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
+    let fleet_out = plan.serve(&cfg, policy, &model, Workload::Trace(&reqs));
     maybe_write_digest(args, &fleet_out)?;
     print_serve_report(&cfg, policy, router, replicas, &fleet_out);
     Ok(())
@@ -359,6 +420,7 @@ fn cmd_serve_hetero(
             && args.flag("autoscale-replicas"),
         migration: migration_from_args(args)?,
         faults: faults_from_args(args)?,
+        predict: predict_from_args(args)?,
         threads: args.get_u64("threads", 1)? as usize,
     };
     let engines = plan.engines();
@@ -374,7 +436,8 @@ fn cmd_serve_hetero(
     } else {
         ServingConfig::triton(anchor)
     };
-    cfg.predictor_p95_error = error;
+    let predictor = predictor_from_args(args, error, seed)?;
+    cfg.predictor_p95_error = predictor.p95_rel_error();
 
     eprintln!("training performance model on {} engine(s)...", engines.len());
     let model = PerfModel::train(&engines, 120, seed);
@@ -384,11 +447,6 @@ fn cmd_serve_hetero(
     let mut reqs = cli_scenario_requests(args, n, peak, duration, seed, || {
         synth_trace(&TraceParams::short(duration, peak, seed))
     })?;
-    let predictor = if error > 0.0 {
-        LengthPredictor::noisy(error, seed)
-    } else {
-        LengthPredictor::oracle()
-    };
     predictor.apply(&mut reqs, cfg.max_tokens);
     eprintln!(
         "replaying {} requests over {:.0} s under policy {} on {} heterogeneous \
@@ -400,7 +458,7 @@ fn cmd_serve_hetero(
         router.name()
     );
 
-    let fleet_out = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
+    let fleet_out = plan.serve(&cfg, policy, &model, Workload::Trace(&reqs));
     maybe_write_digest(args, &fleet_out)?;
     print_serve_report(&cfg, policy, router, n, &fleet_out);
     Ok(())
@@ -460,6 +518,18 @@ fn print_serve_report(
         println!(
             "shed / fault-lost / respawns : {} / {} / {}",
             fc.shed, fc.faulted_lost, fc.respawns
+        );
+    }
+    let pc = &fleet_out.predict;
+    if pc.forecast_ticks > 0 {
+        println!(
+            "predictive control : {} forecast ticks, {} pre-warmed, \
+             {} proactive migrations ({} refused), {} cost-aware scale-ins",
+            pc.forecast_ticks,
+            pc.prewarmed,
+            pc.proactive_migrations,
+            pc.proactive_refused,
+            pc.predictive_scale_ins
         );
     }
     if replicas > 1 {

@@ -1,10 +1,12 @@
 //! Workload substrate: Azure-like trace synthesis (§III-D, Fig. 5),
 //! fleet-level scenario traces with correlated bursts and record /
 //! replay (`fleet_trace`), generation-length predictors (§IV-A,
-//! §V-D1), and the profiling request generator that collects training
-//! data for the performance model (§IV-C1).
+//! §V-D1), the deterministic arrival forecaster behind predictive
+//! fleet control (`forecast`), and the profiling request generator
+//! that collects training data for the performance model (§IV-C1).
 
 pub mod fleet_trace;
+pub mod forecast;
 pub mod predictor;
 pub mod profiler;
 pub mod trace;
@@ -12,6 +14,7 @@ pub mod trace;
 pub use fleet_trace::{
     synth_fleet_trace, FleetTraceParams, Scenario, ScenarioKind,
 };
+pub use forecast::ArrivalForecaster;
 pub use predictor::LengthPredictor;
 pub use profiler::collect_training_data;
 pub use trace::{synth_trace, TraceParams};

@@ -14,8 +14,10 @@ use throttllem::coordinator::autoscaler::{
     Autoscaler, FleetDecision, FleetScaler, ScaleDecision, SPAWN_TIME_S,
 };
 use throttllem::coordinator::{
-    serve_fleet, serve_trace, FleetSpec, PerfModel, Policy, RouterPolicy, ServeOutcome,
+    outcome_digest, serve_fleet, serve_fleet_plan, serve_scenario, serve_trace, FleetPlan,
+    FleetSpec, PerfModel, Policy, RouterPolicy, ServeOutcome, Workload,
 };
+use throttllem::workload::ScenarioKind;
 use throttllem::workload::trace::{synth_trace, TraceParams};
 use throttllem::workload::LengthPredictor;
 
@@ -137,6 +139,91 @@ fn fleet_of_one_matches_single_with_autoscaling() {
         },
     );
     assert_outcomes_identical(&single, &out.total);
+}
+
+/// Every legacy `serve_*` entry point is a thin shim over
+/// [`FleetPlan::serve`] — pinned bitwise through [`outcome_digest`]
+/// (equal digests mean bit-identical outcomes, field by field).
+#[test]
+fn legacy_shims_are_bit_identical_to_the_unified_entry_point() {
+    let spec = llama2_13b(2);
+    let model = PerfModel::train(&[spec.clone()], 40, 0);
+    let cfg = ServingConfig::throttllem(spec.clone());
+    let policy = Policy::throttle_only();
+    let reqs = trace(2.5, 120.0, 3);
+
+    // serve_fleet_plan(plan, reqs) == plan.serve(Workload::Trace).
+    let plan = FleetPlan::homogeneous(2, RouterPolicy::LeastLoaded, &cfg, policy, false);
+    let unified = plan.serve(&cfg, policy, &model, Workload::Trace(&reqs));
+    let shim = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
+    assert_eq!(outcome_digest(&unified), outcome_digest(&shim));
+
+    // A replay workload of the same requests is the same run.
+    let replayed = plan.serve(&cfg, policy, &model, Workload::Replay(reqs.clone()));
+    assert_eq!(outcome_digest(&unified), outcome_digest(&replayed));
+
+    // serve_fleet(spec) == the equivalent homogeneous plan.
+    let fs = FleetSpec {
+        replicas: 2,
+        router: RouterPolicy::LeastLoaded,
+        autoscale_replicas: false,
+    };
+    let via_spec = serve_fleet(&cfg, policy, &model, &reqs, &fs);
+    assert_eq!(outcome_digest(&unified), outcome_digest(&via_spec));
+
+    // serve_trace == the fleet-of-one plan's total.
+    let single = serve_trace(&cfg, policy, &model, &reqs);
+    let one = FleetSpec::single();
+    let one_plan =
+        FleetPlan::homogeneous(one.replicas, one.router, &cfg, policy, one.autoscale_replicas);
+    let one_out = one_plan.serve(&cfg, policy, &model, Workload::Trace(&reqs));
+    assert_outcomes_identical(&single, &one_out.total);
+
+    // serve_scenario == plan.serve(Workload::Scenario) with the same
+    // (kind, duration, utilization, seed).
+    let (_, _, scen_shim) =
+        serve_scenario(&cfg, policy, &model, &plan, ScenarioKind::Burst, 120.0, 0.6, 7);
+    let scen_unified = plan.serve(
+        &cfg,
+        policy,
+        &model,
+        Workload::Scenario {
+            kind: ScenarioKind::Burst,
+            duration_s: 120.0,
+            utilization: 0.6,
+            seed: 7,
+        },
+    );
+    assert_eq!(outcome_digest(&scen_shim), outcome_digest(&scen_unified));
+}
+
+/// `Workload::replay` loads a recorded JSONL trace bit-exactly: a run
+/// over the replayed file digests equal to a run over the original
+/// request vector.
+#[test]
+fn replay_workload_round_trips_through_jsonl() {
+    use throttllem::workload::fleet_trace::{fleet_trace_to_jsonl, FleetTraceMeta};
+    let spec = llama2_13b(2);
+    let model = PerfModel::train(&[spec.clone()], 40, 0);
+    let cfg = ServingConfig::throttllem(spec.clone());
+    let policy = Policy::throttle_only();
+    let reqs = trace(2.0, 90.0, 5);
+    let meta = FleetTraceMeta {
+        scenario: "unit".to_string(),
+        replicas: 2,
+        peak_rps: 2.0,
+        min_rps: 0.0,
+        duration_s: 90.0,
+        seed: 5,
+    };
+    let path = std::env::temp_dir().join("throttllem_replay_equivalence.jsonl");
+    std::fs::write(&path, fleet_trace_to_jsonl(&meta, &reqs)).unwrap();
+    let plan = FleetPlan::homogeneous(2, RouterPolicy::RoundRobin, &cfg, policy, false);
+    let direct = plan.serve(&cfg, policy, &model, Workload::Trace(&reqs));
+    let replay = Workload::replay(path.to_str().unwrap()).unwrap();
+    std::fs::remove_file(&path).ok();
+    let replayed = plan.serve(&cfg, policy, &model, replay);
+    assert_eq!(outcome_digest(&direct), outcome_digest(&replayed));
 }
 
 #[test]

@@ -18,9 +18,10 @@
 //! ```
 
 use throttllem::config::models::llama2_13b;
-use throttllem::config::{FaultSpec, MigrationSpec, ServingConfig};
+use throttllem::config::{FaultSpec, MigrationSpec, PredictSpec, ServingConfig};
 use throttllem::coordinator::{
-    outcome_digest, serve_scenario, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy,
+    outcome_digest, serve_scenario, FleetOutcome, FleetPlan, PerfModel, Policy, PredictCounters,
+    RouterPolicy,
 };
 use throttllem::engine::request::Request;
 use throttllem::engine::EngineSim;
@@ -136,6 +137,7 @@ fn assert_fleet_identical(a: &FleetOutcome, b: &FleetOutcome) {
     assert_eq!(a.migrations.refused_slo, b.migrations.refused_slo);
     assert_eq!(a.migrations.refused_capacity, b.migrations.refused_capacity);
     assert_eq!(a.faults, b.faults);
+    assert_eq!(a.predict, b.predict);
     // The digest must agree with the field-by-field verdict: equal
     // outcomes hash equal (the CI job relies on exactly this).
     assert_eq!(outcome_digest(a), outcome_digest(b));
@@ -293,6 +295,79 @@ fn faults_off_is_byte_identical_to_fault_free_plan() {
     assert_eq!(out.faults, FaultCounters::default());
     assert_eq!(out.total.stats.shed, 0);
     assert_eq!(out.total.stats.faulted_lost, 0);
+}
+
+/// `--predict off` must be byte-identical to a plan that never heard
+/// of the forecaster: same outcomes, same digest, all-zero predictive
+/// telemetry — at every RUN-phase thread count.  This is the
+/// regression the CI predict-off identity job compares cross-process
+/// via `--outcome-digest`.
+#[test]
+fn predict_off_is_byte_identical_to_reactive_plan() {
+    let base = migration_run(1);
+    let policy = Policy::throttllem();
+    let cfg = ServingConfig::throttllem(llama2_13b(2));
+    for threads in [1, 2, 4] {
+        let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
+            .with_migration(MigrationSpec::enabled_default())
+            .with_prediction(PredictSpec::disabled())
+            .with_threads(threads);
+        let model = PerfModel::train(&plan.engines(), 40, 0);
+        let (_, _, out) = serve_scenario(
+            &cfg,
+            policy,
+            &model,
+            &plan,
+            ScenarioKind::Diurnal,
+            420.0,
+            0.55,
+            0,
+        );
+        assert_fleet_identical(&base, &out);
+        assert_eq!(out.predict, PredictCounters::default());
+    }
+}
+
+/// A predictive run (forecast-driven pre-warming, proactive migration,
+/// migration-aware scale-in) joins the determinism contract: every
+/// forecast decision resolves in the single-threaded coordination
+/// phase, so the run is bit-identical at any RUN-phase thread count —
+/// predictive counters included.
+#[test]
+fn predictive_diurnal_threads_bit_identical() {
+    let run = |threads: usize| {
+        let policy = Policy::throttllem();
+        let cfg = ServingConfig::throttllem(llama2_13b(2));
+        let mut spec = PredictSpec::enabled_default();
+        spec.period_s = 420.0;
+        let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
+            .with_migration(MigrationSpec::enabled_default())
+            .with_prediction(spec)
+            .with_threads(threads);
+        let model = PerfModel::train(&plan.engines(), 40, 0);
+        let (_, _, out) = serve_scenario(
+            &cfg,
+            policy,
+            &model,
+            &plan,
+            ScenarioKind::Diurnal,
+            420.0,
+            0.55,
+            0,
+        );
+        out
+    };
+    let base = run(1);
+    assert!(
+        base.predict.forecast_ticks > 0,
+        "predictive leg must observe arrivals (got {:?})",
+        base.predict
+    );
+    eprintln!("predictive leg counters: {:?}", base.predict);
+    for threads in [2, 4] {
+        let out = run(threads);
+        assert_fleet_identical(&base, &out);
+    }
 }
 
 /// Property: checkpoint -> crash -> recover round-trips a resident

@@ -1,0 +1,146 @@
+//! Behavior regression for predictive fleet control (ISSUE 9).
+//!
+//! The ROADMAP contract for the forecaster: on the diurnal cold-start
+//! scenario, forecast-driven pre-warming / proactive migration /
+//! cost-aware scale-in must beat (or at worst match) the reactive
+//! autoscaler on E2E SLO attainment without blowing the energy budget.
+//! `examples/fleet_demo.rs --predict-compare` enforces the same
+//! contract cross-process in CI at a larger scale; this test pins it
+//! at smoke scale so `cargo test` catches a regression first.
+
+use throttllem::config::models::llama2_13b;
+use throttllem::config::{MigrationSpec, PredictSpec, ServingConfig};
+use throttllem::coordinator::{
+    serve_scenario, FleetOutcome, FleetPlan, PerfModel, Policy, PredictCounters, RouterPolicy,
+};
+use throttllem::workload::fleet_trace::ScenarioKind;
+
+/// Serve the migration-enabled diurnal cold-start leg (the exact
+/// configuration `fleet_threads.rs` pins for determinism) with the
+/// given prediction spec.  Both legs share seed, trace, and model, so
+/// the only delta between runs is the forecaster.
+fn diurnal_run(predict: PredictSpec) -> (ServingConfig, FleetOutcome) {
+    let policy = Policy::throttllem();
+    let cfg = ServingConfig::throttllem(llama2_13b(2));
+    let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
+        .with_migration(MigrationSpec::enabled_default())
+        .with_prediction(predict);
+    let model = PerfModel::train(&plan.engines(), 40, 0);
+    let (_, _, out) = serve_scenario(
+        &cfg,
+        policy,
+        &model,
+        &plan,
+        ScenarioKind::Diurnal,
+        420.0,
+        0.55,
+        0,
+    );
+    (cfg, out)
+}
+
+fn attainment(cfg: &ServingConfig, out: &FleetOutcome) -> f64 {
+    let a = out.total.stats.e2e_slo_attainment(cfg.slo.e2e_p99);
+    if a.is_nan() {
+        0.0
+    } else {
+        a
+    }
+}
+
+/// The pre-warm regression: on the diurnal ramp the predictive plan's
+/// E2E attainment is no worse than the reactive plan's, energy stays
+/// within 2%, and the predictive machinery demonstrably engaged
+/// (otherwise the comparison is vacuous).
+#[test]
+fn predictive_diurnal_attainment_no_worse_than_reactive() {
+    // The synthetic diurnal cycle spans exactly the trace, so the
+    // forecaster's assumed day length is the scenario duration.
+    let mut spec = PredictSpec::enabled_default();
+    spec.period_s = 420.0;
+    let (cfg, reactive) = diurnal_run(PredictSpec::disabled());
+    let (_, predictive) = diurnal_run(spec);
+
+    assert_eq!(
+        reactive.predict,
+        PredictCounters::default(),
+        "--predict off leaked predictive telemetry"
+    );
+    let pc = &predictive.predict;
+    eprintln!("predictive counters: {:?}", pc);
+    assert!(
+        pc.forecast_ticks > 0,
+        "forecaster never observed an arrival-rate sample"
+    );
+    assert!(
+        pc.prewarmed + pc.proactive_migrations + pc.predictive_scale_ins > 0,
+        "predictive control never made a decision (got {:?})",
+        pc
+    );
+
+    let (att_r, att_p) = (attainment(&cfg, &reactive), attainment(&cfg, &predictive));
+    let (e_r, e_p) = (
+        reactive.total.stats.total_energy_j,
+        predictive.total.stats.total_energy_j,
+    );
+    eprintln!(
+        "attainment: predictive {:.3}% vs reactive {:.3}%; energy \
+         {:.1} kJ vs {:.1} kJ",
+        att_p * 100.0,
+        att_r * 100.0,
+        e_p / 1e3,
+        e_r / 1e3
+    );
+    assert!(
+        att_p >= att_r - 1e-9,
+        "predictive attainment regressed ({:.3}% vs {:.3}%)",
+        att_p * 100.0,
+        att_r * 100.0
+    );
+    assert!(
+        e_p <= e_r * 1.02,
+        "predictive energy blew the 2% budget ({:.1} kJ vs {:.1} kJ)",
+        e_p / 1e3,
+        e_r / 1e3
+    );
+}
+
+/// Request conservation under predictive control: every synthesized
+/// request is accounted for exactly once across the terminal outcomes
+/// (completed / dropped at admission / shed / faulted-lost), pre-warm
+/// and proactive migration included — the forecaster may move work
+/// around, but it must never make a request vanish or double-count
+/// one.
+#[test]
+fn predictive_run_conserves_requests() {
+    let mut spec = PredictSpec::enabled_default();
+    spec.period_s = 420.0;
+    let policy = Policy::throttllem();
+    let cfg = ServingConfig::throttllem(llama2_13b(2));
+    let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
+        .with_migration(MigrationSpec::enabled_default())
+        .with_prediction(spec);
+    let model = PerfModel::train(&plan.engines(), 40, 0);
+    let (_, reqs, out) = serve_scenario(
+        &cfg,
+        policy,
+        &model,
+        &plan,
+        ScenarioKind::Diurnal,
+        420.0,
+        0.55,
+        0,
+    );
+    let s = &out.total.stats;
+    assert_eq!(
+        s.completed + s.dropped + s.shed + s.faulted_lost,
+        reqs.len() as u64,
+        "predictive run lost track of requests ({} + {} + {} + {} != {})",
+        s.completed,
+        s.dropped,
+        s.shed,
+        s.faulted_lost,
+        reqs.len()
+    );
+    assert_eq!(out.total.outcomes.len() as u64, s.completed);
+}
