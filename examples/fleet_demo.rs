@@ -11,7 +11,7 @@
 //!     capacity-aware `projected-headroom` routing visibly beats
 //!     round-robin on SLO attainment (the §IV-B projection signal is
 //!     load-bearing on the main path);
-//!   * `--scenario <steady|burst|flash|diurnal|replay:<file>>` — the
+//!   * `--scenario <steady|burst|flash|diurnal|session|replay:<file>>` — the
 //!     fleet-level workload engine: ONE shared arrival stream with
 //!     correlated bursts / flash crowds / diurnal idle, served under
 //!     every router policy (combinable with `--mixed`).  `--record
@@ -23,7 +23,8 @@
 //!     deterministic fault schedule (crashes, thermal throttles, link
 //!     degradation, preemption notices) and `--require-recoveries`
 //!     exits non-zero unless at least one crash recovery happened
-//!     (the CI chaos gate);
+//!     (the CI chaos gate); `--prefix-share on|off` toggles CoW prefix
+//!     sharing for the whole matrix;
 //!   * `--migrate-compare` — the CI migration gate: the same scenario
 //!     trace (diurnal by default) served with `--migration off` vs
 //!     `on` on a fleet-autoscaled deployment, asserting migrations
@@ -32,7 +33,12 @@
 //!   * `--predict-compare` — the CI predictive gate: the same scenario
 //!     trace served reactive (`--predict off`) vs predictive
 //!     (`--predict on`), asserting predictive attainment is no worse
-//!     at energy within `--energy-tolerance` (default 2%).
+//!     at energy within `--energy-tolerance` (default 2%);
+//!   * `--prefix-compare` — the CI prefix-sharing gate: the same
+//!     multi-turn session scenario served with `--prefix-share off` vs
+//!     `on`, asserting sharing stores prefixes once (strictly lower
+//!     peak KV blocks), completes at least as many requests, and
+//!     spends no more energy (cached prefill skips real work).
 //!
 //! Every mode accepts `--threads <n>` (RUN-phase worker threads,
 //! 0 = auto): any value is bit-identical to `--threads 1`, so the flag
@@ -44,10 +50,13 @@
 //!   cargo run --release --example fleet_demo -- --scenario burst --record t.jsonl
 //!   cargo run --release --example fleet_demo -- --replay t.jsonl --threads 4
 //!   cargo run --release --example fleet_demo -- --migrate-compare --duration 600
+//!   cargo run --release --example fleet_demo -- --prefix-compare --duration 600
 
 use throttllem::cli::Args;
 use throttllem::config::models::llama2_13b;
-use throttllem::config::{FaultSpec, MigrationSpec, PredictSpec, ReplicaSpec, ServingConfig};
+use throttllem::config::{
+    FaultSpec, MigrationSpec, PredictSpec, PrefixSpec, ReplicaSpec, ServingConfig,
+};
 use throttllem::coordinator::{
     serve_fleet_plan, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy, Workload,
 };
@@ -62,7 +71,9 @@ fn main() -> anyhow::Result<()> {
     let duration = args.get_f64("duration", 600.0)?;
     let seed = args.get_u64("seed", 0)?;
     let threads = args.get_u64("threads", 1)? as usize;
-    if args.flag("predict-compare") {
+    if args.flag("prefix-compare") {
+        prefix_compare(&args)
+    } else if args.flag("predict-compare") {
         predict_compare(&args)
     } else if args.flag("migrate-compare") {
         migrate_compare(&args)
@@ -121,12 +132,12 @@ fn migrate_compare(args: &Args) -> anyhow::Result<()> {
         meta.duration_s
     );
 
-    let run = |migration: MigrationSpec| {
+    let run = |migration: Option<MigrationSpec>| {
         let plan = base.clone().with_migration(migration);
         serve_fleet_plan(&cfg, policy, &model, &reqs, &plan)
     };
-    let off = run(MigrationSpec::disabled());
-    let on = run(MigrationSpec::enabled_default());
+    let off = run(None);
+    let on = run(Some(MigrationSpec::enabled_default()));
 
     let att = |o: &FleetOutcome| {
         let a = o.total.stats.e2e_slo_attainment(cfg.slo.e2e_p99);
@@ -201,6 +212,113 @@ fn migrate_compare(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The CI prefix-sharing gate (`--prefix-compare`): serve the SAME
+/// multi-turn session workload on the same fleet twice —
+/// `--prefix-share off` vs `on` — and enforce the sharing contract:
+///
+///   1. the off leg reports zero cached-prefix telemetry (the switch
+///      really is the `Option<PrefixSpec>` on the plan),
+///   2. sharing actually reused prefixes (cached prefill tokens > 0),
+///   3. the fleet's peak KV-block footprint is STRICTLY lower with
+///      sharing (each shared system prompt is stored once per replica
+///      instead of once per resident turn),
+///   4. sharing completes at least as many requests (freed blocks can
+///      only widen admission), and
+///   5. total energy is no higher (cached prefill skips real prefill
+///      work; it cannot add any).
+///
+/// Exits non-zero when any leg of the contract fails.
+fn prefix_compare(args: &Args) -> anyhow::Result<()> {
+    let duration = args.get_f64("duration", 600.0)?;
+    let seed = args.get_u64("seed", 0)?;
+    let replicas = args.get_u64("replicas", 4)? as usize;
+    let policy = Policy::throttle_only();
+    let cfg = ServingConfig::throttllem(llama2_13b(2));
+    let base = FleetPlan::homogeneous(replicas, RouterPolicy::RoundRobin, &cfg, policy, false)
+        .with_threads(args.get_u64("threads", 1)? as usize);
+    let model = PerfModel::train(&base.engines(), 100, seed);
+    // Push utilization high enough that KV residency is the binding
+    // constraint — the regime prefix sharing is for.
+    let session = Scenario::session()
+        .duration(duration)
+        .utilization(args.get_f64("utilization", 0.7)?)
+        .seed(seed)
+        .turns(args.get_f64("session-turns", 4.0)?)
+        .think_time(args.get_f64("session-think", 20.0)?)
+        .shared_prefix(args.get_u64("session-prefix", 1024)? as u32);
+    println!(
+        "prefix gate: session scenario on {replicas} x {} \
+         (~{:.1} turns/session, {} shared prefix tokens, {:.0} s)\n",
+        cfg.engine.name,
+        session.turns_mean,
+        session.shared_prefix_tokens,
+        session.duration_s
+    );
+
+    let run = |prefix: Option<PrefixSpec>| {
+        let plan = base.clone().with_prefix_sharing(prefix);
+        plan.serve(&cfg, policy, &model, Workload::Session(session))
+    };
+    let off = run(None);
+    let on = run(Some(PrefixSpec::enabled_default()));
+
+    print_header();
+    print_row("per-turn prefill (--prefix-share off)", &cfg, &off);
+    print_row("CoW prefix cache (--prefix-share on)", &cfg, &on);
+    let (so, sn) = (&off.total.stats, &on.total.stats);
+    println!(
+        "\ncompleted {} -> {} | peak KV blocks {} -> {} | cached prefill \
+         tokens {} -> {} | energy {:.1} -> {:.1} kJ",
+        so.completed,
+        sn.completed,
+        so.peak_kv_blocks,
+        sn.peak_kv_blocks,
+        so.prefix_cached_tokens,
+        sn.prefix_cached_tokens,
+        so.total_energy_j / 1e3,
+        sn.total_energy_j / 1e3,
+    );
+    anyhow::ensure!(
+        so.prefix_cached_tokens == 0,
+        "prefix gate: --prefix-share off leaked cached-prefix telemetry"
+    );
+    anyhow::ensure!(
+        sn.prefix_cached_tokens > 0,
+        "prefix gate: sharing never reused a prefix \
+         (retune session turns / shared prefix length)"
+    );
+    anyhow::ensure!(
+        sn.peak_kv_blocks < so.peak_kv_blocks,
+        "prefix gate: peak KV blocks did not drop ({} with sharing vs \
+         {} without)",
+        sn.peak_kv_blocks,
+        so.peak_kv_blocks
+    );
+    anyhow::ensure!(
+        sn.completed >= so.completed,
+        "prefix gate: sharing completed fewer requests ({} vs {})",
+        sn.completed,
+        so.completed
+    );
+    anyhow::ensure!(
+        sn.total_energy_j <= so.total_energy_j + 1e-6,
+        "prefix gate: sharing spent more energy ({:.1} kJ vs {:.1} kJ)",
+        sn.total_energy_j / 1e3,
+        so.total_energy_j / 1e3
+    );
+    println!(
+        "prefix gate: OK (peak KV {} < {}, completed {} >= {}, energy \
+         {:.1} kJ <= {:.1} kJ)",
+        sn.peak_kv_blocks,
+        so.peak_kv_blocks,
+        sn.completed,
+        so.completed,
+        sn.total_energy_j / 1e3,
+        so.total_energy_j / 1e3
+    );
+    Ok(())
+}
+
 /// The CI predictive gate (`--predict-compare`): serve the SAME
 /// scenario trace (diurnal by default; CI also runs flash) on the same
 /// fleet-autoscaled deployment twice — reactive (`--predict off`) vs
@@ -225,7 +343,7 @@ fn predict_compare(args: &Args) -> anyhow::Result<()> {
     let policy = Policy::throttllem();
     let cfg = ServingConfig::throttllem(llama2_13b(2));
     let base = FleetPlan::homogeneous(replicas, RouterPolicy::RoundRobin, &cfg, policy, true)
-        .with_migration(MigrationSpec::enabled_default())
+        .with_migration(Some(MigrationSpec::enabled_default()))
         .with_threads(args.get_u64("threads", 1)? as usize);
     let model = PerfModel::train(&base.engines(), 100, seed);
     let peak = args.get_f64("peak", 0.55 * base.rated_rps())?;
@@ -242,7 +360,7 @@ fn predict_compare(args: &Args) -> anyhow::Result<()> {
         meta.duration_s
     );
 
-    let run = |predict: PredictSpec| {
+    let run = |predict: Option<PredictSpec>| {
         let plan = base.clone().with_prediction(predict);
         plan.serve(&cfg, policy, &model, Workload::Trace(&reqs))
     };
@@ -250,8 +368,8 @@ fn predict_compare(args: &Args) -> anyhow::Result<()> {
     // (the synthetic diurnal cycle spans exactly the trace).
     let mut spec = PredictSpec::enabled_default();
     spec.period_s = args.get_f64("predict-period", duration)?;
-    let reactive = run(PredictSpec::disabled());
-    let predictive = run(spec);
+    let reactive = run(None);
+    let predictive = run(Some(spec));
 
     let att = |o: &FleetOutcome| {
         let a = o.total.stats.e2e_slo_attainment(cfg.slo.e2e_p99);
@@ -333,18 +451,19 @@ fn scenario_mode(args: &Args) -> anyhow::Result<()> {
         (None, None) => unreachable!("scenario_mode needs --scenario/--replay"),
     };
     let threads = args.get_u64("threads", 1)? as usize;
-    let faults = {
-        let enabled = match args.get("faults") {
+    let faults: Option<FaultSpec> = {
+        let mut f = match args.get("faults") {
             Some(v) => FaultSpec::parse_enabled(v)?,
-            None => false,
+            None => None,
         };
-        let mut f = if enabled {
-            FaultSpec::enabled_default()
-        } else {
-            FaultSpec::disabled()
-        };
-        f.seed = args.get_u64("fault-seed", f.seed)?;
+        if let Some(f) = f.as_mut() {
+            f.seed = args.get_u64("fault-seed", f.seed)?;
+        }
         f
+    };
+    let prefix: Option<PrefixSpec> = match args.get("prefix-share") {
+        Some(v) => PrefixSpec::parse_enabled(v)?,
+        None => None,
     };
     let policy = Policy::throttle_only();
     let (plan, cfg, label) = if args.flag("mixed") {
@@ -357,6 +476,7 @@ fn scenario_mode(args: &Args) -> anyhow::Result<()> {
         (
             FleetPlan::heterogeneous(specs, RouterPolicy::RoundRobin)
                 .with_faults(faults)
+                .with_prefix_sharing(prefix)
                 .with_threads(threads),
             ServingConfig::throttllem(llama2_13b(4)),
             "mixed fleet (1xTP4 + 1xTP2 + 2xTP1)".to_string(),
@@ -366,6 +486,7 @@ fn scenario_mode(args: &Args) -> anyhow::Result<()> {
         let cfg = ServingConfig::throttllem(llama2_13b(2));
         let plan = FleetPlan::homogeneous(replicas, RouterPolicy::RoundRobin, &cfg, policy, false)
             .with_faults(faults)
+            .with_prefix_sharing(prefix)
             .with_threads(threads);
         (plan, cfg, format!("{replicas} x llama2-13b-tp2"))
     };
@@ -405,7 +526,7 @@ fn scenario_mode(args: &Args) -> anyhow::Result<()> {
         };
         let out = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
         print_row(&format!("{} ({})", meta.scenario, router.name()), &cfg, &out);
-        if faults.enabled {
+        if faults.is_some() {
             let fc = &out.faults;
             println!(
                 "  faults: {} crashes ({} recovered / {} requeued, {} retries), \
@@ -470,7 +591,7 @@ fn scenario_mode(args: &Args) -> anyhow::Result<()> {
     }
     if args.flag("require-recoveries") {
         anyhow::ensure!(
-            faults.enabled,
+            faults.is_some(),
             "--require-recoveries needs --faults on"
         );
         anyhow::ensure!(

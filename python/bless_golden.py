@@ -3,10 +3,12 @@
 
 Bit-exact Python port of the Rust deterministic generation chain
 (`sim/rng.rs` PCG-64 XSL-RR, `sim/detmath.rs` IEEE-basic-ops
-transcendentals, `workload/fleet_trace.rs` scenario synthesis, and
-`jsonl.rs`'s canonical writer), used to bless
-`rust/tests/golden/fleet_trace_burst.hash` from a workspace that has no
-Rust toolchain.  Python floats are IEEE-754 doubles and every operation
+transcendentals, `workload/fleet_trace.rs` scenario synthesis —
+including the multi-turn session synthesizer — and `jsonl.rs`'s
+canonical writer), used to bless
+`rust/tests/golden/fleet_trace_burst.hash` and
+`rust/tests/golden/fleet_trace_session.hash` from a workspace that has
+no Rust toolchain.  Python floats are IEEE-754 doubles and every operation
 used here (+ - * / sqrt, bit manipulation) is exactly specified, so a
 faithful transcription produces the same bits as the Rust code on any
 platform.
@@ -18,8 +20,8 @@ agree on this output); Python's scientific-notation spelling for
 |x| < 1e-4 is reformatted positionally to match Rust.
 
 Usage:
-    python3 python/bless_golden.py           # self-check + print hash
-    python3 python/bless_golden.py --write   # also write the golden file
+    python3 python/bless_golden.py           # self-check + print hashes
+    python3 python/bless_golden.py --write   # also write the golden files
 
 CI's golden-guard job independently verifies the committed hash against
 the real Rust generator; a mismatch there (with both values in the job
@@ -301,6 +303,78 @@ def synth_fleet_trace():
     return out
 
 
+# ---- the session golden: FleetTraceParams::scenario(Session, 4, 12, 600, 0)
+
+
+S_TURNS_MEAN = 3.0
+S_THINK_S = 20.0
+S_PREFIX_TOKENS = 1024
+S_PROMPT_MAX = 4000
+MAX_TURNS = 16
+STREAM_SESSION = 0x5E55
+
+
+def session_rate_series():
+    # Session envelope: baseline 0.40 + 0.60 * bump, wobbled and
+    # normalized; no bursts (burst_boost == 1), no flash, no idle.
+    n = SLOTS
+    wobble_rng = Pcg64(SEED, 0x0B1E)
+    wobble = [wobble_rng.uniform_f64(0.85, 1.12) for _ in range(15)]
+    base = []
+    for t in range(n):
+        mid_s = (float(t) + 0.5) * SLOT_S
+        t_norm = rust_clamp(mid_s / DURATION_S, 0.0, 1.0)
+        bin_i = min(int(t_norm * float(len(wobble))), len(wobble) - 1)
+        bump = exp_det(-((t_norm - 0.5) * (t_norm - 0.5)) / (2.0 * 0.18 * 0.18))
+        v = (0.40 + 0.60 * bump) * wobble[bin_i]
+        base.append(v if v > 0.0 else 0.0)
+    base_max = 0.0
+    for v in base:
+        base_max = v if v > base_max else base_max
+    if base_max > 0.0:
+        base = [v / base_max for v in base]
+    return [MIN_RPS + (PEAK_RPS - MIN_RPS) * v for v in base]
+
+
+def synth_session_trace():
+    """Port of `synth_session_trace`: thinned Poisson session starts at
+    1/turns_mean of the envelope, per-session turn counts, history
+    regrowth, exponential think gaps, then a stable (arrival, group)
+    sort with dense re-idling."""
+    rate = session_rate_series()
+    lambda_max = 0.0
+    for v in rate:
+        lambda_max = v if v > lambda_max else lambda_max
+    assert lambda_max > 0.0
+    rng = Pcg64(SEED, STREAM_SESSION)
+    out = []  # (arrival, prompt, gen, group, pfx)
+    t = 0.0
+    group = 0
+    while True:
+        t += exponential_det(rng, lambda_max / S_TURNS_MEAN)
+        if t >= DURATION_S:
+            break
+        slot = min(int(t / SLOT_S), len(rate) - 1)
+        if rng.next_f64() * lambda_max > rate[slot]:
+            continue
+        group += 1
+        turns = 1 + min(
+            int(rust_round(exponential_det(rng, 1.0 / (S_TURNS_MEAN - 1.0)))),
+            MAX_TURNS - 1,
+        )
+        history = 0
+        at = t
+        for k in range(turns):
+            user, gen = draw_lengths_det(rng)
+            prompt = max(min(S_PREFIX_TOKENS + history + user, S_PROMPT_MAX), 1)
+            out.append((at, prompt, gen, group, min(S_PREFIX_TOKENS, prompt)))
+            history += user + gen
+            if k + 1 < turns and S_THINK_S > 0.0:
+                at += exponential_det(rng, 1.0 / S_THINK_S)
+    out.sort(key=lambda r: (r[0], r[3]))  # stable, like Rust sort_by
+    return out
+
+
 # ---- jsonl.rs canonical writer ---------------------------------------
 
 
@@ -362,6 +436,39 @@ def golden_jsonl(reqs) -> str:
     return "\n".join(lines) + "\n"
 
 
+def session_jsonl(reqs) -> str:
+    # Same canonical writer, session header; request lines gain the
+    # "grp"/"pfx" keys (emitted only when nonzero — always, here),
+    # slotted in BTreeMap (lexicographic) key order.
+    header = (
+        "{"
+        + f'"duration_s":{fmt_num(DURATION_S)},'
+        + '"kind":"fleet-trace",'
+        + f'"min_rps":{fmt_num(MIN_RPS)},'
+        + f'"peak_rps":{fmt_num(PEAK_RPS)},'
+        + f'"replicas":{REPLICAS},'
+        + f'"requests":{len(reqs)},'
+        + '"scenario":"session",'
+        + f'"seed":"{SEED}",'
+        + '"v":1'
+        + "}"
+    )
+    lines = [header]
+    for rid, (arrival, prompt, gen, group, pfx) in enumerate(reqs):
+        lines.append(
+            "{"
+            + f'"arrival_s":{fmt_num(arrival)},'
+            + f'"gen":{gen},'
+            + f'"grp":{group},'
+            + f'"id":{rid},'
+            + f'"pfx":{pfx},'
+            + f'"pred":{gen},'
+            + f'"prompt":{prompt}'
+            + "}"
+        )
+    return "\n".join(lines) + "\n"
+
+
 def fnv1a64(data: bytes) -> int:
     h = 0xCBF29CE484222325
     for b in data:
@@ -414,6 +521,15 @@ def self_check():
     assert fmt_num(0.5) == "0.5"
 
 
+def golden_dir() -> str:
+    return os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "rust",
+        "tests",
+        "golden",
+    )
+
+
 def main():
     self_check()
     reqs = synth_fleet_trace()
@@ -426,17 +542,35 @@ def main():
     h = f"{fnv1a64(text.encode('utf-8')):016x}"
     print(f"requests: {len(reqs)}")
     print(f"fleet-trace golden hash: {h}")
+
+    sreqs = synth_session_trace()
+    # Mirror of `session_trace_carries_prefix_structure` in
+    # tests/fleet_trace_determinism.rs.
+    assert len(sreqs) > 200, f"suspicious session request count {len(sreqs)}"
+    assert all(
+        sreqs[i][0] <= sreqs[i + 1][0] for i in range(len(sreqs) - 1)
+    ), "session trace must be arrival-sorted"
+    assert all(r[3] >= 1 for r in sreqs), "every session request is grouped"
+    assert all(0 < r[4] <= r[1] for r in sreqs), "pfx bounded by prompt"
+    assert all(1 <= r[1] <= 4000 and 10 <= r[2] <= 700 for r in sreqs)
+    from collections import Counter
+
+    turns = Counter(r[3] for r in sreqs)
+    assert any(n >= 2 for n in turns.values()), "no multi-turn session"
+    stext = session_jsonl(sreqs)
+    sh = f"{fnv1a64(stext.encode('utf-8')):016x}"
+    print(f"session requests: {len(sreqs)} ({len(turns)} sessions)")
+    print(f"session-trace golden hash: {sh}")
+
     if "--write" in sys.argv:
-        path = os.path.join(
-            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-            "rust",
-            "tests",
-            "golden",
-            "fleet_trace_burst.hash",
-        )
-        with open(path, "w") as f:
-            f.write(h + "\n")
-        print(f"wrote {path}")
+        for name, value in [
+            ("fleet_trace_burst.hash", h),
+            ("fleet_trace_session.hash", sh),
+        ]:
+            path = os.path.join(golden_dir(), name)
+            with open(path, "w") as f:
+                f.write(value + "\n")
+            print(f"wrote {path}")
 
 
 if __name__ == "__main__":

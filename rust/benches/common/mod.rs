@@ -25,6 +25,8 @@ pub fn batch_lifetime(
                 gen_tokens: gen,
                 predicted_gen: gen,
                 arrival_s: 0.0,
+                prefix_group: 0,
+                shared_prefix_tokens: 0,
             },
             0.0,
             false,

@@ -78,6 +78,8 @@ fn main() {
             gen_tokens: gen,
             predicted_gen: gen,
             arrival_s: now,
+            prefix_group: 0,
+            shared_prefix_tokens: 0,
         };
         next_id += 1;
         e.admit(req, now, false).ok()

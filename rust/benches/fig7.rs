@@ -50,6 +50,8 @@ fn main() {
                         gen_tokens: gen,
                         predicted_gen: gen, // oracle
                         arrival_s: 0.0,
+                        prefix_group: 0,
+                        shared_prefix_tokens: 0,
                     },
                     0.0,
                     false,
@@ -62,6 +64,7 @@ fn main() {
                 predicted_gen: gen,
                 deadline_s: f64::INFINITY,
                 lost: false,
+                kv_discount_blocks: 0,
             });
         }
         // Projection + predicted arrival times at the chosen frequency.

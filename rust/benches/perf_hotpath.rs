@@ -79,6 +79,7 @@ fn scoreboard(n: u32, rng: &mut Pcg64) -> Scoreboard {
             predicted_gen: rng.uniform_u64(32, 1024) as u32,
             deadline_s: 30.0 + rng.next_f64() * 10.0,
             lost: false,
+            kv_discount_blocks: 0,
         });
     }
     sb
@@ -301,6 +302,8 @@ fn main() {
                         gen_tokens: 512,
                         predicted_gen: 512,
                         arrival_s: t,
+                        prefix_group: 0,
+                        shared_prefix_tokens: 0,
                     },
                     t,
                     false,

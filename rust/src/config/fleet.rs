@@ -20,14 +20,23 @@ use crate::config::{EngineSpec, ServingConfig, SloSpec};
 use crate::jsonl::Json;
 
 /// Shared parser for every boolean `--<flag> on|off` CLI surface
-/// (`--migration`, `--faults`, `--predict`): one grammar, one error
-/// style (flag + offending value + usage hint), no per-spec copies.
+/// (`--migration`, `--faults`, `--predict`, `--prefix-share`): one
+/// grammar, one error style (flag + offending value + usage hint), no
+/// per-spec copies.
 pub fn parse_on_off(flag: &str, s: &str) -> anyhow::Result<bool> {
     match s {
         "on" | "true" | "1" => Ok(true),
         "off" | "false" | "0" => Ok(false),
         other => anyhow::bail!("--{flag} {other:?} (expected on | off)"),
     }
+}
+
+/// The `--<flag> on|off` grammar lifted to the `Option<Spec>`
+/// convention every optional fleet subsystem now uses: `on` yields the
+/// spec's defaults, `off` yields `None` (the subsystem's code path is
+/// not entered at all — the byte-identity contract).
+fn parse_opt_spec<T>(flag: &str, s: &str, default: T) -> anyhow::Result<Option<T>> {
+    Ok(parse_on_off(flag, s)?.then_some(default))
 }
 
 /// One replica's deployment description: which engine it boots, which
@@ -111,17 +120,17 @@ impl ReplicaSpec {
 }
 
 /// Live KV-migration policy + modeled transfer costs (the
-/// `--migration on|off` surface).  When enabled, fleet-axis scale-in
+/// `--migration on|off` surface).  When present on a [`FleetPlan`]
+/// (`Option<MigrationSpec>` — `None` means off), fleet-axis scale-in
 /// live-migrates the victim's resident requests to other replicas
 /// instead of waiting for them to drain; the move pays a modeled
 /// latency (base orchestration cost plus KV bytes over the link
 /// bandwidth) during which the migrated request holds KV on the
 /// destination but produces no tokens, and a modeled link/host energy
-/// cost.  Disabled is the default and leaves the serving loop
+/// cost.  `None` is the default and leaves the serving loop
 /// byte-identical to drain-based scale-in.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MigrationSpec {
-    pub enabled: bool,
     /// Fixed per-migration orchestration latency, seconds (checkpoint
     /// metadata exchange, destination block reservation).
     pub base_latency_s: f64,
@@ -135,18 +144,9 @@ pub struct MigrationSpec {
 }
 
 impl MigrationSpec {
-    /// Migration off: scale-in drains (pre-migration behavior).
-    pub fn disabled() -> Self {
-        Self {
-            enabled: false,
-            ..Self::enabled_default()
-        }
-    }
-
     /// Migration on with the default modeled costs.
     pub fn enabled_default() -> Self {
         Self {
-            enabled: true,
             base_latency_s: 0.05,
             gb_per_s: 16.0,
             mb_per_block: 52.0,
@@ -154,9 +154,10 @@ impl MigrationSpec {
         }
     }
 
-    /// Parse the `--migration` CLI value.
-    pub fn parse_enabled(s: &str) -> anyhow::Result<bool> {
-        parse_on_off("migration", s)
+    /// Parse the `--migration` CLI value into the `Option<Spec>`
+    /// convention (`on` -> defaults, `off` -> `None`).
+    pub fn parse_enabled(s: &str) -> anyhow::Result<Option<Self>> {
+        parse_opt_spec("migration", s, Self::enabled_default())
     }
 
     /// Modeled wall-clock cost of moving `blocks` KV blocks.
@@ -172,7 +173,7 @@ impl MigrationSpec {
 
 impl Default for MigrationSpec {
     fn default() -> Self {
-        Self::disabled()
+        Self::enabled_default()
     }
 }
 
@@ -181,12 +182,12 @@ impl Default for MigrationSpec {
 /// schedule is generated up front from `seed` (PCG64 + `detmath` only,
 /// the same byte-identical contract as the fleet trace generator) and
 /// replayed by the coordinator: replica crashes, thermal throttle
-/// windows, migration-link outages and preemption notices.  Disabled
-/// is the default and leaves the serving loop byte-identical to the
-/// fault-free path (the `--migration off` pattern).
+/// windows, migration-link outages and preemption notices.  `None` on
+/// the [`FleetPlan`] is the default and leaves the serving loop
+/// byte-identical to the fault-free path (the `--migration off`
+/// pattern).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultSpec {
-    pub enabled: bool,
     /// Fault-schedule seed, independent of the workload seed so the
     /// same trace can be replayed under different fault histories.
     pub seed: u64,
@@ -220,19 +221,9 @@ pub struct FaultSpec {
 }
 
 impl FaultSpec {
-    /// Faults off: the serving loop is byte-identical to the pre-fault
-    /// path.
-    pub fn disabled() -> Self {
-        Self {
-            enabled: false,
-            ..Self::enabled_default()
-        }
-    }
-
     /// Faults on with the default chaos mix.
     pub fn enabled_default() -> Self {
         Self {
-            enabled: true,
             seed: 0,
             crash_mtbf_s: 180.0,
             throttle_mtbf_s: 150.0,
@@ -249,15 +240,16 @@ impl FaultSpec {
         }
     }
 
-    /// Parse the `--faults` CLI value.
-    pub fn parse_enabled(s: &str) -> anyhow::Result<bool> {
-        parse_on_off("faults", s)
+    /// Parse the `--faults` CLI value into the `Option<Spec>`
+    /// convention (`on` -> defaults, `off` -> `None`).
+    pub fn parse_enabled(s: &str) -> anyhow::Result<Option<Self>> {
+        parse_opt_spec("faults", s, Self::enabled_default())
     }
 }
 
 impl Default for FaultSpec {
     fn default() -> Self {
-        Self::disabled()
+        Self::enabled_default()
     }
 }
 
@@ -267,13 +259,12 @@ impl Default for FaultSpec {
 /// per-tick arrival counts and uses it for three decisions: pre-warm
 /// replicas ahead of forecast ramps, proactively migrate residents off
 /// KV-pressured replicas before requests must queue, and rank
-/// scale-in victims by how cheap their residents are to move.
-/// Disabled is the default and leaves the serving loop byte-identical
-/// to the reactive path (the `--migration off` / `--faults off`
-/// pattern).
+/// scale-in victims by how cheap their residents are to move.  `None`
+/// on the [`FleetPlan`] is the default and leaves the serving loop
+/// byte-identical to the reactive path (the `--migration off` /
+/// `--faults off` pattern).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PredictSpec {
-    pub enabled: bool,
     /// Pre-warm horizon, seconds: how far ahead the forecast is
     /// evaluated when deciding to spawn ahead of a ramp.  Default is
     /// one spawn window plus one scaler interval, so a replica warmed
@@ -289,18 +280,9 @@ pub struct PredictSpec {
 }
 
 impl PredictSpec {
-    /// Prediction off: the coordinator stays purely reactive.
-    pub fn disabled() -> Self {
-        Self {
-            enabled: false,
-            ..Self::enabled_default()
-        }
-    }
-
     /// Prediction on with the default forecaster knobs.
     pub fn enabled_default() -> Self {
         Self {
-            enabled: true,
             lead_s: 35.0,
             alpha: 0.35,
             period_s: 600.0,
@@ -308,15 +290,54 @@ impl PredictSpec {
         }
     }
 
-    /// Parse the `--predict` CLI value.
-    pub fn parse_enabled(s: &str) -> anyhow::Result<bool> {
-        parse_on_off("predict", s)
+    /// Parse the `--predict` CLI value into the `Option<Spec>`
+    /// convention (`on` -> defaults, `off` -> `None`).
+    pub fn parse_enabled(s: &str) -> anyhow::Result<Option<Self>> {
+        parse_opt_spec("predict", s, Self::enabled_default())
     }
 }
 
 impl Default for PredictSpec {
     fn default() -> Self {
-        Self::disabled()
+        Self::enabled_default()
+    }
+}
+
+/// Copy-on-write prefix-sharing policy (the `--prefix-share on|off`
+/// surface, ISSUE 10).  When present on a [`FleetPlan`], engines store
+/// the full blocks of a session's shared system prompt once
+/// (ref-counted CoW in [`crate::engine`]'s `KvAllocator`), admissions
+/// whose prefix is already resident skip the cached prefill tokens,
+/// the §IV-B projection discounts resident shared blocks, and the
+/// router prefers replicas where a session's prefix is resident.
+/// `None` is the default and leaves the serving loop byte-identical to
+/// the pre-sharing path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefixSpec {
+    /// Smallest shared prefix (tokens) worth sharing; requests whose
+    /// declared prefix is shorter are served privately.  One KV block
+    /// by default — a shorter prefix has no full block to share.
+    pub min_prefix_tokens: u32,
+}
+
+impl PrefixSpec {
+    /// Sharing on with the default threshold.
+    pub fn enabled_default() -> Self {
+        Self {
+            min_prefix_tokens: 64,
+        }
+    }
+
+    /// Parse the `--prefix-share` CLI value into the `Option<Spec>`
+    /// convention (`on` -> defaults, `off` -> `None`).
+    pub fn parse_enabled(s: &str) -> anyhow::Result<Option<Self>> {
+        parse_opt_spec("prefix-share", s, Self::enabled_default())
+    }
+}
+
+impl Default for PrefixSpec {
+    fn default() -> Self {
+        Self::enabled_default()
     }
 }
 
@@ -543,31 +564,27 @@ mod tests {
     #[test]
     fn migration_spec_costs_and_parse() {
         let m = MigrationSpec::enabled_default();
-        assert!(m.enabled);
         // 10 blocks at 52 MB over 16 GB/s: 32.5 ms + 50 ms base.
         let t = m.transfer_seconds(10);
         assert!((t - (0.05 + 10.0 * 52e6 / 16e9)).abs() < 1e-12);
         assert!(m.transfer_seconds(100) > t);
         assert!((m.transfer_energy_j(1.0) - m.link_power_w).abs() < 1e-12);
-        assert!(!MigrationSpec::disabled().enabled);
-        assert_eq!(MigrationSpec::default(), MigrationSpec::disabled());
-        assert!(MigrationSpec::parse_enabled("on").unwrap());
-        assert!(!MigrationSpec::parse_enabled("off").unwrap());
+        assert_eq!(MigrationSpec::default(), m);
+        assert_eq!(MigrationSpec::parse_enabled("on").unwrap(), Some(m));
+        assert_eq!(MigrationSpec::parse_enabled("off").unwrap(), None);
         assert!(MigrationSpec::parse_enabled("maybe").is_err());
     }
 
     #[test]
     fn fault_spec_defaults_and_parse() {
         let f = FaultSpec::enabled_default();
-        assert!(f.enabled);
         assert!(f.crash_mtbf_s > 0.0 && f.respawn_s > 0.0);
         assert!(f.throttle_cap_mhz >= 210 && f.throttle_cap_mhz < 1410);
-        assert!(!FaultSpec::disabled().enabled);
-        assert_eq!(FaultSpec::default(), FaultSpec::disabled());
-        assert!(FaultSpec::parse_enabled("on").unwrap());
-        assert!(FaultSpec::parse_enabled("1").unwrap());
-        assert!(!FaultSpec::parse_enabled("off").unwrap());
-        assert!(!FaultSpec::parse_enabled("false").unwrap());
+        assert_eq!(FaultSpec::default(), f);
+        assert_eq!(FaultSpec::parse_enabled("on").unwrap(), Some(f));
+        assert_eq!(FaultSpec::parse_enabled("1").unwrap(), Some(f));
+        assert_eq!(FaultSpec::parse_enabled("off").unwrap(), None);
+        assert_eq!(FaultSpec::parse_enabled("false").unwrap(), None);
         // Unknown values surface as errors with a usage hint, never a
         // panic (CLI robustness contract).
         let e = FaultSpec::parse_enabled("chaos").unwrap_err();
@@ -579,29 +596,51 @@ mod tests {
     #[test]
     fn predict_spec_defaults_and_parse() {
         let p = PredictSpec::enabled_default();
-        assert!(p.enabled);
         assert!(p.lead_s > 0.0 && p.period_s > 0.0);
         assert!(p.alpha > 0.0 && p.alpha <= 1.0);
         assert!(p.kv_pressure > 0.0 && p.kv_pressure <= 1.0);
-        assert!(!PredictSpec::disabled().enabled);
-        assert_eq!(PredictSpec::default(), PredictSpec::disabled());
-        assert!(PredictSpec::parse_enabled("on").unwrap());
-        assert!(!PredictSpec::parse_enabled("0").unwrap());
+        assert_eq!(PredictSpec::default(), p);
+        assert_eq!(PredictSpec::parse_enabled("on").unwrap(), Some(p));
+        assert_eq!(PredictSpec::parse_enabled("0").unwrap(), None);
         let e = PredictSpec::parse_enabled("soon").unwrap_err();
         assert!(format!("{e}").contains("expected on | off"), "{e}");
+    }
+
+    #[test]
+    fn prefix_spec_defaults_and_parse() {
+        let p = PrefixSpec::enabled_default();
+        assert_eq!(p.min_prefix_tokens, 64);
+        assert_eq!(PrefixSpec::default(), p);
+        assert_eq!(PrefixSpec::parse_enabled("on").unwrap(), Some(p));
+        assert_eq!(PrefixSpec::parse_enabled("off").unwrap(), None);
+        let e = PrefixSpec::parse_enabled("shared").unwrap_err();
+        assert!(format!("{e}").contains("--prefix-share"), "{e}");
     }
 
     /// The shared on|off parser names the flag it was parsing in its
     /// error, so every `--<flag>` surface keeps the PR 8 error style.
     #[test]
     fn on_off_errors_name_their_flag() {
-        for (flag, parse) in [
-            ("migration", MigrationSpec::parse_enabled as fn(&str) -> anyhow::Result<bool>),
-            ("faults", FaultSpec::parse_enabled),
-            ("predict", PredictSpec::parse_enabled),
-        ] {
-            let e = parse("sideways").unwrap_err();
-            let msg = format!("{e}");
+        let cases: [(&str, Box<dyn Fn(&str) -> Option<String>>); 4] = [
+            (
+                "migration",
+                Box::new(|s| MigrationSpec::parse_enabled(s).err().map(|e| format!("{e}"))),
+            ),
+            (
+                "faults",
+                Box::new(|s| FaultSpec::parse_enabled(s).err().map(|e| format!("{e}"))),
+            ),
+            (
+                "predict",
+                Box::new(|s| PredictSpec::parse_enabled(s).err().map(|e| format!("{e}"))),
+            ),
+            (
+                "prefix-share",
+                Box::new(|s| PrefixSpec::parse_enabled(s).err().map(|e| format!("{e}"))),
+            ),
+        ];
+        for (flag, parse) in cases {
+            let msg = parse("sideways").expect("must error");
             assert!(msg.contains(&format!("--{flag}")), "{flag}: {msg}");
             assert!(msg.contains("expected on | off"), "{flag}: {msg}");
         }

@@ -11,7 +11,7 @@ pub mod models;
 
 pub use fleet::{
     parse_fleet_jsonl, parse_on_off, parse_replica_spec, FaultSpec, MigrationSpec, PredictSpec,
-    ReplicaSpec,
+    PrefixSpec, ReplicaSpec,
 };
 pub use models::{EngineSpec, ModelFamily, PartitionKind};
 

@@ -74,6 +74,10 @@ pub fn migration_entry(src: &Entry, generated: u32, dest_iter: u64) -> Entry {
         predicted_gen: src.predicted_gen.max(generated.saturating_add(1)),
         deadline_s: src.deadline_s,
         lost: src.lost,
+        // A migrated resident of a shared prefix COPIES its blocks to
+        // the destination (it may re-share there, but the projection
+        // stays conservative and books the full footprint).
+        kv_discount_blocks: 0,
     }
 }
 
@@ -174,6 +178,7 @@ mod tests {
             predicted_gen: pred,
             deadline_s: deadline,
             lost: false,
+            kv_discount_blocks: 0,
         }
     }
 

@@ -180,8 +180,14 @@ impl ProjectionTracker {
         self.add_at(hi, -sign, 0);
         // Blocks at iteration j: ceil((j - s + prompt)/N); at j = lo
         // tokens = prompt, then +1 block per N-token boundary crossed.
+        // A shared-prefix discount shifts the whole step function down
+        // by a constant (the blocks a co-resident already pays for);
+        // admission guarantees discount <= ceil(prompt/N), so the
+        // contribution never goes negative.
         let tokens_lo = e.prompt_tokens as u64;
-        let blocks_lo = tokens_lo.div_ceil(bt) as i64;
+        let blocks_lo =
+            tokens_lo.div_ceil(bt) as i64 - e.kv_discount_blocks as i64;
+        debug_assert!(blocks_lo >= 0, "kv discount exceeds entry footprint");
         self.add_at(lo, 0, sign * blocks_lo);
         self.add_at(hi, 0, -sign * blocks_lo);
         // First boundary crossing: tokens hits blocks_lo*N + 1 (the
@@ -381,9 +387,14 @@ pub fn project_entries(
         batch_d[lo_idx] += 1;
         batch_d[hi_idx] -= 1;
 
-        // Blocks at iteration j: ceil((j - s + prompt)/N). At j = lo:
+        // Blocks at iteration j: ceil((j - s + prompt)/N), minus the
+        // constant shared-prefix discount (blocks a co-resident pays
+        // for — same subtraction as `ProjectionTracker::apply`, so the
+        // debug bit-compare holds). At j = lo:
         let tokens_lo = lo - e.scheduled_iter + e.prompt_tokens as u64;
-        let blocks_lo = tokens_lo.div_ceil(bt) as i64;
+        let blocks_lo =
+            tokens_lo.div_ceil(bt) as i64 - e.kv_discount_blocks as i64;
+        debug_assert!(blocks_lo >= 0, "kv discount exceeds entry footprint");
         kv_d[lo_idx] += blocks_lo;
         kv_d[hi_idx] -= blocks_lo;
         // +1 block each time tokens crosses a multiple of N, i.e. at
@@ -430,6 +441,7 @@ mod tests {
             predicted_gen: pred,
             deadline_s: f64::INFINITY,
             lost: false,
+            kv_discount_blocks: 0,
         }
     }
 
@@ -562,6 +574,33 @@ mod tests {
         // Without: the tracker state is unchanged by the what-if.
         let without = tr.project(&sb, 5, None);
         assert_eq!(without, &project(&sb, 5, 64));
+    }
+
+    #[test]
+    fn shared_prefix_discount_lowers_kv_and_tracker_matches() {
+        let mut sb = Scoreboard::new();
+        // Two session followers: 1024-token shared prefix already
+        // resident (16 blocks at N=64) -> each discounts 16.
+        let mut a = entry(1, 0, 1100, 10);
+        a.kv_discount_blocks = 16;
+        let mut b = entry(2, 0, 1100, 10);
+        b.kv_discount_blocks = 16;
+        sb.insert(a);
+        sb.insert(b);
+        let p = project(&sb, 0, 64);
+        // Undiscounted: 2 * ceil(1101/64) = 36. Discounted: 36 - 32.
+        assert_eq!(p.kv_blocks[0], 2 * (1101u32).div_ceil(64) - 32);
+        // The incremental tracker applies the same subtraction.
+        let mut tr = ProjectionTracker::new(64);
+        assert_eq!(tr.project(&sb, 0, None), &p);
+        let mut cand = entry(3, 2, 1100, 50);
+        cand.kv_discount_blocks = 16;
+        let mut v: Vec<Entry> = sb.committed().to_vec();
+        v.push(cand);
+        assert_eq!(
+            tr.project(&sb, 2, Some(&cand)).clone(),
+            project_entries(&v, 2, 64)
+        );
     }
 
     #[test]

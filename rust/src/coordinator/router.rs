@@ -79,6 +79,35 @@ pub fn headroom_score(
     kv.min(batch)
 }
 
+/// Session-affinity selection over scored replicas.
+///
+/// `scored` yields `(replica index, headroom score, prefix resident)`
+/// triples — `resident` means the arriving request's prefix group
+/// already has its shared blocks allocated on that replica's engine, so
+/// landing there re-uses them (no prefix re-allocation, prefill skips
+/// the cached tokens).  A session's next turn therefore prefers the
+/// best-scoring replica where its prefix is resident *and* the score
+/// signals genuine headroom (> 0), falling back to the plain best score
+/// otherwise (ISSUE 10 / ROADMAP prefix-affinity item).  Ties keep the
+/// lowest replica index — iteration order is the caller's replica
+/// order, so the choice is deterministic and thread-count independent.
+pub fn select_with_affinity<I>(scored: I) -> Option<usize>
+where
+    I: IntoIterator<Item = (usize, f64, bool)>,
+{
+    let mut best: Option<(usize, f64)> = None;
+    let mut best_resident: Option<(usize, f64)> = None;
+    for (idx, score, resident) in scored {
+        if best.map_or(true, |(_, s)| score > s) {
+            best = Some((idx, score));
+        }
+        if resident && score > 0.0 && best_resident.map_or(true, |(_, s)| score > s) {
+            best_resident = Some((idx, score));
+        }
+    }
+    best_resident.or(best).map(|(i, _)| i)
+}
+
 /// Cached §IV-B projection summary for router scoring.
 ///
 /// `projected-headroom` used to rebuild the full projection for EVERY
@@ -198,6 +227,44 @@ mod tests {
         assert_eq!(degenerate_batch, f64::NEG_INFINITY);
         assert!(degenerate_kv < overcommitted);
         assert!(headroom_score(0, 0, 0, 0, 0, 0) == f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn affinity_prefers_resident_replica_with_headroom() {
+        // Replica 2 has the prefix resident and positive headroom: it
+        // wins even though replica 0 scores higher.
+        let pick = select_with_affinity(vec![
+            (0, 0.9, false),
+            (1, 0.2, false),
+            (2, 0.5, true),
+        ]);
+        assert_eq!(pick, Some(2));
+    }
+
+    #[test]
+    fn affinity_falls_back_to_best_score() {
+        // Resident replica is over-committed (score <= 0): plain
+        // projected-headroom choice applies.
+        let pick = select_with_affinity(vec![
+            (0, 0.9, false),
+            (1, -0.1, true),
+        ]);
+        assert_eq!(pick, Some(0));
+        // No resident replica at all.
+        let pick = select_with_affinity(vec![(0, 0.1, false), (1, 0.6, false)]);
+        assert_eq!(pick, Some(1));
+        // Empty fleet.
+        assert_eq!(select_with_affinity(Vec::new()), None);
+    }
+
+    #[test]
+    fn affinity_ties_keep_lowest_index() {
+        let pick = select_with_affinity(vec![
+            (0, 0.5, true),
+            (1, 0.5, true),
+            (2, 0.5, true),
+        ]);
+        assert_eq!(pick, Some(0));
     }
 
     #[test]

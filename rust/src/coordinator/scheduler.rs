@@ -383,6 +383,7 @@ pub fn entry_for(
         predicted_gen: predicted_gen.max(1),
         deadline_s: arrival_s + slo.e2e_p99,
         lost: false,
+        kv_discount_blocks: 0,
     }
 }
 
@@ -407,6 +408,7 @@ mod tests {
             predicted_gen: pred,
             deadline_s: deadline,
             lost: false,
+            kv_discount_blocks: 0,
         }
     }
 

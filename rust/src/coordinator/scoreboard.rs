@@ -40,6 +40,12 @@ pub struct Entry {
     pub deadline_s: f64,
     /// "Lost" queries are ignored in later SLO validations (§IV-C2).
     pub lost: bool,
+    /// KV blocks this entry does NOT occupy because a co-resident
+    /// shares them (resident prefix blocks at admission).  The §IV-B
+    /// projection subtracts this from the entry's block footprint so
+    /// shared prefixes count once; 0 for ungrouped entries and for
+    /// conservative paths (migration, crash re-placement).
+    pub kv_discount_blocks: u32,
 }
 
 impl Entry {
@@ -316,6 +322,7 @@ mod tests {
             predicted_gen: pred,
             deadline_s: 30.0,
             lost: false,
+            kv_discount_blocks: 0,
         }
     }
 

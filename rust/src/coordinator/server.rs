@@ -50,14 +50,14 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::config::fleet::{FaultSpec, MigrationSpec, PredictSpec, ReplicaSpec};
+use crate::config::fleet::{FaultSpec, MigrationSpec, PredictSpec, PrefixSpec, ReplicaSpec};
 use crate::config::{EngineSpec, ModelFamily, ServingConfig, SloSpec};
 use crate::coordinator::autoscaler::{FleetDecision, FleetScaler};
 use crate::coordinator::migration::{
     migration_entry, migration_slo_guard, MigrationCounters,
 };
 use crate::coordinator::perf_model::PerfModel;
-use crate::coordinator::router::{headroom_score, RouterPolicy};
+use crate::coordinator::router::{headroom_score, select_with_affinity, RouterPolicy};
 use crate::coordinator::scheduler::entry_for;
 use crate::coordinator::scoreboard::Entry;
 use crate::coordinator::shard::{
@@ -72,7 +72,9 @@ use crate::gpusim::latency::{decode_latency_s, GpuState};
 use crate::gpusim::power::{idle_power_w, power_w};
 use crate::metrics::ServingStats;
 use crate::sim::faults::{fault_schedule, FaultCounters, FaultKind};
-use crate::workload::fleet_trace::{parse_fleet_trace_jsonl, synth_fleet_trace, ScenarioKind};
+use crate::workload::fleet_trace::{
+    parse_fleet_trace_jsonl, synth_fleet_trace, ScenarioKind, SessionScenario,
+};
 use crate::workload::forecast::ArrivalForecaster;
 use crate::workload::predictor::{conservative_adjust, LengthPredictor};
 
@@ -213,23 +215,33 @@ pub struct FleetPlan {
     /// Enable the replica-count autoscaling axis.
     pub autoscale_replicas: bool,
     /// Live KV migration of resident requests on fleet-axis scale-in
-    /// (`--migration on|off` + modeled transfer costs).  Disabled by
-    /// default: scale-in then drains, byte-identical to the
-    /// pre-migration serving loop.
-    pub migration: MigrationSpec,
+    /// (`--migration on|off` + modeled transfer costs).  `None` (the
+    /// default) disables the subsystem: scale-in then drains,
+    /// byte-identical to the pre-migration serving loop.  Every
+    /// optional subsystem on the plan follows this one convention —
+    /// `Option<Spec>` is the switch, the spec carries only tuning.
+    pub migration: Option<MigrationSpec>,
     /// Deterministic fault injection (`--faults on|off` +
     /// `--fault-seed`): crashes, thermal throttles, migration-link
     /// failures and preemption notices, with checkpoint-based
-    /// recovery.  Disabled by default: the serving loop is
-    /// byte-identical to the fault-free path.
-    pub faults: FaultSpec,
+    /// recovery.  `None` keeps the serving loop byte-identical to the
+    /// fault-free path.
+    pub faults: Option<FaultSpec>,
     /// Predictive fleet control (`--predict on|off`): an arrival
     /// forecaster feeds replica pre-warming ahead of ramps, proactive
     /// KV-pressure offload, and migration-cost-aware scale-in victim
     /// ranking — all resolved in the single-threaded coordination
-    /// phase.  Disabled by default: the serving loop is byte-identical
-    /// to the reactive path.
-    pub predict: PredictSpec,
+    /// phase.  `None` keeps the serving loop byte-identical to the
+    /// reactive path.
+    pub predict: Option<PredictSpec>,
+    /// Copy-on-write prefix sharing + session-affine routing
+    /// (`--prefix-share on|off`): grouped requests share their common
+    /// prefix's full KV blocks ref-counted per engine, prefill skips
+    /// resident cached tokens, the §IV-B projection counts shared
+    /// blocks once, and the router prefers the replica where a
+    /// session's prefix is resident.  `None` keeps allocation order,
+    /// prefill arithmetic and routing byte-identical to today's path.
+    pub prefix: Option<PrefixSpec>,
     /// Worker threads for the RUN phase (`--threads`): replicas are
     /// partitioned into fixed contiguous shards stepped in parallel.
     /// `0` means auto (available parallelism); any value is
@@ -248,28 +260,43 @@ impl FleetPlan {
             replicas,
             router,
             autoscale_replicas: false,
-            migration: MigrationSpec::disabled(),
-            faults: FaultSpec::disabled(),
-            predict: PredictSpec::disabled(),
+            migration: None,
+            faults: None,
+            predict: None,
+            prefix: None,
             threads: 1,
         }
     }
 
-    /// Replace the live-migration policy (builder style).
-    pub fn with_migration(mut self, migration: MigrationSpec) -> Self {
+    /// Enable/disable fleet-axis replica autoscaling (builder style).
+    pub fn with_autoscale_replicas(mut self, on: bool) -> Self {
+        self.autoscale_replicas = on;
+        self
+    }
+
+    /// Replace the live-migration policy (builder style; `None` = off).
+    pub fn with_migration(mut self, migration: Option<MigrationSpec>) -> Self {
         self.migration = migration;
         self
     }
 
-    /// Replace the fault-injection policy (builder style).
-    pub fn with_faults(mut self, faults: FaultSpec) -> Self {
+    /// Replace the fault-injection policy (builder style; `None` = off).
+    pub fn with_faults(mut self, faults: Option<FaultSpec>) -> Self {
         self.faults = faults;
         self
     }
 
-    /// Replace the predictive-control policy (builder style).
-    pub fn with_prediction(mut self, predict: PredictSpec) -> Self {
+    /// Replace the predictive-control policy (builder style; `None` =
+    /// off).
+    pub fn with_prediction(mut self, predict: Option<PredictSpec>) -> Self {
         self.predict = predict;
+        self
+    }
+
+    /// Replace the prefix-sharing policy (builder style; `None` = off,
+    /// byte-identical to the pre-sharing allocator and router).
+    pub fn with_prefix_sharing(mut self, prefix: Option<PrefixSpec>) -> Self {
+        self.prefix = prefix;
         self
     }
 
@@ -297,9 +324,10 @@ impl FleetPlan {
             replicas: vec![ReplicaSpec::from_config(cfg, policy.autoscaling); n],
             router,
             autoscale_replicas,
-            migration: MigrationSpec::disabled(),
-            faults: FaultSpec::disabled(),
-            predict: PredictSpec::disabled(),
+            migration: None,
+            faults: None,
+            predict: None,
+            prefix: None,
             threads: 1,
         }
     }
@@ -429,6 +457,12 @@ pub enum Workload<'a> {
     /// Requests loaded from a recorded JSONL fleet trace
     /// ([`Workload::replay`]).
     Replay(Vec<Request>),
+    /// Synthesize a multi-turn session scenario described by the
+    /// [`Scenario::session()`] builder, right-scaled to the plan's
+    /// rated load — the typed front door for prefix-sharing workloads
+    /// (turn counts, think times and the shared system-prompt length
+    /// ride on the builder instead of raw param-field plumbing).
+    Session(SessionScenario),
 }
 
 impl Workload<'_> {
@@ -470,6 +504,12 @@ impl FleetPlan {
                 seed,
             } => {
                 let params = scenario_params(self, kind, duration_s, utilization, seed);
+                let mut reqs = synth_fleet_trace(&params);
+                LengthPredictor::oracle().apply(&mut reqs, cfg.max_tokens);
+                serve_requests(cfg, policy, model, &reqs, self)
+            }
+            Workload::Session(s) => {
+                let params = s.params(self.replicas.len(), self.rated_rps());
                 let mut reqs = synth_fleet_trace(&params);
                 LengthPredictor::oracle().apply(&mut reqs, cfg.max_tokens);
                 serve_requests(cfg, policy, model, &reqs, self)
@@ -574,7 +614,7 @@ fn serve_fleet_plan_inner(
         .replicas
         .iter()
         .enumerate()
-        .map(|(id, rs)| Replica::new(id, rs, cfg.slo, policy))
+        .map(|(id, rs)| Replica::new(id, rs, cfg.slo, policy, plan.prefix.is_some()))
         .collect();
 
     let fleet_scaling = plan.autoscale_replicas && policy.autoscaling && n > 1;
@@ -604,24 +644,20 @@ fn serve_fleet_plan_inner(
     // thread count and of anything the serving loop does.  `None`
     // keeps every fault branch below dead and the loop byte-identical
     // to the fault-free path.
-    let mut faults: Option<FaultRt> = plan.faults.enabled.then(|| {
+    let mut faults: Option<FaultRt> = plan.faults.as_ref().map(|fspec| {
         let horizon = requests.last().map(|r| r.arrival_s).unwrap_or(0.0);
         FaultRt {
-            schedule: fault_schedule(&plan.faults, n, horizon),
+            schedule: fault_schedule(fspec, n, horizon),
             cursor: 0,
             counters: FaultCounters::default(),
             retry_q: Vec::new(),
             pending: Vec::new(),
             link_down_until: 0.0,
-            next_ckpt_s: (plan.faults.checkpoint_interval_s > 0.0)
-                .then_some(plan.faults.checkpoint_interval_s),
-            link: if plan.migration.enabled {
-                plan.migration
-            } else {
-                // Recovery still needs a priced link when live
-                // migration is off; the default spec models it.
-                MigrationSpec::enabled_default()
-            },
+            next_ckpt_s: (fspec.checkpoint_interval_s > 0.0)
+                .then_some(fspec.checkpoint_interval_s),
+            // Recovery still needs a priced link when live migration
+            // is off; the default spec models it.
+            link: plan.migration.unwrap_or_else(MigrationSpec::enabled_default),
         }
     });
 
@@ -631,8 +667,8 @@ fn serve_fleet_plan_inner(
     // KV-pressure offload, migration-cost-aware victim ranking.
     // `None` keeps every predictive branch below dead and the loop
     // byte-identical to the reactive path.
-    let mut predict: Option<PredictRt> = plan.predict.enabled.then(|| PredictRt {
-        forecaster: ArrivalForecaster::new(plan.predict.alpha, plan.predict.period_s),
+    let mut predict: Option<PredictRt> = plan.predict.as_ref().map(|pspec| PredictRt {
+        forecaster: ArrivalForecaster::new(pspec.alpha, pspec.period_s),
         counters: PredictCounters::default(),
     });
 
@@ -738,12 +774,12 @@ fn serve_fleet_plan_inner(
 
         // Fault axis, first half: complete respawns, close thermal
         // windows, apply due fault events, enforce drain deadlines.
-        if let Some(f) = faults.as_mut() {
+        if let (Some(f), Some(fspec)) = (faults.as_mut(), plan.faults.as_ref()) {
             fault_pre_pass(
                 f,
                 &mut replicas,
                 now,
-                &plan.faults,
+                fspec,
                 cfg,
                 policy,
                 model,
@@ -782,8 +818,13 @@ fn serve_fleet_plan_inner(
                     continue;
                 }
             }
-            let target =
-                route_arrival(plan.router, &mut rr_cursor, &mut replicas, r.prompt_tokens);
+            let target = route_arrival(
+                plan.router,
+                &mut rr_cursor,
+                &mut replicas,
+                r,
+                plan.prefix.is_some(),
+            );
             let rp = &mut replicas[target];
             // Feed the accepting engine's load estimator.
             if let Some(e) = rp.engines.iter_mut().find(|e| e.accepting) {
@@ -887,10 +928,12 @@ fn serve_fleet_plan_inner(
                         // every tick (resetting its warm-up clock), so
                         // a pre-warmed replica could never finish
                         // spawning across a diurnal trough.
-                        if let Some(pr) = predict.as_ref() {
+                        if let (Some(pr), Some(pspec)) =
+                            (predict.as_ref(), plan.predict.as_ref())
+                        {
                             let f = pr
                                 .forecaster
-                                .forecast_rps(now + plan.predict.lead_s);
+                                .forecast_rps(now + pspec.lead_s);
                             let keep = fs
                                 .desired_replicas(f, per_replica_rps)
                                 .min(provisioned);
@@ -927,9 +970,17 @@ fn serve_fleet_plan_inner(
                             // what evicting each candidate costs.
                             let choice = match predict.as_mut() {
                                 Some(pr) => {
+                                    // Eviction pricing uses the plan's
+                                    // link model, or the default costs
+                                    // when migration is off (the ranking
+                                    // still discounts what moving each
+                                    // candidate's state would cost).
+                                    let link = plan
+                                        .migration
+                                        .unwrap_or_else(MigrationSpec::enabled_default);
                                     let v = select_scale_in_victim_predictive(
                                         &replicas,
-                                        &plan.migration,
+                                        &link,
                                     );
                                     if v.is_some() {
                                         pr.counters.predictive_scale_ins += 1;
@@ -951,7 +1002,8 @@ fn serve_fleet_plan_inner(
                                     plan.router,
                                     &mut rr_cursor,
                                     &mut replicas,
-                                    req.prompt_tokens,
+                                    &req,
+                                    plan.prefix.is_some(),
                                 );
                                 replicas[tgt].catch_up_tick(now);
                                 replicas[tgt].route_epoch += 1;
@@ -960,7 +1012,7 @@ fn serve_fleet_plan_inner(
                             // Live-migrate the RESIDENT requests too
                             // (instead of waiting for drain), each
                             // behind the destination-side SLO guard.
-                            if plan.migration.enabled {
+                            if let Some(mspec) = plan.migration.as_ref() {
                                 let link_ok = faults
                                     .as_ref()
                                     .map(|f| now >= f.link_down_until)
@@ -972,7 +1024,7 @@ fn serve_fleet_plan_inner(
                                     now,
                                     policy,
                                     model,
-                                    &plan.migration,
+                                    mspec,
                                     &mut migrations,
                                     link_ok,
                                     &mut rollbacks,
@@ -991,9 +1043,11 @@ fn serve_fleet_plan_inner(
                 // itself; (b) proactively offload residents from
                 // KV-pressured replicas before admission queues
                 // behind them.
-                if let Some(pr) = predict.as_mut() {
+                if let (Some(pr), Some(pspec)) =
+                    (predict.as_mut(), plan.predict.as_ref())
+                {
                     let forecast =
-                        pr.forecaster.forecast_rps(now + plan.predict.lead_s);
+                        pr.forecaster.forecast_rps(now + pspec.lead_s);
                     // Only pre-warm on a genuine forecast RISE past
                     // what the fleet already provisions — never on
                     // the downslope the reactive scaler is shedding.
@@ -1023,7 +1077,7 @@ fn serve_fleet_plan_inner(
                             }
                         }
                     }
-                    if plan.migration.enabled {
+                    if let Some(mspec) = plan.migration.as_ref() {
                         let link_ok = faults
                             .as_ref()
                             .map(|f| now >= f.link_down_until)
@@ -1034,8 +1088,8 @@ fn serve_fleet_plan_inner(
                                 now,
                                 policy,
                                 model,
-                                &plan.migration,
-                                plan.predict.kv_pressure,
+                                mspec,
+                                pspec.kv_pressure,
                                 &mut migrations,
                                 &mut pr.counters,
                             );
@@ -1056,7 +1110,8 @@ fn serve_fleet_plan_inner(
                         // Warm-up energy, same accounting as a shadow.
                         rp.shadow_energy +=
                             idle_power_w(&spec, FREQ_MAX_MHZ) * fs.spawn_time_s;
-                        rp.engines.push(EngineRt::new(spec, now));
+                        let share = rp.prefix_share;
+                        rp.engines.push(EngineRt::new(spec, now, share));
                         rp.active = true;
                         rp.next_tick =
                             rp.scaler.as_ref().map(|s| now + s.interval_s);
@@ -1071,12 +1126,12 @@ fn serve_fleet_plan_inner(
         // capacity, take the periodic checkpoints, work the retry
         // queue.  Runs after activation completions so a spawn and the
         // work waiting on it meet at the same decision point.
-        if let Some(f) = faults.as_mut() {
+        if let (Some(f), Some(fspec)) = (faults.as_mut(), plan.faults.as_ref()) {
             fault_post_pass(
                 f,
                 &mut replicas,
                 now,
-                &plan.faults,
+                fspec,
                 plan.router,
                 &mut rr_cursor,
             );
@@ -1120,6 +1175,14 @@ fn serve_fleet_plan_inner(
             + rp.shadow_energy
             + rp.migration_energy;
         rp.stats.migration_energy_j = rp.migration_energy;
+        // Retired engines already folded their cached-prefill telemetry
+        // into `stats` when they were dropped; engines still live at
+        // the end of the run fold theirs here.
+        rp.stats.prefix_cached_tokens += rp
+            .engines
+            .iter()
+            .map(|e| e.sim.prefix_cached_tokens())
+            .sum::<u64>();
         rp.outcomes.sort_by(|a, b| a.id.cmp(&b.id));
         // The per-replica view gets the replica's OWN serving-window
         // end, not the fleet's: a replica drained and powered off at
@@ -1274,7 +1337,10 @@ fn requeue_or_route(
         .iter()
         .any(|r| r.active && r.engines.iter().any(|e| e.accepting))
     {
-        let tgt = route_arrival(router, rr_cursor, replicas, req.prompt_tokens);
+        // Recovery re-placement routes policy-only (no affinity
+        // overlay): the crashed source's shared blocks are gone, and
+        // the prefix re-shares wherever the retry lands.
+        let tgt = route_arrival(router, rr_cursor, replicas, &req, false);
         replicas[tgt].catch_up_tick(now);
         replicas[tgt].route_epoch += 1;
         replicas[tgt].queue.push_back(req);
@@ -1342,6 +1408,7 @@ fn recover_checkpoint(
         predicted_gen: adjusted,
         deadline_s: ckpt.req.arrival_s + dst.sched.slo.e2e_p99,
         lost: ckpt.lost,
+        kv_discount_blocks: 0,
     };
     match de.sim.restore(ckpt, now + stall) {
         Ok(()) => {
@@ -1431,7 +1498,8 @@ fn fault_pre_pass(
         rp.respawn_at = None;
         let espec = rp.respec();
         rp.shadow_energy += idle_power_w(&espec, FREQ_MAX_MHZ) * fspec.respawn_s;
-        rp.engines.push(EngineRt::new(espec, now));
+        let share = rp.prefix_share;
+        rp.engines.push(EngineRt::new(espec, now, share));
         if let Some((cap, _)) = rp.thermal {
             if let Some(e) = rp.engines.last_mut() {
                 e.sim.dvfs.set_cap(now, cap);
@@ -1593,7 +1661,7 @@ fn fault_post_pass(
         if capacity(replicas) {
             let held: Vec<Request> = f.pending.drain(..).collect();
             for req in held {
-                let tgt = route_arrival(router, rr_cursor, replicas, req.prompt_tokens);
+                let tgt = route_arrival(router, rr_cursor, replicas, &req, false);
                 replicas[tgt].catch_up_tick(now);
                 replicas[tgt].route_epoch += 1;
                 replicas[tgt].queue.push_back(req);
@@ -1641,7 +1709,7 @@ fn fault_post_pass(
         for (_, attempt, req) in batch {
             if capacity(replicas) {
                 f.counters.retries += 1;
-                let tgt = route_arrival(router, rr_cursor, replicas, req.prompt_tokens);
+                let tgt = route_arrival(router, rr_cursor, replicas, &req, false);
                 replicas[tgt].catch_up_tick(now);
                 replicas[tgt].route_epoch += 1;
                 replicas[tgt].queue.push_back(req);
@@ -1756,6 +1824,8 @@ pub fn outcome_digest(out: &FleetOutcome) -> u64 {
         h.f64(s.migration_energy_j);
         h.u64(s.shed);
         h.u64(s.faulted_lost);
+        h.u64(s.peak_kv_blocks as u64);
+        h.u64(s.prefix_cached_tokens);
         h.series(&s.e2e);
         h.series(&s.tbt);
         h.series(&s.ttft);
@@ -1820,16 +1890,27 @@ pub fn outcome_digest(out: &FleetOutcome) -> u64 {
     h.0
 }
 
-/// Pick the replica an arrival (of `prompt_tokens`) is routed to.  The
-/// capacity-aware policies score the request against each replica's
-/// OWN grid, so a prompt that can never fit a small replica is not
-/// parked there while a larger one exists.
+/// Pick the replica an arrival is routed to.  The capacity-aware
+/// policies score the request against each replica's OWN grid, so a
+/// prompt that can never fit a small replica is not parked there while
+/// a larger one exists.
+///
+/// With `--prefix-share on` (`prefix_affinity`), a session turn whose
+/// prefix group is already resident somewhere gets the affinity
+/// overlay first: it lands on the best-scoring resident replica when
+/// one has genuine headroom, re-using the shared blocks instead of
+/// re-allocating the prefix elsewhere.  When no resident replica has
+/// headroom — or sharing is off — routing falls through to the
+/// configured policy unchanged, so `--prefix-share off` stays
+/// byte-identical to the pre-sharing router.
 fn route_arrival(
     router: RouterPolicy,
     rr_cursor: &mut usize,
     replicas: &mut [Replica],
-    prompt_tokens: u32,
+    req: &Request,
+    prefix_affinity: bool,
 ) -> usize {
+    let prompt_tokens = req.prompt_tokens;
     let active: Vec<usize> = replicas
         .iter()
         .enumerate()
@@ -1839,41 +1920,59 @@ fn route_arrival(
     match active.len() {
         0 => 0, // unreachable: the fleet axis keeps >= 1 active
         1 => active[0],
-        _ => match router {
-            RouterPolicy::RoundRobin => {
-                let i = active[*rr_cursor % active.len()];
-                *rr_cursor += 1;
-                i
-            }
-            RouterPolicy::LeastLoaded => {
-                // Outstanding work normalized by each replica's own
-                // batch capacity (ties keep the lowest index, matching
-                // the unnormalized homogeneous behavior exactly).
-                let mut best = active[0];
-                let mut best_load = f64::INFINITY;
+        _ => {
+            if prefix_affinity && req.prefix_group != 0 {
+                // Coordination phase, replica-index order: scoring is
+                // deterministic and thread-count independent.
+                let mut scored = Vec::with_capacity(active.len());
                 for &i in &active {
-                    let cap = replicas[i].batch_capacity().max(1) as f64;
-                    let load = replicas[i].outstanding() as f64 / cap;
-                    if load < best_load {
-                        best_load = load;
-                        best = i;
-                    }
-                }
-                best
-            }
-            RouterPolicy::ProjectedHeadroom => {
-                let mut best = active[0];
-                let mut best_score = f64::NEG_INFINITY;
-                for &i in &active {
+                    let resident = replicas[i].prefix_resident(req.prefix_group);
                     let score = replicas[i].headroom_for(prompt_tokens);
-                    if score > best_score {
-                        best_score = score;
-                        best = i;
+                    scored.push((i, score, resident));
+                }
+                if scored.iter().any(|&(_, s, r)| r && s > 0.0) {
+                    if let Some(i) = select_with_affinity(scored) {
+                        return i;
                     }
                 }
-                best
             }
-        },
+            match router {
+                RouterPolicy::RoundRobin => {
+                    let i = active[*rr_cursor % active.len()];
+                    *rr_cursor += 1;
+                    i
+                }
+                RouterPolicy::LeastLoaded => {
+                    // Outstanding work normalized by each replica's own
+                    // batch capacity (ties keep the lowest index,
+                    // matching the unnormalized homogeneous behavior
+                    // exactly).
+                    let mut best = active[0];
+                    let mut best_load = f64::INFINITY;
+                    for &i in &active {
+                        let cap = replicas[i].batch_capacity().max(1) as f64;
+                        let load = replicas[i].outstanding() as f64 / cap;
+                        if load < best_load {
+                            best_load = load;
+                            best = i;
+                        }
+                    }
+                    best
+                }
+                RouterPolicy::ProjectedHeadroom => {
+                    let mut best = active[0];
+                    let mut best_score = f64::NEG_INFINITY;
+                    for &i in &active {
+                        let score = replicas[i].headroom_for(prompt_tokens);
+                        if score > best_score {
+                            best_score = score;
+                            best = i;
+                        }
+                    }
+                    best
+                }
+            }
+        }
     }
 }
 
@@ -2717,9 +2816,9 @@ mod tests {
         let small = ReplicaSpec::fixed(llama2_13b(1)); // 120 blocks
         let big = ReplicaSpec::fixed(llama2_13b(2)); // 439 blocks
         let replicas = vec![
-            Replica::new(0, &small, slo, policy),
-            Replica::new(1, &big, slo, policy),
-            Replica::new(2, &small, slo, policy),
+            Replica::new(0, &small, slo, policy, false),
+            Replica::new(1, &big, slo, policy, false),
+            Replica::new(2, &small, slo, policy, false),
         ];
         // 20k-token prompt: 313 blocks; only the TP2 replica can ever
         // hold it.
@@ -2737,6 +2836,7 @@ mod tests {
             &ReplicaSpec::fixed(spec),
             SloSpec::new(0.2, 30.2),
             Policy::throttle_only(),
+            false,
         )
     }
 
@@ -2747,6 +2847,8 @@ mod tests {
             gen_tokens: 200,
             predicted_gen: 200,
             arrival_s: 0.0,
+            prefix_group: 0,
+            shared_prefix_tokens: 0,
         }
     }
 
@@ -2990,6 +3092,7 @@ mod tests {
             predicted_gen: 200,
             deadline_s: deadline,
             lost: false,
+            kv_discount_blocks: 0,
         });
     }
 
@@ -3385,8 +3488,8 @@ mod tests {
             Policy::throttle_only(),
             false,
         )
-        .with_migration(MigrationSpec::enabled_default())
-        .with_faults(fspec);
+        .with_migration(Some(MigrationSpec::enabled_default()))
+        .with_faults(Some(fspec));
         let out = serve_fleet_plan(&cfg, Policy::throttle_only(), &m, &reqs, &plan);
         let s = &out.total.stats;
         // Every request is accounted for exactly once: completed,
@@ -3433,7 +3536,7 @@ mod tests {
                 Policy::throttle_only(),
                 false,
             )
-            .with_faults(FaultSpec { seed, ..fspec });
+            .with_faults(Some(FaultSpec { seed, ..fspec }));
             outcome_digest(&serve_fleet_plan(
                 &cfg,
                 Policy::throttle_only(),

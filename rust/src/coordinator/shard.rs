@@ -83,9 +83,10 @@ pub(crate) struct EngineRt {
 }
 
 impl EngineRt {
-    pub(crate) fn new(spec: EngineSpec, at: f64) -> Self {
+    pub(crate) fn new(spec: EngineSpec, at: f64, prefix_share: bool) -> Self {
         let block_tokens = spec.block_tokens;
-        let mut sim = EngineSim::new(spec, FREQ_MAX_MHZ);
+        let mut sim =
+            EngineSim::new(spec, FREQ_MAX_MHZ).with_prefix_sharing(prefix_share);
         sim.account_idle(at.max(0.0)); // zero-cost: marks accounting start
         Self {
             sim,
@@ -199,6 +200,10 @@ pub(crate) struct Replica {
     /// wholesale each checkpoint tick — what crash recovery restores
     /// from.  Always empty with `--faults off`.
     pub(crate) ckpt_store: Vec<(RequestId, KvCheckpoint)>,
+    /// Whether engines booted on this replica share prefix KV blocks
+    /// copy-on-write (`--prefix-share`).  Carried here so respawns and
+    /// shadow-instancing switches inherit the fleet-wide setting.
+    pub(crate) prefix_share: bool,
 }
 
 impl Replica {
@@ -207,6 +212,7 @@ impl Replica {
         rspec: &ReplicaSpec,
         fleet_slo: SloSpec,
         policy: Policy,
+        prefix_share: bool,
     ) -> Self {
         let scaler = if policy.autoscaling && !rspec.scale_set.is_empty() {
             Some(Autoscaler::new(rspec.scale_set.clone(), 0))
@@ -222,7 +228,7 @@ impl Replica {
             id,
             sched: Scheduler::new(rspec.slo.unwrap_or(fleet_slo)),
             rspec: rspec.clone(),
-            engines: vec![EngineRt::new(spec, 0.0)],
+            engines: vec![EngineRt::new(spec, 0.0, prefix_share)],
             queue: VecDeque::new(),
             scaler,
             next_tick,
@@ -245,6 +251,7 @@ impl Replica {
             thermal: None,
             preempt_deadline: None,
             ckpt_store: Vec::new(),
+            prefix_share,
         }
     }
 
@@ -280,6 +287,19 @@ impl Replica {
             .find(|e| e.accepting)
             .map(|e| e.sim.spec().max_batch)
             .unwrap_or(0)
+    }
+
+    /// Router signal: whether `group`'s shared prefix blocks are
+    /// resident on the ACCEPTING engine — the engine a routed arrival
+    /// would actually admit into (a draining engine's residency cannot
+    /// be joined).  Always false for ungrouped requests and with
+    /// sharing off.
+    pub(crate) fn prefix_resident(&self, group: u64) -> bool {
+        group != 0
+            && self
+                .engines
+                .iter()
+                .any(|e| e.accepting && e.sim.shared_prefix_blocks(group) > 0)
     }
 
     /// Router signal: projected KV/batch headroom of the accepting
@@ -434,6 +454,9 @@ impl Replica {
                 }
                 progressed = true;
                 // Telemetry
+                if report.kv_blocks > self.stats.peak_kv_blocks {
+                    self.stats.peak_kv_blocks = report.kv_blocks;
+                }
                 self.stats.power.push(report.power_w);
                 self.stats.freq.push(report.freq_mhz as f64);
                 self.stats.iter_tbt.push(report.duration_s);
@@ -498,14 +521,16 @@ impl Replica {
         }
 
         // Retire drained non-accepting engines (graceful shutdown
-        // done), folding their accumulated energy and final clock
-        // into the replica.
+        // done), folding their accumulated energy, prefix-cache
+        // savings and final clock into the replica.
         let retired = &mut self.retired_energy;
         let last = &mut self.last_event_s;
+        let cached = &mut self.stats.prefix_cached_tokens;
         self.engines.retain(|e| {
             let keep = e.accepting || !e.sim.is_idle();
             if !keep {
                 *retired += e.sim.total_energy_j();
+                *cached += e.sim.prefix_cached_tokens();
                 if e.cursor > *last {
                     *last = e.cursor;
                 }
@@ -590,7 +615,7 @@ impl Replica {
                     for e in self.engines.iter_mut() {
                         e.accepting = false;
                     }
-                    self.engines.push(EngineRt::new(spec, now));
+                    self.engines.push(EngineRt::new(spec, now, self.prefix_share));
                     // The silicon's thermal ceiling outlives any one
                     // engine: a window opened on this replica caps the
                     // freshly-booted engine too.
@@ -643,6 +668,7 @@ impl Replica {
             e.sim.account_idle(now);
             orphans.extend(e.sim.drain());
             self.retired_energy += e.sim.total_energy_j();
+            self.stats.prefix_cached_tokens += e.sim.prefix_cached_tokens();
             if e.cursor > self.last_event_s {
                 self.last_event_s = e.cursor;
             }
@@ -732,7 +758,19 @@ fn try_admissions(
         let adjusted =
             conservative_adjust(req.predicted_gen, cfg.predictor_p95_error, cfg.max_tokens);
         let k = sim.iter_index();
-        let entry = entry_for(req.id, req.prompt_tokens, adjusted, req.arrival_s, k, &sched.slo);
+        let mut entry =
+            entry_for(req.id, req.prompt_tokens, adjusted, req.arrival_s, k, &sched.slo);
+        // §IV-B prefix discount: full prefix blocks ALREADY resident
+        // for this request's group are shared copy-on-write at admit,
+        // so the projection must not count them a second time.  The
+        // first group member finds nothing resident and pays the full
+        // footprint; `shared_prefix_blocks` is 0 whenever sharing is
+        // off, keeping the off path's arithmetic untouched.
+        if req.prefix_group != 0 {
+            entry.kv_discount_blocks = sim
+                .shared_prefix_blocks(req.prefix_group)
+                .min(req.shared_prefix_tokens.min(req.prompt_tokens) / spec.block_tokens);
+        }
 
         let lost = if policy.slo_admission {
             sb.virtual_append(entry);
@@ -759,8 +797,9 @@ fn try_admissions(
                 }
             }
         } else {
-            // Triton baseline: KV-capacity gate only.
-            if !sim.kv_fits(req.prompt_tokens) {
+            // Triton baseline: KV-capacity gate only (prefix-aware —
+            // a resident shared prefix only needs its private tail).
+            if !sim.kv_fits_request(req) {
                 *blocked_head = Some((req.id, *completions));
                 break;
             }
@@ -1016,7 +1055,7 @@ pub fn steady_state_sweep(
     const ROUND_S: f64 = 0.25;
     let total = warmup_rounds + rounds;
     let rspec = ReplicaSpec::from_config(cfg, policy.autoscaling);
-    let mut rp = Replica::new(0, &rspec, cfg.slo, policy);
+    let mut rp = Replica::new(0, &rspec, cfg.slo, policy, false);
     // Stock the queue up front (arrivals spread over the whole run so
     // admission deadlines stay live): measured rounds then only pop
     // from the front of a warm ring buffer — the sweep exercises
@@ -1031,6 +1070,8 @@ pub fn steady_state_sweep(
             gen_tokens: 24,
             predicted_gen: 24,
             arrival_s: i as f64 * spacing,
+            prefix_group: 0,
+            shared_prefix_tokens: 0,
         });
     }
     rp.wake_and_admit(0.0, cfg, policy, model);
@@ -1095,7 +1136,7 @@ mod tests {
         let model = PerfModel::train(&[spec], 40, 0);
         let rspec = ReplicaSpec::from_config(&cfg, false);
         let mut replicas: Vec<Replica> = (0..5)
-            .map(|id| Replica::new(id, &rspec, cfg.slo, policy))
+            .map(|id| Replica::new(id, &rspec, cfg.slo, policy, false))
             .collect();
         std::thread::scope(|scope| {
             let mut pool =

@@ -157,6 +157,7 @@ mod tests {
             predicted_gen: pred,
             deadline_s: deadline,
             lost: false,
+            kv_discount_blocks: 0,
         }
     }
 

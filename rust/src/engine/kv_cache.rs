@@ -1,15 +1,38 @@
 //! Paged KV-cache block allocator (the vLLM/TensorRT-LLM "paged
-//! attention" substrate, paper §II).
+//! attention" substrate, paper §II), with ref-counted copy-on-write
+//! prefix sharing.
 //!
 //! Blocks hold `N = block_tokens` tokens.  A request occupying `t`
 //! tokens holds `ceil(t / N)` blocks — exactly the quantity Eq. (1) of
 //! the paper projects.  Blocks are recycled through a free list; the
 //! allocator refuses to overcommit (the scheduler's KV-capacity check
 //! exists to keep swapping from ever happening).
+//!
+//! ## Prefix sharing
+//!
+//! Requests carrying the same nonzero *prefix group* (a common system
+//! prompt in a session workload) can share the FULL blocks of that
+//! prefix: the first member pays for them ([`KvAllocator::share`]),
+//! later members bump a ref count instead of allocating
+//! ([`KvAllocator::allocate_in_group`]).  Only whole blocks are shared
+//! — the prefix's trailing partial block would be written past by each
+//! member's own tokens, so it stays private (block-granular CoW, as in
+//! vLLM's prefix caching).  [`KvAllocator::release`] decrements the
+//! group ref count and the LAST owner returns the shared blocks to the
+//! free list; [`KvAllocator::fork`] detaches one member by copying the
+//! shared blocks into private ones (live migration "copies, not
+//! steals" — the departing resident takes a copy while co-residents
+//! keep the original).
+//!
+//! A run that never calls the sharing API leaves `shared` empty and
+//! pops the free list in exactly the pre-sharing order — the
+//! `--prefix-share off` byte-identity contract (pinned by the
+//! `sharing_off_is_bit_identical_to_the_pre_fork_allocator` property
+//! test in `tests/kv_prefix.rs`).
 
-// Reviewed HashMap use: `held` is keyed lookup only on the serving
-// path; the sole iterations live in `check_invariants` and are
-// order-independent (see the detlint r2 allows there).
+// Reviewed HashMap use: `held` and `shared` are keyed lookup only on
+// the serving path; the sole iterations live in `check_invariants` and
+// are order-independent (see the detlint r2 allows there).
 #![allow(clippy::disallowed_types)]
 
 use std::collections::HashMap;
@@ -22,14 +45,40 @@ pub fn blocks_for(tokens: u32, block_tokens: u32) -> u32 {
     tokens.div_ceil(block_tokens)
 }
 
+/// One request's holding: its registered token occupancy and the
+/// blocks it PRIVATELY owns.  Members of a prefix group additionally
+/// reference `group`'s shared blocks, which are not listed here.
+#[derive(Debug, Clone)]
+struct Held {
+    tokens: u32,
+    blocks: Vec<u32>,
+    /// Prefix group whose shared blocks this request references
+    /// (0 = none).
+    group: u64,
+}
+
+/// A shared prefix: the full blocks of a common prompt prefix, owned
+/// jointly by `refs` live requests.
+#[derive(Debug, Clone)]
+struct SharedPrefix {
+    /// Prefix length in tokens (the shared part covers
+    /// `blocks.len() * block_tokens` of these; the remainder lives in
+    /// each member's private tail).
+    tokens: u32,
+    blocks: Vec<u32>,
+    refs: u32,
+}
+
 /// Paged block allocator.
 #[derive(Debug, Clone)]
 pub struct KvAllocator {
     capacity_blocks: u32,
     block_tokens: u32,
     free: Vec<u32>,
-    /// request -> (token count, owned block ids)
-    held: HashMap<RequestId, (u32, Vec<u32>)>,
+    held: HashMap<RequestId, Held>,
+    /// prefix group -> shared full-block prefix (absent when no member
+    /// is resident; empty for sharing-off runs).
+    shared: HashMap<u64, SharedPrefix>,
 }
 
 /// Allocation failure: capacity would be exceeded.
@@ -59,6 +108,7 @@ impl KvAllocator {
             block_tokens,
             free: (0..capacity_blocks).rev().collect(),
             held: HashMap::new(),
+            shared: HashMap::new(),
         }
     }
 
@@ -78,16 +128,55 @@ impl KvAllocator {
         self.block_tokens
     }
 
-    /// Blocks held by one request.
+    /// The free list, top of stack last (test observability: the
+    /// sharing-off identity property compares this against the
+    /// pre-fork allocator's evolution step by step).
+    pub fn free_list(&self) -> &[u32] {
+        &self.free
+    }
+
+    /// Blocks PRIVATELY held by one request (shared prefix blocks it
+    /// references are counted by [`Self::shared_blocks_of_group`]).
     pub fn blocks_of(&self, id: RequestId) -> u32 {
-        self.held.get(&id).map(|(_, b)| b.len() as u32).unwrap_or(0)
+        self.held.get(&id).map(|h| h.blocks.len() as u32).unwrap_or(0)
     }
 
     /// Token occupancy registered for one request (the checkpoint /
     /// restore unit: restoring at this count re-allocates exactly the
     /// blocks the request held).
     pub fn tokens_of(&self, id: RequestId) -> Option<u32> {
-        self.held.get(&id).map(|(t, _)| *t)
+        self.held.get(&id).map(|h| h.tokens)
+    }
+
+    /// Prefix group a held request references (0 = none).
+    pub fn group_of(&self, id: RequestId) -> u64 {
+        self.held.get(&id).map(|h| h.group).unwrap_or(0)
+    }
+
+    /// Resident shared full blocks of a prefix group (0 when absent).
+    pub fn shared_blocks_of_group(&self, group: u64) -> u32 {
+        self.shared.get(&group).map(|s| s.blocks.len() as u32).unwrap_or(0)
+    }
+
+    /// Registered prefix length of a resident group, tokens.
+    pub fn shared_tokens_of_group(&self, group: u64) -> Option<u32> {
+        self.shared.get(&group).map(|s| s.tokens)
+    }
+
+    /// How many blocks a NEW member of `group` at `tokens` occupancy
+    /// would actually need from the free list: the full prefix blocks
+    /// are free when the group is already resident.
+    pub fn blocks_needed(&self, tokens: u32, group: u64, prefix_tokens: u32) -> u32 {
+        let total = blocks_for(tokens, self.block_tokens);
+        if group == 0 {
+            return total;
+        }
+        let nshare = (prefix_tokens.min(tokens)) / self.block_tokens;
+        if self.shared.contains_key(&group) {
+            total - nshare.min(total)
+        } else {
+            total
+        }
     }
 
     /// Register a request at `tokens` occupancy (prompt after prefill).
@@ -104,20 +193,116 @@ impl KvAllocator {
             });
         }
         let blocks = (0..need).map(|_| self.free.pop().unwrap()).collect();
-        self.held.insert(id, (tokens, blocks));
+        self.held.insert(
+            id,
+            Held {
+                tokens,
+                blocks,
+                group: 0,
+            },
+        );
         Ok(())
+    }
+
+    /// Take (or join) the shared full-block prefix of `group`: the
+    /// first caller allocates `prefix_tokens / N` blocks, later
+    /// callers bump the ref count.  Returns the number of shared
+    /// blocks.  All members of a group must agree on `prefix_tokens`.
+    pub fn share(&mut self, group: u64, prefix_tokens: u32) -> Result<u32, KvExhausted> {
+        assert!(group != 0, "group 0 is reserved for ungrouped requests");
+        if let Some(s) = self.shared.get_mut(&group) {
+            assert_eq!(
+                s.tokens, prefix_tokens,
+                "prefix group {group} joined with a different prefix length"
+            );
+            s.refs += 1;
+            return Ok(s.blocks.len() as u32);
+        }
+        let nshare = prefix_tokens / self.block_tokens;
+        if nshare > self.free.len() as u32 {
+            return Err(KvExhausted {
+                need: nshare,
+                free: self.free.len() as u32,
+            });
+        }
+        let blocks: Vec<u32> = (0..nshare).map(|_| self.free.pop().unwrap()).collect();
+        self.shared.insert(
+            group,
+            SharedPrefix {
+                tokens: prefix_tokens,
+                blocks,
+                refs: 1,
+            },
+        );
+        Ok(nshare)
+    }
+
+    /// Register a request at `tokens` occupancy as a member of
+    /// `group`, sharing the group's full prefix blocks.  Returns the
+    /// number of blocks shared (what admission saved).  Atomic: on
+    /// exhaustion nothing changes.
+    pub fn allocate_in_group(
+        &mut self,
+        id: RequestId,
+        tokens: u32,
+        group: u64,
+        prefix_tokens: u32,
+    ) -> Result<u32, KvExhausted> {
+        assert!(
+            !self.held.contains_key(&id),
+            "request {id} already allocated"
+        );
+        assert!(group != 0, "use allocate() for ungrouped requests");
+        assert!(
+            prefix_tokens <= tokens,
+            "shared prefix ({prefix_tokens}) longer than occupancy ({tokens})"
+        );
+        let total = blocks_for(tokens, self.block_tokens);
+        let nshare = prefix_tokens / self.block_tokens;
+        let priv_need = total - nshare.min(total);
+        let share_need = if self.shared.contains_key(&group) {
+            0
+        } else {
+            nshare
+        };
+        if priv_need + share_need > self.free.len() as u32 {
+            return Err(KvExhausted {
+                need: priv_need + share_need,
+                free: self.free.len() as u32,
+            });
+        }
+        let nshare = self.share(group, prefix_tokens).expect("checked above");
+        let blocks = (0..priv_need).map(|_| self.free.pop().unwrap()).collect();
+        self.held.insert(
+            id,
+            Held {
+                tokens,
+                blocks,
+                group,
+            },
+        );
+        Ok(nshare)
     }
 
     /// Grow a request to `tokens` total (decode appends one token per
     /// iteration; a new block is taken only on boundary crossings).
+    /// Growth is always private — the shared prefix never grows.
     pub fn grow_to(&mut self, id: RequestId, tokens: u32) -> Result<(), KvExhausted> {
-        let (cur, blocks) = self
-            .held
-            .get_mut(&id)
-            .unwrap_or_else(|| panic!("grow of unknown request {id}"));
-        assert!(tokens >= *cur, "KV shrink not supported");
+        let shared_len = {
+            let h = self
+                .held
+                .get(&id)
+                .unwrap_or_else(|| panic!("grow of unknown request {id}"));
+            if h.group == 0 {
+                0
+            } else {
+                self.shared_blocks_of_group(h.group)
+            }
+        };
+        let h = self.held.get_mut(&id).unwrap();
+        assert!(tokens >= h.tokens, "KV shrink not supported");
         let need_total = blocks_for(tokens, self.block_tokens);
-        let extra = need_total.saturating_sub(blocks.len() as u32);
+        let extra = need_total.saturating_sub(shared_len + h.blocks.len() as u32);
         if extra > self.free.len() as u32 {
             return Err(KvExhausted {
                 need: extra,
@@ -125,43 +310,122 @@ impl KvAllocator {
             });
         }
         for _ in 0..extra {
-            blocks.push(self.free.pop().unwrap());
+            h.blocks.push(self.free.pop().unwrap());
         }
-        *cur = tokens;
+        h.tokens = tokens;
         Ok(())
     }
 
-    /// Release every block of a completed request.
+    /// Detach a group member from its shared prefix by COPYING the
+    /// shared blocks into private ones (copy-on-write fork: used when
+    /// a resident leaves via checkpoint/migration while co-residents
+    /// keep the original).  No-op for ungrouped requests.  Atomic on
+    /// exhaustion.
+    pub fn fork(&mut self, id: RequestId) -> Result<(), KvExhausted> {
+        let (group, nshare) = {
+            let h = self
+                .held
+                .get(&id)
+                .unwrap_or_else(|| panic!("fork of unknown request {id}"));
+            if h.group == 0 {
+                return Ok(());
+            }
+            (h.group, self.shared_blocks_of_group(h.group))
+        };
+        if nshare > self.free.len() as u32 {
+            return Err(KvExhausted {
+                need: nshare,
+                free: self.free.len() as u32,
+            });
+        }
+        let mut copies: Vec<u32> = (0..nshare).map(|_| self.free.pop().unwrap()).collect();
+        let h = self.held.get_mut(&id).unwrap();
+        // The copied prefix blocks lead, mirroring token order.
+        copies.extend(h.blocks.iter().copied());
+        h.blocks = copies;
+        h.group = 0;
+        self.deref_group(group);
+        Ok(())
+    }
+
+    fn deref_group(&mut self, group: u64) {
+        let s = self
+            .shared
+            .get_mut(&group)
+            .unwrap_or_else(|| panic!("deref of absent prefix group {group}"));
+        s.refs -= 1;
+        if s.refs == 0 {
+            let s = self.shared.remove(&group).unwrap();
+            self.free.extend(s.blocks);
+        }
+    }
+
+    /// Release every block of a completed request.  The group ref
+    /// count drops with it; the LAST member frees the shared prefix.
     pub fn release(&mut self, id: RequestId) {
-        if let Some((_, blocks)) = self.held.remove(&id) {
-            self.free.extend(blocks);
+        if let Some(h) = self.held.remove(&id) {
+            self.free.extend(h.blocks);
+            if h.group != 0 {
+                self.deref_group(h.group);
+            }
         }
     }
 
     /// Invariant check (used by property tests): no block is both free
-    /// and held, and accounting adds up.
+    /// and held/shared, accounting adds up, and group ref counts match
+    /// the membership.
     pub fn check_invariants(&self) {
         // detlint: allow(r2, reason = "a sum over map values is commutative; iteration order cannot affect the assert")
-        let held: u32 = self.held.values().map(|(_, b)| b.len() as u32).sum();
-        assert_eq!(held + self.free_blocks(), self.capacity_blocks);
+        let held: u32 = self.held.values().map(|h| h.blocks.len() as u32).sum();
+        // detlint: allow(r2, reason = "a sum over map values is commutative; iteration order cannot affect the assert")
+        let shared: u32 = self.shared.values().map(|s| s.blocks.len() as u32).sum();
+        assert_eq!(held + shared + self.free_blocks(), self.capacity_blocks);
         let mut seen = vec![false; self.capacity_blocks as usize];
         for b in &self.free {
             assert!(!seen[*b as usize], "block {b} double-owned");
             seen[*b as usize] = true;
         }
         // detlint: allow(r2, reason = "double-ownership scan marks each block once; the verdict is order-independent")
-        for (_id, (_tokens, blocks)) in &self.held {
-            for b in blocks {
+        for (_id, h) in &self.held {
+            for b in &h.blocks {
+                assert!(!seen[*b as usize], "block {b} double-owned");
+                seen[*b as usize] = true;
+            }
+        }
+        // detlint: allow(r2, reason = "double-ownership scan marks each block once; the verdict is order-independent")
+        for (_g, s) in &self.shared {
+            for b in &s.blocks {
                 assert!(!seen[*b as usize], "block {b} double-owned");
                 seen[*b as usize] = true;
             }
         }
         // detlint: allow(r2, reason = "per-entry assert touches each request independently; order cannot affect the verdict")
-        for (id, (tokens, blocks)) in &self.held {
+        for (id, h) in &self.held {
+            let shared_len = if h.group == 0 {
+                0
+            } else {
+                let s = self
+                    .shared
+                    .get(&h.group)
+                    .unwrap_or_else(|| panic!("request {id} references absent group {}", h.group));
+                assert!(s.refs > 0, "group {} resident with zero refs", h.group);
+                s.blocks.len() as u32
+            };
             assert_eq!(
-                blocks.len() as u32,
-                blocks_for(*tokens, self.block_tokens),
+                shared_len + h.blocks.len() as u32,
+                blocks_for(h.tokens, self.block_tokens),
                 "request {id} block count mismatch"
+            );
+        }
+        // detlint: allow(r2, reason = "per-group assert compares a count computed from the full membership; order cannot affect the verdict")
+        for (g, s) in &self.shared {
+            assert!(s.refs > 0, "group {g} resident with zero refs");
+            // detlint: allow(r2, reason = "a membership count over map values is commutative")
+            let members = self.held.values().filter(|h| h.group == *g).count() as u32;
+            assert_eq!(
+                s.refs, members,
+                "group {g} ref count {} != membership {members}",
+                s.refs
             );
         }
     }
@@ -231,6 +495,119 @@ mod tests {
     fn release_unknown_is_noop() {
         let mut kv = KvAllocator::new(4, 64);
         kv.release(99);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn shared_prefix_is_paid_once() {
+        let mut kv = KvAllocator::new(20, 64);
+        // 256-token prefix = 4 full blocks; each member adds its own
+        // tail.  320 tokens total -> 5 blocks, 4 of them shared.
+        let n = kv.allocate_in_group(1, 320, 7, 256).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(kv.used_blocks(), 5);
+        assert_eq!(kv.blocks_of(1), 1);
+        let n = kv.allocate_in_group(2, 320, 7, 256).unwrap();
+        assert_eq!(n, 4);
+        // Second member only pays its private tail.
+        assert_eq!(kv.used_blocks(), 6);
+        assert_eq!(kv.shared_blocks_of_group(7), 4);
+        kv.check_invariants();
+        // Unshared would have cost 10 blocks.
+        assert_eq!(kv.blocks_needed(320, 7, 256), 1);
+        assert_eq!(kv.blocks_needed(320, 8, 256), 5);
+    }
+
+    #[test]
+    fn partial_prefix_block_stays_private() {
+        let mut kv = KvAllocator::new(20, 64);
+        // 100-token prefix: only 1 full block shared, the 36-token
+        // tail is in each member's private part.
+        kv.allocate_in_group(1, 150, 3, 100).unwrap();
+        assert_eq!(kv.shared_blocks_of_group(3), 1);
+        assert_eq!(kv.blocks_of(1), blocks_for(150, 64) - 1);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn last_owner_frees_the_prefix() {
+        let mut kv = KvAllocator::new(20, 64);
+        kv.allocate_in_group(1, 256, 5, 256).unwrap();
+        kv.allocate_in_group(2, 300, 5, 256).unwrap();
+        kv.release(1);
+        // Prefix survives the first release...
+        assert_eq!(kv.shared_blocks_of_group(5), 4);
+        kv.check_invariants();
+        kv.release(2);
+        // ...and the last owner frees it.
+        assert_eq!(kv.shared_blocks_of_group(5), 0);
+        assert_eq!(kv.used_blocks(), 0);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn growth_is_private() {
+        let mut kv = KvAllocator::new(20, 64);
+        kv.allocate_in_group(1, 256, 5, 256).unwrap();
+        kv.allocate_in_group(2, 256, 5, 256).unwrap();
+        let used = kv.used_blocks();
+        kv.grow_to(1, 257).unwrap();
+        assert_eq!(kv.used_blocks(), used + 1);
+        assert_eq!(kv.shared_blocks_of_group(5), 4);
+        kv.check_invariants();
+        kv.release(1);
+        kv.release(2);
+        assert_eq!(kv.used_blocks(), 0);
+    }
+
+    #[test]
+    fn fork_copies_not_steals() {
+        let mut kv = KvAllocator::new(20, 64);
+        kv.allocate_in_group(1, 300, 5, 256).unwrap();
+        kv.allocate_in_group(2, 300, 5, 256).unwrap();
+        let used = kv.used_blocks();
+        kv.fork(1).unwrap();
+        // The forked member now owns private copies of all 4 prefix
+        // blocks; the co-resident keeps the shared original.
+        assert_eq!(kv.used_blocks(), used + 4);
+        assert_eq!(kv.group_of(1), 0);
+        assert_eq!(kv.blocks_of(1), blocks_for(300, 64));
+        assert_eq!(kv.shared_blocks_of_group(5), 4);
+        kv.check_invariants();
+        // Releasing the forked copy leaves the shared prefix intact.
+        kv.release(1);
+        assert_eq!(kv.shared_blocks_of_group(5), 4);
+        kv.check_invariants();
+        // Forking the LAST member frees the shared original.
+        kv.fork(2).unwrap();
+        assert_eq!(kv.shared_blocks_of_group(5), 0);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn fork_of_solo_request_is_noop() {
+        let mut kv = KvAllocator::new(4, 64);
+        kv.allocate(1, 64).unwrap();
+        let free_before = kv.free_list().to_vec();
+        kv.fork(1).unwrap();
+        assert_eq!(kv.free_list(), &free_before[..]);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn group_allocation_failures_are_atomic() {
+        let mut kv = KvAllocator::new(5, 64);
+        // 4-block prefix + 1 private fits exactly...
+        kv.allocate_in_group(1, 320, 9, 256).unwrap();
+        // ...a second member's private tail does not.
+        let before = kv.free_list().to_vec();
+        assert!(kv.allocate_in_group(2, 320, 9, 256).is_err());
+        assert_eq!(kv.free_list(), &before[..]);
+        assert_eq!(kv.shared_blocks_of_group(9), 4);
+        kv.check_invariants();
+        // fork with no free blocks also fails atomically.
+        assert!(kv.fork(1).is_err());
+        assert_eq!(kv.group_of(1), 9);
         kv.check_invariants();
     }
 

@@ -18,12 +18,40 @@ pub struct Request {
     pub predicted_gen: u32,
     /// Arrival time.
     pub arrival_s: f64,
+    /// Prefix-sharing group (0 = none).  Requests with the same
+    /// nonzero group share the KV of their first
+    /// `shared_prefix_tokens` prompt tokens — a common system prompt
+    /// in a multi-turn session workload.
+    pub prefix_group: u64,
+    /// Length of the shared prefix in tokens (0 when ungrouped).
+    /// Always <= `prompt_tokens`.
+    pub shared_prefix_tokens: u32,
 }
 
 impl Request {
     /// Total KV tokens the request will occupy when fully generated.
     pub fn total_tokens(&self) -> u32 {
         self.prompt_tokens + self.gen_tokens
+    }
+
+    /// An ungrouped request (no shared prefix) — the construction every
+    /// single-shot workload uses.
+    pub fn solo(
+        id: RequestId,
+        prompt_tokens: u32,
+        gen_tokens: u32,
+        predicted_gen: u32,
+        arrival_s: f64,
+    ) -> Self {
+        Self {
+            id,
+            prompt_tokens,
+            gen_tokens,
+            predicted_gen,
+            arrival_s,
+            prefix_group: 0,
+            shared_prefix_tokens: 0,
+        }
     }
 }
 
@@ -60,13 +88,7 @@ mod tests {
 
     #[test]
     fn total_tokens_sums_phases() {
-        let r = Request {
-            id: 1,
-            prompt_tokens: 100,
-            gen_tokens: 50,
-            predicted_gen: 60,
-            arrival_s: 0.0,
-        };
+        let r = Request::solo(1, 100, 50, 60, 0.0);
         assert_eq!(r.total_tokens(), 150);
     }
 

@@ -30,6 +30,12 @@ struct Active {
     /// Tokens generated so far (first token produced by prefill).
     generated: u32,
     prefill_pending: bool,
+    /// Prompt tokens the prefill actually computes.  Equal to
+    /// `req.prompt_tokens` except when a shared prefix was already
+    /// resident at admission: prefix caching skips recomputing the
+    /// cached tokens' KV (vLLM/SGLang prefix-cache semantics), so the
+    /// fused prefill stall shrinks accordingly.
+    prefill_tokens: u32,
     /// Absolute time of the first token (set by the prefill iteration).
     first_token_s: Option<f64>,
     lost: bool,
@@ -139,6 +145,13 @@ pub struct EngineSim {
     total_energy_j: f64,
     /// Last time idle energy was accounted up to.
     accounted_until_s: f64,
+    /// Copy-on-write prefix sharing across same-group requests.  Off
+    /// by default: an engine that never turns it on is byte-identical
+    /// to the pre-sharing simulator.
+    prefix_share: bool,
+    /// Prompt tokens whose prefill was skipped because their shared
+    /// prefix was already resident (sums over the engine's lifetime).
+    prefix_cached_tokens: u64,
 }
 
 impl EngineSim {
@@ -152,7 +165,36 @@ impl EngineSim {
             iter_index: 0,
             total_energy_j: 0.0,
             accounted_until_s: 0.0,
+            prefix_share: false,
+            prefix_cached_tokens: 0,
         }
+    }
+
+    /// Enable copy-on-write prefix sharing (builder form used at
+    /// engine spawn; flipping it mid-run is not supported).
+    pub fn with_prefix_sharing(mut self, on: bool) -> Self {
+        self.prefix_share = on;
+        self
+    }
+
+    pub fn prefix_share_enabled(&self) -> bool {
+        self.prefix_share
+    }
+
+    /// Lifetime total of prompt tokens served from resident shared
+    /// prefixes instead of recomputed by prefill.
+    pub fn prefix_cached_tokens(&self) -> u64 {
+        self.prefix_cached_tokens
+    }
+
+    /// Resident shared full blocks of a prefix group (0 when absent or
+    /// sharing is off) — the router's session-affinity signal and the
+    /// admission double-count discount.
+    pub fn shared_prefix_blocks(&self, group: u64) -> u32 {
+        if !self.prefix_share || group == 0 {
+            return 0;
+        }
+        self.kv.shared_blocks_of_group(group)
     }
 
     pub fn spec(&self) -> &EngineSpec {
@@ -213,20 +255,58 @@ impl EngineSim {
         need <= self.kv.free_blocks()
     }
 
+    /// Prefix-aware [`Self::kv_fits`]: a request whose shared prefix
+    /// is already resident only needs free blocks for its private
+    /// tail.  Falls back to the plain prompt check when sharing is off
+    /// or the request is ungrouped.
+    pub fn kv_fits_request(&self, req: &Request) -> bool {
+        if self.prefix_share && req.prefix_group != 0 {
+            let pfx = req.shared_prefix_tokens.min(req.prompt_tokens);
+            let need = self
+                .kv
+                .blocks_needed(req.prompt_tokens, req.prefix_group, pfx);
+            need <= self.kv.free_blocks()
+        } else {
+            self.kv_fits(req.prompt_tokens)
+        }
+    }
+
     /// Admit a request: allocates prompt KV; prefill runs fused with
     /// the next iteration. Fails (leaving no state) on KV exhaustion.
+    /// With prefix sharing on, a grouped request joins its group's
+    /// shared prefix blocks and — when the prefix was ALREADY resident
+    /// — skips recomputing the cached tokens' prefill.
     pub fn admit(&mut self, req: Request, now: f64, lost: bool) -> anyhow::Result<()> {
         if self.batch() >= self.spec.max_batch {
             anyhow::bail!("engine at max batch {}", self.spec.max_batch);
         }
-        self.kv
-            .allocate(req.id, req.prompt_tokens)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cached_tokens = 0u32;
+        if self.prefix_share && req.prefix_group != 0 && req.shared_prefix_tokens > 0 {
+            let pfx = req.shared_prefix_tokens.min(req.prompt_tokens);
+            let resident = self.kv.shared_blocks_of_group(req.prefix_group) > 0;
+            let nshare = self
+                .kv
+                .allocate_in_group(req.id, req.prompt_tokens, req.prefix_group, pfx)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            if resident {
+                cached_tokens = nshare * self.spec.block_tokens;
+            }
+        } else {
+            self.kv
+                .allocate(req.id, req.prompt_tokens)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
+        // At least one prompt token is always computed (the final
+        // query token attends over the cached prefix).
+        let prefill_tokens = req.prompt_tokens.saturating_sub(cached_tokens).max(1);
+        self.prefix_cached_tokens +=
+            req.prompt_tokens.saturating_sub(prefill_tokens) as u64;
         self.active.push(Active {
             scheduled_iter: self.iter_index,
             scheduled_s: now,
             generated: 0,
             prefill_pending: true,
+            prefill_tokens,
             first_token_s: None,
             lost,
             stalled: false,
@@ -309,14 +389,44 @@ impl EngineSim {
             return Err(ckpt);
         }
         let tokens = ckpt.kv_tokens.max(ckpt.req.prompt_tokens).max(1);
-        if self.kv.allocate(ckpt.req.id, tokens).is_err() {
+        // A migrated member of a shared prefix COPIES: the source-side
+        // checkpoint released its reference (co-residents keep the
+        // original) and the destination re-shares with any resident
+        // group here, or pays for a fresh private copy.
+        let mut cached_tokens = 0u32;
+        if self.prefix_share && ckpt.req.prefix_group != 0 && ckpt.req.shared_prefix_tokens > 0
+        {
+            let pfx = ckpt.req.shared_prefix_tokens.min(tokens);
+            let resident = self.kv.shared_blocks_of_group(ckpt.req.prefix_group) > 0;
+            match self
+                .kv
+                .allocate_in_group(ckpt.req.id, tokens, ckpt.req.prefix_group, pfx)
+            {
+                Ok(nshare) => {
+                    if resident {
+                        cached_tokens = nshare * self.spec.block_tokens;
+                    }
+                }
+                Err(_) => return Err(ckpt),
+            }
+        } else if self.kv.allocate(ckpt.req.id, tokens).is_err() {
             return Err(ckpt);
+        }
+        let prefill_tokens = ckpt
+            .req
+            .prompt_tokens
+            .saturating_sub(cached_tokens)
+            .max(1);
+        if ckpt.prefill_pending {
+            self.prefix_cached_tokens +=
+                ckpt.req.prompt_tokens.saturating_sub(prefill_tokens) as u64;
         }
         self.active.push(Active {
             scheduled_iter: self.iter_index,
             scheduled_s: ckpt.scheduled_s,
             generated: ckpt.generated,
             prefill_pending: ckpt.prefill_pending,
+            prefill_tokens,
             first_token_s: ckpt.first_token_s,
             lost: ckpt.lost,
             stalled: false,
@@ -355,7 +465,9 @@ impl EngineSim {
         let mut duration = 0.0;
         for a in &self.active {
             if a.prefill_pending {
-                duration += prefill_latency_s(&self.spec, a.req.prompt_tokens, freq);
+                // `prefill_tokens == prompt_tokens` unless a resident
+                // shared prefix let this row skip the cached part.
+                duration += prefill_latency_s(&self.spec, a.prefill_tokens, freq);
                 prefills += 1;
             }
         }
@@ -521,6 +633,8 @@ mod tests {
             gen_tokens: gen,
             predicted_gen: gen,
             arrival_s: at,
+            prefix_group: 0,
+            shared_prefix_tokens: 0,
         }
     }
 
@@ -799,6 +913,99 @@ mod tests {
         let r = dst.run_iteration(0.0);
         assert_eq!(r.prefills, 1);
         assert_eq!(r.tokens, 1);
+    }
+
+    fn grouped(id: u64, prompt: u32, gen: u32, group: u64, pfx: u32) -> Request {
+        Request {
+            prefix_group: group,
+            shared_prefix_tokens: pfx,
+            ..req(id, prompt, gen, 0.0)
+        }
+    }
+
+    #[test]
+    fn shared_prefix_counts_once_and_shortens_prefill() {
+        let mut e = engine().with_prefix_sharing(true);
+        // 1024-token shared prefix = 16 full blocks at N=64.
+        e.admit(grouped(1, 1100, 10, 3, 1024), 0.0, false).unwrap();
+        let first_used = e.kv_blocks_used();
+        assert_eq!(first_used, blocks_for_spec(1100));
+        let r1 = e.run_iteration(0.0);
+        assert_eq!(r1.prefills, 1);
+        // Second member: only its private tail is new KV...
+        e.admit(grouped(2, 1100, 10, 3, 1024), 1.0, false).unwrap();
+        assert_eq!(
+            e.kv_blocks_used(),
+            first_used + blocks_for_spec(1100) - 16
+        );
+        assert_eq!(e.shared_prefix_blocks(3), 16);
+        // ...and its prefill skips the 1024 cached tokens.
+        assert_eq!(e.prefix_cached_tokens(), 1024);
+        let r2 = e.run_iteration(1.0);
+        assert_eq!(r2.prefills, 1);
+        assert!(
+            r2.duration_s < r1.duration_s,
+            "cached prefill must be shorter: {} vs {}",
+            r2.duration_s,
+            r1.duration_s
+        );
+    }
+
+    fn blocks_for_spec(tokens: u32) -> u32 {
+        crate::engine::kv_cache::blocks_for(tokens, llama2_13b(2).block_tokens)
+    }
+
+    #[test]
+    fn sharing_off_ignores_groups() {
+        let mut e = engine(); // sharing off
+        e.admit(grouped(1, 1100, 10, 3, 1024), 0.0, false).unwrap();
+        e.admit(grouped(2, 1100, 10, 3, 1024), 0.0, false).unwrap();
+        assert_eq!(e.kv_blocks_used(), 2 * blocks_for_spec(1100));
+        assert_eq!(e.shared_prefix_blocks(3), 0);
+        assert_eq!(e.prefix_cached_tokens(), 0);
+    }
+
+    #[test]
+    fn checkpoint_of_shared_member_copies_not_steals() {
+        let mut e = engine().with_prefix_sharing(true);
+        e.admit(grouped(1, 1100, 50, 3, 1024), 0.0, false).unwrap();
+        e.admit(grouped(2, 1100, 50, 3, 1024), 0.0, false).unwrap();
+        let r = e.run_iteration(0.0);
+        let t = r.duration_s;
+        // Checkpoint one member: the co-resident keeps the prefix.
+        let ckpt = e.checkpoint(1).expect("checkpoint");
+        assert_eq!(e.shared_prefix_blocks(3), 16);
+        // The checkpoint carries the FULL occupancy (a copy, so the
+        // transfer cost covers the whole KV).
+        assert_eq!(ckpt.blocks(64), blocks_for_spec(1100));
+        // Restoring onto a sharing destination re-shares with the
+        // resident group: only the private tail is newly allocated.
+        let used = e.kv_blocks_used();
+        e.restore(ckpt, t).unwrap();
+        assert_eq!(e.kv_blocks_used(), used + blocks_for_spec(1100) - 16);
+        // Last-member releases free the prefix.
+        e.drain();
+        assert_eq!(e.kv_blocks_used(), 0);
+        assert_eq!(e.shared_prefix_blocks(3), 0);
+    }
+
+    #[test]
+    fn kv_fits_request_is_prefix_aware() {
+        let spec = EngineSpec {
+            kv_blocks: 20,
+            ..llama2_13b(2)
+        };
+        let mut e = EngineSim::new(spec, FREQ_MAX_MHZ).with_prefix_sharing(true);
+        e.admit(grouped(1, 1024, 10, 3, 1024), 0.0, false).unwrap();
+        assert_eq!(e.kv_blocks_used(), 16);
+        // 4 free blocks: a second member (16 shared + 1 private at
+        // 1025 tokens... = 17 total, 16 resident) fits through the
+        // prefix-aware check but not the naive one.
+        let r2 = grouped(2, 1088, 10, 3, 1024);
+        assert!(!e.kv_fits(r2.prompt_tokens));
+        assert!(e.kv_fits_request(&r2));
+        e.admit(r2, 0.0, false).unwrap();
+        assert_eq!(e.kv_blocks_used(), 17);
     }
 
     #[test]

@@ -19,8 +19,8 @@
 use throttllem::cli::Args;
 use throttllem::config::models::{engine_by_name, llama2_13b, table2_engines};
 use throttllem::config::{
-    parse_fleet_jsonl, parse_replica_spec, FaultSpec, MigrationSpec, PredictSpec, ReplicaSpec,
-    ServingConfig,
+    parse_fleet_jsonl, parse_replica_spec, EngineSpec, FaultSpec, MigrationSpec, PredictSpec,
+    PrefixSpec, ReplicaSpec, ServingConfig,
 };
 use throttllem::coordinator::{
     outcome_digest, FleetOutcome, FleetPlan, PerfModel, Policy, RouterPolicy, Workload,
@@ -29,7 +29,8 @@ use throttllem::engine::request::Request;
 use throttllem::mlmodel::{mae, mape, r2_score};
 use throttllem::sim::Pcg64;
 use throttllem::workload::fleet_trace::{
-    record_fleet_trace, scenario_requests, FleetTraceMeta, Scenario,
+    record_fleet_trace, scenario_requests, synth_fleet_trace, FleetTraceMeta,
+    FleetTraceParams, Scenario, ScenarioKind,
 };
 use throttllem::workload::trace::{synth_trace, synth_trace_rps_range, TraceParams};
 use throttllem::workload::{collect_training_data, LengthPredictor};
@@ -62,7 +63,32 @@ fn cli_scenario_requests(
 ) -> anyhow::Result<Vec<Request>> {
     match args.get("scenario").map(Scenario::parse).transpose()? {
         Some(sc) => {
-            let (meta, reqs) = scenario_requests(&sc, replicas, peak, duration, seed)?;
+            let (meta, reqs) = if sc == Scenario::Generate(ScenarioKind::Session) {
+                // The session family takes extra knobs (`--session-turns`,
+                // `--session-think`, `--session-prefix`) the generic
+                // scenario surface has no field for.
+                let mut p = FleetTraceParams::scenario(
+                    ScenarioKind::Session,
+                    replicas,
+                    peak,
+                    duration,
+                    seed,
+                );
+                p.session_turns_mean =
+                    args.get_f64("session-turns", p.session_turns_mean)?;
+                p.session_think_s = args.get_f64("session-think", p.session_think_s)?;
+                p.session_prefix_tokens =
+                    args.get_u64("session-prefix", p.session_prefix_tokens as u64)? as u32;
+                anyhow::ensure!(
+                    p.session_turns_mean >= 1.0,
+                    "--session-turns must be >= 1"
+                );
+                anyhow::ensure!(p.session_think_s >= 0.0, "--session-think must be >= 0");
+                let reqs = synth_fleet_trace(&p);
+                (p.meta(), reqs)
+            } else {
+                scenario_requests(&sc, replicas, peak, duration, seed)?
+            };
             maybe_record(args, &meta, &reqs)?;
             eprintln!(
                 "scenario {}: {} requests (peak ~{:.1} RPS over {:.0} s)",
@@ -100,62 +126,66 @@ fn maybe_write_digest(args: &Args, out: &FleetOutcome) -> anyhow::Result<()> {
 
 /// Parse the `--migration on|off` switch plus its cost knobs
 /// (`--migration-base-ms`, `--migration-gbps`, `--migration-power`)
-/// into a [`MigrationSpec`].  Off is the default: scale-in drains.
-fn migration_from_args(args: &Args) -> anyhow::Result<MigrationSpec> {
-    let enabled = match args.get("migration") {
+/// into the plan's `Option<MigrationSpec>`.  Off (`None`) is the
+/// default: scale-in drains, and the cost knobs are ignored.
+fn migration_from_args(args: &Args) -> anyhow::Result<Option<MigrationSpec>> {
+    let mut spec = match args.get("migration") {
         Some(v) => MigrationSpec::parse_enabled(v)?,
-        None => false,
+        None => None,
     };
-    let mut m = if enabled {
-        MigrationSpec::enabled_default()
-    } else {
-        MigrationSpec::disabled()
-    };
-    m.base_latency_s = args.get_f64("migration-base-ms", m.base_latency_s * 1e3)? / 1e3;
-    m.gb_per_s = args.get_f64("migration-gbps", m.gb_per_s)?;
-    m.link_power_w = args.get_f64("migration-power", m.link_power_w)?;
-    anyhow::ensure!(m.gb_per_s > 0.0, "--migration-gbps must be positive");
-    anyhow::ensure!(m.base_latency_s >= 0.0, "--migration-base-ms must be >= 0");
-    anyhow::ensure!(m.link_power_w >= 0.0, "--migration-power must be >= 0");
-    Ok(m)
+    if let Some(m) = spec.as_mut() {
+        m.base_latency_s = args.get_f64("migration-base-ms", m.base_latency_s * 1e3)? / 1e3;
+        m.gb_per_s = args.get_f64("migration-gbps", m.gb_per_s)?;
+        m.link_power_w = args.get_f64("migration-power", m.link_power_w)?;
+        anyhow::ensure!(m.gb_per_s > 0.0, "--migration-gbps must be positive");
+        anyhow::ensure!(m.base_latency_s >= 0.0, "--migration-base-ms must be >= 0");
+        anyhow::ensure!(m.link_power_w >= 0.0, "--migration-power must be >= 0");
+    }
+    Ok(spec)
 }
 
-/// Parse the `--faults on|off` switch plus `--fault-seed <n>` into a
-/// [`FaultSpec`].  Off is the default: with faults off the serving
-/// path is byte-identical to a run without the fault subsystem.
-fn faults_from_args(args: &Args) -> anyhow::Result<FaultSpec> {
-    let enabled = match args.get("faults") {
+/// Parse the `--faults on|off` switch plus `--fault-seed <n>` into the
+/// plan's `Option<FaultSpec>`.  Off (`None`) is the default: the
+/// serving path is byte-identical to a run without the fault
+/// subsystem.
+fn faults_from_args(args: &Args) -> anyhow::Result<Option<FaultSpec>> {
+    let mut spec = match args.get("faults") {
         Some(v) => FaultSpec::parse_enabled(v)?,
-        None => false,
+        None => None,
     };
-    let mut f = if enabled {
-        FaultSpec::enabled_default()
-    } else {
-        FaultSpec::disabled()
-    };
-    f.seed = args.get_u64("fault-seed", f.seed)?;
-    Ok(f)
+    if let Some(f) = spec.as_mut() {
+        f.seed = args.get_u64("fault-seed", f.seed)?;
+    }
+    Ok(spec)
 }
 
 /// Parse the `--predict on|off` switch plus its forecaster knobs
-/// (`--predict-lead <s>`, `--predict-period <s>`) into a
-/// [`PredictSpec`].  Off is the default: the serving path is
-/// byte-identical to the reactive loop.
-fn predict_from_args(args: &Args) -> anyhow::Result<PredictSpec> {
-    let enabled = match args.get("predict") {
+/// (`--predict-lead <s>`, `--predict-period <s>`) into the plan's
+/// `Option<PredictSpec>`.  Off (`None`) is the default: the serving
+/// path is byte-identical to the reactive loop.
+fn predict_from_args(args: &Args) -> anyhow::Result<Option<PredictSpec>> {
+    let mut spec = match args.get("predict") {
         Some(v) => PredictSpec::parse_enabled(v)?,
-        None => false,
+        None => None,
     };
-    let mut p = if enabled {
-        PredictSpec::enabled_default()
-    } else {
-        PredictSpec::disabled()
-    };
-    p.lead_s = args.get_f64("predict-lead", p.lead_s)?;
-    p.period_s = args.get_f64("predict-period", p.period_s)?;
-    anyhow::ensure!(p.lead_s >= 0.0, "--predict-lead must be >= 0");
-    anyhow::ensure!(p.period_s > 0.0, "--predict-period must be positive");
-    Ok(p)
+    if let Some(p) = spec.as_mut() {
+        p.lead_s = args.get_f64("predict-lead", p.lead_s)?;
+        p.period_s = args.get_f64("predict-period", p.period_s)?;
+        anyhow::ensure!(p.lead_s >= 0.0, "--predict-lead must be >= 0");
+        anyhow::ensure!(p.period_s > 0.0, "--predict-period must be positive");
+    }
+    Ok(spec)
+}
+
+/// Parse the `--prefix-share on|off` switch into the plan's
+/// `Option<PrefixSpec>`.  Off (`None`) is the default and keeps KV
+/// allocation order, prefill arithmetic and routing byte-identical to
+/// the pre-sharing path.
+fn prefix_from_args(args: &Args) -> anyhow::Result<Option<PrefixSpec>> {
+    match args.get("prefix-share") {
+        Some(v) => PrefixSpec::parse_enabled(v),
+        None => Ok(None),
+    }
 }
 
 /// Parse `--predictor oracle|noisy:<p95>` into the generation-length
@@ -230,10 +260,14 @@ usage: throttllem <serve|profile|train-model|engines|real-serve> [--options]
                --duration <s> --error <p95 frac> --seed <n> [--autoscale]
                --replicas <n> --router <round-robin|least-loaded|projected-headroom>
                --peak <rps>   (default: rated max load x replicas)
-               --scenario <steady|burst|flash|diurnal|replay:<file>>
+               --scenario <steady|burst|flash|diurnal|session|replay:<file>>
                  (fleet-level trace: correlated bursts / flash crowds /
-                  diurnal idle; replay:<file> replays a recorded trace
-                  bit-exactly)
+                  diurnal idle / multi-turn sessions; replay:<file>
+                  replays a recorded trace bit-exactly)
+               --session-turns <mean> --session-think <s>
+               --session-prefix <tokens>  (session scenario knobs: mean
+                 turns per session, think time between turns, shared
+                 system-prompt length)
                --record <file>  (write the generated trace as replayable JSONL)
                heterogeneous fleets (mixed TP / model families):
                --replica-spec tp=2[,model=<m>][,count=<n>][,slo=engine]  (repeatable;
@@ -258,6 +292,10 @@ usage: throttllem <serve|profile|train-model|engines|real-serve> [--options]
                  path, byte-identical, the default)
                --predict-lead <s> --predict-period <s>  (forecast horizon
                  and assumed diurnal period of the arrival forecaster)
+               --prefix-share on|off  (copy-on-write sharing of session
+                 prefixes: shared system-prompt blocks stored once per
+                 engine, cached prefill skip, session-affine routing;
+                 off = today's allocator byte-identically, the default)
                --predictor oracle|noisy:<p95>  (generation-length predictor
                  for admission; default: noisy at --error when positive,
                  else oracle; sets the conservative adjustment to the
@@ -330,7 +368,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
 
     let autoscale = policy.autoscaling || args.flag("autoscale");
-    let (mut cfg, engines) = if autoscale {
+    let (cfg, engines) = if autoscale {
         let set = vec![llama2_13b(1), llama2_13b(2), llama2_13b(4)];
         (ServingConfig::autoscaled(set.clone()), set)
     } else {
@@ -342,34 +380,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         };
         (c, vec![engine])
     };
-    let predictor = predictor_from_args(args, error, seed)?;
-    cfg.predictor_p95_error = predictor.p95_rel_error();
-
-    eprintln!("training performance model on {} engine(s)...", engines.len());
-    let model = PerfModel::train(&engines, 120, seed);
-
     // The trace is right-scaled to the deployment: rated max load (7.5
     // for the autoscaled set) times the fleet size, unless overridden.
     let base_peak = if autoscale { 7.5 } else { cfg.engine.max_load_rps };
     let peak = args.get_f64("peak", base_peak * replicas as f64)?;
-    let mut reqs = cli_scenario_requests(args, replicas, peak, duration, seed, || {
-        let params = TraceParams::short(duration, peak, seed);
-        if autoscale {
-            synth_trace_rps_range(&params, 0.75, peak)
-        } else {
-            synth_trace(&params)
-        }
-    })?;
-    predictor.apply(&mut reqs, cfg.max_tokens);
-    eprintln!(
-        "replaying {} requests over {:.0} s under policy {} on {} replica(s) ({})...",
-        reqs.len(),
-        duration,
-        policy.name(),
-        replicas,
-        router.name()
-    );
-
     let plan = FleetPlan::homogeneous(
         replicas,
         router,
@@ -380,11 +394,29 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     .with_migration(migration_from_args(args)?)
     .with_faults(faults_from_args(args)?)
     .with_prediction(predict_from_args(args)?)
+    .with_prefix_sharing(prefix_from_args(args)?)
     .with_threads(args.get_u64("threads", 1)? as usize);
-    let fleet_out = plan.serve(&cfg, policy, &model, Workload::Trace(&reqs));
-    maybe_write_digest(args, &fleet_out)?;
-    print_serve_report(&cfg, policy, router, replicas, &fleet_out);
-    Ok(())
+    run_serve_plan(
+        args,
+        policy,
+        router,
+        plan,
+        cfg,
+        engines,
+        peak,
+        duration,
+        error,
+        seed,
+        "replica(s)",
+        |peak| {
+            let params = TraceParams::short(duration, peak, seed);
+            if autoscale {
+                synth_trace_rps_range(&params, 0.75, peak)
+            } else {
+                synth_trace(&params)
+            }
+        },
+    )
 }
 
 /// Serve on an explicitly-described (typically mixed) fleet.
@@ -412,17 +444,15 @@ fn cmd_serve_hetero(
     // explicitly requested: draining a replica of a heterogeneous set
     // silently changes the fleet's capacity mix (a scale-in could
     // power off the only replica a long prompt fits on).
-    let plan = FleetPlan {
-        replicas: specs,
-        router,
-        autoscale_replicas: policy.autoscaling
-            && n > 1
-            && args.flag("autoscale-replicas"),
-        migration: migration_from_args(args)?,
-        faults: faults_from_args(args)?,
-        predict: predict_from_args(args)?,
-        threads: args.get_u64("threads", 1)? as usize,
-    };
+    let plan = FleetPlan::heterogeneous(specs, router)
+        .with_autoscale_replicas(
+            policy.autoscaling && n > 1 && args.flag("autoscale-replicas"),
+        )
+        .with_migration(migration_from_args(args)?)
+        .with_faults(faults_from_args(args)?)
+        .with_prediction(predict_from_args(args)?)
+        .with_prefix_sharing(prefix_from_args(args)?)
+        .with_threads(args.get_u64("threads", 1)? as usize);
     let engines = plan.engines();
     // Fleet-wide knobs anchor on the highest-capacity engine; replicas
     // with slo=engine overrides enforce their own Table II SLOs.
@@ -431,26 +461,62 @@ fn cmd_serve_hetero(
         .max_by(|a, b| a.max_load_rps.partial_cmp(&b.max_load_rps).unwrap())
         .unwrap()
         .clone();
-    let mut cfg = if policy.throttling {
+    let cfg = if policy.throttling {
         ServingConfig::throttllem(anchor)
     } else {
         ServingConfig::triton(anchor)
     };
+    // Right-scale to the fleet's aggregate rated load by default.
+    let peak = args.get_f64("peak", plan.rated_rps())?;
+    run_serve_plan(
+        args,
+        policy,
+        router,
+        plan,
+        cfg,
+        engines,
+        peak,
+        duration,
+        error,
+        seed,
+        "heterogeneous replica(s)",
+        |peak| synth_trace(&TraceParams::short(duration, peak, seed)),
+    )
+}
+
+/// The shared serve tail both fleet shapes run once their `FleetPlan`
+/// is built: length predictor, performance-model training,
+/// scenario/trace synthesis, the serve itself, the optional outcome
+/// digest and the report.  The homogeneous `--replicas` path and the
+/// explicit `--replica-spec`/`--fleet` path used to duplicate all of
+/// this; now they only differ in how the plan and its `legacy`
+/// fallback trace are constructed.
+#[allow(clippy::too_many_arguments)]
+fn run_serve_plan(
+    args: &Args,
+    policy: Policy,
+    router: RouterPolicy,
+    plan: FleetPlan,
+    mut cfg: ServingConfig,
+    engines: Vec<EngineSpec>,
+    peak: f64,
+    duration: f64,
+    error: f64,
+    seed: u64,
+    fleet_label: &str,
+    legacy: impl FnOnce(f64) -> Vec<Request>,
+) -> anyhow::Result<()> {
+    let n = plan.replicas.len();
     let predictor = predictor_from_args(args, error, seed)?;
     cfg.predictor_p95_error = predictor.p95_rel_error();
 
     eprintln!("training performance model on {} engine(s)...", engines.len());
     let model = PerfModel::train(&engines, 120, seed);
 
-    // Right-scale to the fleet's aggregate rated load by default.
-    let peak = args.get_f64("peak", plan.rated_rps())?;
-    let mut reqs = cli_scenario_requests(args, n, peak, duration, seed, || {
-        synth_trace(&TraceParams::short(duration, peak, seed))
-    })?;
+    let mut reqs = cli_scenario_requests(args, n, peak, duration, seed, || legacy(peak))?;
     predictor.apply(&mut reqs, cfg.max_tokens);
     eprintln!(
-        "replaying {} requests over {:.0} s under policy {} on {} heterogeneous \
-         replica(s) ({})...",
+        "replaying {} requests over {:.0} s under policy {} on {} {fleet_label} ({})...",
         reqs.len(),
         duration,
         policy.name(),

@@ -153,6 +153,15 @@ pub struct ServingStats {
     /// Requests lost to faults after their recovery retry budget ran
     /// out. Zero when faults are off.
     pub faulted_lost: u64,
+    /// Highest per-iteration KV-block occupancy observed on any one
+    /// engine (fleet merge takes the max — it is a peak, not a sum).
+    /// The prefix-compare gate reads this: CoW sharing must show a
+    /// strictly lower peak on session workloads.
+    pub peak_kv_blocks: u32,
+    /// Prompt tokens served from resident shared prefixes instead of
+    /// recomputed by prefill (sums across replicas). Zero with
+    /// `--prefix-share off`.
+    pub prefix_cached_tokens: u64,
 }
 
 impl ServingStats {
@@ -225,6 +234,8 @@ impl ServingStats {
         self.migrated_e2e.extend_from(&other.migrated_e2e);
         self.shed += other.shed;
         self.faulted_lost += other.faulted_lost;
+        self.peak_kv_blocks = self.peak_kv_blocks.max(other.peak_kv_blocks);
+        self.prefix_cached_tokens += other.prefix_cached_tokens;
     }
 
     /// Order-independent fleet reduction: merge `(replica_index,
@@ -368,6 +379,16 @@ mod tests {
         assert_eq!(a.faulted_lost, 1);
         assert_eq!(a.migrated_e2e.len(), 3);
         assert!((a.migration_energy_j - 14.0).abs() < 1e-12);
+        // Peak KV takes the max across replicas; cached tokens sum.
+        let mut c = ServingStats::default();
+        c.peak_kv_blocks = 40;
+        c.prefix_cached_tokens = 1024;
+        let mut d = ServingStats::default();
+        d.peak_kv_blocks = 25;
+        d.prefix_cached_tokens = 512;
+        c.merge_from(&d);
+        assert_eq!(c.peak_kv_blocks, 40);
+        assert_eq!(c.prefix_cached_tokens, 1536);
         // 2 of 3 migrated completions inside a 3 s SLO.
         assert!((a.migrated_e2e_attainment(3.0) - 2.0 / 3.0).abs() < 1e-12);
         assert!(ServingStats::default().migrated_e2e_attainment(1.0).is_nan());
@@ -408,6 +429,8 @@ mod tests {
         assert_eq!(a.migrated_out, b.migrated_out);
         assert_eq!(a.shed, b.shed);
         assert_eq!(a.faulted_lost, b.faulted_lost);
+        assert_eq!(a.peak_kv_blocks, b.peak_kv_blocks);
+        assert_eq!(a.prefix_cached_tokens, b.prefix_cached_tokens);
     }
 
     #[test]
@@ -431,6 +454,8 @@ mod tests {
             s.dropped = i as u64 % 3;
             s.migrated_in = i as u64;
             s.migrated_e2e.push(scale + 0.01);
+            s.peak_kv_blocks = ((i * 37) % 50) as u32;
+            s.prefix_cached_tokens = i as u64 * 192;
             parts.push(s);
         }
         let tagged: Vec<(usize, &ServingStats)> =

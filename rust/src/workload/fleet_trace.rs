@@ -64,6 +64,13 @@ pub enum ScenarioKind {
     /// cold-start phase where the fleet should scale to (near) zero
     /// and pay spawn time when load returns.
     Diurnal,
+    /// Multi-turn chat sessions over a steady-ish envelope: session
+    /// starts are Poisson, each session issues several turns sharing
+    /// one system-prompt prefix (`prefix_group` / `shared_prefix_tokens`
+    /// set on every request), with per-turn history regrowth — the
+    /// prompt of turn k carries the session's accumulated context.
+    /// This is the workload CoW prefix sharing exists for.
+    Session,
 }
 
 impl ScenarioKind {
@@ -73,30 +80,34 @@ impl ScenarioKind {
             ScenarioKind::Burst => "burst",
             ScenarioKind::Flash => "flash",
             ScenarioKind::Diurnal => "diurnal",
+            ScenarioKind::Session => "session",
         }
     }
 
-    /// Parse a CLI spelling (`steady | burst | flash | diurnal`).
+    /// Parse a CLI spelling (`steady | burst | flash | diurnal |
+    /// session`).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         Ok(match s {
             "steady" => ScenarioKind::Steady,
             "burst" => ScenarioKind::Burst,
             "flash" => ScenarioKind::Flash,
             "diurnal" => ScenarioKind::Diurnal,
+            "session" => ScenarioKind::Session,
             other => anyhow::bail!(
                 "unknown scenario {other:?} \
-                 (expected steady | burst | flash | diurnal | replay:<file>)"
+                 (expected steady | burst | flash | diurnal | session | replay:<file>)"
             ),
         })
     }
 
     /// Every generated scenario, in matrix order.
-    pub fn all() -> [ScenarioKind; 4] {
+    pub fn all() -> [ScenarioKind; 5] {
         [
             ScenarioKind::Steady,
             ScenarioKind::Burst,
             ScenarioKind::Flash,
             ScenarioKind::Diurnal,
+            ScenarioKind::Session,
         ]
     }
 }
@@ -124,6 +135,104 @@ impl Scenario {
             Scenario::Generate(k) => k.name(),
             Scenario::Replay(_) => "replay",
         }
+    }
+
+    /// Builder for the multi-turn session family: customize with
+    /// [`SessionScenario::turns`] / [`SessionScenario::shared_prefix`]
+    /// / etc., then hand it to `Workload::Session` — the typed
+    /// replacement for plumbing raw `FleetTraceParams` fields around.
+    pub fn session() -> SessionScenario {
+        SessionScenario::default()
+    }
+}
+
+/// Builder describing one multi-turn session workload
+/// ([`ScenarioKind::Session`] with explicit knobs).  Consumed by the
+/// coordinator's `Workload::Session`; [`SessionScenario::params`]
+/// lowers it onto [`FleetTraceParams`] right-scaled to a fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionScenario {
+    pub duration_s: f64,
+    /// Fraction of the fleet's aggregate rated load the envelope peaks
+    /// at (same meaning as the scenario CLI's `--utilization`).
+    pub utilization: f64,
+    pub seed: u64,
+    /// Mean turns per session (>= 1; turn counts are 1 + a rounded
+    /// exponential with this mean - 1).
+    pub turns_mean: f64,
+    /// Mean think time between a session's turns, seconds.
+    pub think_s: f64,
+    /// Shared system-prompt length every turn of every session carries
+    /// (the CoW-shareable prefix).
+    pub shared_prefix_tokens: u32,
+}
+
+impl Default for SessionScenario {
+    fn default() -> Self {
+        Self {
+            duration_s: 600.0,
+            utilization: 0.6,
+            seed: 0,
+            turns_mean: 3.0,
+            think_s: 20.0,
+            shared_prefix_tokens: 1024,
+        }
+    }
+}
+
+impl SessionScenario {
+    pub fn duration(mut self, s: f64) -> Self {
+        assert!(s > 0.0);
+        self.duration_s = s;
+        self
+    }
+
+    pub fn utilization(mut self, u: f64) -> Self {
+        assert!(u > 0.0);
+        self.utilization = u;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Mean turns per session.
+    pub fn turns(mut self, mean: f64) -> Self {
+        assert!(mean >= 1.0, "a session has at least one turn");
+        self.turns_mean = mean;
+        self
+    }
+
+    /// Mean think time between turns, seconds.
+    pub fn think_time(mut self, s: f64) -> Self {
+        assert!(s >= 0.0);
+        self.think_s = s;
+        self
+    }
+
+    /// Shared system-prompt length, tokens.
+    pub fn shared_prefix(mut self, tokens: u32) -> Self {
+        self.shared_prefix_tokens = tokens;
+        self
+    }
+
+    /// Lower onto fleet-trace params for a fleet of `replicas` rated at
+    /// `rated_rps` aggregate (the same right-scaling every scenario
+    /// surface applies: peak = utilization x rated).
+    pub fn params(&self, replicas: usize, rated_rps: f64) -> FleetTraceParams {
+        let mut p = FleetTraceParams::scenario(
+            ScenarioKind::Session,
+            replicas,
+            self.utilization * rated_rps,
+            self.duration_s,
+            self.seed,
+        );
+        p.session_turns_mean = self.turns_mean;
+        p.session_think_s = self.think_s;
+        p.session_prefix_tokens = self.shared_prefix_tokens;
+        p
     }
 }
 
@@ -171,6 +280,19 @@ pub struct FleetTraceParams {
     /// rate fields (`peak_rps`, `min_rps`, `duration_s`, `seed`) are
     /// superseded by the fleet-level process above.
     pub marginals: TraceParams,
+    /// Additive shift applied to the prompt-length lognormal's mu at
+    /// draw time — scenario envelopes can skew the length mix (a
+    /// long-prompt flash crowd) without touching the shared marginals.
+    /// 0.0 (the default) is bit-identical to the unshifted draw.
+    pub prompt_mu_shift: f64,
+    /// Additive shift applied to the generation-length lognormal's mu.
+    pub gen_mu_shift: f64,
+    /// Mean turns per session ([`ScenarioKind::Session`] only).
+    pub session_turns_mean: f64,
+    /// Mean think time between a session's turns, seconds.
+    pub session_think_s: f64,
+    /// Shared system-prompt length each session's turns carry, tokens.
+    pub session_prefix_tokens: u32,
 }
 
 impl FleetTraceParams {
@@ -202,6 +324,11 @@ impl FleetTraceParams {
             idle_from: 0.0,
             idle_to: 0.0,
             marginals: TraceParams::default(),
+            prompt_mu_shift: 0.0,
+            gen_mu_shift: 0.0,
+            session_turns_mean: 3.0,
+            session_think_s: 20.0,
+            session_prefix_tokens: 1024,
         };
         match kind {
             ScenarioKind::Steady => {}
@@ -218,6 +345,7 @@ impl FleetTraceParams {
                 p.idle_from = 0.05;
                 p.idle_to = 0.22;
             }
+            ScenarioKind::Session => {}
         }
         p
     }
@@ -263,11 +391,15 @@ fn lognormal_det(rng: &mut Pcg64, mu: f64, sigma: f64) -> f64 {
     exp_det(mu + sigma * normal_det(rng))
 }
 
-fn draw_lengths_det(m: &TraceParams, rng: &mut Pcg64) -> (u32, u32) {
-    let prompt = lognormal_det(rng, m.prompt_mu, m.prompt_sigma)
+fn draw_lengths_det(p: &FleetTraceParams, rng: &mut Pcg64) -> (u32, u32) {
+    // The scenario's marginal shifts apply at draw time; a 0.0 shift
+    // (every pre-shift scenario) is bit-identical to the unshifted
+    // draw, which is what keeps the committed golden traces valid.
+    let m = &p.marginals;
+    let prompt = lognormal_det(rng, m.prompt_mu + p.prompt_mu_shift, m.prompt_sigma)
         .clamp(1.0, m.prompt_max as f64)
         .round() as u32;
-    let gen = lognormal_det(rng, m.gen_mu, m.gen_sigma)
+    let gen = lognormal_det(rng, m.gen_mu + p.gen_mu_shift, m.gen_sigma)
         .clamp(m.gen_min as f64, m.gen_max as f64)
         .round() as u32;
     (prompt.max(1), gen.max(1))
@@ -343,6 +475,10 @@ fn baseline(kind: ScenarioKind, t: f64) -> f64 {
             // One compressed day: trough at the ends, peak mid-trace.
             0.10 + 0.90 * 0.5 * (1.0 - cos_det(std::f64::consts::TAU * t))
         }
+        // Session starts arrive over a gentle version of the paper
+        // silhouette; the interesting structure is WITHIN sessions
+        // (turns, think times, history regrowth), not the envelope.
+        ScenarioKind::Session => 0.40 + 0.60 * bump,
     }
 }
 
@@ -430,6 +566,9 @@ pub fn fleet_rate_series(p: &FleetTraceParams) -> Vec<f64> {
 /// overwrite).  Byte-deterministic for (seed, params) on every
 /// platform — see the module docs.
 pub fn synth_fleet_trace(p: &FleetTraceParams) -> Vec<Request> {
+    if p.kind == ScenarioKind::Session {
+        return synth_session_trace(p);
+    }
     let rate = fleet_rate_series(p);
     // Thinning dominates with the envelope's TRUE maximum (bursts and
     // flash push past peak_rps, so peak_rps alone would under-sample
@@ -450,16 +589,115 @@ pub fn synth_fleet_trace(p: &FleetTraceParams) -> Vec<Request> {
         }
         let slot = ((t / SLOT_S) as usize).min(rate.len() - 1);
         if rng.next_f64() * lambda_max <= rate[slot] {
-            let (prompt, gen) = draw_lengths_det(&p.marginals, &mut rng);
+            let (prompt, gen) = draw_lengths_det(p, &mut rng);
             out.push(Request {
                 id,
                 prompt_tokens: prompt,
                 gen_tokens: gen,
                 predicted_gen: gen,
                 arrival_s: t,
+                prefix_group: 0,
+                shared_prefix_tokens: 0,
             });
             id += 1;
         }
+    }
+    out
+}
+
+/// PCG64 stream id of the session synthesizer (disjoint from the
+/// burst/wobble/arrival streams above and the fault streams 0xfa0*).
+const STREAM_SESSION: u64 = 0x5e55;
+
+/// Hard cap on turns per session: an exponential tail above this stops
+/// modeling chat and starts modeling a stuck client.
+const MAX_TURNS: u32 = 16;
+
+/// Multi-turn session synthesis ([`ScenarioKind::Session`]).
+///
+/// Session STARTS are a thinned Poisson process against the scenario
+/// envelope, rated at `envelope / turns_mean` so the realized REQUEST
+/// rate tracks the envelope.  Each session `s` (prefix group `s+1` —
+/// group 0 means ungrouped fleet-wide) draws its turn count (1 + a
+/// rounded exponential), then per turn: fresh user tokens and a
+/// generation length from the (shiftable) marginals, an exponential
+/// think gap to the next turn, and a prompt of
+///
+/// ```text
+///   prompt_k = prefix + sum_{i<k}(user_i + gen_i) + user_k
+/// ```
+///
+/// clamped to the marginals' `prompt_max` — the session's history
+/// REGROWS into every later turn, which is exactly the redundancy
+/// CoW prefix sharing and session-affine routing exploit.  Turns whose
+/// think time crosses the horizon still arrive (sessions drain past
+/// the envelope end).  One sequential RNG stream + a total sort by
+/// `(arrival, group)` + dense re-idling keeps the trace byte-identical
+/// across platforms, like every other scenario.
+fn synth_session_trace(p: &FleetTraceParams) -> Vec<Request> {
+    let rate = fleet_rate_series(p);
+    let lambda_max = rate.iter().cloned().fold(0.0f64, f64::max);
+    if lambda_max <= 0.0 {
+        return Vec::new();
+    }
+    let turns_mean = p.session_turns_mean.max(1.0);
+    let prefix = p.session_prefix_tokens;
+    let mut rng = Pcg64::with_stream(p.seed, STREAM_SESSION);
+    let mut out: Vec<Request> = Vec::new();
+    let mut t = 0.0f64;
+    let mut group = 0u64;
+    loop {
+        // Session starts thin against the envelope at 1/turns_mean of
+        // the request rate.
+        t += exponential_det(&mut rng, lambda_max / turns_mean);
+        if t >= p.duration_s {
+            break;
+        }
+        let slot = ((t / SLOT_S) as usize).min(rate.len() - 1);
+        if rng.next_f64() * lambda_max > rate[slot] {
+            continue;
+        }
+        group += 1;
+        let turns = if turns_mean > 1.0 {
+            1 + (exponential_det(&mut rng, 1.0 / (turns_mean - 1.0)).round()
+                as u32)
+                .min(MAX_TURNS - 1)
+        } else {
+            1
+        };
+        let mut history = 0u64;
+        let mut at = t;
+        for k in 0..turns {
+            let (user, gen) = draw_lengths_det(p, &mut rng);
+            let prompt = (prefix as u64 + history + user as u64)
+                .min(p.marginals.prompt_max as u64)
+                .max(1) as u32;
+            out.push(Request {
+                id: 0, // re-idled densely after the sort
+                prompt_tokens: prompt,
+                gen_tokens: gen,
+                predicted_gen: gen,
+                arrival_s: at,
+                prefix_group: group,
+                shared_prefix_tokens: prefix.min(prompt),
+            });
+            history += user as u64 + gen as u64;
+            if k + 1 < turns && p.session_think_s > 0.0 {
+                at += exponential_det(&mut rng, 1.0 / p.session_think_s);
+            }
+        }
+    }
+    // Interleave sessions into the fleet's one arrival-sorted stream.
+    // total_cmp + the (group, original order) tie-break keeps the sort
+    // deterministic; ids are re-assigned densely afterwards, matching
+    // every other scenario's contract.
+    out.sort_by(|a, b| {
+        a.arrival_s
+            .total_cmp(&b.arrival_s)
+            .then(a.prefix_group.cmp(&b.prefix_group))
+    });
+    for (i, r) in out.iter_mut().enumerate() {
+        r.id = i as u64;
     }
     out
 }
@@ -502,13 +740,23 @@ pub fn fleet_trace_to_jsonl(meta: &FleetTraceMeta, reqs: &[Request]) -> String {
     out.push_str(&header.to_string());
     out.push('\n');
     for r in reqs {
-        let line = Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::Num(r.id as f64)),
             ("arrival_s", Json::Num(r.arrival_s)),
             ("prompt", Json::Num(r.prompt_tokens as f64)),
             ("gen", Json::Num(r.gen_tokens as f64)),
             ("pred", Json::Num(r.predicted_gen as f64)),
-        ]);
+        ];
+        // Session fields only when set: ungrouped traces (every
+        // pre-session scenario) serialize to the exact bytes they
+        // always did, so their committed golden hashes stay valid.
+        if r.prefix_group != 0 {
+            fields.push(("grp", Json::Num(r.prefix_group as f64)));
+        }
+        if r.shared_prefix_tokens != 0 {
+            fields.push(("pfx", Json::Num(r.shared_prefix_tokens as f64)));
+        }
+        let line = Json::obj(fields);
         out.push_str(&line.to_string());
         out.push('\n');
     }
@@ -574,12 +822,17 @@ pub fn parse_fleet_trace_jsonl(
                     anyhow::anyhow!("fleet-trace line {}: missing {k:?}", i + 2)
                 })
         };
+        // Optional session fields: absent (0) on every pre-session
+        // recording, so old traces replay unchanged.
+        let opt = |k: &str| v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
         reqs.push(Request {
             id: get("id")? as u64,
             prompt_tokens: get("prompt")? as u32,
             gen_tokens: get("gen")? as u32,
             predicted_gen: get("pred")? as u32,
             arrival_s: get("arrival_s")?,
+            prefix_group: opt("grp") as u64,
+            shared_prefix_tokens: opt("pfx") as u32,
         });
     }
     anyhow::ensure!(
@@ -800,5 +1053,137 @@ mod tests {
         assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
         assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
         assert_ne!(fnv1a64(b"fleet"), fnv1a64(b"flees"));
+    }
+
+    #[test]
+    fn session_trace_structure_and_determinism() {
+        let p = quick(ScenarioKind::Session, 11);
+        let a = synth_fleet_trace(&p);
+        let b = synth_fleet_trace(&p);
+        assert_eq!(a, b);
+        assert_ne!(a, synth_fleet_trace(&quick(ScenarioKind::Session, 12)));
+        assert!(a.len() > 200, "n={}", a.len());
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert!(a.iter().enumerate().all(|(i, r)| r.id == i as u64));
+        // Every turn is grouped and carries the shared prefix.
+        assert!(a.iter().all(|r| r.prefix_group != 0));
+        assert!(a
+            .iter()
+            .all(|r| r.shared_prefix_tokens == p.session_prefix_tokens.min(r.prompt_tokens)));
+        // Sessions are multi-turn on average, and a session's prompts
+        // grow turn over turn until the clamp: history regrowth.
+        let max_group = a.iter().map(|r| r.prefix_group).max().unwrap();
+        assert!(
+            a.len() as f64 / max_group as f64 > 1.5,
+            "sessions average too few turns: {} reqs / {} sessions",
+            a.len(),
+            max_group
+        );
+        let mut multi_turn = 0usize;
+        for g in 1..=max_group {
+            let turns: Vec<&Request> =
+                a.iter().filter(|r| r.prefix_group == g).collect();
+            assert!(!turns.is_empty());
+            for w in turns.windows(2) {
+                assert!(w[0].arrival_s <= w[1].arrival_s);
+                let cap = p.marginals.prompt_max;
+                assert!(
+                    w[1].prompt_tokens > w[0].prompt_tokens
+                        || w[1].prompt_tokens == cap,
+                    "history must regrow: group {g} went {} -> {}",
+                    w[0].prompt_tokens,
+                    w[1].prompt_tokens
+                );
+            }
+            if turns.len() > 1 {
+                multi_turn += 1;
+            }
+        }
+        assert!(multi_turn > 0, "no session had a second turn");
+        // First turn of each session = prefix + fresh user tokens.
+        for g in 1..=max_group {
+            let first = a.iter().find(|r| r.prefix_group == g).unwrap();
+            assert!(first.prompt_tokens > p.session_prefix_tokens);
+        }
+    }
+
+    #[test]
+    fn session_jsonl_roundtrip_keeps_groups() {
+        let p = quick(ScenarioKind::Session, 13);
+        let reqs = synth_fleet_trace(&p);
+        let text = fleet_trace_to_jsonl(&p.meta(), &reqs);
+        assert!(text.contains("\"grp\":"));
+        assert!(text.contains("\"pfx\":"));
+        let (meta, back) = parse_fleet_trace_jsonl(&text).unwrap();
+        assert_eq!(meta, p.meta());
+        assert_eq!(back, reqs, "grp/pfx must survive the round trip");
+        assert_eq!(fleet_trace_to_jsonl(&meta, &back), text);
+    }
+
+    #[test]
+    fn ungrouped_jsonl_bytes_unchanged_by_session_fields() {
+        // The session keys are emitted ONLY when set, so pre-session
+        // recordings (and their golden hashes) are byte-stable.
+        let p = quick(ScenarioKind::Burst, 7);
+        let reqs = synth_fleet_trace(&p);
+        let text = fleet_trace_to_jsonl(&p.meta(), &reqs);
+        assert!(!text.contains("\"grp\""));
+        assert!(!text.contains("\"pfx\""));
+    }
+
+    #[test]
+    fn long_prompt_flash_shift_raises_mean_prompt() {
+        // Satellite regression: a flash envelope can skew the prompt
+        // marginal upward via `prompt_mu_shift`, and a 0.0 shift is
+        // bit-identical to the pre-shift generator.
+        let base = quick(ScenarioKind::Flash, 21);
+        let mut shifted = quick(ScenarioKind::Flash, 21);
+        shifted.prompt_mu_shift = 0.8;
+        let a = synth_fleet_trace(&base);
+        let b = synth_fleet_trace(&shifted);
+        let mean = |reqs: &[Request]| {
+            reqs.iter().map(|r| r.prompt_tokens as f64).sum::<f64>()
+                / reqs.len() as f64
+        };
+        assert!(
+            mean(&b) > 1.5 * mean(&a),
+            "shifted mean {} vs base {}",
+            mean(&b),
+            mean(&a)
+        );
+        // Arrival process untouched: the shift changes lengths only.
+        assert_eq!(a.len(), b.len());
+        assert!(a
+            .iter()
+            .zip(b.iter())
+            .all(|(x, y)| x.arrival_s.to_bits() == y.arrival_s.to_bits()));
+        // Explicit zero-shift identity.
+        let mut zero = quick(ScenarioKind::Flash, 21);
+        zero.prompt_mu_shift = 0.0;
+        zero.gen_mu_shift = 0.0;
+        assert_eq!(synth_fleet_trace(&zero), a);
+    }
+
+    #[test]
+    fn session_builder_lowers_onto_params() {
+        let s = Scenario::session()
+            .duration(300.0)
+            .utilization(0.5)
+            .seed(9)
+            .turns(4.0)
+            .think_time(12.0)
+            .shared_prefix(512);
+        let p = s.params(3, 20.0);
+        assert_eq!(p.kind, ScenarioKind::Session);
+        assert_eq!(p.replicas, 3);
+        assert!((p.peak_rps - 10.0).abs() < 1e-12);
+        assert!((p.duration_s - 300.0).abs() < 1e-12);
+        assert_eq!(p.seed, 9);
+        assert!((p.session_turns_mean - 4.0).abs() < 1e-12);
+        assert!((p.session_think_s - 12.0).abs() < 1e-12);
+        assert_eq!(p.session_prefix_tokens, 512);
+        let reqs = synth_fleet_trace(&p);
+        assert!(!reqs.is_empty());
+        assert!(reqs.iter().all(|r| r.prefix_group != 0));
     }
 }

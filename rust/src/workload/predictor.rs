@@ -89,6 +89,8 @@ mod tests {
                 gen_tokens: 200,
                 predicted_gen: 0,
                 arrival_s: i as f64,
+                prefix_group: 0,
+                shared_prefix_tokens: 0,
             })
             .collect()
     }

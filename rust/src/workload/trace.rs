@@ -158,6 +158,8 @@ pub fn synth_trace(p: &TraceParams) -> Vec<Request> {
                 gen_tokens: gen,
                 predicted_gen: gen,
                 arrival_s: t,
+                prefix_group: 0,
+                shared_prefix_tokens: 0,
             });
             id += 1;
         }
@@ -217,6 +219,8 @@ pub fn inject_long_prompts(
             gen_tokens,
             predicted_gen: gen_tokens,
             arrival_s: t,
+            prefix_group: 0,
+            shared_prefix_tokens: 0,
         });
         id += 1;
         t += every_s;

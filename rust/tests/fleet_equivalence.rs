@@ -226,6 +226,96 @@ fn replay_workload_round_trips_through_jsonl() {
     assert_eq!(outcome_digest(&direct), outcome_digest(&replayed));
 }
 
+/// `Workload::Session` is sugar for synthesizing the session trace
+/// and serving it as `Workload::Trace` — pinned bitwise so the typed
+/// front door can never drift from the raw-params path.
+#[test]
+fn session_workload_is_the_synthesized_trace_run() {
+    use throttllem::workload::fleet_trace::{synth_fleet_trace, Scenario};
+    let spec = llama2_13b(2);
+    let model = PerfModel::train(&[spec.clone()], 40, 0);
+    let cfg = ServingConfig::throttllem(spec.clone());
+    let policy = Policy::throttle_only();
+    let plan = FleetPlan::homogeneous(2, RouterPolicy::RoundRobin, &cfg, policy, false);
+    let session = Scenario::session()
+        .duration(120.0)
+        .utilization(0.5)
+        .seed(7)
+        .turns(3.0)
+        .shared_prefix(256);
+    let typed = plan.serve(&cfg, policy, &model, Workload::Session(session));
+    let mut reqs = synth_fleet_trace(&session.params(plan.replicas.len(), plan.rated_rps()));
+    LengthPredictor::oracle().apply(&mut reqs, cfg.max_tokens);
+    let raw = plan.serve(&cfg, policy, &model, Workload::Trace(&reqs));
+    assert_eq!(outcome_digest(&typed), outcome_digest(&raw));
+    assert!(
+        typed.total.stats.completed > 0,
+        "session scenario served nothing"
+    );
+}
+
+/// The `Option<Spec>` switch convention: `with_*(None)` on every
+/// subsystem is the plan default, digest-identical to never touching
+/// the builder at all.
+#[test]
+fn absent_specs_are_the_default_path() {
+    let spec = llama2_13b(2);
+    let model = PerfModel::train(&[spec.clone()], 40, 0);
+    let cfg = ServingConfig::throttllem(spec.clone());
+    let policy = Policy::throttle_only();
+    let reqs = trace(2.5, 90.0, 4);
+    let base = FleetPlan::homogeneous(2, RouterPolicy::LeastLoaded, &cfg, policy, false);
+    let baseline = outcome_digest(&base.serve(&cfg, policy, &model, Workload::Trace(&reqs)));
+    let off = base
+        .clone()
+        .with_migration(None)
+        .with_faults(None)
+        .with_prediction(None)
+        .with_prefix_sharing(None);
+    let out = off.serve(&cfg, policy, &model, Workload::Trace(&reqs));
+    assert_eq!(baseline, outcome_digest(&out));
+}
+
+/// `--prefix-share off` byte-identity: with the sharing switch absent,
+/// the prefix metadata session traces carry (`prefix_group`,
+/// `shared_prefix_tokens`) is completely inert — the run digests equal
+/// to the same trace with the metadata stripped, i.e. exactly what the
+/// pre-sharing serving path computed.
+#[test]
+fn prefix_share_off_ignores_prefix_metadata_bitwise() {
+    use throttllem::config::PrefixSpec;
+    use throttllem::workload::fleet_trace::{synth_fleet_trace, Scenario};
+    let spec = llama2_13b(2);
+    let model = PerfModel::train(&[spec.clone()], 40, 0);
+    let cfg = ServingConfig::throttllem(spec.clone());
+    let policy = Policy::throttle_only();
+    let plan = FleetPlan::homogeneous(2, RouterPolicy::LeastLoaded, &cfg, policy, false);
+    let session = Scenario::session().duration(120.0).utilization(0.5).seed(11);
+    let mut reqs = synth_fleet_trace(&session.params(plan.replicas.len(), plan.rated_rps()));
+    LengthPredictor::oracle().apply(&mut reqs, cfg.max_tokens);
+    assert!(
+        reqs.iter().any(|r| r.prefix_group != 0),
+        "session trace carries no prefix groups"
+    );
+    let mut stripped = reqs.clone();
+    for r in &mut stripped {
+        r.prefix_group = 0;
+        r.shared_prefix_tokens = 0;
+    }
+    let with_meta = plan.serve(&cfg, policy, &model, Workload::Trace(&reqs));
+    let without = plan.serve(&cfg, policy, &model, Workload::Trace(&stripped));
+    assert_eq!(outcome_digest(&with_meta), outcome_digest(&without));
+    assert_eq!(with_meta.total.stats.prefix_cached_tokens, 0);
+
+    // Flipping the switch ON over the same trace must actually cache
+    // prefixes (and therefore digest differently).
+    let on = plan
+        .clone()
+        .with_prefix_sharing(Some(PrefixSpec::enabled_default()));
+    let shared = on.serve(&cfg, policy, &model, Workload::Trace(&reqs));
+    assert!(shared.total.stats.prefix_cached_tokens > 0);
+}
+
 #[test]
 fn autoscaler_grace_period_no_scale_down_before_spawn_time() {
     // TP axis: starting on the largest engine, a load collapse right

@@ -18,7 +18,7 @@
 //! ```
 
 use throttllem::config::models::llama2_13b;
-use throttllem::config::{FaultSpec, MigrationSpec, PredictSpec, ServingConfig};
+use throttllem::config::{FaultSpec, MigrationSpec, PredictSpec, PrefixSpec, ServingConfig};
 use throttllem::coordinator::{
     outcome_digest, serve_scenario, FleetOutcome, FleetPlan, PerfModel, Policy, PredictCounters,
     RouterPolicy,
@@ -49,7 +49,7 @@ fn migration_run(threads: usize) -> FleetOutcome {
     let policy = Policy::throttllem();
     let cfg = ServingConfig::throttllem(llama2_13b(2));
     let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
-        .with_migration(MigrationSpec::enabled_default())
+        .with_migration(Some(MigrationSpec::enabled_default()))
         .with_threads(threads);
     let model = PerfModel::train(&plan.engines(), 40, 0);
     let (_, _, out) = serve_scenario(
@@ -90,6 +90,8 @@ fn assert_stats_identical(a: &ServingStats, b: &ServingStats) {
     assert_eq!(a.freq.values(), b.freq.values());
     assert_eq!(a.iter_tbt.values(), b.iter_tbt.values());
     assert_eq!(a.migrated_e2e.values(), b.migrated_e2e.values());
+    assert_eq!(a.peak_kv_blocks, b.peak_kv_blocks);
+    assert_eq!(a.prefix_cached_tokens, b.prefix_cached_tokens);
 }
 
 /// Bit-identical comparison of two COMPLETE fleet outcomes — stats,
@@ -185,6 +187,38 @@ fn diurnal_threads_bit_identical() {
     }
 }
 
+/// CoW prefix sharing joins the determinism contract: group
+/// residency, session-affine routing and cached-prefill admission all
+/// resolve in the single-threaded coordination phase, so a sharing-on
+/// session run is bit-identical at any RUN-phase thread count —
+/// cached-token and peak-KV telemetry included (an ISSUE acceptance
+/// criterion).
+#[test]
+fn prefix_sharing_session_threads_bit_identical() {
+    let run = |threads: usize| {
+        let policy = Policy::throttle_only();
+        let cfg = ServingConfig::throttllem(llama2_13b(2));
+        let plan =
+            FleetPlan::homogeneous(4, RouterPolicy::ProjectedHeadroom, &cfg, policy, false)
+                .with_prefix_sharing(Some(PrefixSpec::enabled_default()))
+                .with_threads(threads);
+        let model = PerfModel::train(&plan.engines(), 40, 0);
+        let (_, _, out) =
+            serve_scenario(&cfg, policy, &model, &plan, ScenarioKind::Session, 120.0, 0.6, 0);
+        out
+    };
+    let base = run(1);
+    assert!(base.total.stats.completed > 0, "session leg must serve load");
+    assert!(
+        base.total.stats.prefix_cached_tokens > 0,
+        "sharing leg must actually cache prefixes"
+    );
+    for threads in [2, 4] {
+        let out = run(threads);
+        assert_fleet_identical(&base, &out);
+    }
+}
+
 #[test]
 fn migration_on_diurnal_threads_bit_identical() {
     let base = migration_run(1);
@@ -225,8 +259,8 @@ fn faulted_run(threads: usize) -> FleetOutcome {
     faults.link_mtbf_s = 120.0;
     faults.preempt_mtbf_s = 180.0;
     let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
-        .with_migration(MigrationSpec::enabled_default())
-        .with_faults(faults)
+        .with_migration(Some(MigrationSpec::enabled_default()))
+        .with_faults(Some(faults))
         .with_threads(threads);
     let model = PerfModel::train(&plan.engines(), 40, 0);
     let (_, _, out) = serve_scenario(
@@ -267,18 +301,19 @@ fn faulted_diurnal_threads_bit_identical() {
     }
 }
 
-/// `--faults off` must be byte-identical to a plan that never heard of
-/// the fault subsystem: same outcomes, same digest, all-zero fault
-/// telemetry.  This is the regression the CI faults-off identity job
-/// compares cross-process via `--outcome-digest`.
+/// `--faults off` (an absent `FaultSpec`) must be byte-identical to a
+/// plan that never heard of the fault subsystem: same outcomes, same
+/// digest, all-zero fault telemetry.  This is the regression the CI
+/// faults-off identity job compares cross-process via
+/// `--outcome-digest`.
 #[test]
 fn faults_off_is_byte_identical_to_fault_free_plan() {
     let base = migration_run(1);
     let policy = Policy::throttllem();
     let cfg = ServingConfig::throttllem(llama2_13b(2));
     let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
-        .with_migration(MigrationSpec::enabled_default())
-        .with_faults(FaultSpec::disabled())
+        .with_migration(Some(MigrationSpec::enabled_default()))
+        .with_faults(None)
         .with_threads(1);
     let model = PerfModel::train(&plan.engines(), 40, 0);
     let (_, _, out) = serve_scenario(
@@ -309,8 +344,8 @@ fn predict_off_is_byte_identical_to_reactive_plan() {
     let cfg = ServingConfig::throttllem(llama2_13b(2));
     for threads in [1, 2, 4] {
         let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
-            .with_migration(MigrationSpec::enabled_default())
-            .with_prediction(PredictSpec::disabled())
+            .with_migration(Some(MigrationSpec::enabled_default()))
+            .with_prediction(None)
             .with_threads(threads);
         let model = PerfModel::train(&plan.engines(), 40, 0);
         let (_, _, out) = serve_scenario(
@@ -341,8 +376,8 @@ fn predictive_diurnal_threads_bit_identical() {
         let mut spec = PredictSpec::enabled_default();
         spec.period_s = 420.0;
         let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
-            .with_migration(MigrationSpec::enabled_default())
-            .with_prediction(spec)
+            .with_migration(Some(MigrationSpec::enabled_default()))
+            .with_prediction(Some(spec))
             .with_threads(threads);
         let model = PerfModel::train(&plan.engines(), 40, 0);
         let (_, _, out) = serve_scenario(
@@ -393,6 +428,8 @@ fn checkpoint_crash_recover_roundtrip_property() {
                     gen_tokens: gen,
                     predicted_gen: gen,
                     arrival_s: 0.0,
+                    prefix_group: 0,
+                    shared_prefix_tokens: 0,
                 },
                 0.0,
                 false,

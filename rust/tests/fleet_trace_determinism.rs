@@ -29,47 +29,56 @@ fn golden_params() -> FleetTraceParams {
     FleetTraceParams::scenario(ScenarioKind::Burst, 4, 12.0, 600.0, 0)
 }
 
+/// The session-scenario golden: same envelope scale, scenario defaults
+/// (3 mean turns, 20 s think time, 1024-token shared prefix).
+fn golden_session_params() -> FleetTraceParams {
+    FleetTraceParams::scenario(ScenarioKind::Session, 4, 12.0, 600.0, 0)
+}
+
 const GOLDEN_PATH: &str = concat!(
     env!("CARGO_MANIFEST_DIR"),
     "/rust/tests/golden/fleet_trace_burst.hash"
 );
 
-#[test]
-fn golden_hash_byte_identical_across_platforms() {
-    let p = golden_params();
-    let jsonl = fleet_trace_to_jsonl(&p.meta(), &synth_fleet_trace(&p));
+const GOLDEN_SESSION_PATH: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/rust/tests/golden/fleet_trace_session.hash"
+);
+
+/// Shared golden-hash discipline: regenerate twice (in-process
+/// determinism), then compare against the committed cross-platform
+/// constant.  `THROTTLLEM_BLESS=1` re-blesses; a mismatch is fatal
+/// only under `THROTTLLEM_REQUIRE_GOLDEN=1` (the CI golden-guard job)
+/// so a stale constant cannot break local/offline `cargo test`.
+fn check_golden(p: &FleetTraceParams, path: &str, label: &str) {
+    let jsonl = fleet_trace_to_jsonl(&p.meta(), &synth_fleet_trace(p));
     // Regenerating must be byte-identical in-process...
-    let again = fleet_trace_to_jsonl(&p.meta(), &synth_fleet_trace(&p));
+    let again = fleet_trace_to_jsonl(&p.meta(), &synth_fleet_trace(p));
     assert_eq!(jsonl, again, "same seed+params must regenerate identically");
     let hash = format!("{:016x}", fnv1a64(jsonl.as_bytes()));
     // ...and across platforms, pinned by the committed golden hash.
     if std::env::var("THROTTLLEM_BLESS").is_ok() {
-        std::fs::write(GOLDEN_PATH, format!("{hash}\n")).unwrap();
-        eprintln!("blessed golden fleet-trace hash: {hash}");
+        std::fs::write(path, format!("{hash}\n")).unwrap();
+        eprintln!("blessed golden {label} trace hash: {hash}");
         return;
     }
-    let golden = std::fs::read_to_string(GOLDEN_PATH)
-        .unwrap_or_else(|e| panic!("missing golden file {GOLDEN_PATH}: {e}"));
+    let golden = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("missing golden file {path}: {e}"));
     let golden = golden.trim();
     if golden == "UNSET" {
         // Bootstrap state: the mechanism is active but the constant has
         // not been measured yet (this workspace has no Rust toolchain).
         // The first toolchain run prints the value; bless it in.
         eprintln!(
-            "golden fleet-trace hash not yet blessed; computed {hash} — \
+            "golden {label} trace hash not yet blessed; computed {hash} — \
              run THROTTLLEM_BLESS=1 cargo test --test fleet_trace_determinism"
         );
         return;
     }
     if golden != hash {
-        // Cross-platform pinning is a CI-tier gate (the golden-guard
-        // job sets THROTTLLEM_REQUIRE_GOLDEN=1): a stale or
-        // out-of-band-blessed constant must not break local/offline
-        // `cargo test` runs, whose determinism contract is already
-        // enforced by the double-generation assert above.  The CI job
-        // log carries both values for a one-commit re-bless.
+        // The CI job log carries both values for a one-commit re-bless.
         let msg = format!(
-            "fleet-trace golden hash mismatch: committed {golden}, computed {hash} — \
+            "{label} golden hash mismatch: committed {golden}, computed {hash} — \
              if the generator change is intentional, re-bless with \
              THROTTLLEM_BLESS=1 cargo test --test fleet_trace_determinism"
         );
@@ -78,6 +87,64 @@ fn golden_hash_byte_identical_across_platforms() {
         }
         eprintln!("WARNING: {msg}");
     }
+}
+
+#[test]
+fn golden_hash_byte_identical_across_platforms() {
+    check_golden(&golden_params(), GOLDEN_PATH, "fleet-trace burst");
+}
+
+#[test]
+fn session_golden_hash_byte_identical_across_platforms() {
+    check_golden(
+        &golden_session_params(),
+        GOLDEN_SESSION_PATH,
+        "fleet-trace session",
+    );
+}
+
+#[test]
+fn session_trace_carries_prefix_structure() {
+    // Structural contract of the session synthesizer: dense ids over
+    // an arrival-sorted stream, every request in a nonzero prefix
+    // group, shared prefix never exceeding the prompt, and multi-turn
+    // sessions actually present (the redundancy CoW sharing exploits).
+    let p = golden_session_params();
+    let reqs = synth_fleet_trace(&p);
+    assert!(reqs.len() > 200, "session trace suspiciously small");
+    for (i, r) in reqs.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "ids must be dense after the sort");
+        assert!(r.prefix_group != 0, "session requests are all grouped");
+        assert!(r.shared_prefix_tokens <= r.prompt_tokens);
+        assert!(r.shared_prefix_tokens > 0);
+        if i > 0 {
+            assert!(reqs[i - 1].arrival_s <= r.arrival_s, "sorted by arrival");
+        }
+    }
+    use std::collections::HashMap;
+    let mut turns: HashMap<u64, u32> = HashMap::new();
+    for r in &reqs {
+        *turns.entry(r.prefix_group).or_insert(0) += 1;
+    }
+    assert!(
+        turns.values().any(|&n| n >= 2),
+        "no multi-turn session in the trace"
+    );
+    // History regrowth: within a multi-turn session, the last turn's
+    // prompt carries the accumulated context, so it is no shorter than
+    // the first (equality only at the prompt_max clamp).
+    let mut first_last: HashMap<u64, (u32, u32)> = HashMap::new();
+    for r in &reqs {
+        let e = first_last
+            .entry(r.prefix_group)
+            .or_insert((r.prompt_tokens, r.prompt_tokens));
+        e.1 = r.prompt_tokens;
+    }
+    let grown = first_last
+        .values()
+        .filter(|(f, l)| l > f)
+        .count();
+    assert!(grown > 0, "no session shows history regrowth");
 }
 
 #[test]

@@ -23,7 +23,7 @@
 //! decision, via the debug assertion inside `Replica::headroom_for`.
 
 use throttllem::config::models::llama2_13b;
-use throttllem::config::{MigrationSpec, ReplicaSpec, ServingConfig};
+use throttllem::config::{ReplicaSpec, ServingConfig};
 use throttllem::coordinator::{
     serve_fleet, serve_fleet_plan, FleetOutcome, FleetPlan, FleetSpec, PerfModel,
     Policy, RouterPolicy,
@@ -96,12 +96,10 @@ fn homogeneous_plan_reproduces_fleet_spec_outcomes_exactly() {
                     autoscale_replicas: false,
                 },
             );
-            let plan = FleetPlan {
-                replicas: vec![ReplicaSpec::from_config(&cfg, policy.autoscaling); n],
+            let plan = FleetPlan::heterogeneous(
+                vec![ReplicaSpec::from_config(&cfg, policy.autoscaling); n],
                 router,
-                autoscale_replicas: false,
-                migration: MigrationSpec::disabled(),
-            };
+            );
             let via_plan = serve_fleet_plan(&cfg, policy, &model, &reqs, &plan);
             assert_fleets_identical(&via_spec, &via_plan);
             assert!(!plan.is_heterogeneous());
@@ -205,12 +203,7 @@ fn per_replica_tp_ladders_autoscale_independently() {
         llama2_13b(2),
         llama2_13b(4),
     ]);
-    let plan = FleetPlan {
-        replicas: specs,
-        router: RouterPolicy::LeastLoaded,
-        autoscale_replicas: false,
-        migration: MigrationSpec::disabled(),
-    };
+    let plan = FleetPlan::heterogeneous(specs, RouterPolicy::LeastLoaded);
     assert_eq!(plan.engines().len(), 3, "ladder + fixed dedup to 3 engines");
     let reqs = trace(6.0, 240.0, 17);
     let out = serve_fleet_plan(&cfg, Policy::throttllem(), &model, &reqs, &plan);

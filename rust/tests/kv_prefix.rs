@@ -1,0 +1,268 @@
+//! Property tests for the ref-counted CoW prefix-sharing KV allocator
+//! (`engine/kv_cache.rs`).
+//!
+//! Two contracts are pinned here:
+//!
+//!   1. Random interleavings of group allocation, private growth,
+//!      fork (copy-on-write detach), release, and checkpoint/restore
+//!      (fork + free at the source, re-allocate at the recorded
+//!      occupancy) preserve the allocator invariants: no block is
+//!      double-owned, accounting adds up, group ref counts equal live
+//!      membership, and a group's shared footprint is exactly its full
+//!      prefix blocks while any member is resident — zero after the
+//!      last leaves.
+//!
+//!   2. A run that never touches the sharing API is BIT-IDENTICAL to
+//!      the pre-fork allocator: the free list evolves in exactly the
+//!      order the pre-sharing implementation produced (LIFO pops on
+//!      allocate/grow, in-order extends on release).  This is the
+//!      allocator half of the `--prefix-share off` byte-identity
+//!      contract (`fleet_equivalence.rs` pins the serving half).
+
+use std::collections::HashMap;
+
+use throttllem::engine::kv_cache::{blocks_for, KvAllocator};
+use throttllem::engine::RequestId;
+use throttllem::sim::Pcg64;
+
+const BLOCK_TOKENS: u32 = 16;
+const CAPACITY: u32 = 96;
+
+/// Per-group agreed prefix length (members of a group must join with
+/// the same prefix; lengths cover full-block, partial-tail, and
+/// sub-block prefixes).
+fn prefix_tokens_of(group: u64) -> u32 {
+    match group {
+        1 => 64,  // 4 full blocks
+        2 => 100, // 6 full blocks + 4-token private tail
+        3 => 16,  // 1 full block
+        _ => 10,  // sub-block: nothing shareable but the path must hold
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Live {
+    id: RequestId,
+    tokens: u32,
+    group: u64,
+}
+
+/// Contract 1: fork/grow/release/checkpoint-restore interleavings
+/// preserve ref-count and free-list invariants.
+#[test]
+fn random_sharing_interleavings_preserve_invariants() {
+    for seed in 0..24u64 {
+        let mut rng = Pcg64::new(0xc0_11ab0 ^ seed);
+        let mut kv = KvAllocator::new(CAPACITY, BLOCK_TOKENS);
+        let mut live: Vec<Live> = vec![];
+        let mut next_id: RequestId = 0;
+        for _ in 0..600 {
+            match rng.uniform_u64(0, 5) {
+                // Solo allocation.
+                0 => {
+                    let tokens = rng.uniform_u64(1, 120) as u32;
+                    if kv.allocate(next_id, tokens).is_ok() {
+                        live.push(Live {
+                            id: next_id,
+                            tokens,
+                            group: 0,
+                        });
+                    }
+                    next_id += 1;
+                }
+                // Group allocation: join (or found) a shared prefix.
+                1 => {
+                    let group = rng.uniform_u64(1, 4);
+                    let pfx = prefix_tokens_of(group);
+                    let tokens = pfx + rng.uniform_u64(0, 80) as u32;
+                    if kv.allocate_in_group(next_id, tokens, group, pfx).is_ok() {
+                        live.push(Live {
+                            id: next_id,
+                            tokens,
+                            group,
+                        });
+                    }
+                    next_id += 1;
+                }
+                // Private decode growth (the shared prefix never grows).
+                2 if !live.is_empty() => {
+                    let i = rng.uniform_usize(0, live.len() - 1);
+                    let nt = live[i].tokens + rng.uniform_u64(1, 40) as u32;
+                    if kv.grow_to(live[i].id, nt).is_ok() {
+                        live[i].tokens = nt;
+                    }
+                }
+                // Copy-on-write fork: detach from the group, keeping
+                // co-residents on the shared original.
+                3 if !live.is_empty() => {
+                    let i = rng.uniform_usize(0, live.len() - 1);
+                    if kv.fork(live[i].id).is_ok() {
+                        live[i].group = 0;
+                        assert_eq!(kv.group_of(live[i].id), 0);
+                    }
+                }
+                // Release.
+                4 if !live.is_empty() => {
+                    let i = rng.uniform_usize(0, live.len() - 1);
+                    kv.release(live.swap_remove(i).id);
+                }
+                // Checkpoint/restore: the migration shape — fork a
+                // private copy (copies, not steals), free it at the
+                // source, then restore at the SAME occupancy under a
+                // fresh id (the destination's allocation).
+                _ if !live.is_empty() => {
+                    let i = rng.uniform_usize(0, live.len() - 1);
+                    let ckpt = live[i];
+                    assert_eq!(kv.tokens_of(ckpt.id), Some(ckpt.tokens));
+                    if kv.fork(ckpt.id).is_ok() {
+                        kv.release(ckpt.id);
+                        live.swap_remove(i);
+                        if kv.allocate(next_id, ckpt.tokens).is_ok() {
+                            assert_eq!(kv.tokens_of(next_id), Some(ckpt.tokens));
+                            assert_eq!(
+                                kv.blocks_of(next_id),
+                                blocks_for(ckpt.tokens, BLOCK_TOKENS),
+                                "restore must re-allocate exactly the checkpointed blocks"
+                            );
+                            live.push(Live {
+                                id: next_id,
+                                tokens: ckpt.tokens,
+                                group: 0,
+                            });
+                        }
+                        next_id += 1;
+                    }
+                }
+                _ => {}
+            }
+
+            kv.check_invariants();
+            // The shared footprint of every group is exactly its full
+            // prefix blocks while members are resident, zero after the
+            // last one leaves (ref counts match the mirror).
+            let mut members: HashMap<u64, u32> = HashMap::new();
+            for l in &live {
+                if l.group != 0 {
+                    *members.entry(l.group).or_insert(0) += 1;
+                }
+            }
+            for group in 1..=4u64 {
+                let expect = if members.get(&group).copied().unwrap_or(0) > 0 {
+                    prefix_tokens_of(group) / BLOCK_TOKENS
+                } else {
+                    0
+                };
+                assert_eq!(
+                    kv.shared_blocks_of_group(group),
+                    expect,
+                    "group {group} shared footprint diverged from membership"
+                );
+            }
+        }
+        // Drain: everything must come back.
+        for l in live.drain(..) {
+            kv.release(l.id);
+        }
+        assert_eq!(kv.used_blocks(), 0);
+        kv.check_invariants();
+    }
+}
+
+/// The pre-fork allocator, reimplemented verbatim as a reference
+/// model: a LIFO free stack popped on allocate/grow and extended in
+/// block order on release.  No sharing, no groups.
+struct PreForkModel {
+    free: Vec<u32>,
+    held: HashMap<RequestId, (u32, Vec<u32>)>,
+    block_tokens: u32,
+}
+
+impl PreForkModel {
+    fn new(capacity: u32, block_tokens: u32) -> Self {
+        Self {
+            free: (0..capacity).rev().collect(),
+            held: HashMap::new(),
+            block_tokens,
+        }
+    }
+
+    fn allocate(&mut self, id: RequestId, tokens: u32) -> bool {
+        let need = blocks_for(tokens, self.block_tokens) as usize;
+        if need > self.free.len() {
+            return false;
+        }
+        let blocks = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.held.insert(id, (tokens, blocks));
+        true
+    }
+
+    fn grow_to(&mut self, id: RequestId, tokens: u32) -> bool {
+        let (t, blocks) = self.held.get_mut(&id).unwrap();
+        let extra =
+            (blocks_for(tokens, self.block_tokens) as usize).saturating_sub(blocks.len());
+        if extra > self.free.len() {
+            return false;
+        }
+        for _ in 0..extra {
+            blocks.push(self.free.pop().unwrap());
+        }
+        *t = tokens;
+        true
+    }
+
+    fn release(&mut self, id: RequestId) {
+        if let Some((_, blocks)) = self.held.remove(&id) {
+            self.free.extend(blocks);
+        }
+    }
+}
+
+/// Contract 2: with the sharing API never called, the production
+/// allocator's free list is bit-identical to the pre-fork model after
+/// EVERY operation — success/failure verdicts included.
+#[test]
+fn sharing_off_is_bit_identical_to_the_pre_fork_allocator() {
+    for seed in 0..16u64 {
+        let mut rng = Pcg64::new(0x0ff ^ (seed << 8));
+        let mut kv = KvAllocator::new(CAPACITY, BLOCK_TOKENS);
+        let mut model = PreForkModel::new(CAPACITY, BLOCK_TOKENS);
+        let mut live: Vec<(RequestId, u32)> = vec![];
+        let mut next_id: RequestId = 0;
+        for step in 0..800 {
+            match rng.uniform_u64(0, 2) {
+                0 => {
+                    let tokens = rng.uniform_u64(1, 150) as u32;
+                    let got = kv.allocate(next_id, tokens).is_ok();
+                    let want = model.allocate(next_id, tokens);
+                    assert_eq!(got, want, "allocate verdict diverged at step {step}");
+                    if got {
+                        live.push((next_id, tokens));
+                    }
+                    next_id += 1;
+                }
+                1 if !live.is_empty() => {
+                    let i = rng.uniform_usize(0, live.len() - 1);
+                    let nt = live[i].1 + rng.uniform_u64(1, 50) as u32;
+                    let got = kv.grow_to(live[i].0, nt).is_ok();
+                    let want = model.grow_to(live[i].0, nt);
+                    assert_eq!(got, want, "grow verdict diverged at step {step}");
+                    if got {
+                        live[i].1 = nt;
+                    }
+                }
+                _ if !live.is_empty() => {
+                    let i = rng.uniform_usize(0, live.len() - 1);
+                    let (id, _) = live.swap_remove(i);
+                    kv.release(id);
+                    model.release(id);
+                }
+                _ => {}
+            }
+            assert_eq!(
+                kv.free_list(),
+                &model.free[..],
+                "free-list evolution diverged from the pre-fork allocator at step {step}"
+            );
+        }
+    }
+}

@@ -30,6 +30,8 @@ fn req(id: u64, prompt: u32, gen: u32) -> Request {
         gen_tokens: gen,
         predicted_gen: gen,
         arrival_s: 0.0,
+        prefix_group: 0,
+        shared_prefix_tokens: 0,
     }
 }
 
@@ -98,7 +100,7 @@ fn checkpoint_restore_roundtrip_is_bit_identical() {
 
 /// The diurnal cold-start scenario on a fleet-autoscaled homogeneous
 /// deployment — the configuration the CI migration gate runs.
-fn diurnal_run(migration: MigrationSpec) -> (ServingConfig, FleetOutcome, usize) {
+fn diurnal_run(migration: Option<MigrationSpec>) -> (ServingConfig, FleetOutcome, usize) {
     let policy = Policy::throttllem();
     let cfg = ServingConfig::throttllem(llama2_13b(2));
     let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
@@ -143,11 +145,11 @@ fn assert_outcomes_identical(a: &FleetOutcome, b: &FleetOutcome) {
 
 /// `--migration off` runs the exact drain-based serving loop: the
 /// migration machinery must be structurally unreachable.  A default
-/// plan (old constructors) and an explicit `MigrationSpec::disabled()`
+/// plan (old constructors) and an explicitly absent `MigrationSpec`
 /// are the same thing, and nothing migration-related is recorded.
 #[test]
 fn migration_off_is_drain_based_scale_in() {
-    let (_, out, n) = diurnal_run(MigrationSpec::disabled());
+    let (_, out, n) = diurnal_run(None);
     assert_eq!(
         out.total.stats.completed + out.total.stats.dropped,
         n as u64
@@ -164,7 +166,7 @@ fn migration_off_is_drain_based_scale_in() {
     assert_eq!(out.total.stats.migration_energy_j, 0.0);
     assert!(out.total.stats.migrated_e2e.is_empty());
     // Determinism pin: a second identical run is bit-identical.
-    let (_, again, _) = diurnal_run(MigrationSpec::disabled());
+    let (_, again, _) = diurnal_run(None);
     assert_outcomes_identical(&out, &again);
 }
 
@@ -178,12 +180,12 @@ fn migration_off_is_drain_based_scale_in() {
 /// guard left the destination's incremental projection intact.
 #[test]
 fn all_refused_migration_is_byte_identical_to_off() {
-    let (_, off, _) = diurnal_run(MigrationSpec::disabled());
+    let (_, off, _) = diurnal_run(None);
     let refused_all = MigrationSpec {
         base_latency_s: 1e9,
         ..MigrationSpec::enabled_default()
     };
-    let (_, on, _) = diurnal_run(refused_all);
+    let (_, on, _) = diurnal_run(Some(refused_all));
     assert_eq!(on.migrations.migrations, 0, "every move must be refused");
     assert_outcomes_identical(&off, &on);
     assert_eq!(on.total.stats.migrated_in, 0);
@@ -196,8 +198,8 @@ fn all_refused_migration_is_byte_identical_to_off() {
 /// `fleet_demo --migrate-compare` on the full-length scenario.)
 #[test]
 fn diurnal_migration_frees_victims_without_slo_cost() {
-    let (cfg, off, n) = diurnal_run(MigrationSpec::disabled());
-    let (_, on, n_on) = diurnal_run(MigrationSpec::enabled_default());
+    let (cfg, off, n) = diurnal_run(None);
+    let (_, on, n_on) = diurnal_run(Some(MigrationSpec::enabled_default()));
     assert_eq!(n, n_on, "same deterministic trace on both legs");
     assert_eq!(
         on.total.stats.completed + on.total.stats.dropped,

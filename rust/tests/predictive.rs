@@ -19,11 +19,11 @@ use throttllem::workload::fleet_trace::ScenarioKind;
 /// configuration `fleet_threads.rs` pins for determinism) with the
 /// given prediction spec.  Both legs share seed, trace, and model, so
 /// the only delta between runs is the forecaster.
-fn diurnal_run(predict: PredictSpec) -> (ServingConfig, FleetOutcome) {
+fn diurnal_run(predict: Option<PredictSpec>) -> (ServingConfig, FleetOutcome) {
     let policy = Policy::throttllem();
     let cfg = ServingConfig::throttllem(llama2_13b(2));
     let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
-        .with_migration(MigrationSpec::enabled_default())
+        .with_migration(Some(MigrationSpec::enabled_default()))
         .with_prediction(predict);
     let model = PerfModel::train(&plan.engines(), 40, 0);
     let (_, _, out) = serve_scenario(
@@ -58,8 +58,8 @@ fn predictive_diurnal_attainment_no_worse_than_reactive() {
     // forecaster's assumed day length is the scenario duration.
     let mut spec = PredictSpec::enabled_default();
     spec.period_s = 420.0;
-    let (cfg, reactive) = diurnal_run(PredictSpec::disabled());
-    let (_, predictive) = diurnal_run(spec);
+    let (cfg, reactive) = diurnal_run(None);
+    let (_, predictive) = diurnal_run(Some(spec));
 
     assert_eq!(
         reactive.predict,
@@ -118,8 +118,8 @@ fn predictive_run_conserves_requests() {
     let policy = Policy::throttllem();
     let cfg = ServingConfig::throttllem(llama2_13b(2));
     let plan = FleetPlan::homogeneous(4, RouterPolicy::RoundRobin, &cfg, policy, true)
-        .with_migration(MigrationSpec::enabled_default())
-        .with_prediction(spec);
+        .with_migration(Some(MigrationSpec::enabled_default()))
+        .with_prediction(Some(spec));
     let model = PerfModel::train(&plan.engines(), 40, 0);
     let (_, reqs, out) = serve_scenario(
         &cfg,

@@ -27,6 +27,7 @@ fn random_scoreboard(rng: &mut Pcg64, max_entries: u32) -> (Scoreboard, u64) {
             predicted_gen: rng.uniform_u64(1, 1024) as u32,
             deadline_s: rng.uniform_f64(1.0, 60.0),
             lost: rng.next_f64() < 0.1,
+            kv_discount_blocks: 0,
         });
     }
     (sb, k)
@@ -130,6 +131,7 @@ fn throttle_choice_is_consistent_with_slo_eval() {
                 predicted_gen: rng.uniform_u64(16, 700) as u32,
                 deadline_s: rng.uniform_f64(8.0, 40.0),
                 lost: false,
+                kv_discount_blocks: 0,
             });
         }
         let proj = project(&sb, 0, spec.block_tokens);
@@ -173,6 +175,7 @@ fn tracker_matches_from_scratch_under_random_op_sequences() {
                         predicted_gen: rng.uniform_u64(1, 700) as u32,
                         deadline_s: 30.0,
                         lost: false,
+                        kv_discount_blocks: 0,
                     };
                     sb.insert(e);
                     live_ids.push(next_id);
@@ -189,6 +192,7 @@ fn tracker_matches_from_scratch_under_random_op_sequences() {
                             predicted_gen: rng.uniform_u64(1, 700) as u32,
                             deadline_s: 30.0,
                             lost: false,
+                            kv_discount_blocks: 0,
                         });
                         virtual_live = true;
                     }
@@ -248,6 +252,7 @@ fn tracker_rebuilds_after_journal_overflow() {
             predicted_gen: 50 + 10 * id as u32,
             deadline_s: 30.0,
             lost: false,
+            kv_discount_blocks: 0,
         });
     }
     let fresh = project(&sb, 0, bt);
@@ -262,6 +267,7 @@ fn tracker_rebuilds_after_journal_overflow() {
             predicted_gen: 100,
             deadline_s: 30.0,
             lost: false,
+            kv_discount_blocks: 0,
         });
         if round % 2 == 0 {
             sb.strike(id);
@@ -286,6 +292,7 @@ fn tracker_window_advance_past_horizon() {
         predicted_gen: 10, // ends at iteration 10
         deadline_s: 30.0,
         lost: false,
+        kv_discount_blocks: 0,
     });
     assert!(tracker.project(&sb, 0, None).horizon() > 0);
     // Advance far past the entry's end while it is still tracked.
@@ -302,6 +309,7 @@ fn tracker_window_advance_past_horizon() {
         predicted_gen: 20,
         deadline_s: 60.0,
         lost: false,
+        kv_discount_blocks: 0,
     });
     let fresh = project(&sb, 60, bt);
     let p = tracker.project(&sb, 60, None);
@@ -323,6 +331,7 @@ fn virtual_rollback_is_always_clean() {
             predicted_gen: rng.uniform_u64(1, 1024) as u32,
             deadline_s: 30.0,
             lost: false,
+            kv_discount_blocks: 0,
         });
         let _with = project(&sb, k, 64);
         sb.rollback_virtual();

@@ -121,6 +121,7 @@ fn inflated_predictions_require_higher_frequency() {
                     predicted_gen: conservative_adjust(base_pred, err, 1024),
                     deadline_s: deadline,
                     lost: false,
+                    kv_discount_blocks: 0,
                 });
             }
             let proj = project(&sb, 0, spec.block_tokens);
